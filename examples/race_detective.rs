@@ -1,0 +1,77 @@
+//! The formal framework as a tool: build executions (including the
+//! paper's Tables 1–3 analogues), ask "is this properly synchronized
+//! under model X?", and see exactly which accesses race.
+//!
+//! ```bash
+//! cargo run --release --example race_detective
+//! ```
+
+use pscnf::interval::Range;
+use pscnf::model::{detect, litmus, ConsistencyModel, StorageOp, SyncKind, Trace};
+
+fn show(trace: &Trace, title: &str) {
+    println!("== {title}");
+    for model in [
+        ConsistencyModel::posix(),
+        ConsistencyModel::commit(),
+        ConsistencyModel::commit_strict(),
+        ConsistencyModel::session(),
+        ConsistencyModel::mpiio(),
+    ] {
+        let rep = detect(trace, &model).expect("acyclic");
+        if rep.race_free() {
+            println!(
+                "   {:15} race-free ({} conflicting pair(s) properly synchronized)",
+                model.name, rep.synchronized_pairs
+            );
+        } else {
+            print!("   {:15} {} STORAGE RACE(S):", model.name, rep.races.len());
+            for race in &rep.races {
+                let (x, y) = (trace.event(race.x), trace.event(race.y));
+                print!(
+                    "  [rank{} {:?} || rank{} {:?}]",
+                    x.rank,
+                    op_kind(&x.op),
+                    y.rank,
+                    op_kind(&y.op)
+                );
+            }
+            println!();
+        }
+    }
+    println!();
+}
+
+fn op_kind(op: &StorageOp) -> &'static str {
+    if op.is_write() {
+        "write"
+    } else if op.is_read() {
+        "read"
+    } else {
+        "sync"
+    }
+}
+
+fn main() {
+    // The three paper tables, pre-built.
+    for l in litmus::all() {
+        show(&l.trace, &format!("{} — {}", l.name, l.description));
+    }
+
+    // A custom scenario: producer commits, but the consumer reads
+    // *before* the barrier — a bug the detector catches under every
+    // model, demonstrating §4's "correctness" motivation.
+    let mut t = Trace::new();
+    let w = t.push(0, StorageOp::write(0, Range::new(0, 4096)));
+    let c = t.push(0, StorageOp::sync(SyncKind::Commit, 0));
+    let r_early = t.push(1, StorageOp::read(0, Range::new(0, 4096))); // BUG: no order
+    let r_late = t.push(1, StorageOp::read(0, Range::new(0, 4096)));
+    t.add_so(c, r_late); // only the second read is after the barrier
+    let _ = (w, r_early);
+    show(
+        &t,
+        "buggy-early-read — consumer issues one read before the barrier",
+    );
+
+    println!("race_detective OK");
+}

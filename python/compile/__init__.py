@@ -1,0 +1,3 @@
+"""Build-time compile path: Layer-1 Pallas kernels + Layer-2 JAX model,
+AOT-lowered to HLO text artifacts consumed by the rust runtime. Never
+imported at request time."""

@@ -1,0 +1,69 @@
+"""AOT export: lower the Layer-2 train/predict functions (which embed the
+Layer-1 Pallas kernels) to HLO **text** for the rust PJRT runtime.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(outdir: str) -> list[str]:
+    os.makedirs(outdir, exist_ok=True)
+    args = model.example_args()
+    written = []
+
+    train_lowered = jax.jit(model.train_step).lower(*args)
+    path = os.path.join(outdir, "train_step.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(train_lowered))
+    written.append(path)
+
+    predict_lowered = jax.jit(model.predict).lower(*args[:5])
+    path = os.path.join(outdir, "predict.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(predict_lowered))
+    written.append(path)
+
+    # Shape manifest: the rust runtime sanity-checks its buffers against
+    # this instead of parsing HLO.
+    manifest = os.path.join(outdir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"batch={model.BATCH}\n")
+        f.write(f"feature_dim={model.FEATURE_DIM}\n")
+        f.write(f"hidden={model.HIDDEN}\n")
+        f.write(f"classes={model.CLASSES}\n")
+        f.write(f"learning_rate={model.LEARNING_RATE}\n")
+    written.append(manifest)
+    return written
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    ns = parser.parse_args()
+    for path in export(ns.out):
+        print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Layer 1 — the Pallas compute kernel: a tiled matmul(+bias) block.
+
+This is the FLOP hot-spot of the DL case-study's training step (both the
+forward MLP layers and all three backward matmuls). The tiling is the
+TPU adaptation described in DESIGN.md §Hardware-Adaptation:
+
+- BlockSpec tiles of (bm × bk) · (bk × bn) stream HBM→VMEM; the output
+  block is revisited along the K grid dimension and used as a VMEM
+  accumulator (the GPU equivalent would be shared-memory tiling).
+- Default 128-sized tiles match the MXU systolic array's native shape.
+- ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+  Mosaic custom-calls, so the kernel lowers to plain HLO; on a real TPU
+  the same code compiles to Mosaic (compile-only target).
+
+The kernel is deliberately *just* matmul+bias: activations, softmax, and
+the loss live in Layer 2 (model.py) where XLA fuses them — keeping the
+Pallas surface small keeps the custom-VJP surface small too.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (tiles must tile)."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, with_bias: bool):
+    """Grid = (M/bm, N/bn, K/bk); o_ref is revisited along k and serves
+    as the accumulator (multiple-visit output)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+
+    if with_bias:
+
+        @pl.when(pl.program_id(2) == k_steps - 1)
+        def _bias():
+            o_ref[...] += b_ref[...]
+
+
+def matmul_bias(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ w (+ b)`` as a Pallas kernel. Shapes: x[M,K], w[K,N], b[N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    with_bias = b is not None
+    if b is None:
+        b = jnp.zeros((n,), x.dtype)
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm, bn, bk = _pick_tile(m, bm), _pick_tile(n, bn), _pick_tile(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+
+    kernel = functools.partial(_matmul_kernel, k_steps=grid[2], with_bias=with_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+# ----- differentiable wrapper -------------------------------------------
+#
+# Pallas kernels are not generically differentiable; the backward pass is
+# spelled out with the same tiled kernel (dx = g @ wᵀ, dw = xᵀ @ g,
+# db = Σg), so the gradient FLOPs run through Layer 1 too.
+
+
+@jax.custom_vjp
+def linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return matmul_bias(x, w, b)
+
+
+def _linear_fwd(x, w, b):
+    return matmul_bias(x, w, b), (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    dx = matmul_bias(g, w.T, None)
+    dw = matmul_bias(x.T, g, None)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def vmem_report(m: int, k: int, n: int, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Static VMEM-footprint estimate for DESIGN.md §Perf: bytes resident
+    per grid step (x tile + w tile + bias tile + out/acc tile, f32)."""
+    bm, bn, bk = _pick_tile(m, bm), _pick_tile(n, bn), _pick_tile(k, bk)
+    tiles = {
+        "x_tile": bm * bk * 4,
+        "w_tile": bk * bn * 4,
+        "b_tile": bn * 4,
+        "acc_tile": bm * bn * 4,
+    }
+    tiles["total"] = sum(tiles.values())
+    tiles["grid"] = (m // bm, n // bn, k // bk)
+    tiles["mxu_k_util"] = min(bk, 128) / 128.0  # fraction of the MXU's K dim fed
+    return tiles

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Layer-1 kernel — the correctness reference
+every pytest property checks against (assert_allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_ref(x: jax.Array, w: jax.Array, b: jax.Array | None) -> jax.Array:
+    out = jnp.dot(x, w, preferred_element_type=x.dtype)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def mlp_ref(params, x):
+    """Reference 2-layer MLP forward (see model.py for the shapes)."""
+    w1, b1, w2, b2 = params
+    h = jnp.maximum(matmul_bias_ref(x, w1, b1), 0.0)
+    return matmul_bias_ref(h, w2, b2)
+
+
+def loss_ref(params, x, y):
+    """Reference mean softmax cross-entropy."""
+    logits = mlp_ref(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))

@@ -1,0 +1,76 @@
+"""Layer 2 — the JAX model: a 2-layer MLP classifier over DL-ingestion
+samples, with forward, loss, and a full SGD train step. All matmul FLOPs
+(forward AND backward) run through the Layer-1 Pallas kernel
+(kernels.mlp_block.linear); activations/softmax/loss are plain jnp so
+XLA fuses them around the kernel calls.
+
+The shapes model the paper's DL case study (§6.3): a 116 KB sample's
+leading FEATURE_DIM float32 values feed the classifier (see DESIGN.md).
+Everything is fixed-shape so one AOT lowering serves the whole run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mlp_block import linear
+
+# Fixed model geometry (one AOT artifact per variant).
+BATCH = 32
+FEATURE_DIM = 2048  # leading f32s of a 116KB sample
+HIDDEN = 256
+CLASSES = 100
+LEARNING_RATE = 0.05
+
+
+def init_params(seed: int = 0):
+    """He-initialised parameters as a flat tuple (w1, b1, w2, b2)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (FEATURE_DIM, HIDDEN), jnp.float32) * (
+        2.0 / FEATURE_DIM
+    ) ** 0.5
+    b1 = jnp.zeros((HIDDEN,), jnp.float32)
+    w2 = jax.random.normal(k2, (HIDDEN, CLASSES), jnp.float32) * (2.0 / HIDDEN) ** 0.5
+    b2 = jnp.zeros((CLASSES,), jnp.float32)
+    return w1, b1, w2, b2
+
+
+def forward(params, x):
+    """logits[B, C] — both layers through the Pallas kernel."""
+    w1, b1, w2, b2 = params
+    h = jnp.maximum(linear(x, w1, b1), 0.0)
+    return linear(h, w2, b2)
+
+
+def loss_fn(params, x, y):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train_step(w1, b1, w2, b2, x, y):
+    """One SGD step. Flat signature (no pytrees) so the HLO artifact has
+    a stable, position-based calling convention for the rust runtime.
+
+    Returns (w1', b1', w2', b2', loss).
+    """
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_params = tuple(p - LEARNING_RATE * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+def predict(w1, b1, w2, b2, x):
+    """argmax class ids [B] plus logits (inference artifact)."""
+    logits = forward((w1, b1, w2, b2), x)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+
+
+def example_args(seed: int = 0):
+    """Concrete example arrays for lowering/testing."""
+    params = init_params(seed)
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed + 1))
+    x = jax.random.normal(kx, (BATCH, FEATURE_DIM), jnp.float32)
+    y = jax.random.randint(ky, (BATCH,), 0, CLASSES, jnp.int32)
+    return (*params, x, y)

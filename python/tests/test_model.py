@@ -1,0 +1,58 @@
+"""Layer-2 correctness: shapes, loss parity with the oracle, and the SGD
+train step actually learning a synthetic task."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import loss_ref
+
+
+def test_forward_shapes():
+    args = model.example_args()
+    params, x = args[:4], args[4]
+    logits = model.forward(params, x)
+    assert logits.shape == (model.BATCH, model.CLASSES)
+
+
+def test_loss_matches_reference():
+    args = model.example_args()
+    params, x, y = args[:4], args[4], args[5]
+    got = model.loss_fn(params, x, y)
+    want = loss_ref(params, x, y)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_shapes_and_loss_scalar():
+    args = model.example_args()
+    out = jax.jit(model.train_step)(*args)
+    assert len(out) == 5
+    for new, old in zip(out[:4], args[:4]):
+        assert new.shape == old.shape and new.dtype == old.dtype
+    assert out[4].shape == ()
+
+
+def test_loss_decreases_on_fixed_batch():
+    """A few SGD steps on one batch must reduce the loss."""
+    args = model.example_args(seed=3)
+    params, x, y = list(args[:4]), args[4], args[5]
+    step = jax.jit(model.train_step)
+    first = None
+    last = None
+    for _ in range(10):
+        *params, loss = step(*params, x, y)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    assert last < first * 0.8, f"loss {first} -> {last} did not decrease"
+
+
+def test_predict_consistent_with_forward():
+    args = model.example_args()
+    params, x = args[:4], args[4]
+    ids, logits = jax.jit(model.predict)(*params, x)
+    assert ids.shape == (model.BATCH,)
+    np.testing.assert_array_equal(
+        np.asarray(ids), np.argmax(np.asarray(logits), axis=-1)
+    )

@@ -1,0 +1,445 @@
+//! The BaseFS client: Table 5's primitive set, implemented once and
+//! driven by either engine through the [`Fabric`] abstraction (control
+//! plane RPC + data plane fetch + underlying PFS).
+
+use super::proto::{file_id, ClientId, FileId, Request, Response};
+use super::store::SharedBb;
+use crate::interval::{LocalTreeError, OwnedInterval, Range};
+use std::collections::HashMap;
+
+/// BaseFS error surface (mirrors the -1 returns of Table 5).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum BfsError {
+    #[error("file not open: {0}")]
+    NotOpen(FileId),
+    #[error("range {0} not (fully) readable from the requested owner")]
+    NotOwned(Range),
+    #[error("attach of unwritten bytes in {0}")]
+    AttachUnwritten(Range),
+    #[error("detach of never-attached range {0}")]
+    DetachUnattached(Range),
+    #[error("seek before start of file")]
+    BadSeek,
+    #[error("server error: {0}")]
+    Server(String),
+}
+
+impl From<LocalTreeError> for BfsError {
+    fn from(e: LocalTreeError) -> Self {
+        match e {
+            LocalTreeError::AttachUnwritten(_) => BfsError::AttachUnwritten(Range::new(0, 0)),
+            LocalTreeError::DetachUnattached(_) => BfsError::DetachUnattached(Range::new(0, 0)),
+        }
+    }
+}
+
+/// Everything a client needs from the outside world. The DES fabric
+/// attaches virtual-time costs to each call; the live fabric does the
+/// real thing over channels/shared memory.
+pub trait Fabric {
+    /// Synchronization RPC to the global server.
+    fn rpc(&mut self, client: ClientId, req: Request) -> Response;
+    /// Data-plane fetch of `range` of `file` from `owner`'s attached
+    /// buffer (client-to-client RDMA path).
+    fn fetch(
+        &mut self,
+        client: ClientId,
+        owner: ClientId,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError>;
+    /// Read/write through the underlying PFS.
+    fn upfs_read(&mut self, client: ClientId, file: FileId, range: Range) -> Vec<u8>;
+    fn upfs_write(&mut self, client: ClientId, file: FileId, offset: u64, data: &[u8]);
+    /// Cost hook for the client's own burst-buffer I/O.
+    fn bb_io(&mut self, client: ClientId, is_write: bool, bytes: u64);
+}
+
+/// `whence` for [`ClientCore::seek`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Whence {
+    Set,
+    Cur,
+    End,
+}
+
+#[derive(Debug, Clone)]
+struct OpenFile {
+    pos: u64,
+}
+
+/// One BaseFS client process.
+pub struct ClientCore {
+    pub id: ClientId,
+    bb: SharedBb,
+    open: HashMap<FileId, OpenFile>,
+}
+
+impl ClientCore {
+    pub fn new(id: ClientId, bb: SharedBb) -> Self {
+        Self {
+            id,
+            bb,
+            open: HashMap::new(),
+        }
+    }
+
+    pub fn bb(&self) -> &SharedBb {
+        &self.bb
+    }
+
+    fn opened(&mut self, file: FileId) -> Result<&mut OpenFile, BfsError> {
+        self.open.get_mut(&file).ok_or(BfsError::NotOpen(file))
+    }
+
+    // ----- Table 5 primitives -------------------------------------------
+
+    /// bfs_open: associates a handle; read-write; position 0. Purely
+    /// local — no server involvement (the consistency layers add their
+    /// own open-time synchronization on top).
+    pub fn open(&mut self, path: &str) -> FileId {
+        let id = file_id(path);
+        self.open.entry(id).or_insert(OpenFile { pos: 0 });
+        id
+    }
+
+    /// bfs_close: releases the handle; buffered data is DISCARDED (not
+    /// flushed as in POSIX).
+    pub fn close(&mut self, file: FileId) -> Result<(), BfsError> {
+        self.open.remove(&file).ok_or(BfsError::NotOpen(file))?;
+        self.bb.write().unwrap().discard(file);
+        Ok(())
+    }
+
+    /// bfs_write at the current position.
+    pub fn write<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        let pos = self.opened(file)?.pos;
+        let n = self.write_at(fabric, file, pos, buf)?;
+        self.opened(file)?.pos = pos + n as u64;
+        Ok(n)
+    }
+
+    /// pwrite-style convenience (does not move the position indicator).
+    pub fn write_at<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        self.opened(file)?;
+        let n = self.bb.write().unwrap().file(file).write(offset, buf);
+        fabric.bb_io(self.id, true, buf.len() as u64);
+        Ok(n)
+    }
+
+    /// bfs_read at the current position from `owner` (None = underlying
+    /// PFS). Advances the position.
+    pub fn read<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        len: u64,
+        owner: Option<ClientId>,
+    ) -> Result<Vec<u8>, BfsError> {
+        let pos = self.opened(file)?.pos;
+        let out = self.read_at(fabric, file, Range::at(pos, len), owner)?;
+        self.opened(file)?.pos = pos + out.len() as u64;
+        Ok(out)
+    }
+
+    /// pread-style read of `range` from `owner`.
+    ///
+    /// - `owner == None`: read the flushed bytes from the underlying PFS
+    ///   (zero-filled holes).
+    /// - `owner == self`: the most recent local writes, attached or not —
+    ///   a write is immediately visible to the writing process.
+    /// - otherwise: fetch from the owner's *attached* buffer; fails
+    ///   unless the owner owns the full range.
+    pub fn read_at<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        range: Range,
+        owner: Option<ClientId>,
+    ) -> Result<Vec<u8>, BfsError> {
+        self.opened(file)?;
+        match owner {
+            None => Ok(fabric.upfs_read(self.id, file, range)),
+            Some(o) if o == self.id => {
+                let bb = self.bb.read().unwrap();
+                let Some(fb) = bb.get(file) else {
+                    return Err(BfsError::NotOwned(range));
+                };
+                let segs = fb.read_local(range);
+                // Require full coverage: a single-owner read must be
+                // entirely served by that owner (Table 5).
+                let mut out = Vec::with_capacity(range.len() as usize);
+                let mut cursor = range.start;
+                for (r, bytes) in segs {
+                    if r.start != cursor {
+                        return Err(BfsError::NotOwned(range));
+                    }
+                    out.extend_from_slice(&bytes);
+                    cursor = r.end;
+                }
+                if cursor != range.end {
+                    return Err(BfsError::NotOwned(range));
+                }
+                drop(bb);
+                fabric.bb_io(self.id, false, range.len());
+                Ok(out)
+            }
+            Some(o) => fabric.fetch(self.id, o, file, range),
+        }
+    }
+
+    /// bfs_attach: make local writes in `[offset, offset+size)` visible.
+    /// Packs all newly-attached intervals into a single RPC; a no-op RPC
+    /// is elided when everything was already attached.
+    pub fn attach<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        offset: u64,
+        size: u64,
+    ) -> Result<(), BfsError> {
+        self.opened(file)?;
+        let range = Range::at(offset, size);
+        let newly = self
+            .bb
+            .write()
+            .unwrap()
+            .file(file)
+            .mark_attached(range)
+            .map_err(|_| BfsError::AttachUnwritten(range))?;
+        if newly.is_empty() {
+            return Ok(());
+        }
+        let ranges: Vec<Range> = newly.iter().map(|s| s.file).collect();
+        match fabric.rpc(
+            self.id,
+            Request::Attach {
+                file,
+                client: self.id,
+                ranges,
+            },
+        ) {
+            Response::Ok => Ok(()),
+            Response::Error(e) => Err(BfsError::Server(e)),
+            other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
+        }
+    }
+
+    /// bfs_attach_file: attach all local writes; no-op without buffered
+    /// writes.
+    pub fn attach_file<F: Fabric + ?Sized>(&mut self, fabric: &mut F, file: FileId) -> Result<(), BfsError> {
+        self.opened(file)?;
+        let newly = self.bb.write().unwrap().file(file).mark_all_attached();
+        if newly.is_empty() {
+            return Ok(());
+        }
+        let ranges: Vec<Range> = newly.iter().map(|s| s.file).collect();
+        match fabric.rpc(
+            self.id,
+            Request::Attach {
+                file,
+                client: self.id,
+                ranges,
+            },
+        ) {
+            Response::Ok => Ok(()),
+            Response::Error(e) => Err(BfsError::Server(e)),
+            other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
+        }
+    }
+
+    /// bfs_query: attached subranges of `[offset, offset+size)`.
+    pub fn query<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        offset: u64,
+        size: u64,
+    ) -> Result<Vec<OwnedInterval>, BfsError> {
+        self.opened(file)?;
+        match fabric.rpc(
+            self.id,
+            Request::Query {
+                file,
+                range: Range::at(offset, size),
+            },
+        ) {
+            Response::Intervals(ivs) => Ok(ivs),
+            Response::Error(e) => Err(BfsError::Server(e)),
+            other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
+        }
+    }
+
+    /// bfs_query_file: all attached ranges of the file.
+    pub fn query_file<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+    ) -> Result<Vec<OwnedInterval>, BfsError> {
+        self.opened(file)?;
+        match fabric.rpc(self.id, Request::QueryFile { file }) {
+            Response::Intervals(ivs) => Ok(ivs),
+            Response::Error(e) => Err(BfsError::Server(e)),
+            other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
+        }
+    }
+
+    /// bfs_detach: relinquish ownership and drop the local buffer for the
+    /// range. Fails if the range was never attached by this client.
+    pub fn detach<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        offset: u64,
+        size: u64,
+    ) -> Result<(), BfsError> {
+        self.opened(file)?;
+        let range = Range::at(offset, size);
+        self.bb
+            .write()
+            .unwrap()
+            .file(file)
+            .tree
+            .detach(range)
+            .map_err(|_| BfsError::DetachUnattached(range))?;
+        match fabric.rpc(
+            self.id,
+            Request::Detach {
+                file,
+                client: self.id,
+                range,
+            },
+        ) {
+            Response::Detached { .. } => Ok(()),
+            Response::Error(e) => Err(BfsError::Server(e)),
+            other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
+        }
+    }
+
+    /// bfs_detach_file: relinquish all attached ranges; no-op when none.
+    pub fn detach_file<F: Fabric + ?Sized>(&mut self, fabric: &mut F, file: FileId) -> Result<(), BfsError> {
+        self.opened(file)?;
+        let removed = self
+            .bb
+            .write()
+            .unwrap()
+            .file(file)
+            .tree
+            .detach_all_attached();
+        if removed.is_empty() {
+            return Ok(());
+        }
+        match fabric.rpc(
+            self.id,
+            Request::DetachFile {
+                file,
+                client: self.id,
+            },
+        ) {
+            Response::Detached { .. } => Ok(()),
+            Response::Error(e) => Err(BfsError::Server(e)),
+            other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
+        }
+    }
+
+    /// bfs_flush: push locally buffered bytes of the range to the
+    /// underlying PFS (attached updates remain visible until detach).
+    pub fn flush<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        offset: u64,
+        size: u64,
+    ) -> Result<(), BfsError> {
+        self.opened(file)?;
+        let range = Range::at(offset, size);
+        let segs: Vec<(Range, Vec<u8>)> = {
+            let bb = self.bb.read().unwrap();
+            match bb.get(file) {
+                Some(fb) => fb.read_local(range),
+                None => Vec::new(),
+            }
+        };
+        if segs.is_empty() {
+            return Ok(());
+        }
+        let mut max_end = 0u64;
+        let mut total = 0u64;
+        for (r, bytes) in &segs {
+            fabric.upfs_write(self.id, file, r.start, bytes);
+            max_end = max_end.max(r.end);
+            total += bytes.len() as u64;
+        }
+        fabric.bb_io(self.id, false, total); // read-back from BB to flush
+        fabric.rpc(self.id, Request::FlushNotify { file, len: max_end });
+        Ok(())
+    }
+
+    /// bfs_flush_file: flush everything buffered for `file`.
+    pub fn flush_file<F: Fabric + ?Sized>(&mut self, fabric: &mut F, file: FileId) -> Result<(), BfsError> {
+        self.opened(file)?;
+        let end = {
+            let bb = self.bb.read().unwrap();
+            bb.get(file).map(|fb| fb.tree.max_written()).unwrap_or(0)
+        };
+        if end == 0 {
+            return Ok(());
+        }
+        self.flush(fabric, file, 0, end)
+    }
+
+    /// bfs_seek.
+    pub fn seek<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        offset: i64,
+        whence: Whence,
+    ) -> Result<u64, BfsError> {
+        let base = match whence {
+            Whence::Set => 0i64,
+            Whence::Cur => self.opened(file)?.pos as i64,
+            Whence::End => self.stat(fabric, file)? as i64,
+        };
+        let newpos = base + offset;
+        if newpos < 0 {
+            return Err(BfsError::BadSeek);
+        }
+        self.opened(file)?.pos = newpos as u64;
+        Ok(newpos as u64)
+    }
+
+    /// bfs_tell.
+    pub fn tell(&mut self, file: FileId) -> Result<u64, BfsError> {
+        Ok(self.opened(file)?.pos)
+    }
+
+    /// bfs_stat: file size = max(global attached EOF, flushed EOF, local
+    /// unattached writes).
+    pub fn stat<F: Fabric + ?Sized>(&mut self, fabric: &mut F, file: FileId) -> Result<u64, BfsError> {
+        self.opened(file)?;
+        let local = {
+            let bb = self.bb.read().unwrap();
+            bb.get(file).map(|fb| fb.tree.max_written()).unwrap_or(0)
+        };
+        match fabric.rpc(self.id, Request::Stat { file }) {
+            Response::Stat {
+                attached_eof,
+                flushed_eof,
+            } => Ok(local.max(attached_eof).max(flushed_eof)),
+            Response::Error(e) => Err(BfsError::Server(e)),
+            other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
+        }
+    }
+}

@@ -1,0 +1,426 @@
+//! Fabric implementations.
+//!
+//! [`DesFabric`] — single-threaded: owns the global-server state, every
+//! client's BB store, and the UPFS content; attaches a virtual-time cost
+//! ([`SimOp`]) to each primitive, which the DES workload driver drains
+//! and feeds to the engine. Functional effects apply at issue time; the
+//! engine invokes drivers in global time order, so effect order matches
+//! the order a FIFO server would process (DESIGN.md §5).
+
+use super::client::{BfsError, Fabric};
+use super::proto::{ClientId, FileId, Request, Response};
+use super::server::GlobalServerState;
+use super::store::{new_shared_bb, SharedBb, UpfsStore};
+use crate::interval::Range;
+use crate::sim::SimOp;
+use std::collections::VecDeque;
+
+/// Cumulative traffic counters (per fabric; reporting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FabricCounters {
+    pub rpcs: u64,
+    pub rpc_intervals: u64,
+    pub fetch_bytes: u64,
+    pub remote_fetches: u64,
+    pub local_fetches: u64,
+    pub upfs_read_bytes: u64,
+    pub upfs_write_bytes: u64,
+    pub bb_write_bytes: u64,
+    pub bb_read_bytes: u64,
+}
+
+/// The DES fabric.
+pub struct DesFabric {
+    pub server: GlobalServerState,
+    pub bbs: Vec<SharedBb>,
+    pub upfs: UpfsStore,
+    /// rank -> node (for pricing remote fetches).
+    node_of: Vec<usize>,
+    /// Per-client pending virtual-time costs, drained by the driver.
+    costs: Vec<VecDeque<SimOp>>,
+    /// When true, local buffer reads are priced as memory reads instead
+    /// of SSD reads (SCR's restart path reads checkpoints still resident
+    /// in the in-memory buffer, §6.2).
+    pub mem_reads: bool,
+    pub counters: FabricCounters,
+}
+
+impl DesFabric {
+    pub fn new(node_of: Vec<usize>) -> Self {
+        Self::with_phantom(node_of, false)
+    }
+
+    /// Benchmark-scale fabric: lengths/ownership only, no payload bytes.
+    pub fn new_phantom(node_of: Vec<usize>) -> Self {
+        Self::with_phantom(node_of, true)
+    }
+
+    fn with_phantom(node_of: Vec<usize>, phantom: bool) -> Self {
+        let n = node_of.len();
+        Self {
+            server: GlobalServerState::new(),
+            bbs: new_shared_bb(n, phantom),
+            upfs: if phantom {
+                UpfsStore::new_phantom()
+            } else {
+                UpfsStore::new()
+            },
+            node_of,
+            costs: (0..n).map(|_| VecDeque::new()).collect(),
+            mem_reads: false,
+            counters: FabricCounters::default(),
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn bb_of(&self, client: ClientId) -> SharedBb {
+        self.bbs[client as usize].clone()
+    }
+
+    /// Drain the next pending cost for `client`, if any.
+    pub fn pop_cost(&mut self, client: ClientId) -> Option<SimOp> {
+        self.costs[client as usize].pop_front()
+    }
+
+    /// Pending cost count (test/debug).
+    pub fn pending_costs(&self, client: ClientId) -> usize {
+        self.costs[client as usize].len()
+    }
+
+    fn push_cost(&mut self, client: ClientId, op: SimOp) {
+        self.costs[client as usize].push_back(op);
+    }
+}
+
+impl Fabric for DesFabric {
+    fn rpc(&mut self, client: ClientId, req: Request) -> Response {
+        let req_units = req.interval_units();
+        let resp = self.server.handle(req);
+        let units = req_units.max(resp.interval_units());
+        self.counters.rpcs += 1;
+        self.counters.rpc_intervals += units as u64;
+        self.push_cost(client, SimOp::Rpc { intervals: units });
+        resp
+    }
+
+    fn fetch(
+        &mut self,
+        client: ClientId,
+        owner: ClientId,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let data = {
+            let bb = self.bbs[owner as usize].read().unwrap();
+            let fb = bb.get(file).ok_or(BfsError::NotOwned(range))?;
+            fb.read_owned(range).map_err(|_| BfsError::NotOwned(range))?
+        };
+        let owner_node = self.node_of[owner as usize];
+        let client_node = self.node_of[client as usize];
+        self.counters.fetch_bytes += data.len() as u64;
+        if owner_node == client_node {
+            self.counters.local_fetches += 1;
+        } else {
+            self.counters.remote_fetches += 1;
+        }
+        self.push_cost(
+            client,
+            SimOp::RemoteFetch {
+                owner_node,
+                bytes: range.len(),
+                from_ssd: !self.mem_reads,
+            },
+        );
+        Ok(data)
+    }
+
+    fn upfs_read(&mut self, client: ClientId, file: FileId, range: Range) -> Vec<u8> {
+        self.counters.upfs_read_bytes += range.len();
+        self.push_cost(client, SimOp::UpfsRead { bytes: range.len() });
+        self.upfs.read(file, range)
+    }
+
+    fn upfs_write(&mut self, client: ClientId, file: FileId, offset: u64, data: &[u8]) {
+        self.counters.upfs_write_bytes += data.len() as u64;
+        self.push_cost(
+            client,
+            SimOp::UpfsWrite {
+                bytes: data.len() as u64,
+            },
+        );
+        self.upfs.write(file, offset, data);
+    }
+
+    fn bb_io(&mut self, client: ClientId, is_write: bool, bytes: u64) {
+        if is_write {
+            self.counters.bb_write_bytes += bytes;
+            self.push_cost(client, SimOp::SsdWrite { bytes });
+        } else {
+            self.counters.bb_read_bytes += bytes;
+            if self.mem_reads {
+                self.push_cost(client, SimOp::MemRead { bytes });
+            } else {
+                self.push_cost(client, SimOp::SsdRead { bytes });
+            }
+        }
+    }
+}
+
+/// A zero-cost fabric for functional unit tests: same state, no cost
+/// accounting, no node mapping.
+pub struct TestFabric {
+    pub inner: DesFabric,
+}
+
+impl TestFabric {
+    pub fn new(nranks: usize) -> Self {
+        Self {
+            inner: DesFabric::new(vec![0; nranks]),
+        }
+    }
+
+    pub fn bb_of(&self, client: ClientId) -> SharedBb {
+        self.inner.bb_of(client)
+    }
+
+    /// Discard accumulated costs (keeps queues from growing in long tests).
+    pub fn drain_costs(&mut self) {
+        for q in &mut self.inner.costs {
+            q.clear();
+        }
+    }
+}
+
+impl Fabric for TestFabric {
+    fn rpc(&mut self, client: ClientId, req: Request) -> Response {
+        self.inner.rpc(client, req)
+    }
+    fn fetch(
+        &mut self,
+        client: ClientId,
+        owner: ClientId,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        self.inner.fetch(client, owner, file, range)
+    }
+    fn upfs_read(&mut self, client: ClientId, file: FileId, range: Range) -> Vec<u8> {
+        self.inner.upfs_read(client, file, range)
+    }
+    fn upfs_write(&mut self, client: ClientId, file: FileId, offset: u64, data: &[u8]) {
+        self.inner.upfs_write(client, file, offset, data)
+    }
+    fn bb_io(&mut self, client: ClientId, is_write: bool, bytes: u64) {
+        self.inner.bb_io(client, is_write, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::client::ClientCore;
+
+    fn setup(n: usize) -> (TestFabric, Vec<ClientCore>) {
+        let fabric = TestFabric::new(n);
+        let clients = (0..n)
+            .map(|i| ClientCore::new(i as ClientId, fabric.bb_of(i as ClientId)))
+            .collect();
+        (fabric, clients)
+    }
+
+    #[test]
+    fn write_then_self_read_roundtrip() {
+        let (mut f, mut cs) = setup(1);
+        let c = &mut cs[0];
+        let fid = c.open("/a");
+        c.write(&mut f, fid, b"hello world").unwrap();
+        c.seek(&mut f, fid, 0, crate::basefs::client::Whence::Set)
+            .unwrap();
+        let got = c.read(&mut f, fid, 11, Some(0)).unwrap();
+        assert_eq!(got, b"hello world");
+        assert_eq!(c.tell(fid).unwrap(), 11);
+    }
+
+    #[test]
+    fn cross_client_read_requires_attach() {
+        let (mut f, mut cs) = setup(2);
+        let fid = cs[0].open("/shared");
+        cs[0].write(&mut f, fid, b"secret-data").unwrap();
+        let fid1 = cs[1].open("/shared");
+        assert_eq!(fid, fid1);
+        // Before attach: reader cannot fetch from the writer.
+        assert!(cs[1].read_at(&mut f, fid, Range::new(0, 11), Some(0)).is_err());
+        // After attach: visible.
+        cs[0].attach(&mut f, fid, 0, 11).unwrap();
+        let got = cs[1]
+            .read_at(&mut f, fid, Range::new(0, 11), Some(0))
+            .unwrap();
+        assert_eq!(got, b"secret-data");
+    }
+
+    #[test]
+    fn query_reveals_owner_after_attach_file() {
+        let (mut f, mut cs) = setup(2);
+        let fid = cs[0].open("/q");
+        cs[0].write(&mut f, fid, b"0123456789").unwrap();
+        let before = cs[1].open("/q");
+        let ivs = cs[1].query(&mut f, before, 0, 10).unwrap();
+        assert!(ivs.is_empty());
+        cs[0].attach_file(&mut f, fid).unwrap();
+        let ivs = cs[1].query(&mut f, fid, 0, 10).unwrap();
+        assert_eq!(ivs.len(), 1);
+        assert_eq!(ivs[0].owner, 0);
+        assert_eq!(ivs[0].range, Range::new(0, 10));
+    }
+
+    #[test]
+    fn attach_is_not_global_visibility_of_future_writes() {
+        let (mut f, mut cs) = setup(2);
+        let fid = cs[0].open("/fw");
+        cs[0].write(&mut f, fid, b"aaaa").unwrap();
+        cs[0].attach_file(&mut f, fid).unwrap();
+        // Future write is NOT visible until another attach.
+        cs[0].write_at(&mut f, fid, 4, b"bbbb").unwrap();
+        cs[1].open("/fw");
+        let ivs = cs[1].query(&mut f, fid, 0, 8).unwrap();
+        assert_eq!(ivs.len(), 1);
+        assert_eq!(ivs[0].range, Range::new(0, 4));
+        cs[0].attach_file(&mut f, fid).unwrap();
+        let ivs = cs[1].query(&mut f, fid, 0, 8).unwrap();
+        assert_eq!(ivs.iter().map(|i| i.range.len()).sum::<u64>(), 8);
+    }
+
+    #[test]
+    fn flush_then_upfs_read_without_owner() {
+        let (mut f, mut cs) = setup(2);
+        let fid = cs[0].open("/flush");
+        cs[0].write(&mut f, fid, b"persisted!").unwrap();
+        cs[0].flush_file(&mut f, fid).unwrap();
+        cs[1].open("/flush");
+        let got = cs[1]
+            .read_at(&mut f, fid, Range::new(0, 10), None)
+            .unwrap();
+        assert_eq!(got, b"persisted!");
+    }
+
+    #[test]
+    fn close_discards_buffered_data() {
+        let (mut f, mut cs) = setup(1);
+        let fid = cs[0].open("/tmp");
+        cs[0].write(&mut f, fid, b"gone").unwrap();
+        cs[0].close(fid).unwrap();
+        let fid = cs[0].open("/tmp");
+        assert!(cs[0].read_at(&mut f, fid, Range::new(0, 4), Some(0)).is_err());
+        // And nothing was flushed:
+        let got = cs[0].read_at(&mut f, fid, Range::new(0, 4), None).unwrap();
+        assert_eq!(got, vec![0u8; 4]);
+    }
+
+    #[test]
+    fn stat_combines_local_global_flushed() {
+        let (mut f, mut cs) = setup(2);
+        let fid = cs[0].open("/stat");
+        cs[0].write(&mut f, fid, &vec![1u8; 100]).unwrap();
+        // Local-only writes count for the writer...
+        assert_eq!(cs[0].stat(&mut f, fid).unwrap(), 100);
+        // ...but not for others until attached.
+        cs[1].open("/stat");
+        assert_eq!(cs[1].stat(&mut f, fid).unwrap(), 0);
+        cs[0].attach_file(&mut f, fid).unwrap();
+        assert_eq!(cs[1].stat(&mut f, fid).unwrap(), 100);
+    }
+
+    #[test]
+    fn seek_whence_variants() {
+        use crate::basefs::client::Whence;
+        let (mut f, mut cs) = setup(1);
+        let fid = cs[0].open("/seek");
+        cs[0].write(&mut f, fid, &vec![0u8; 50]).unwrap();
+        assert_eq!(cs[0].seek(&mut f, fid, 10, Whence::Set).unwrap(), 10);
+        assert_eq!(cs[0].seek(&mut f, fid, 5, Whence::Cur).unwrap(), 15);
+        assert_eq!(cs[0].seek(&mut f, fid, -5, Whence::End).unwrap(), 45);
+        assert!(cs[0].seek(&mut f, fid, -100, Whence::Cur).is_err());
+    }
+
+    #[test]
+    fn detach_after_attach_removes_visibility() {
+        let (mut f, mut cs) = setup(2);
+        let fid = cs[0].open("/d");
+        cs[0].write(&mut f, fid, b"xxxxxxxx").unwrap();
+        cs[0].attach(&mut f, fid, 0, 8).unwrap();
+        cs[0].detach(&mut f, fid, 0, 8).unwrap();
+        cs[1].open("/d");
+        assert!(cs[1].query(&mut f, fid, 0, 8).unwrap().is_empty());
+        assert!(cs[1]
+            .read_at(&mut f, fid, Range::new(0, 8), Some(0))
+            .is_err());
+    }
+
+    #[test]
+    fn detach_unattached_errors() {
+        let (mut f, mut cs) = setup(1);
+        let fid = cs[0].open("/e");
+        cs[0].write(&mut f, fid, b"zz").unwrap();
+        assert!(matches!(
+            cs[0].detach(&mut f, fid, 0, 2),
+            Err(BfsError::DetachUnattached(_))
+        ));
+    }
+
+    #[test]
+    fn attach_unwritten_errors() {
+        let (mut f, mut cs) = setup(1);
+        let fid = cs[0].open("/u");
+        cs[0].write(&mut f, fid, b"ab").unwrap();
+        assert!(matches!(
+            cs[0].attach(&mut f, fid, 0, 10),
+            Err(BfsError::AttachUnwritten(_))
+        ));
+    }
+
+    #[test]
+    fn des_costs_attached_to_ops() {
+        let mut f = DesFabric::new(vec![0, 1]);
+        let mut c0 = ClientCore::new(0, f.bb_of(0));
+        let mut c1 = ClientCore::new(1, f.bb_of(1));
+        let fid = c0.open("/cost");
+        c0.write(&mut f, fid, &vec![7u8; 4096]).unwrap();
+        assert_eq!(f.pop_cost(0), Some(SimOp::SsdWrite { bytes: 4096 }));
+        c0.attach_file(&mut f, fid).unwrap();
+        assert_eq!(f.pop_cost(0), Some(SimOp::Rpc { intervals: 1 }));
+        c1.open("/cost");
+        let ivs = c1.query(&mut f, fid, 0, 4096).unwrap();
+        assert_eq!(f.pop_cost(1), Some(SimOp::Rpc { intervals: 1 }));
+        let got = c1
+            .read_at(&mut f, fid, ivs[0].range, Some(ivs[0].owner))
+            .unwrap();
+        assert_eq!(got.len(), 4096);
+        assert_eq!(
+            f.pop_cost(1),
+            Some(SimOp::RemoteFetch {
+                owner_node: 0,
+                bytes: 4096,
+                from_ssd: true
+            })
+        );
+        assert_eq!(f.pop_cost(1), None);
+        assert_eq!(f.counters.rpcs, 2); // attach + query (none for reads)
+    }
+
+    #[test]
+    fn idempotent_attach_elides_rpc() {
+        let mut f = DesFabric::new(vec![0]);
+        let mut c = ClientCore::new(0, f.bb_of(0));
+        let fid = c.open("/ia");
+        c.write(&mut f, fid, b"abcd").unwrap();
+        let _ = f.pop_cost(0);
+        c.attach_file(&mut f, fid).unwrap();
+        assert!(f.pop_cost(0).is_some());
+        c.attach_file(&mut f, fid).unwrap(); // no new writes
+        assert!(f.pop_cost(0).is_none(), "second attach must be a no-op");
+        assert_eq!(f.counters.rpcs, 1);
+    }
+}

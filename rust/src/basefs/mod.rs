@@ -1,0 +1,24 @@
+//! BaseFS — the paper's "base layer" PFS (§5.1): a deliberately
+//! unoptimized user-level burst-buffer file system exposing
+//! consistency-agnostic primitives (Table 5) from which the consistency
+//! layers ([`crate::fs`]) are composed.
+//!
+//! Structure:
+//! - [`proto`] — the RPC protocol (only synchronization primitives talk
+//!   to the global server).
+//! - [`server`] — global server state: per-file global interval trees.
+//! - [`store`] — real byte storage: per-client burst buffers + UPFS.
+//! - [`client`] — the Table 5 primitive set over a [`client::Fabric`].
+//! - [`fabric`] — DES fabric (virtual-time costs) and test fabric.
+
+pub mod client;
+pub mod fabric;
+pub mod proto;
+pub mod server;
+pub mod store;
+
+pub use client::{BfsError, ClientCore, Fabric, Whence};
+pub use fabric::{DesFabric, FabricCounters, TestFabric};
+pub use proto::{file_id, ClientId, FileId, Request, Response};
+pub use server::GlobalServerState;
+pub use store::{new_shared_bb, BbStore, FileBuf, SharedBb, UpfsStore};

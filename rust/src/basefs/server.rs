@@ -1,0 +1,261 @@
+//! The global server's functional state (§5.1.2): a per-file global
+//! interval tree of attached ranges plus EOF metadata. Pure
+//! request-in/response-out so both engines (single-threaded DES, live
+//! thread pool) drive the same logic.
+
+use super::proto::{FileId, Request, Response};
+use crate::interval::{DetachOutcome, GlobalIntervalTree};
+use crate::util::hash::FxHashMap;
+
+#[derive(Debug, Default)]
+struct FileEntry {
+    tree: GlobalIntervalTree,
+    attached_eof: u64,
+    flushed_eof: u64,
+}
+
+/// The global server state machine.
+#[derive(Debug, Default)]
+pub struct GlobalServerState {
+    files: FxHashMap<FileId, FileEntry>,
+    requests_handled: u64,
+}
+
+impl GlobalServerState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Handle one RPC.
+    pub fn handle(&mut self, req: Request) -> Response {
+        self.requests_handled += 1;
+        match req {
+            Request::Attach {
+                file,
+                client,
+                ranges,
+            } => {
+                let entry = self.files.entry(file).or_default();
+                for range in ranges {
+                    entry.attached_eof = entry.attached_eof.max(range.end);
+                    entry.tree.attach(range, client);
+                }
+                Response::Ok
+            }
+            Request::Query { file, range } => {
+                let ivs = self
+                    .files
+                    .get(&file)
+                    .map(|e| e.tree.query(range))
+                    .unwrap_or_default();
+                Response::Intervals(ivs)
+            }
+            Request::QueryFile { file } => {
+                let ivs = self
+                    .files
+                    .get(&file)
+                    .map(|e| e.tree.query_all())
+                    .unwrap_or_default();
+                Response::Intervals(ivs)
+            }
+            Request::Detach {
+                file,
+                client,
+                range,
+            } => {
+                let removed = match self.files.get_mut(&file) {
+                    Some(e) => e.tree.detach(range, client) == DetachOutcome::Detached,
+                    None => false,
+                };
+                Response::Detached { removed }
+            }
+            Request::DetachFile { file, client } => {
+                let removed = self
+                    .files
+                    .get_mut(&file)
+                    .map(|e| e.tree.detach_all(client) > 0)
+                    .unwrap_or(false);
+                Response::Detached { removed }
+            }
+            Request::Stat { file } => {
+                let (attached_eof, flushed_eof) = self
+                    .files
+                    .get(&file)
+                    .map(|e| (e.attached_eof, e.flushed_eof))
+                    .unwrap_or((0, 0));
+                Response::Stat {
+                    attached_eof,
+                    flushed_eof,
+                }
+            }
+            Request::FlushNotify { file, len } => {
+                let entry = self.files.entry(file).or_default();
+                entry.flushed_eof = entry.flushed_eof.max(len);
+                Response::Ok
+            }
+        }
+    }
+
+    pub fn requests_handled(&self) -> u64 {
+        self.requests_handled
+    }
+
+    /// Number of intervals currently stored for `file` (reporting).
+    pub fn intervals_of(&self, file: FileId) -> usize {
+        self.files.get(&file).map(|e| e.tree.len()).unwrap_or(0)
+    }
+
+    /// Total intervals across all files (reporting / perf counters).
+    pub fn total_intervals(&self) -> usize {
+        self.files.values().map(|e| e.tree.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interval::Range;
+
+    #[test]
+    fn attach_then_query() {
+        let mut s = GlobalServerState::new();
+        let resp = s.handle(Request::Attach {
+            file: 7,
+            client: 1,
+            ranges: vec![Range::new(0, 100)],
+        });
+        assert_eq!(resp, Response::Ok);
+        let ivs = s
+            .handle(Request::Query {
+                file: 7,
+                range: Range::new(50, 150),
+            })
+            .intervals();
+        assert_eq!(ivs.len(), 1);
+        assert_eq!(ivs[0].range, Range::new(50, 100));
+        assert_eq!(ivs[0].owner, 1);
+    }
+
+    #[test]
+    fn query_unknown_file_is_empty() {
+        let mut s = GlobalServerState::new();
+        let ivs = s
+            .handle(Request::Query {
+                file: 99,
+                range: Range::new(0, 10),
+            })
+            .intervals();
+        assert!(ivs.is_empty());
+    }
+
+    #[test]
+    fn multi_range_attach_single_rpc() {
+        let mut s = GlobalServerState::new();
+        s.handle(Request::Attach {
+            file: 1,
+            client: 3,
+            ranges: vec![Range::new(0, 10), Range::new(20, 30)],
+        });
+        let all = s.handle(Request::QueryFile { file: 1 }).intervals();
+        assert_eq!(all.len(), 2);
+        assert_eq!(s.requests_handled(), 2);
+    }
+
+    #[test]
+    fn ownership_takeover() {
+        let mut s = GlobalServerState::new();
+        s.handle(Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(0, 100)],
+        });
+        s.handle(Request::Attach {
+            file: 1,
+            client: 2,
+            ranges: vec![Range::new(25, 75)],
+        });
+        let ivs = s
+            .handle(Request::Query {
+                file: 1,
+                range: Range::new(0, 100),
+            })
+            .intervals();
+        let owners: Vec<u32> = ivs.iter().map(|iv| iv.owner).collect();
+        assert_eq!(owners, vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn detach_semantics() {
+        let mut s = GlobalServerState::new();
+        s.handle(Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(0, 50)],
+        });
+        // Overwrite by another client: detach becomes a no-op.
+        s.handle(Request::Attach {
+            file: 1,
+            client: 2,
+            ranges: vec![Range::new(0, 10)],
+        });
+        let r = s.handle(Request::Detach {
+            file: 1,
+            client: 1,
+            range: Range::new(0, 50),
+        });
+        assert_eq!(r, Response::Detached { removed: false });
+        // Fully-owned detach works.
+        let r = s.handle(Request::Detach {
+            file: 1,
+            client: 1,
+            range: Range::new(10, 50),
+        });
+        assert_eq!(r, Response::Detached { removed: true });
+    }
+
+    #[test]
+    fn detach_file_only_that_client() {
+        let mut s = GlobalServerState::new();
+        s.handle(Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(0, 10)],
+        });
+        s.handle(Request::Attach {
+            file: 1,
+            client: 2,
+            ranges: vec![Range::new(10, 20)],
+        });
+        s.handle(Request::DetachFile { file: 1, client: 1 });
+        let all = s.handle(Request::QueryFile { file: 1 }).intervals();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].owner, 2);
+    }
+
+    #[test]
+    fn stat_tracks_attached_and_flushed_eof() {
+        let mut s = GlobalServerState::new();
+        s.handle(Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(100, 300)],
+        });
+        s.handle(Request::FlushNotify { file: 1, len: 250 });
+        match s.handle(Request::Stat { file: 1 }) {
+            Response::Stat {
+                attached_eof,
+                flushed_eof,
+            } => {
+                assert_eq!(attached_eof, 300);
+                assert_eq!(flushed_eof, 250);
+            }
+            other => panic!("{other:?}"),
+        }
+        // EOF never shrinks on detach (paper keeps metadata minimal).
+        s.handle(Request::DetachFile { file: 1, client: 1 });
+        match s.handle(Request::Stat { file: 1 }) {
+            Response::Stat { attached_eof, .. } => assert_eq!(attached_eof, 300),
+            other => panic!("{other:?}"),
+        }
+    }
+}

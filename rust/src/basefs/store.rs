@@ -1,0 +1,303 @@
+//! Byte storage: per-client burst-buffer stores and the underlying-PFS
+//! content store. Both engines move *real bytes* through these — the
+//! integration tests verify byte-exact read-back through every
+//! consistency layer.
+
+use super::proto::{ClientId, FileId};
+use crate::interval::{LocalInterval, LocalIntervalTree, LocalTreeError, Range};
+use crate::util::hash::FxHashMap;
+use std::sync::{Arc, RwLock};
+
+/// One client's buffered state for one PFS file: the BB cache file plus
+/// the local interval tree mapping file ranges into it.
+///
+/// **Phantom mode**: benchmark-scale runs (up to ~15 GiB of logical
+/// bytes) track lengths/offsets through the exact same tree code paths
+/// but skip materializing payload bytes; reads return zeros. Correctness
+/// tests always run non-phantom with real bytes.
+#[derive(Debug, Default)]
+pub struct FileBuf {
+    /// The node-local burst-buffer cache file (append-only).
+    pub data: Vec<u8>,
+    /// Logical length of the cache file (== data.len() unless phantom).
+    virtual_len: u64,
+    phantom: bool,
+    /// ⟨Os, Oe, Bs, Be, attached⟩ entries.
+    pub tree: LocalIntervalTree,
+}
+
+impl FileBuf {
+    pub fn new_phantom() -> Self {
+        Self {
+            phantom: true,
+            ..Self::default()
+        }
+    }
+
+    /// Append `buf` at file offset `offset`; returns bytes written.
+    pub fn write(&mut self, offset: u64, buf: &[u8]) -> usize {
+        let bb_start = self.virtual_len;
+        if !self.phantom {
+            self.data.extend_from_slice(buf);
+        }
+        self.virtual_len += buf.len() as u64;
+        self.tree
+            .record_write(Range::at(offset, buf.len() as u64), bb_start);
+        buf.len()
+    }
+
+    /// Copy the bytes of one local-tree segment out of the cache file.
+    pub fn read_segment(&self, seg: &LocalInterval) -> Vec<u8> {
+        if self.phantom {
+            vec![0u8; seg.file.len() as usize]
+        } else {
+            self.data[seg.bb_start as usize..seg.bb_end() as usize].to_vec()
+        }
+    }
+
+    /// Read `range`, returning found segments as (file-range, bytes).
+    /// Self-reads see *all* local writes (attached or not) — a write is
+    /// immediately visible to the writing process (Table 5).
+    pub fn read_local(&self, range: Range) -> Vec<(Range, Vec<u8>)> {
+        self.tree
+            .lookup(range)
+            .iter()
+            .map(|seg| (seg.file, self.read_segment(seg)))
+            .collect()
+    }
+
+    /// Read `range` on behalf of *another* client: only attached
+    /// segments are visible, and the whole range must be owned
+    /// (bfs_read fails if the owner does not own the specified range).
+    pub fn read_owned(&self, range: Range) -> Result<Vec<u8>, StoreError> {
+        let segs: Vec<LocalInterval> = self
+            .tree
+            .lookup(range)
+            .into_iter()
+            .filter(|s| s.attached)
+            .collect();
+        let mut cursor = range.start;
+        let mut out = Vec::with_capacity(range.len() as usize);
+        for seg in &segs {
+            if seg.file.start != cursor {
+                return Err(StoreError::NotOwned(range));
+            }
+            out.extend_from_slice(&self.read_segment(seg));
+            cursor = seg.file.end;
+        }
+        if cursor != range.end {
+            return Err(StoreError::NotOwned(range));
+        }
+        Ok(out)
+    }
+
+    pub fn mark_attached(&mut self, range: Range) -> Result<Vec<LocalInterval>, LocalTreeError> {
+        self.tree.mark_attached(range)
+    }
+
+    pub fn mark_all_attached(&mut self) -> Vec<LocalInterval> {
+        self.tree.mark_all_attached()
+    }
+}
+
+/// Errors from byte stores.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum StoreError {
+    #[error("range {0} not (fully) owned by the requested client")]
+    NotOwned(Range),
+}
+
+/// A client's full burst-buffer store: one [`FileBuf`] per file. Shared
+/// (`Arc<RwLock<_>>`) so other clients can serve RDMA-style fetches from
+/// it in the live engine; the DES engine uses the same type single-
+/// threaded.
+#[derive(Debug, Default)]
+pub struct BbStore {
+    pub files: FxHashMap<FileId, FileBuf>,
+    phantom: bool,
+}
+
+impl BbStore {
+    pub fn new(phantom: bool) -> Self {
+        Self {
+            files: FxHashMap::default(),
+            phantom,
+        }
+    }
+
+    pub fn file(&mut self, id: FileId) -> &mut FileBuf {
+        let phantom = self.phantom;
+        self.files.entry(id).or_insert_with(|| {
+            if phantom {
+                FileBuf::new_phantom()
+            } else {
+                FileBuf::default()
+            }
+        })
+    }
+
+    pub fn get(&self, id: FileId) -> Option<&FileBuf> {
+        self.files.get(&id)
+    }
+
+    /// Drop buffered data for `id` (bfs_close discards, not flushes).
+    pub fn discard(&mut self, id: FileId) {
+        self.files.remove(&id);
+    }
+
+    pub fn buffered_bytes(&self) -> u64 {
+        self.files.values().map(|f| f.virtual_len).sum()
+    }
+}
+
+/// Handle to every client's BB store — the "data plane" other clients
+/// fetch from.
+pub type SharedBb = Arc<RwLock<BbStore>>;
+
+pub fn new_shared_bb(n_clients: usize, phantom: bool) -> Vec<SharedBb> {
+    (0..n_clients)
+        .map(|_| Arc::new(RwLock::new(BbStore::new(phantom))))
+        .collect()
+}
+
+/// The underlying shared PFS content (Lustre stand-in): flat files.
+/// Reads beyond the flushed size are zero-filled (BaseFS semantics:
+/// never-written bytes before EOF read as zeros). Phantom mode tracks
+/// sizes only.
+#[derive(Debug, Default)]
+pub struct UpfsStore {
+    files: FxHashMap<FileId, Vec<u8>>,
+    virtual_lens: FxHashMap<FileId, u64>,
+    phantom: bool,
+}
+
+impl UpfsStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn new_phantom() -> Self {
+        Self {
+            phantom: true,
+            ..Self::default()
+        }
+    }
+
+    /// Pre-populate a file (e.g. a pre-existing training dataset).
+    pub fn put(&mut self, id: FileId, data: Vec<u8>) {
+        self.virtual_lens.insert(id, data.len() as u64);
+        if !self.phantom {
+            self.files.insert(id, data);
+        }
+    }
+
+    pub fn write(&mut self, id: FileId, offset: u64, data: &[u8]) {
+        let end = offset + data.len() as u64;
+        let vl = self.virtual_lens.entry(id).or_insert(0);
+        *vl = (*vl).max(end);
+        if !self.phantom {
+            let f = self.files.entry(id).or_default();
+            if (f.len() as u64) < end {
+                f.resize(end as usize, 0);
+            }
+            f[offset as usize..end as usize].copy_from_slice(data);
+        }
+    }
+
+    /// Zero-filled read of `range`.
+    pub fn read(&self, id: FileId, range: Range) -> Vec<u8> {
+        let mut out = vec![0u8; range.len() as usize];
+        if let Some(f) = self.files.get(&id) {
+            let start = (range.start as usize).min(f.len());
+            let end = (range.end as usize).min(f.len());
+            if start < end {
+                out[..end - start].copy_from_slice(&f[start..end]);
+            }
+        }
+        out
+    }
+
+    pub fn len(&self, id: FileId) -> u64 {
+        self.virtual_lens.get(&id).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.virtual_lens.is_empty()
+    }
+
+    /// Purge everything (benches purge the file system between runs, §6.1).
+    pub fn purge(&mut self) {
+        self.files.clear();
+        self.virtual_lens.clear();
+    }
+
+    /// A client id for "read from the underlying PFS" paths in metrics.
+    pub const UPFS_OWNER: ClientId = ClientId::MAX;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filebuf_write_read_roundtrip() {
+        let mut fb = FileBuf::default();
+        fb.write(100, b"hello");
+        let got = fb.read_local(Range::new(100, 105));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1, b"hello");
+    }
+
+    #[test]
+    fn filebuf_overwrite_returns_latest() {
+        let mut fb = FileBuf::default();
+        fb.write(0, b"aaaa");
+        fb.write(1, b"bb");
+        let got = fb.read_local(Range::new(0, 4));
+        let mut flat = vec![0u8; 4];
+        for (r, bytes) in got {
+            flat[r.start as usize..r.end as usize].copy_from_slice(&bytes);
+        }
+        assert_eq!(&flat, b"abba");
+    }
+
+    #[test]
+    fn read_owned_requires_attach_and_full_coverage() {
+        let mut fb = FileBuf::default();
+        fb.write(0, b"0123456789");
+        assert!(fb.read_owned(Range::new(0, 10)).is_err(), "not attached");
+        fb.mark_attached(Range::new(0, 5)).unwrap();
+        assert_eq!(fb.read_owned(Range::new(0, 5)).unwrap(), b"01234");
+        assert!(
+            fb.read_owned(Range::new(0, 10)).is_err(),
+            "partially attached"
+        );
+    }
+
+    #[test]
+    fn bbstore_discard_on_close() {
+        let mut bb = BbStore::default();
+        bb.file(1).write(0, b"data");
+        assert_eq!(bb.buffered_bytes(), 4);
+        bb.discard(1);
+        assert_eq!(bb.buffered_bytes(), 0);
+        assert!(bb.get(1).is_none());
+    }
+
+    #[test]
+    fn upfs_zero_fill_and_extend() {
+        let mut u = UpfsStore::new();
+        u.write(1, 4, b"xy");
+        assert_eq!(u.len(1), 6);
+        assert_eq!(u.read(1, Range::new(0, 8)), b"\0\0\0\0xy\0\0");
+    }
+
+    #[test]
+    fn upfs_purge() {
+        let mut u = UpfsStore::new();
+        u.write(1, 0, b"abc");
+        u.purge();
+        assert_eq!(u.len(1), 0);
+        assert!(u.is_empty());
+    }
+}

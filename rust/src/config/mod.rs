@@ -1,0 +1,231 @@
+//! Experiment configuration: testbed presets (device models), cluster
+//! shape, and workload parameters, loadable from an INI-like file with
+//! CLI overrides. serde/toml are unavailable offline, so the format is
+//! deliberately simple:
+//!
+//! ```ini
+//! # experiment.cfg
+//! [cluster]
+//! nodes = 16
+//! ppn = 12
+//! testbed = catalyst   # catalyst | expanse | hdd | pmem
+//!
+//! [workload]
+//! config = CC-R
+//! fs = session
+//! size = 8K
+//! m = 10
+//! seed = 7
+//! ```
+
+use crate::fs::FsKind;
+use crate::sim::{Cluster, NetParams, ServerParams, SsdParams, UpfsParams};
+use crate::util::units::parse_bytes;
+use crate::workload::Config as TableConfig;
+use std::collections::BTreeMap;
+
+/// Parsed INI-ish file: section -> key -> value.
+pub type Ini = BTreeMap<String, BTreeMap<String, String>>;
+
+/// Parse the config text. Unknown sections/keys are preserved (callers
+/// validate what they consume); syntax errors are reported with lines.
+pub fn parse_ini(text: &str) -> Result<Ini, String> {
+    let mut out: Ini = BTreeMap::new();
+    let mut section = String::from("global");
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let name = stripped
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+        } else if let Some((k, v)) = line.split_once('=') {
+            out.entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.trim().to_string());
+        } else {
+            return Err(format!("line {}: expected `key = value`", lineno + 1));
+        }
+    }
+    Ok(out)
+}
+
+/// Device-model preset (the paper's testbeds + ablation devices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Testbed {
+    Catalyst,
+    Expanse,
+    Hdd,
+    Pmem,
+}
+
+impl Testbed {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "catalyst" => Ok(Testbed::Catalyst),
+            "expanse" => Ok(Testbed::Expanse),
+            "hdd" => Ok(Testbed::Hdd),
+            "pmem" => Ok(Testbed::Pmem),
+            other => Err(format!("unknown testbed `{other}`")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Testbed::Catalyst => "catalyst",
+            Testbed::Expanse => "expanse",
+            Testbed::Hdd => "hdd",
+            Testbed::Pmem => "pmem",
+        }
+    }
+
+    pub fn ssd(&self) -> SsdParams {
+        match self {
+            Testbed::Catalyst => SsdParams::catalyst(),
+            Testbed::Expanse => SsdParams::expanse(),
+            Testbed::Hdd => SsdParams::hdd(),
+            Testbed::Pmem => SsdParams::pmem(),
+        }
+    }
+
+    /// Build the simulated cluster for `nodes` nodes.
+    pub fn cluster(&self, nodes: usize, seed: u64) -> Cluster {
+        Cluster::new(
+            nodes,
+            self.ssd(),
+            NetParams::ib_qdr(),
+            ServerParams::catalyst(),
+            UpfsParams::catalyst_lustre(),
+            seed,
+        )
+    }
+}
+
+/// Full experiment spec assembled from file + CLI.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub testbed: Testbed,
+    pub nodes: usize,
+    pub ppn: usize,
+    pub fs: FsKind,
+    pub workload: TableConfig,
+    pub access_size: u64,
+    pub accesses_per_proc: usize,
+    pub seed: u64,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Self {
+            testbed: Testbed::Catalyst,
+            nodes: 4,
+            ppn: 12,
+            fs: FsKind::Session,
+            workload: TableConfig::CcR,
+            access_size: 8 << 10,
+            accesses_per_proc: 10,
+            seed: 7,
+        }
+    }
+}
+
+impl Experiment {
+    /// Overlay values from an INI file.
+    pub fn apply_ini(&mut self, ini: &Ini) -> Result<(), String> {
+        if let Some(cluster) = ini.get("cluster") {
+            if let Some(v) = cluster.get("nodes") {
+                self.nodes = v.parse().map_err(|e| format!("cluster.nodes: {e}"))?;
+            }
+            if let Some(v) = cluster.get("ppn") {
+                self.ppn = v.parse().map_err(|e| format!("cluster.ppn: {e}"))?;
+            }
+            if let Some(v) = cluster.get("testbed") {
+                self.testbed = Testbed::parse(v)?;
+            }
+        }
+        if let Some(w) = ini.get("workload") {
+            if let Some(v) = w.get("config") {
+                self.workload = TableConfig::parse(v)?;
+            }
+            if let Some(v) = w.get("fs") {
+                self.fs = FsKind::parse(v)?;
+            }
+            if let Some(v) = w.get("size") {
+                self.access_size = parse_bytes(v)?;
+            }
+            if let Some(v) = w.get("m") {
+                self.accesses_per_proc = v.parse().map_err(|e| format!("workload.m: {e}"))?;
+            }
+            if let Some(v) = w.get("seed") {
+                self.seed = v.parse().map_err(|e| format!("workload.seed: {e}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn params(&self) -> crate::workload::WorkloadParams {
+        self.workload.params(
+            self.nodes,
+            self.ppn,
+            self.access_size,
+            self.accesses_per_proc,
+            self.seed,
+        )
+    }
+
+    pub fn cluster(&self) -> Cluster {
+        self.testbed.cluster(self.nodes, self.seed ^ 0xC1A5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ini_parses_sections_comments() {
+        let ini = parse_ini(
+            "# top comment\n[cluster]\nnodes = 8 # inline\nppn=4\n\n[workload]\nfs = commit\n",
+        )
+        .unwrap();
+        assert_eq!(ini["cluster"]["nodes"], "8");
+        assert_eq!(ini["cluster"]["ppn"], "4");
+        assert_eq!(ini["workload"]["fs"], "commit");
+    }
+
+    #[test]
+    fn ini_rejects_bad_lines() {
+        assert!(parse_ini("[cluster\n").is_err());
+        assert!(parse_ini("justaword\n").is_err());
+    }
+
+    #[test]
+    fn experiment_overlay() {
+        let mut e = Experiment::default();
+        let ini = parse_ini(
+            "[cluster]\nnodes=16\ntestbed=expanse\n[workload]\nconfig=CS-R\nfs=commit\nsize=8M\nm=5\n",
+        )
+        .unwrap();
+        e.apply_ini(&ini).unwrap();
+        assert_eq!(e.nodes, 16);
+        assert_eq!(e.testbed, Testbed::Expanse);
+        assert_eq!(e.fs, FsKind::Commit);
+        assert_eq!(e.access_size, 8 << 20);
+        assert_eq!(e.accesses_per_proc, 5);
+        let p = e.params();
+        assert_eq!(p.n_w, 8);
+        assert_eq!(p.n_r, 8);
+    }
+
+    #[test]
+    fn testbed_presets() {
+        assert!(Testbed::parse("CATALYST").is_ok());
+        assert!(Testbed::parse("floppy").is_err());
+        let c = Testbed::Pmem.cluster(2, 1);
+        assert_eq!(c.nodes(), 2);
+    }
+}

@@ -1,0 +1,241 @@
+//! DES experiment runners: the functions the CLI and every figure bench
+//! call. Each wraps a driver, runs it on the configured cluster, and
+//! returns structured rows (plus JSON for `target/results/`).
+
+use crate::config::{Experiment, Testbed};
+use crate::dl::{DlDriver, DlParams, DlReport};
+use crate::fs::FsKind;
+use crate::scr::{ScrDriver, ScrParams, ScrReport};
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+use crate::util::table::Table;
+use crate::util::units::fmt_bandwidth;
+use crate::workload::{Config, PhaseReport, SyntheticDriver};
+
+/// Repeats used by sweep rows (the paper averaged >= 10 runs; benches
+/// default lower for turnaround and expose the knob).
+pub const DEFAULT_REPEATS: usize = 5;
+
+/// One figure row: a (fs, nodes) cell averaged over repeats.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub fs: FsKind,
+    pub config: Config,
+    pub nodes: usize,
+    pub access: u64,
+    /// bytes/sec samples across repeats.
+    pub bw: Samples,
+    pub rpcs: u64,
+}
+
+impl SweepCell {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("fs", self.fs.name())
+            .set("config", self.config.name())
+            .set("nodes", self.nodes)
+            .set("access_bytes", self.access)
+            .set("bw_mean", self.bw.mean())
+            .set("bw_stddev", self.bw.stddev())
+            .set("repeats", self.bw.len())
+            .set("rpcs", self.rpcs);
+        o
+    }
+}
+
+/// Run one synthetic experiment once.
+pub fn run_synthetic(exp: &Experiment) -> PhaseReport {
+    let driver = SyntheticDriver::new(exp.fs, exp.params());
+    driver.run(exp.cluster())
+}
+
+/// Sweep node counts × fs kinds for one Table 8 config and access size —
+/// the generator behind Figs 3 and 4. `write_phase` picks which
+/// bandwidth lands in the cell.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_synthetic(
+    config: Config,
+    access: u64,
+    nodes_list: &[usize],
+    fs_kinds: &[FsKind],
+    ppn: usize,
+    m: usize,
+    repeats: usize,
+    testbed: Testbed,
+    write_phase: bool,
+) -> Vec<SweepCell> {
+    let mut cells = Vec::new();
+    for &fs in fs_kinds {
+        for &nodes in nodes_list {
+            let mut bw = Samples::new();
+            let mut rpcs = 0;
+            for rep in 0..repeats {
+                let seed = 1000 + rep as u64;
+                let params = config.params(nodes, ppn, access, m, seed);
+                let driver = SyntheticDriver::new(fs, params);
+                let report = driver.run(testbed.cluster(nodes, seed ^ 0xBEEF));
+                bw.push(if write_phase {
+                    report.write_bw()
+                } else {
+                    report.read_bw()
+                });
+                rpcs = report.rpcs;
+            }
+            cells.push(SweepCell {
+                fs,
+                config,
+                nodes,
+                access,
+                bw,
+                rpcs,
+            });
+        }
+    }
+    cells
+}
+
+/// Render sweep cells as the figure's table: rows = node counts,
+/// columns = fs kinds.
+pub fn render_sweep(title: &str, cells: &[SweepCell]) -> String {
+    let mut fs_names: Vec<&str> = cells.iter().map(|c| c.fs.name()).collect();
+    fs_names.dedup();
+    let mut nodes: Vec<usize> = cells.iter().map(|c| c.nodes).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let mut header = vec!["nodes".to_string()];
+    for f in &fs_names {
+        header.push(format!("{f} bw"));
+        header.push(format!("{f} ±σ"));
+    }
+    let mut t = Table::new(header);
+    for &n in &nodes {
+        let mut row = vec![n.to_string()];
+        for f in &fs_names {
+            if let Some(c) = cells.iter().find(|c| c.nodes == n && c.fs.name() == *f) {
+                row.push(fmt_bandwidth(c.bw.mean()));
+                row.push(fmt_bandwidth(c.bw.stddev()));
+            } else {
+                row.push("-".into());
+                row.push("-".into());
+            }
+        }
+        t.row(row);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+/// SCR sweep (Fig 5): node counts × fs kinds → ckpt + restart bw.
+pub fn sweep_scr(
+    nodes_list: &[usize],
+    fs_kinds: &[FsKind],
+    ppn: usize,
+    particles: u64,
+    repeats: usize,
+    testbed: Testbed,
+) -> Vec<(FsKind, usize, Samples, Samples)> {
+    let mut rows = Vec::new();
+    for &fs in fs_kinds {
+        for &nodes in nodes_list {
+            let mut ckpt = Samples::new();
+            let mut restart = Samples::new();
+            for rep in 0..repeats {
+                let mut p = ScrParams::with_nodes(nodes, ppn);
+                p.particles = particles;
+                let rep_seed = 2000 + rep as u64;
+                let report: ScrReport =
+                    ScrDriver::new(fs, p).run(testbed.cluster(nodes, rep_seed));
+                ckpt.push(report.ckpt_bw());
+                restart.push(report.restart_bw());
+            }
+            rows.push((fs, nodes, ckpt, restart));
+        }
+    }
+    rows
+}
+
+/// DL sweep (Fig 6): strong or weak scaling.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_dl(
+    strong: bool,
+    nodes_list: &[usize],
+    fs_kinds: &[FsKind],
+    ppn: usize,
+    work: usize,
+    repeats: usize,
+    testbed: Testbed,
+) -> Vec<(FsKind, usize, Samples)> {
+    let mut rows = Vec::new();
+    for &fs in fs_kinds {
+        for &nodes in nodes_list {
+            let mut bw = Samples::new();
+            for rep in 0..repeats {
+                let seed = 3000 + rep as u64;
+                let p = if strong {
+                    DlParams::strong(nodes, ppn, work, seed)
+                } else {
+                    DlParams::weak(nodes, ppn, work, seed)
+                };
+                let report: DlReport = DlDriver::new(fs, p).run(testbed.cluster(nodes, seed));
+                bw.push(report.read_bw());
+            }
+            rows.push((fs, nodes, bw));
+        }
+    }
+    rows
+}
+
+/// Persist rows to `target/results/<name>.json` (best effort).
+pub fn write_results(name: &str, payload: Json) {
+    let dir = std::path::Path::new("target/results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let path = dir.join(format!("{name}.json"));
+    let _ = std::fs::write(path, payload.pretty());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_grid() {
+        let cells = sweep_synthetic(
+            Config::CcR,
+            8 << 10,
+            &[2, 4],
+            &[FsKind::Commit, FsKind::Session],
+            2,
+            3,
+            2,
+            Testbed::Catalyst,
+            false,
+        );
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().all(|c| c.bw.len() == 2 && c.bw.mean() > 0.0));
+        let rendered = render_sweep("Fig-test", &cells);
+        assert!(rendered.contains("commit bw"));
+        assert!(rendered.contains("session bw"));
+    }
+
+    #[test]
+    fn scr_and_dl_sweeps_run() {
+        let scr = sweep_scr(&[4], &[FsKind::Session], 2, 500_000, 1, Testbed::Catalyst);
+        assert_eq!(scr.len(), 1);
+        assert!(scr[0].2.mean() > 0.0 && scr[0].3.mean() > 0.0);
+        let dl = sweep_dl(false, &[2], &[FsKind::Commit], 2, 2, 1, Testbed::Catalyst);
+        assert!(dl[0].2.mean() > 0.0);
+    }
+
+    #[test]
+    fn run_synthetic_from_experiment() {
+        let exp = Experiment {
+            nodes: 2,
+            ppn: 2,
+            accesses_per_proc: 2,
+            ..Experiment::default()
+        };
+        let rep = run_synthetic(&exp);
+        assert!(rep.read_bw() > 0.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! The live execution engine: real OS threads, real channels, real
+//! bytes. Clients run on their own threads; the global server is a
+//! master thread dispatching to a round-robin worker pool over the
+//! shared server state — the same structure §5.1.2 describes, actually
+//! concurrent. Used by integration tests and the end-to-end examples
+//! (where PJRT compute runs per batch); the DES engine remains the
+//! timing authority for benchmarks.
+
+use crate::basefs::{
+    new_shared_bb, BfsError, ClientId, Fabric, FileId, GlobalServerState, Request, Response,
+    SharedBb, UpfsStore,
+};
+use crate::interval::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+struct Envelope {
+    req: Request,
+    reply: Sender<Response>,
+}
+
+enum Msg {
+    Rpc(Envelope),
+    /// Stop the server; safe even while fabric clones of the sender
+    /// still exist (the master exits on receipt).
+    Stop,
+}
+
+/// Handle to the running global server (master + workers).
+pub struct LiveServer {
+    master_tx: Sender<Msg>,
+    master: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl LiveServer {
+    /// Spawn the master and `nworkers` workers.
+    pub fn spawn(nworkers: usize) -> Self {
+        assert!(nworkers > 0);
+        let state = Arc::new(Mutex::new(GlobalServerState::new()));
+        let (master_tx, master_rx): (Sender<Msg>, Receiver<Msg>) = channel();
+
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for _ in 0..nworkers {
+            let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+            worker_txs.push(tx);
+            let state = state.clone();
+            workers.push(std::thread::spawn(move || {
+                // Identical worker routine: drain the FIFO task queue.
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Rpc(env) => {
+                            let resp = state.lock().unwrap().handle(env.req);
+                            // Receiver may have given up; ignore failure.
+                            let _ = env.reply.send(resp);
+                        }
+                        Msg::Stop => break,
+                    }
+                }
+            }));
+        }
+
+        // Master: receives every message, appends to workers round-robin.
+        let master = std::thread::spawn(move || {
+            let mut next = 0usize;
+            while let Ok(msg) = master_rx.recv() {
+                match msg {
+                    Msg::Rpc(env) => {
+                        let _ = worker_txs[next].send(Msg::Rpc(env));
+                        next = (next + 1) % worker_txs.len();
+                    }
+                    Msg::Stop => {
+                        for tx in &worker_txs {
+                            let _ = tx.send(Msg::Stop);
+                        }
+                        break;
+                    }
+                }
+            }
+        });
+
+        Self {
+            master_tx,
+            master: Some(master),
+            workers,
+        }
+    }
+
+    fn tx(&self) -> Sender<Msg> {
+        self.master_tx.clone()
+    }
+
+    /// Stop the server and join all threads. Safe while fabric clones of
+    /// the sender are still alive; their later RPCs will error.
+    pub fn shutdown(mut self) {
+        let _ = self.master_tx.send(Msg::Stop);
+        if let Some(m) = self.master.take() {
+            let _ = m.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One client's view of the live cluster.
+pub struct LiveFabric {
+    rpc_tx: Sender<Msg>,
+    /// All clients' BB stores (data plane; index = ClientId).
+    bbs: Vec<SharedBb>,
+    upfs: Arc<RwLock<UpfsStore>>,
+}
+
+impl LiveFabric {
+    pub fn bb_of(&self, client: ClientId) -> SharedBb {
+        self.bbs[client as usize].clone()
+    }
+}
+
+impl Fabric for LiveFabric {
+    fn rpc(&mut self, _client: ClientId, req: Request) -> Response {
+        let (reply_tx, reply_rx) = channel();
+        self.rpc_tx
+            .send(Msg::Rpc(Envelope {
+                req,
+                reply: reply_tx,
+            }))
+            .expect("server gone");
+        reply_rx.recv().expect("server dropped reply")
+    }
+
+    fn fetch(
+        &mut self,
+        _client: ClientId,
+        owner: ClientId,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let bb = self.bbs[owner as usize].read().unwrap();
+        let fb = bb.get(file).ok_or(BfsError::NotOwned(range))?;
+        fb.read_owned(range).map_err(|_| BfsError::NotOwned(range))
+    }
+
+    fn upfs_read(&mut self, _client: ClientId, file: FileId, range: Range) -> Vec<u8> {
+        self.upfs.read().unwrap().read(file, range)
+    }
+
+    fn upfs_write(&mut self, _client: ClientId, file: FileId, offset: u64, data: &[u8]) {
+        self.upfs.write().unwrap().write(file, offset, data);
+    }
+
+    fn bb_io(&mut self, _client: ClientId, _is_write: bool, _bytes: u64) {
+        // Real time is real; nothing to price.
+    }
+}
+
+/// A live cluster: the server plus one fabric per client.
+pub struct LiveCluster {
+    pub server: LiveServer,
+    pub fabrics: Vec<LiveFabric>,
+}
+
+impl LiveCluster {
+    pub fn new(nclients: usize, nworkers: usize) -> Self {
+        let server = LiveServer::spawn(nworkers);
+        let bbs = new_shared_bb(nclients, false);
+        let upfs = Arc::new(RwLock::new(UpfsStore::new()));
+        let fabrics = (0..nclients)
+            .map(|_| LiveFabric {
+                rpc_tx: server.tx(),
+                bbs: bbs.clone(),
+                upfs: upfs.clone(),
+            })
+            .collect();
+        Self { server, fabrics }
+    }
+
+    /// Take the per-client fabrics (consumed by client threads).
+    pub fn take_fabrics(&mut self) -> Vec<LiveFabric> {
+        std::mem::take(&mut self.fabrics)
+    }
+
+    pub fn shutdown(self) {
+        self.server.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::ClientCore;
+
+    #[test]
+    fn live_rpc_roundtrip() {
+        let mut cluster = LiveCluster::new(2, 4);
+        let mut fabrics = cluster.take_fabrics();
+        let mut c = ClientCore::new(0, fabrics[0].bb_of(0));
+        let f = c.open("/live");
+        c.write(&mut fabrics[0], f, b"live-bytes").unwrap();
+        c.attach_file(&mut fabrics[0], f).unwrap();
+        let mut r = ClientCore::new(1, fabrics[1].bb_of(1));
+        let f2 = r.open("/live");
+        let ivs = r.query(&mut fabrics[1], f2, 0, 10).unwrap();
+        assert_eq!(ivs.len(), 1);
+        let got = r
+            .read_at(&mut fabrics[1], f2, Range::new(0, 10), Some(0))
+            .unwrap();
+        assert_eq!(got, b"live-bytes");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn concurrent_attach_query_stress() {
+        const N: usize = 8;
+        const OPS: usize = 50;
+        let mut cluster = LiveCluster::new(N, 4);
+        let fabrics = cluster.take_fabrics();
+        let mut handles = Vec::new();
+        for (i, mut fabric) in fabrics.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let mut c = ClientCore::new(i as u32, fabric.bb_of(i as u32));
+                let f = c.open("/stress");
+                for k in 0..OPS {
+                    let off = (i * OPS + k) as u64 * 64;
+                    c.write_at(&mut fabric, f, off, &[i as u8; 64]).unwrap();
+                    c.attach(&mut fabric, f, off, 64).unwrap();
+                }
+                // Everyone queries the whole file at the end.
+                let ivs = c.query(&mut fabric, f, 0, (N * OPS * 64) as u64).unwrap();
+                assert!(!ivs.is_empty());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,16 @@
+//! The coordinator: the leader process that builds the simulated (or
+//! live) cluster, routes experiment phases, and renders reports.
+//!
+//! - [`des`] — the DES runners behind the CLI and the figure benches.
+//! - [`live`] — the thread-per-rank engine with a real global server
+//!   (master + worker pool over channels) for integration tests and the
+//!   end-to-end examples.
+
+pub mod des;
+pub mod live;
+
+pub use des::{
+    render_sweep, run_synthetic, sweep_dl, sweep_scr, sweep_synthetic, write_results, SweepCell,
+    DEFAULT_REPEATS,
+};
+pub use live::{LiveCluster, LiveFabric, LiveServer};

@@ -1,0 +1,218 @@
+//! CommitFS (Table 6): commit consistency over BaseFS. Writes buffer
+//! locally; `commit` (= bfs_attach_file) makes all of a process's
+//! updates since the previous commit globally visible. Reads still
+//! query the global server **every time** — the per-read RPC that the
+//! paper shows becomes the bottleneck for small reads (Figs 4b, 5, 6).
+
+use super::{assemble_read, FsKind, WorkloadFs};
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
+use crate::interval::Range;
+
+pub struct CommitFs {
+    core: ClientCore,
+}
+
+impl CommitFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+        }
+    }
+
+    /// `commit`: all updates by this process to `file` since the previous
+    /// commit become globally visible (bfs_attach_file).
+    pub fn commit(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.attach_file(fabric, file)
+    }
+
+    /// Fine-grained commit of a byte range (§2.3.1: "finer commit
+    /// granularity (e.g., committing byte ranges) is also possible, but
+    /// may add additional overhead if used in a superfluous way").
+    /// Maps to bfs_attach of exactly that range; the
+    /// `ablate_commit_granularity` bench quantifies the overhead.
+    pub fn commit_range(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        size: u64,
+    ) -> Result<(), BfsError> {
+        self.core.attach(fabric, file, offset, size)
+    }
+
+    /// `write`: buffer locally, no server traffic.
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        self.core.write_at(fabric, file, offset, buf)
+    }
+
+    /// `read`: bfs_query (an RPC!) then bfs_read per owned subrange.
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        assemble_read(&mut self.core, fabric, file, range, &owned)
+    }
+}
+
+impl WorkloadFs for CommitFs {
+    fn kind(&self) -> FsKind {
+        FsKind::Commit
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, _fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.core.open(path)
+    }
+
+    fn close(&mut self, _fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.close(file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        CommitFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        CommitFs::read_at(self, fabric, file, range)
+    }
+
+    /// Write phase ends with a commit.
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.commit(fabric, file)
+    }
+
+    /// Commit consistency needs nothing reader-side.
+    fn begin_read_phase(
+        &mut self,
+        _fabric: &mut dyn Fabric,
+        _file: FileId,
+    ) -> Result<(), BfsError> {
+        Ok(())
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::TestFabric;
+
+    #[test]
+    fn invisible_until_commit() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = CommitFs::new(0, fabric.bb_of(0));
+        let mut r = CommitFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/c");
+        r.open(&mut fabric, "/c");
+        CommitFs::write_at(&mut w, &mut fabric, f, 0, b"pending").unwrap();
+        // Not committed: reader sees UPFS zeros (empty file).
+        let got = CommitFs::read_at(&mut r, &mut fabric, f, Range::new(0, 7)).unwrap();
+        assert_eq!(got, vec![0u8; 7]);
+        w.commit(&mut fabric, f).unwrap();
+        let got = CommitFs::read_at(&mut r, &mut fabric, f, Range::new(0, 7)).unwrap();
+        assert_eq!(got, b"pending");
+    }
+
+    #[test]
+    fn commit_covers_all_writes_since_previous() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = CommitFs::new(0, fabric.bb_of(0));
+        let mut r = CommitFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/multi");
+        r.open(&mut fabric, "/multi");
+        for i in 0..5u64 {
+            CommitFs::write_at(&mut w, &mut fabric, f, i * 2, b"ab").unwrap();
+        }
+        w.commit(&mut fabric, f).unwrap();
+        let got = CommitFs::read_at(&mut r, &mut fabric, f, Range::new(0, 10)).unwrap();
+        assert_eq!(got, b"ababababab");
+    }
+
+    #[test]
+    fn one_rpc_per_read_many_writes_free() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = CommitFs::new(0, fabric.bb_of(0));
+        let mut r = CommitFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/cost");
+        r.open(&mut fabric, "/cost");
+        for i in 0..100u64 {
+            CommitFs::write_at(&mut w, &mut fabric, f, i * 8, &[1u8; 8]).unwrap();
+        }
+        assert_eq!(fabric.inner.counters.rpcs, 0, "writes are silent");
+        w.commit(&mut fabric, f).unwrap();
+        assert_eq!(fabric.inner.counters.rpcs, 1, "one commit RPC");
+        for i in 0..10u64 {
+            CommitFs::read_at(&mut r, &mut fabric, f, Range::at(i * 8, 8)).unwrap();
+        }
+        assert_eq!(fabric.inner.counters.rpcs, 11, "a query per read");
+    }
+}
+
+#[cfg(test)]
+mod granularity_tests {
+    use super::*;
+    use crate::basefs::TestFabric;
+    use crate::interval::Range;
+
+    #[test]
+    fn commit_range_publishes_only_that_range() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = CommitFs::new(0, fabric.bb_of(0));
+        let mut r = CommitFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/grain");
+        r.open(&mut fabric, "/grain");
+        CommitFs::write_at(&mut w, &mut fabric, f, 0, &[1u8; 100]).unwrap();
+        w.commit_range(&mut fabric, f, 20, 30).unwrap();
+        let got = CommitFs::read_at(&mut r, &mut fabric, f, Range::new(0, 100)).unwrap();
+        assert_eq!(&got[..20], &[0u8; 20][..], "uncommitted prefix invisible");
+        assert_eq!(&got[20..50], &[1u8; 30][..], "committed range visible");
+        assert_eq!(&got[50..], &[0u8; 50][..]);
+    }
+
+    #[test]
+    fn superfluous_fine_commits_cost_extra_rpcs() {
+        let mut fabric = TestFabric::new(1);
+        let mut w = CommitFs::new(0, fabric.bb_of(0));
+        let f = w.open(&mut fabric, "/fine");
+        for i in 0..10u64 {
+            CommitFs::write_at(&mut w, &mut fabric, f, i * 8, &[9u8; 8]).unwrap();
+            w.commit_range(&mut fabric, f, i * 8, 8).unwrap();
+        }
+        assert_eq!(fabric.inner.counters.rpcs, 10);
+        // Coarse equivalent: one commit.
+        let mut fabric2 = TestFabric::new(1);
+        let mut w2 = CommitFs::new(0, fabric2.bb_of(0));
+        let f2 = w2.open(&mut fabric2, "/coarse");
+        for i in 0..10u64 {
+            CommitFs::write_at(&mut w2, &mut fabric2, f2, i * 8, &[9u8; 8]).unwrap();
+        }
+        w2.commit(&mut fabric2, f2).unwrap();
+        assert_eq!(fabric2.inner.counters.rpcs, 1);
+    }
+}

@@ -1,0 +1,180 @@
+//! The consistency-layer file systems of Table 6, each a thin mapping of
+//! its API onto BaseFS primitives. The **only** difference between them
+//! is the placement of `attach` and `query` — exactly the paper's
+//! methodology for isolating the consistency model:
+//!
+//! | FS        | write                  | read                 | sync ops                    |
+//! |-----------|------------------------|----------------------|-----------------------------|
+//! | PosixFS   | bfs_write + bfs_attach | bfs_query + bfs_read | —                           |
+//! | CommitFS  | bfs_write              | bfs_query + bfs_read | commit = bfs_attach_file    |
+//! | SessionFS | bfs_write              | bfs_read (cached)    | session_open = bfs_query_file, session_close = bfs_attach_file |
+//! | MpiioFS   | bfs_write              | bfs_read (cached)    | MPI_File_sync/open/close    |
+
+mod commit;
+mod mpiio;
+mod posix;
+mod session;
+
+pub use commit::CommitFs;
+pub use mpiio::MpiioFs;
+pub use posix::PosixFs;
+pub use session::SessionFs;
+
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId};
+use crate::interval::{OwnedInterval, Range};
+
+/// Which consistency layer a workload runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsKind {
+    Posix,
+    Commit,
+    Session,
+    Mpiio,
+}
+
+impl FsKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FsKind::Posix => "posix",
+            FsKind::Commit => "commit",
+            FsKind::Session => "session",
+            FsKind::Mpiio => "mpiio",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "posix" => Ok(FsKind::Posix),
+            "commit" => Ok(FsKind::Commit),
+            "session" => Ok(FsKind::Session),
+            "mpiio" | "mpi-io" => Ok(FsKind::Mpiio),
+            other => Err(format!(
+                "unknown file system `{other}` (posix|commit|session|mpiio)"
+            )),
+        }
+    }
+}
+
+/// The uniform interface workload drivers program against. Phase hooks
+/// let each layer place its synchronization where its model requires:
+/// CommitFS commits at `end_write_phase`, SessionFS closes/opens its
+/// session there, PosixFS needs nothing.
+pub trait WorkloadFs {
+    fn kind(&self) -> FsKind;
+    fn client_id(&self) -> u32;
+
+    fn open(&mut self, fabric: &mut dyn Fabric, path: &str) -> FileId;
+    fn close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError>;
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError>;
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError>;
+
+    /// Writer-side synchronization after a write phase (commit /
+    /// session_close / no-op).
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId)
+        -> Result<(), BfsError>;
+
+    /// Reader-side synchronization before a read phase (no-op /
+    /// session_open).
+    fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId)
+        -> Result<(), BfsError>;
+
+    /// Underlying client (metrics, direct primitive access in tests).
+    fn core(&mut self) -> &mut ClientCore;
+}
+
+/// Assemble a read of `range` from an ownership map: owned subranges are
+/// fetched from their owners (self-reads served locally), holes fall
+/// through to the underlying PFS. This is the shared read path of every
+/// consistency layer; they differ only in *where the ownership map comes
+/// from* (per-read query vs. session-open snapshot).
+pub fn assemble_read(
+    core: &mut ClientCore,
+    fabric: &mut dyn Fabric,
+    file: FileId,
+    range: Range,
+    owned: &[OwnedInterval],
+) -> Result<Vec<u8>, BfsError> {
+    let mut out = Vec::with_capacity(range.len() as usize);
+    let mut cursor = range.start;
+    for iv in owned {
+        let Some(clip) = iv.range.intersect(&range) else {
+            continue;
+        };
+        if clip.start > cursor {
+            // Hole before this interval: underlying PFS.
+            out.extend_from_slice(&core.read_at(
+                fabric,
+                file,
+                Range::new(cursor, clip.start),
+                None,
+            )?);
+        }
+        out.extend_from_slice(&core.read_at(fabric, file, clip, Some(iv.owner))?);
+        cursor = clip.end;
+    }
+    if cursor < range.end {
+        out.extend_from_slice(&core.read_at(
+            fabric,
+            file,
+            Range::new(cursor, range.end),
+            None,
+        )?);
+    }
+    debug_assert_eq!(out.len() as u64, range.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::TestFabric;
+
+    #[test]
+    fn fskind_parse_and_name() {
+        assert_eq!(FsKind::parse("session").unwrap(), FsKind::Session);
+        assert_eq!(FsKind::parse("MPI-IO").unwrap(), FsKind::Mpiio);
+        assert!(FsKind::parse("zfs").is_err());
+        assert_eq!(FsKind::Commit.name(), "commit");
+    }
+
+    #[test]
+    fn assemble_read_mixes_owner_and_upfs() {
+        let mut fabric = TestFabric::new(2);
+        // Client 1 wrote+attached [10,20); UPFS has flushed bytes [0,30).
+        let mut writer = ClientCore::new(1, fabric.bb_of(1));
+        let f = writer.open("/mix");
+        writer.write_at(&mut fabric, f, 10, &[7u8; 10]).unwrap();
+        writer.attach(&mut fabric, f, 10, 10).unwrap();
+        fabric.inner.upfs.write(f, 0, &[9u8; 30]);
+
+        let mut reader = ClientCore::new(0, fabric.bb_of(0));
+        let f = reader.open("/mix");
+        let owned = reader.query(&mut fabric, f, 0, 30).unwrap();
+        let out = assemble_read(&mut reader, &mut fabric, f, Range::new(0, 30), &owned).unwrap();
+        assert_eq!(&out[..10], &[9u8; 10]); // hole -> UPFS
+        assert_eq!(&out[10..20], &[7u8; 10]); // owned -> fetch
+        assert_eq!(&out[20..30], &[9u8; 10]); // hole -> UPFS
+    }
+
+    #[test]
+    fn assemble_read_pure_hole_is_zero_or_upfs() {
+        let mut fabric = TestFabric::new(1);
+        let mut c = ClientCore::new(0, fabric.bb_of(0));
+        let f = c.open("/empty");
+        let out = assemble_read(&mut c, &mut fabric, f, Range::new(0, 16), &[]).unwrap();
+        assert_eq!(out, vec![0u8; 16]);
+    }
+}

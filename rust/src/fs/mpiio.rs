@@ -1,0 +1,191 @@
+//! MpiioFS: the MPI-IO consistency model's third level (§2.3.3/§4.2.4)
+//! over BaseFS. `MPI_File_sync` acts as both writer-side flush-out
+//! (bfs_attach_file) and reader-side refresh (bfs_query_file) — it can
+//! be either `s1` or `s2` of the sync-barrier-sync construct.
+//! `MPI_File_open` refreshes; `MPI_File_close` publishes.
+//!
+//! Like SessionFS, the ownership snapshot is cached between syncs, so
+//! read-side cost is one RPC per sync rather than one per read.
+
+use super::{assemble_read, FsKind, WorkloadFs};
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
+use crate::interval::{GlobalIntervalTree, Range};
+use std::collections::HashMap;
+
+pub struct MpiioFs {
+    core: ClientCore,
+    view: HashMap<FileId, GlobalIntervalTree>,
+}
+
+impl MpiioFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+            view: HashMap::new(),
+        }
+    }
+
+    fn refresh_view(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        let ivs = self.core.query_file(fabric, file)?;
+        let mut tree = GlobalIntervalTree::new();
+        for iv in ivs {
+            tree.attach(iv.range, iv.owner);
+        }
+        self.view.insert(file, tree);
+        Ok(())
+    }
+
+    /// MPI_File_open: associate the handle and refresh the view.
+    pub fn mpi_open(&mut self, fabric: &mut dyn Fabric, path: &str) -> Result<FileId, BfsError> {
+        let file = self.core.open(path);
+        self.refresh_view(fabric, file)?;
+        Ok(file)
+    }
+
+    /// MPI_File_sync: publish local writes AND refresh the view.
+    pub fn mpi_sync(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.attach_file(fabric, file)?;
+        self.refresh_view(fabric, file)
+    }
+
+    /// MPI_File_close: publish local writes and drop the handle. The BB
+    /// buffer is kept alive (ownership has been transferred to the
+    /// server's map); callers that really want the BB space back should
+    /// flush + detach first.
+    pub fn mpi_close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.attach_file(fabric, file)?;
+        self.view.remove(&file);
+        Ok(())
+    }
+
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        self.core.write_at(fabric, file, offset, buf)
+    }
+
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let me = self.core.id;
+        let mut owned = self
+            .view
+            .get(&file)
+            .map(|t| t.query(range))
+            .unwrap_or_default();
+        let own: Vec<Range> = {
+            let bb = self.core.bb().read().unwrap();
+            bb.get(file)
+                .map(|fb| fb.tree.lookup(range).iter().map(|s| s.file).collect())
+                .unwrap_or_default()
+        };
+        if !own.is_empty() {
+            let mut tree = GlobalIntervalTree::new();
+            for iv in &owned {
+                tree.attach(iv.range, iv.owner);
+            }
+            for r in own {
+                tree.attach(r, me);
+            }
+            owned = tree.query(range);
+        }
+        assemble_read(&mut self.core, fabric, file, range, &owned)
+    }
+}
+
+impl WorkloadFs for MpiioFs {
+    fn kind(&self) -> FsKind {
+        FsKind::Mpiio
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.mpi_open(fabric, path).expect("mpi_open")
+    }
+
+    fn close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.mpi_close(fabric, file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        MpiioFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        MpiioFs::read_at(self, fabric, file, range)
+    }
+
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.mpi_sync(fabric, file)
+    }
+
+    fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.mpi_sync(fabric, file)
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::TestFabric;
+
+    #[test]
+    fn sync_barrier_sync_visibility() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = MpiioFs::new(0, fabric.bb_of(0));
+        let mut r = MpiioFs::new(1, fabric.bb_of(1));
+        let f = w.mpi_open(&mut fabric, "/m").unwrap();
+        r.mpi_open(&mut fabric, "/m").unwrap();
+        MpiioFs::write_at(&mut w, &mut fabric, f, 0, b"mpi-data").unwrap();
+        // Reader's stale view: no data yet.
+        let got = MpiioFs::read_at(&mut r, &mut fabric, f, Range::new(0, 8)).unwrap();
+        assert_eq!(got, vec![0u8; 8]);
+        // sync (writer) -> [barrier] -> sync (reader)
+        w.mpi_sync(&mut fabric, f).unwrap();
+        r.mpi_sync(&mut fabric, f).unwrap();
+        let got = MpiioFs::read_at(&mut r, &mut fabric, f, Range::new(0, 8)).unwrap();
+        assert_eq!(got, b"mpi-data");
+    }
+
+    #[test]
+    fn reads_between_syncs_cost_no_rpc() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = MpiioFs::new(0, fabric.bb_of(0));
+        let mut r = MpiioFs::new(1, fabric.bb_of(1));
+        let f = w.mpi_open(&mut fabric, "/mc").unwrap();
+        r.mpi_open(&mut fabric, "/mc").unwrap();
+        MpiioFs::write_at(&mut w, &mut fabric, f, 0, &[3u8; 160]).unwrap();
+        w.mpi_sync(&mut fabric, f).unwrap();
+        r.mpi_sync(&mut fabric, f).unwrap();
+        let before = fabric.inner.counters.rpcs;
+        for i in 0..20u64 {
+            MpiioFs::read_at(&mut r, &mut fabric, f, Range::at(i * 8, 8)).unwrap();
+        }
+        assert_eq!(fabric.inner.counters.rpcs, before);
+    }
+}

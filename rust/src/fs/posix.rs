@@ -1,0 +1,131 @@
+//! PosixFS (Table 6): POSIX consistency over BaseFS. Every write
+//! attaches immediately (global visibility on return); every read
+//! queries. The most synchronization-heavy layer — the paper includes it
+//! for the framework discussion and we use it in ablations.
+
+use super::{assemble_read, FsKind, WorkloadFs};
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
+use crate::interval::Range;
+
+pub struct PosixFs {
+    core: ClientCore,
+}
+
+impl PosixFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+        }
+    }
+
+    /// POSIX `write`: bfs_write + bfs_attach of exactly the written range.
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        let n = self.core.write_at(fabric, file, offset, buf)?;
+        self.core.attach(fabric, file, offset, n as u64)?;
+        Ok(n)
+    }
+
+    /// POSIX `read`: bfs_query + bfs_read per owned subrange.
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        assemble_read(&mut self.core, fabric, file, range, &owned)
+    }
+}
+
+impl WorkloadFs for PosixFs {
+    fn kind(&self) -> FsKind {
+        FsKind::Posix
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, _fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.core.open(path)
+    }
+
+    fn close(&mut self, _fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.close(file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        PosixFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        PosixFs::read_at(self, fabric, file, range)
+    }
+
+    fn end_write_phase(
+        &mut self,
+        _fabric: &mut dyn Fabric,
+        _file: FileId,
+    ) -> Result<(), BfsError> {
+        Ok(()) // writes are already globally visible
+    }
+
+    fn begin_read_phase(
+        &mut self,
+        _fabric: &mut dyn Fabric,
+        _file: FileId,
+    ) -> Result<(), BfsError> {
+        Ok(())
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::TestFabric;
+
+    #[test]
+    fn write_is_immediately_visible() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = PosixFs::new(0, fabric.bb_of(0));
+        let mut r = PosixFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/p");
+        r.open(&mut fabric, "/p");
+        WorkloadFs::write_at(&mut w, &mut fabric, f, 0, b"posix!").unwrap();
+        // No sync ops at all — read sees it.
+        let got = WorkloadFs::read_at(&mut r, &mut fabric, f, Range::new(0, 6)).unwrap();
+        assert_eq!(got, b"posix!");
+    }
+
+    #[test]
+    fn every_write_costs_an_rpc() {
+        let mut fabric = TestFabric::new(1);
+        let mut w = PosixFs::new(0, fabric.bb_of(0));
+        let f = w.open(&mut fabric, "/rpc");
+        for i in 0..10u64 {
+            WorkloadFs::write_at(&mut w, &mut fabric, f, i * 4, b"abcd").unwrap();
+        }
+        assert_eq!(fabric.inner.counters.rpcs, 10, "one attach per write");
+    }
+}

@@ -1,0 +1,237 @@
+//! SessionFS (Table 6): session (close-to-open) consistency over
+//! BaseFS. `session_close` attaches all local writes; `session_open`
+//! queries the file's full ownership map **once** and caches it —
+//! within the session, reads are served from the snapshot with no
+//! server traffic at all. The amortization of that single query is why
+//! session consistency wins the paper's small-read benchmarks by ~5×.
+
+use super::{assemble_read, FsKind, WorkloadFs};
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
+use crate::interval::{GlobalIntervalTree, Range};
+use std::collections::HashMap;
+
+pub struct SessionFs {
+    core: ClientCore,
+    /// Ownership snapshot per file, taken at session_open. Stored as a
+    /// global-tree clone so range lookups stay O(log n + k).
+    session_view: HashMap<FileId, GlobalIntervalTree>,
+}
+
+impl SessionFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+            session_view: HashMap::new(),
+        }
+    }
+
+    /// `session_open`: one bfs_query_file RPC; snapshot cached for the
+    /// whole session.
+    pub fn session_open(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        let ivs = self.core.query_file(fabric, file)?;
+        let mut tree = GlobalIntervalTree::new();
+        for iv in ivs {
+            tree.attach(iv.range, iv.owner);
+        }
+        self.session_view.insert(file, tree);
+        Ok(())
+    }
+
+    /// `session_close`: make this process's writes visible
+    /// (bfs_attach_file) and drop the session snapshot.
+    pub fn session_close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.attach_file(fabric, file)?;
+        self.session_view.remove(&file);
+        Ok(())
+    }
+
+    /// `write`: buffer locally.
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        self.core.write_at(fabric, file, offset, buf)
+    }
+
+    /// `read`: NO query — resolve owners from the session snapshot (plus
+    /// this process's own writes, which are always visible to itself).
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let me = self.core.id;
+        let mut owned = self
+            .session_view
+            .get(&file)
+            .map(|t| t.query(range))
+            .unwrap_or_default();
+        // Overlay own (possibly unattached) writes: a process always sees
+        // its own most recent data.
+        let own: Vec<Range> = {
+            let bb = self.core.bb().read().unwrap();
+            bb.get(file)
+                .map(|fb| fb.tree.lookup(range).iter().map(|s| s.file).collect())
+                .unwrap_or_default()
+        };
+        if !own.is_empty() {
+            let mut tree = GlobalIntervalTree::new();
+            for iv in &owned {
+                tree.attach(iv.range, iv.owner);
+            }
+            for r in own {
+                tree.attach(r, me);
+            }
+            owned = tree.query(range);
+        }
+        assemble_read(&mut self.core, fabric, file, range, &owned)
+    }
+}
+
+impl WorkloadFs for SessionFs {
+    fn kind(&self) -> FsKind {
+        FsKind::Session
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, _fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.core.open(path)
+    }
+
+    fn close(&mut self, _fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.session_view.remove(&file);
+        self.core.close(file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        SessionFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        SessionFs::read_at(self, fabric, file, range)
+    }
+
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.session_close(fabric, file)
+    }
+
+    fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.session_open(fabric, file)
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::TestFabric;
+
+    #[test]
+    fn close_to_open_visibility() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = SessionFs::new(0, fabric.bb_of(0));
+        let mut r = SessionFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/s");
+        r.open(&mut fabric, "/s");
+        SessionFs::write_at(&mut w, &mut fabric, f, 0, b"sessiondata").unwrap();
+
+        // Reader opens a session BEFORE the writer closes: stale view.
+        r.session_open(&mut fabric, f).unwrap();
+        let got = SessionFs::read_at(&mut r, &mut fabric, f, Range::new(0, 11)).unwrap();
+        assert_eq!(got, vec![0u8; 11], "pre-close session sees old state");
+
+        w.session_close(&mut fabric, f).unwrap();
+        // Still the old session: cached snapshot stays stale (by design).
+        let got = SessionFs::read_at(&mut r, &mut fabric, f, Range::new(0, 11)).unwrap();
+        assert_eq!(got, vec![0u8; 11]);
+
+        // New session after the close: sees the writes.
+        r.session_open(&mut fabric, f).unwrap();
+        let got = SessionFs::read_at(&mut r, &mut fabric, f, Range::new(0, 11)).unwrap();
+        assert_eq!(got, b"sessiondata");
+    }
+
+    #[test]
+    fn reads_within_session_cost_no_rpc() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = SessionFs::new(0, fabric.bb_of(0));
+        let mut r = SessionFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/amortize");
+        r.open(&mut fabric, "/amortize");
+        SessionFs::write_at(&mut w, &mut fabric, f, 0, &[5u8; 800]).unwrap();
+        w.session_close(&mut fabric, f).unwrap();
+        let rpcs_before = fabric.inner.counters.rpcs;
+        r.session_open(&mut fabric, f).unwrap();
+        for i in 0..100u64 {
+            SessionFs::read_at(&mut r, &mut fabric, f, Range::at(i * 8, 8)).unwrap();
+        }
+        assert_eq!(
+            fabric.inner.counters.rpcs - rpcs_before,
+            1,
+            "exactly one RPC (the session_open) for 100 reads"
+        );
+    }
+
+    #[test]
+    fn own_writes_visible_inside_session() {
+        let mut fabric = TestFabric::new(1);
+        let mut s = SessionFs::new(0, fabric.bb_of(0));
+        let f = s.open(&mut fabric, "/own");
+        s.session_open(&mut fabric, f).unwrap();
+        SessionFs::write_at(&mut s, &mut fabric, f, 4, b"mine").unwrap();
+        let got = SessionFs::read_at(&mut s, &mut fabric, f, Range::new(0, 8)).unwrap();
+        assert_eq!(&got[4..], b"mine");
+        assert_eq!(&got[..4], &[0u8; 4]);
+    }
+
+    #[test]
+    fn own_writes_overlay_remote_snapshot() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = SessionFs::new(0, fabric.bb_of(0));
+        let mut r = SessionFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/overlay");
+        r.open(&mut fabric, "/overlay");
+        SessionFs::write_at(&mut w, &mut fabric, f, 0, &[1u8; 8]).unwrap();
+        w.session_close(&mut fabric, f).unwrap();
+        r.session_open(&mut fabric, f).unwrap();
+        // Reader overwrites the middle locally: must read its own bytes.
+        SessionFs::write_at(&mut r, &mut fabric, f, 2, &[2u8; 4]).unwrap();
+        let got = SessionFs::read_at(&mut r, &mut fabric, f, Range::new(0, 8)).unwrap();
+        assert_eq!(got, vec![1, 1, 2, 2, 2, 2, 1, 1]);
+    }
+
+    #[test]
+    fn read_without_session_open_sees_only_upfs_and_own() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = SessionFs::new(0, fabric.bb_of(0));
+        let mut r = SessionFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/nosession");
+        r.open(&mut fabric, "/nosession");
+        SessionFs::write_at(&mut w, &mut fabric, f, 0, b"xx").unwrap();
+        w.session_close(&mut fabric, f).unwrap();
+        // No session_open: snapshot absent -> UPFS zeros.
+        let got = SessionFs::read_at(&mut r, &mut fabric, f, Range::new(0, 2)).unwrap();
+        assert_eq!(got, vec![0u8; 2]);
+    }
+}

@@ -1,0 +1,460 @@
+//! The global server's per-file interval tree: which client owns the most
+//! recent attach of each byte range (§5.1.2). Keeps only the latest
+//! attach — no history. Splits partially-overlapped intervals, deletes
+//! fully-covered ones, merges contiguous same-owner intervals.
+
+use super::Range;
+use std::collections::BTreeMap;
+
+/// Identifies the client that attached a range. The BaseFS layer maps
+/// this to (node, rank); the tree is agnostic.
+pub type OwnerId = u32;
+
+/// One attached interval, as returned by queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OwnedInterval {
+    pub range: Range,
+    pub owner: OwnerId,
+}
+
+/// Non-overlapping interval map `start -> (end, owner)`.
+#[derive(Debug, Clone, Default)]
+pub struct GlobalIntervalTree {
+    map: BTreeMap<u64, (u64, OwnerId)>,
+    /// Reused scratch for carve() — most attaches touch 0–2 intervals;
+    /// persistent buffers keep the hot path allocation-free (§Perf).
+    scratch_remove: Vec<u64>,
+    scratch_insert: Vec<(u64, (u64, OwnerId))>,
+}
+
+/// Result of a detach request (§5.1.2: detach may be a no-op when the
+/// range was re-attached by another client).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetachOutcome {
+    /// The caller owned every attached byte in the range; ownership removed.
+    Detached,
+    /// Some byte of the range is owned by another client — no-op.
+    NotOwner,
+    /// Nothing in the range was attached at all — no-op.
+    NothingAttached,
+}
+
+impl GlobalIntervalTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Number of stored intervals (post split/merge).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Record `owner` as the most recent attacher of `range`, overwriting
+    /// any previous owners of overlapping bytes. Contiguous intervals of
+    /// the same owner are merged to keep queries fast.
+    pub fn attach(&mut self, range: Range, owner: OwnerId) {
+        if range.is_empty() {
+            return;
+        }
+        self.carve(range);
+        self.map.insert(range.start, (range.end, owner));
+        self.merge_around(range, owner);
+    }
+
+    /// Remove ownership of `range` for `owner`. Per the paper, if another
+    /// client has since attached any part of the range, the detach is a
+    /// no-op; otherwise overlapping intervals of this owner are removed
+    /// (with splits at the boundaries).
+    pub fn detach(&mut self, range: Range, owner: OwnerId) -> DetachOutcome {
+        if range.is_empty() {
+            return DetachOutcome::NothingAttached;
+        }
+        let overlapping = self.query(range);
+        if overlapping.is_empty() {
+            return DetachOutcome::NothingAttached;
+        }
+        if overlapping.iter().any(|iv| iv.owner != owner) {
+            return DetachOutcome::NotOwner;
+        }
+        self.carve(range);
+        DetachOutcome::Detached
+    }
+
+    /// Remove ALL intervals owned by `owner` (detach_file).
+    pub fn detach_all(&mut self, owner: OwnerId) -> usize {
+        let before = self.map.len();
+        self.map.retain(|_, &mut (_, o)| o != owner);
+        before - self.map.len()
+    }
+
+    /// All attached sub-ranges overlapping `range`, clipped to it,
+    /// in ascending offset order (the bfs_query result).
+    pub fn query(&self, range: Range) -> Vec<OwnedInterval> {
+        if range.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        // Start from the last interval beginning at or before range.start.
+        let first = self
+            .map
+            .range(..=range.start)
+            .next_back()
+            .map(|(&s, _)| s)
+            .unwrap_or(range.start);
+        for (&start, &(end, owner)) in self.map.range(first..range.end) {
+            let iv = Range::new(start, end);
+            if let Some(clip) = iv.intersect(&range) {
+                out.push(OwnedInterval {
+                    range: clip,
+                    owner,
+                });
+            }
+        }
+        out
+    }
+
+    /// All attached intervals of the file (bfs_query_file).
+    pub fn query_all(&self) -> Vec<OwnedInterval> {
+        self.map
+            .iter()
+            .map(|(&s, &(e, owner))| OwnedInterval {
+                range: Range::new(s, e),
+                owner,
+            })
+            .collect()
+    }
+
+    /// Owner of byte `off`, if attached.
+    pub fn owner_at(&self, off: u64) -> Option<OwnerId> {
+        self.map
+            .range(..=off)
+            .next_back()
+            .filter(|(_, &(end, _))| off < end)
+            .map(|(_, &(_, owner))| owner)
+    }
+
+    /// Remove/split every stored interval overlapping `range`, preserving
+    /// the non-overlapping invariant. (Shared by attach and detach.)
+    fn carve(&mut self, range: Range) {
+        // Find intervals intersecting [range.start, range.end).
+        let mut to_remove = std::mem::take(&mut self.scratch_remove);
+        let mut to_insert = std::mem::take(&mut self.scratch_insert);
+        to_remove.clear();
+        to_insert.clear();
+
+        let first = self
+            .map
+            .range(..=range.start)
+            .next_back()
+            .map(|(&s, _)| s)
+            .unwrap_or(range.start);
+        for (&start, &(end, owner)) in self.map.range(first..range.end) {
+            let iv = Range::new(start, end);
+            if !iv.overlaps(&range) {
+                continue;
+            }
+            to_remove.push(start);
+            // Left remainder survives.
+            if start < range.start {
+                to_insert.push((start, (range.start, owner)));
+            }
+            // Right remainder survives.
+            if end > range.end {
+                to_insert.push((range.end, (end, owner)));
+            }
+        }
+        for &s in &to_remove {
+            self.map.remove(&s);
+        }
+        for &(s, v) in &to_insert {
+            self.map.insert(s, v);
+        }
+        self.scratch_remove = to_remove;
+        self.scratch_insert = to_insert;
+    }
+
+    /// Merge `range`'s interval with same-owner neighbours touching it.
+    /// Perf note (§Perf): the no-merge case is by far the most common in
+    /// the paper's workloads (disjoint per-rank attaches), so it must not
+    /// touch the tree at all.
+    fn merge_around(&mut self, range: Range, owner: OwnerId) {
+        let mut start = range.start;
+        let mut end = range.end;
+        let mut merged = false;
+        // Left neighbour ends exactly at our start with the same owner?
+        if let Some((&ls, &(le, lo))) = self.map.range(..start).next_back() {
+            if le == start && lo == owner {
+                self.map.remove(&ls);
+                start = ls;
+                merged = true;
+            }
+        }
+        // Right neighbour begins exactly at our end with the same owner?
+        if let Some(&(re, ro)) = self.map.get(&end) {
+            if ro == owner {
+                self.map.remove(&end);
+                end = re;
+                merged = true;
+            }
+        }
+        if merged {
+            self.map.remove(&range.start);
+            self.map.insert(start, (end, owner));
+        }
+    }
+
+    /// Internal invariant check (used by tests): intervals are sorted,
+    /// non-empty, non-overlapping, and no two contiguous intervals share
+    /// an owner (they must have been merged).
+    #[cfg(test)]
+    pub fn check_invariants(&self) {
+        let mut prev: Option<(u64, u64, OwnerId)> = None;
+        for (&s, &(e, o)) in &self.map {
+            assert!(s < e, "empty interval [{s},{e})");
+            if let Some((_, pe, po)) = prev {
+                assert!(pe <= s, "overlap: prev end {pe} > start {s}");
+                assert!(
+                    !(pe == s && po == o),
+                    "unmerged contiguous same-owner intervals at {s}"
+                );
+            }
+            prev = Some((s, e, o));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn iv(s: u64, e: u64, o: OwnerId) -> OwnedInterval {
+        OwnedInterval {
+            range: Range::new(s, e),
+            owner: o,
+        }
+    }
+
+    #[test]
+    fn attach_then_query_exact() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 100), 1);
+        assert_eq!(t.query(Range::new(0, 100)), vec![iv(0, 100, 1)]);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn query_clips_to_requested_range() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 100), 1);
+        assert_eq!(t.query(Range::new(40, 60)), vec![iv(40, 60, 1)]);
+    }
+
+    #[test]
+    fn overwrite_splits_previous_owner() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 100), 1);
+        t.attach(Range::new(30, 60), 2);
+        assert_eq!(
+            t.query(Range::new(0, 100)),
+            vec![iv(0, 30, 1), iv(30, 60, 2), iv(60, 100, 1)]
+        );
+        assert_eq!(t.len(), 3);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn full_cover_deletes_previous() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(20, 40), 1);
+        t.attach(Range::new(50, 70), 2);
+        t.attach(Range::new(0, 100), 3);
+        assert_eq!(t.query(Range::new(0, 100)), vec![iv(0, 100, 3)]);
+        assert_eq!(t.len(), 1);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn contiguous_same_owner_merges() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 10), 1);
+        t.attach(Range::new(10, 20), 1);
+        t.attach(Range::new(20, 30), 1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.query(Range::new(0, 30)), vec![iv(0, 30, 1)]);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn contiguous_different_owner_not_merged() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 10), 1);
+        t.attach(Range::new(10, 20), 2);
+        assert_eq!(t.len(), 2);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn reattach_middle_then_same_owner_remerges() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 30), 1);
+        t.attach(Range::new(10, 20), 2);
+        assert_eq!(t.len(), 3);
+        t.attach(Range::new(10, 20), 1); // owner 1 takes it back
+        assert_eq!(t.len(), 1, "should merge back into [0,30) owner 1");
+        t.check_invariants();
+    }
+
+    #[test]
+    fn owner_at_lookup() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(10, 20), 7);
+        assert_eq!(t.owner_at(9), None);
+        assert_eq!(t.owner_at(10), Some(7));
+        assert_eq!(t.owner_at(19), Some(7));
+        assert_eq!(t.owner_at(20), None);
+    }
+
+    #[test]
+    fn detach_owned_range() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 100), 1);
+        assert_eq!(t.detach(Range::new(20, 40), 1), DetachOutcome::Detached);
+        assert_eq!(
+            t.query(Range::new(0, 100)),
+            vec![iv(0, 20, 1), iv(40, 100, 1)]
+        );
+        t.check_invariants();
+    }
+
+    #[test]
+    fn detach_overwritten_range_is_noop() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 100), 1);
+        t.attach(Range::new(20, 40), 2); // overwritten by client 2
+        assert_eq!(t.detach(Range::new(0, 100), 1), DetachOutcome::NotOwner);
+        // Nothing removed.
+        assert_eq!(t.query(Range::new(20, 40)), vec![iv(20, 40, 2)]);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn detach_unattached_is_noop() {
+        let mut t = GlobalIntervalTree::new();
+        assert_eq!(
+            t.detach(Range::new(0, 10), 1),
+            DetachOutcome::NothingAttached
+        );
+    }
+
+    #[test]
+    fn detach_all_removes_only_that_owner() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 10), 1);
+        t.attach(Range::new(20, 30), 2);
+        t.attach(Range::new(40, 50), 1);
+        assert_eq!(t.detach_all(1), 2);
+        assert_eq!(t.query_all(), vec![iv(20, 30, 2)]);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn empty_attach_is_noop() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(5, 5), 1);
+        assert!(t.is_empty());
+    }
+
+    /// Oracle: a byte-map. Every operation is mirrored into a
+    /// Vec<Option<OwnerId>> and query results must agree byte-for-byte.
+    #[test]
+    fn property_matches_bytemap_oracle() {
+        const UNIVERSE: u64 = 256;
+        testkit::check("global tree == bytemap oracle", |g| {
+            let mut tree = GlobalIntervalTree::new();
+            let mut oracle: Vec<Option<OwnerId>> = vec![None; UNIVERSE as usize];
+            let steps = g.usize(1, 40);
+            for _ in 0..steps {
+                let a = g.u64(0, UNIVERSE);
+                let b = g.u64(0, UNIVERSE);
+                let (s, e) = if a <= b { (a, b) } else { (b, a) };
+                let range = Range::new(s, e);
+                let owner = g.u64(1, 4) as OwnerId;
+                match g.usize(0, 2) {
+                    0 => {
+                        tree.attach(range, owner);
+                        for i in s..e {
+                            oracle[i as usize] = Some(owner);
+                        }
+                    }
+                    1 => {
+                        let out = tree.detach(range, owner);
+                        // Mirror the paper's no-op semantics.
+                        let attached: Vec<OwnerId> =
+                            (s..e).filter_map(|i| oracle[i as usize]).collect();
+                        if attached.is_empty() {
+                            testkit::ensure(
+                                out == DetachOutcome::NothingAttached,
+                                format!("expected NothingAttached, got {out:?}"),
+                            )?;
+                        } else if attached.iter().any(|&o| o != owner) {
+                            testkit::ensure(
+                                out == DetachOutcome::NotOwner,
+                                format!("expected NotOwner, got {out:?}"),
+                            )?;
+                        } else {
+                            testkit::ensure(
+                                out == DetachOutcome::Detached,
+                                format!("expected Detached, got {out:?}"),
+                            )?;
+                            for i in s..e {
+                                oracle[i as usize] = None;
+                            }
+                        }
+                    }
+                    _ => {
+                        // query: compare against oracle reconstruction
+                        let got = tree.query(range);
+                        // Rebuild per-byte owners from the query result.
+                        let mut rebuilt: Vec<Option<OwnerId>> =
+                            vec![None; UNIVERSE as usize];
+                        for ivl in &got {
+                            for i in ivl.range.start..ivl.range.end {
+                                rebuilt[i as usize] = Some(ivl.owner);
+                            }
+                        }
+                        for i in s..e {
+                            testkit::ensure(
+                                rebuilt[i as usize] == oracle[i as usize],
+                                format!(
+                                    "byte {i}: tree={:?} oracle={:?}",
+                                    rebuilt[i as usize], oracle[i as usize]
+                                ),
+                            )?;
+                        }
+                        // Query results must be sorted + non-overlapping.
+                        for w in got.windows(2) {
+                            testkit::ensure(
+                                w[0].range.end <= w[1].range.start,
+                                "query result overlap/disorder",
+                            )?;
+                        }
+                    }
+                }
+            }
+            // Final full check.
+            let all = tree.query(Range::new(0, UNIVERSE));
+            let mut rebuilt: Vec<Option<OwnerId>> = vec![None; UNIVERSE as usize];
+            for ivl in &all {
+                for i in ivl.range.start..ivl.range.end {
+                    rebuilt[i as usize] = Some(ivl.owner);
+                }
+            }
+            testkit::ensure(rebuilt == oracle, "final state mismatch")
+        });
+    }
+}

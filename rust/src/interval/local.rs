@@ -1,0 +1,499 @@
+//! The client-side per-file interval tree (§5.1.2): maps written file
+//! ranges to their location in the node-local burst-buffer file and
+//! tracks which ranges have been attached.
+//!
+//! Later writes to overlapping ranges supersede earlier ones (the read
+//! path must return the most recent buffered bytes), so inserts carve
+//! older intervals exactly like the global tree does for owners.
+//! Contiguous intervals are merged only when both the file range *and*
+//! the burst-buffer range are contiguous and the attached flags match, so
+//! every stored interval remains a valid single (file → BB) mapping.
+
+use super::Range;
+use std::collections::BTreeMap;
+
+/// One write-log entry: file range `file`, buffered at `bb_start` in the
+/// client's burst-buffer file, and whether it has been attached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LocalInterval {
+    pub file: Range,
+    pub bb_start: u64,
+    pub attached: bool,
+}
+
+impl LocalInterval {
+    pub fn bb_end(&self) -> u64 {
+        self.bb_start + self.file.len()
+    }
+}
+
+/// Errors surfaced to the BaseFS layer (Table 5 semantics).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum LocalTreeError {
+    #[error("attach of unwritten bytes in {0}")]
+    AttachUnwritten(String),
+    #[error("detach of range {0} that was never attached")]
+    DetachUnattached(String),
+}
+
+/// Non-overlapping map `file_start -> (file_end, bb_start, attached)`.
+#[derive(Debug, Clone, Default)]
+pub struct LocalIntervalTree {
+    map: BTreeMap<u64, (u64, u64, bool)>,
+}
+
+impl LocalIntervalTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Record a write of `file` buffered at `bb_start`. Overlapping older
+    /// entries are carved; contiguous compatible entries are merged.
+    pub fn record_write(&mut self, file: Range, bb_start: u64) {
+        if file.is_empty() {
+            return;
+        }
+        self.carve(file);
+        self.map.insert(file.start, (file.end, bb_start, false));
+        self.merge_around(file.start);
+    }
+
+    /// Resolve `range` to buffered segments, clipped, ascending. Holes
+    /// (bytes never written locally) are simply absent from the result.
+    pub fn lookup(&self, range: Range) -> Vec<LocalInterval> {
+        if range.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let first = self
+            .map
+            .range(..=range.start)
+            .next_back()
+            .map(|(&s, _)| s)
+            .unwrap_or(range.start);
+        for (&s, &(e, bb, attached)) in self.map.range(first..range.end) {
+            let iv = Range::new(s, e);
+            if let Some(clip) = iv.intersect(&range) {
+                out.push(LocalInterval {
+                    file: clip,
+                    bb_start: bb + (clip.start - s),
+                    attached,
+                });
+            }
+        }
+        out
+    }
+
+    /// All entries (ascending).
+    pub fn all(&self) -> Vec<LocalInterval> {
+        self.map
+            .iter()
+            .map(|(&s, &(e, bb, attached))| LocalInterval {
+                file: Range::new(s, e),
+                bb_start: bb,
+                attached,
+            })
+            .collect()
+    }
+
+    /// True iff every byte of `range` has been written locally.
+    pub fn fully_written(&self, range: Range) -> bool {
+        let segs = self.lookup(range);
+        let mut cursor = range.start;
+        for seg in &segs {
+            if seg.file.start != cursor {
+                return false;
+            }
+            cursor = seg.file.end;
+        }
+        cursor == range.end
+    }
+
+    /// Mark `range` attached. Table 5: attaching unwritten bytes is
+    /// erroneous; attaching a partial previous write is allowed. Returns
+    /// the segments that were *newly* attached (already-attached segments
+    /// are skipped so the RPC layer never re-sends them).
+    pub fn mark_attached(&mut self, range: Range) -> Result<Vec<LocalInterval>, LocalTreeError> {
+        if range.is_empty() {
+            return Ok(Vec::new());
+        }
+        if !self.fully_written(range) {
+            return Err(LocalTreeError::AttachUnwritten(range.to_string()));
+        }
+        // Split boundary intervals so the marked region is exactly covered.
+        self.split_at(range.start);
+        self.split_at(range.end);
+        let mut newly = Vec::new();
+        let keys: Vec<u64> = self
+            .map
+            .range(range.start..range.end)
+            .map(|(&s, _)| s)
+            .collect();
+        for s in keys {
+            // A previous iteration's merge may have absorbed this key.
+            let Some(&(e, bb, attached)) = self.map.get(&s) else {
+                continue;
+            };
+            if !attached {
+                self.map.insert(s, (e, bb, true));
+                newly.push(LocalInterval {
+                    file: Range::new(s, e),
+                    bb_start: bb,
+                    attached: true,
+                });
+                self.merge_around(s);
+            }
+        }
+        Ok(newly)
+    }
+
+    /// Mark every written range attached (bfs_attach_file). Returns newly
+    /// attached segments; no-op (empty vec) if everything was attached.
+    pub fn mark_all_attached(&mut self) -> Vec<LocalInterval> {
+        let keys: Vec<u64> = self.map.keys().copied().collect();
+        let mut newly = Vec::new();
+        for s in keys {
+            // Key may have been merged away by a previous iteration.
+            let Some(&(e, bb, attached)) = self.map.get(&s) else {
+                continue;
+            };
+            if !attached {
+                self.map.insert(s, (e, bb, true));
+                newly.push(LocalInterval {
+                    file: Range::new(s, e),
+                    bb_start: bb,
+                    attached: true,
+                });
+                self.merge_around(s);
+            }
+        }
+        newly
+    }
+
+    /// Remove `range` from the local buffer log (bfs_detach). Fails if no
+    /// byte of the range is currently attached (Table 5). Returns the
+    /// removed segments.
+    pub fn detach(&mut self, range: Range) -> Result<Vec<LocalInterval>, LocalTreeError> {
+        let segs = self.lookup(range);
+        if !segs.iter().any(|s| s.attached) {
+            return Err(LocalTreeError::DetachUnattached(range.to_string()));
+        }
+        self.carve(range);
+        Ok(segs)
+    }
+
+    /// Remove all attached ranges (bfs_detach_file); returns them.
+    pub fn detach_all_attached(&mut self) -> Vec<LocalInterval> {
+        let attached: Vec<LocalInterval> =
+            self.all().into_iter().filter(|iv| iv.attached).collect();
+        for iv in &attached {
+            self.carve(iv.file);
+        }
+        attached
+    }
+
+    /// Highest written offset (local contribution to EOF), 0 if none.
+    pub fn max_written(&self) -> u64 {
+        self.map
+            .iter()
+            .next_back()
+            .map(|(_, &(e, _, _))| e)
+            .unwrap_or(0)
+    }
+
+    /// Total bytes currently buffered.
+    pub fn buffered_bytes(&self) -> u64 {
+        self.map
+            .iter()
+            .map(|(&s, &(e, _, _))| e - s)
+            .sum()
+    }
+
+    fn split_at(&mut self, off: u64) {
+        if let Some((&s, &(e, bb, attached))) = self.map.range(..off).next_back() {
+            if s < off && off < e {
+                self.map.insert(s, (off, bb, attached));
+                self.map.insert(off, (e, bb + (off - s), attached));
+            }
+        }
+    }
+
+    fn carve(&mut self, range: Range) {
+        let mut to_remove = Vec::new();
+        let mut to_insert = Vec::new();
+        let first = self
+            .map
+            .range(..=range.start)
+            .next_back()
+            .map(|(&s, _)| s)
+            .unwrap_or(range.start);
+        for (&s, &(e, bb, attached)) in self.map.range(first..range.end) {
+            let iv = Range::new(s, e);
+            if !iv.overlaps(&range) {
+                continue;
+            }
+            to_remove.push(s);
+            if s < range.start {
+                to_insert.push((s, (range.start, bb, attached)));
+            }
+            if e > range.end {
+                to_insert.push((range.end, (e, bb + (range.end - s), attached)));
+            }
+        }
+        for s in to_remove {
+            self.map.remove(&s);
+        }
+        for (s, v) in to_insert {
+            self.map.insert(s, v);
+        }
+    }
+
+    /// Merge the interval starting at `key` with neighbours when file
+    /// ranges, BB ranges, and attached flags are all contiguous/equal.
+    fn merge_around(&mut self, key: u64) {
+        let Some(&(mut end, mut bb, attached)) = self.map.get(&key) else {
+            return;
+        };
+        let mut start = key;
+        if let Some((&ls, &(le, lbb, lat))) = self.map.range(..start).next_back() {
+            if le == start && lat == attached && lbb + (le - ls) == bb {
+                self.map.remove(&ls);
+                start = ls;
+                bb = lbb;
+            }
+        }
+        if let Some(&(re, rbb, rat)) = self.map.get(&end) {
+            if rat == attached && bb + (end - start) == rbb {
+                self.map.remove(&end);
+                end = re;
+            }
+        }
+        self.map.remove(&key);
+        self.map.insert(start, (end, bb, attached));
+    }
+
+    #[cfg(test)]
+    pub fn check_invariants(&self) {
+        let mut prev_end = 0u64;
+        let mut first = true;
+        for (&s, &(e, _bb, _)) in &self.map {
+            assert!(s < e, "empty interval");
+            if !first {
+                assert!(prev_end <= s, "overlap");
+            }
+            prev_end = e;
+            first = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn write_and_lookup() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 100), 0);
+        let segs = t.lookup(Range::new(20, 40));
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].file, Range::new(20, 40));
+        assert_eq!(segs[0].bb_start, 20);
+        assert!(!segs[0].attached);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn later_write_wins() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 100), 0); // bb [0,100)
+        t.record_write(Range::new(30, 60), 100); // bb [100,130)
+        let segs = t.lookup(Range::new(0, 100));
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs[0].bb_start, 0);
+        assert_eq!(segs[1].file, Range::new(30, 60));
+        assert_eq!(segs[1].bb_start, 100);
+        assert_eq!(segs[2].file, Range::new(60, 100));
+        assert_eq!(segs[2].bb_start, 60);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn contiguous_writes_merge_when_bb_contiguous() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 10), 0);
+        t.record_write(Range::new(10, 20), 10);
+        assert_eq!(t.len(), 1);
+        // Non-contiguous BB must NOT merge.
+        t.record_write(Range::new(20, 30), 100);
+        assert_eq!(t.len(), 2);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn holes_are_absent() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 10), 0);
+        t.record_write(Range::new(20, 30), 10);
+        let segs = t.lookup(Range::new(0, 30));
+        assert_eq!(segs.len(), 2);
+        assert!(!t.fully_written(Range::new(0, 30)));
+        assert!(t.fully_written(Range::new(0, 10)));
+        assert!(t.fully_written(Range::new(5, 10)));
+    }
+
+    #[test]
+    fn attach_unwritten_is_error() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 10), 0);
+        assert!(matches!(
+            t.mark_attached(Range::new(0, 20)),
+            Err(LocalTreeError::AttachUnwritten(_))
+        ));
+    }
+
+    #[test]
+    fn attach_partial_write_allowed() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 100), 0);
+        let newly = t.mark_attached(Range::new(20, 40)).unwrap();
+        assert_eq!(newly.len(), 1);
+        assert_eq!(newly[0].file, Range::new(20, 40));
+        // Surrounding parts remain unattached.
+        let segs = t.lookup(Range::new(0, 100));
+        assert_eq!(
+            segs.iter().map(|s| s.attached).collect::<Vec<_>>(),
+            vec![false, true, false]
+        );
+        t.check_invariants();
+    }
+
+    #[test]
+    fn double_attach_returns_nothing_new() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 50), 0);
+        let first = t.mark_attached(Range::new(0, 50)).unwrap();
+        assert_eq!(first.len(), 1);
+        let second = t.mark_attached(Range::new(0, 50)).unwrap();
+        assert!(second.is_empty(), "already-attached must not re-send");
+    }
+
+    #[test]
+    fn attach_file_marks_everything() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 10), 0);
+        t.record_write(Range::new(20, 30), 10);
+        let newly = t.mark_all_attached();
+        assert_eq!(newly.len(), 2);
+        assert!(t.all().iter().all(|iv| iv.attached));
+        assert!(t.mark_all_attached().is_empty()); // no-op second time
+    }
+
+    #[test]
+    fn detach_requires_attached() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 10), 0);
+        assert!(matches!(
+            t.detach(Range::new(0, 10)),
+            Err(LocalTreeError::DetachUnattached(_))
+        ));
+        t.mark_attached(Range::new(0, 10)).unwrap();
+        let removed = t.detach(Range::new(0, 10)).unwrap();
+        assert_eq!(removed.len(), 1);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn detach_all_attached_keeps_unattached() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 10), 0);
+        t.record_write(Range::new(20, 30), 10);
+        t.mark_attached(Range::new(0, 10)).unwrap();
+        let removed = t.detach_all_attached();
+        assert_eq!(removed.len(), 1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.all()[0].file, Range::new(20, 30));
+    }
+
+    #[test]
+    fn eof_and_buffered_bytes() {
+        let mut t = LocalIntervalTree::new();
+        assert_eq!(t.max_written(), 0);
+        t.record_write(Range::new(0, 10), 0);
+        t.record_write(Range::new(50, 80), 10);
+        assert_eq!(t.max_written(), 80);
+        assert_eq!(t.buffered_bytes(), 40);
+    }
+
+    /// Oracle property: per-byte (latest bb byte, attached) agreement.
+    #[test]
+    fn property_matches_bytemap_oracle() {
+        const UNIVERSE: u64 = 200;
+        testkit::check("local tree == bytemap oracle", |g| {
+            let mut tree = LocalIntervalTree::new();
+            // oracle[i] = Some((bb_byte_for_file_byte_i, attached))
+            let mut oracle: Vec<Option<(u64, bool)>> = vec![None; UNIVERSE as usize];
+            let mut bb_cursor: u64 = 0;
+            let steps = g.usize(1, 30);
+            for _ in 0..steps {
+                let a = g.u64(0, UNIVERSE);
+                let b = g.u64(0, UNIVERSE);
+                let (s, e) = if a <= b { (a, b) } else { (b, a) };
+                let range = Range::new(s, e);
+                match g.usize(0, 2) {
+                    0 => {
+                        tree.record_write(range, bb_cursor);
+                        for i in s..e {
+                            oracle[i as usize] = Some((bb_cursor + (i - s), false));
+                        }
+                        bb_cursor += range.len();
+                    }
+                    1 => {
+                        let fully = (s..e).all(|i| oracle[i as usize].is_some());
+                        let res = tree.mark_attached(range);
+                        if !fully && !range.is_empty() {
+                            testkit::ensure(res.is_err(), "attach unwritten must fail")?;
+                        } else {
+                            testkit::ensure(res.is_ok(), "attach of written failed")?;
+                            for i in s..e {
+                                if let Some((bb, _)) = oracle[i as usize] {
+                                    oracle[i as usize] = Some((bb, true));
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        let segs = tree.lookup(range);
+                        let mut rebuilt: Vec<Option<(u64, bool)>> =
+                            vec![None; UNIVERSE as usize];
+                        for seg in &segs {
+                            for i in seg.file.start..seg.file.end {
+                                rebuilt[i as usize] =
+                                    Some((seg.bb_start + (i - seg.file.start), seg.attached));
+                            }
+                        }
+                        for i in s..e {
+                            testkit::ensure(
+                                rebuilt[i as usize] == oracle[i as usize],
+                                format!(
+                                    "byte {i}: tree={:?} oracle={:?}",
+                                    rebuilt[i as usize], oracle[i as usize]
+                                ),
+                            )?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! The paper's two augmented interval trees (§5.1.2).
+//!
+//! - [`GlobalIntervalTree`] — kept by the global server, one per file:
+//!   intervals `⟨Os, Oe, Owner⟩` recording which client performed the most
+//!   recent *attach* of each byte range. Inserting an attach splits
+//!   partially-overlapping intervals with a different owner, deletes fully
+//!   covered ones, and merges contiguous same-owner intervals.
+//! - [`LocalIntervalTree`] — kept by each client, one per file: intervals
+//!   `⟨Os, Oe, Bs, Be, attached⟩` mapping written file ranges to their
+//!   location in the node-local burst-buffer file.
+//!
+//! Both are backed by a `BTreeMap<start, ..>` over non-overlapping
+//! half-open ranges — a balanced search tree with the same asymptotics as
+//! the paper's augmented self-balancing BST, chosen because B-tree nodes
+//! are considerably more cache-friendly on modern CPUs (see DESIGN.md
+//! §Perf). All offsets are half-open `[start, end)`; the paper's
+//! inclusive `Oe` equals our `end - 1`.
+
+mod global;
+mod local;
+
+pub use global::{DetachOutcome, GlobalIntervalTree, OwnedInterval, OwnerId};
+pub use local::{LocalInterval, LocalIntervalTree, LocalTreeError};
+
+/// A half-open byte range `[start, end)` within a file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Range {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Range {
+    pub fn new(start: u64, end: u64) -> Self {
+        assert!(start <= end, "invalid range [{start}, {end})");
+        Self { start, end }
+    }
+
+    /// Construct from offset + length.
+    pub fn at(offset: u64, len: u64) -> Self {
+        Self::new(offset, offset + len)
+    }
+
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn contains(&self, off: u64) -> bool {
+        self.start <= off && off < self.end
+    }
+
+    pub fn overlaps(&self, other: &Range) -> bool {
+        // Empty ranges overlap nothing.
+        self.start < other.end && other.start < self.end
+            && !self.is_empty()
+            && !other.is_empty()
+    }
+
+    pub fn intersect(&self, other: &Range) -> Option<Range> {
+        let start = self.start.max(other.start);
+        let end = self.end.min(other.end);
+        if start < end {
+            Some(Range::new(start, end))
+        } else {
+            None
+        }
+    }
+
+    /// True iff `other` is fully inside `self`.
+    pub fn covers(&self, other: &Range) -> bool {
+        self.start <= other.start && other.end <= self.end
+    }
+}
+
+impl std::fmt::Display for Range {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {})", self.start, self.end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_basics() {
+        let r = Range::at(10, 5);
+        assert_eq!(r, Range::new(10, 15));
+        assert_eq!(r.len(), 5);
+        assert!(!r.is_empty());
+        assert!(r.contains(10));
+        assert!(r.contains(14));
+        assert!(!r.contains(15));
+    }
+
+    #[test]
+    fn overlap_and_intersect() {
+        let a = Range::new(0, 10);
+        let b = Range::new(5, 15);
+        let c = Range::new(10, 20);
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c)); // half-open: touching != overlapping
+        assert_eq!(a.intersect(&b), Some(Range::new(5, 10)));
+        assert_eq!(a.intersect(&c), None);
+        assert!(Range::new(0, 100).covers(&Range::new(10, 20)));
+        assert!(!Range::new(0, 15).covers(&Range::new(10, 20)));
+    }
+
+    #[test]
+    fn empty_range() {
+        let e = Range::new(5, 5);
+        assert!(e.is_empty());
+        assert!(!e.overlaps(&Range::new(0, 10)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn inverted_range_panics() {
+        Range::new(10, 5);
+    }
+}

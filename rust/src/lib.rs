@@ -1,0 +1,31 @@
+//! # pscnf — Properly-Synchronized SCNF storage consistency models
+//!
+//! A reproduction of *"Formal Definitions and Performance Comparison of
+//! Consistency Models for Parallel File Systems"* (Wang, Mohror, Snir —
+//! IEEE TPDS 2024): the formal SCNF framework (§4), the layered
+//! BaseFS/CommitFS/SessionFS implementation (§5), and the full
+//! performance evaluation (§6) on a simulated HPC testbed.
+//!
+//! Architecture (see DESIGN.md):
+//! - **L3 (this crate)** — the coordination contribution: BaseFS
+//!   substrate, consistency-layer file systems, formal race checker,
+//!   discrete-event cluster simulation, workload/bench drivers.
+//! - **L2/L1 (python/, build-time only)** — JAX train-step calling a
+//!   Pallas MLP kernel, AOT-lowered to HLO text loaded by [`runtime`].
+
+pub mod basefs;
+pub mod config;
+pub mod coordinator;
+pub mod dl;
+pub mod fs;
+pub mod interval;
+pub mod model;
+pub mod sim;
+pub mod runtime;
+pub mod scr;
+pub mod testkit;
+pub mod trace;
+pub mod workload;
+pub mod util;
+
+pub use util::{Json, Rng, Samples, Summary, Table};

@@ -1,0 +1,334 @@
+//! pscnf — the leader CLI.
+//!
+//! ```text
+//! pscnf models                         # Table 4: S + MSC per model
+//! pscnf check [--litmus NAME]          # storage-race detection demos
+//! pscnf run --workload CC-R --fs session --nodes 8 --size 8K
+//! pscnf scr --nodes 8 --fs both        # Fig 5 emulation
+//! pscnf dl --mode weak --nodes 8       # Fig 6 emulation
+//! pscnf train --steps 50               # AOT train_step through PJRT
+//! pscnf info                           # platform + artifact status
+//! ```
+
+use pscnf::config::{parse_ini, Experiment, Testbed};
+use pscnf::coordinator::{render_sweep, sweep_dl, sweep_scr, sweep_synthetic, write_results};
+use pscnf::fs::FsKind;
+use pscnf::model::{litmus, ConsistencyModel};
+use pscnf::runtime::{Runtime, TrainState};
+use pscnf::util::cli::ArgSpec;
+use pscnf::util::json::Json;
+use pscnf::util::rng::Rng;
+use pscnf::util::table::Table;
+use pscnf::util::units::{fmt_bandwidth, fmt_bytes};
+use pscnf::workload::Config as WlConfig;
+
+fn main() {
+    pscnf::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("models") => cmd_models(),
+        Some("check") => cmd_check(&argv[1..]),
+        Some("run") => cmd_run(&argv[1..]),
+        Some("scr") => cmd_scr(&argv[1..]),
+        Some("dl") => cmd_dl(&argv[1..]),
+        Some("train") => cmd_train(&argv[1..]),
+        Some("info") => cmd_info(),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand `{other}`\n\n{}", usage_text())),
+    };
+    if let Err(e) = code {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage_text() -> String {
+    "pscnf — properly-synchronized SCNF storage consistency models\n\
+     \n\
+     SUBCOMMANDS:\n\
+     \x20 models   print Table 4 (S and MSC of each model)\n\
+     \x20 check    run the storage-race detector on litmus scenarios\n\
+     \x20 run      run a synthetic N-to-1 workload on the DES cluster\n\
+     \x20 scr      SCR + HACC-IO checkpoint/restart emulation (Fig 5)\n\
+     \x20 dl       DL ingestion emulation (Fig 6)\n\
+     \x20 train    drive the AOT-compiled train_step through PJRT\n\
+     \x20 info     platform, artifacts, build info\n\
+     \n\
+     Use `pscnf <subcommand> --help` for options."
+        .to_string()
+}
+
+fn print_usage() {
+    println!("{}", usage_text());
+}
+
+fn parse_fs_list(s: &str) -> Result<Vec<FsKind>, String> {
+    if s == "both" {
+        return Ok(vec![FsKind::Commit, FsKind::Session]);
+    }
+    if s == "all" {
+        return Ok(vec![
+            FsKind::Posix,
+            FsKind::Commit,
+            FsKind::Session,
+            FsKind::Mpiio,
+        ]);
+    }
+    s.split(',').map(FsKind::parse).collect()
+}
+
+fn parse_nodes_list(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(|x| x.trim().parse().map_err(|e| format!("--nodes: {e}")))
+        .collect()
+}
+
+fn cmd_models() -> Result<(), String> {
+    let mut t = Table::new(vec!["Consistency model", "S", "MSC"]);
+    let mut models = ConsistencyModel::table4();
+    models.push(ConsistencyModel::commit_strict());
+    for m in &models {
+        let (s, msc) = m.describe();
+        t.row(vec![m.name.to_string(), s, msc]);
+    }
+    println!("Table 4 — properly-synchronized SCNF model definitions\n");
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_check(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("check", "run the storage-race detector on litmus scenarios")
+        .opt("litmus", "NAME", Some("all"), "scenario name or `all`");
+    let args = spec.parse(argv)?;
+    let which = args.str("litmus")?;
+    let scenarios = litmus::all();
+    let selected: Vec<_> = scenarios
+        .iter()
+        .filter(|l| which == "all" || l.name == which)
+        .collect();
+    if selected.is_empty() {
+        return Err(format!(
+            "no litmus named `{which}`; available: {}",
+            scenarios
+                .iter()
+                .map(|l| l.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+    }
+    for l in selected {
+        println!("== {} — {}\n", l.name, l.description);
+        let mut t = Table::new(vec!["model", "races", "synchronized pairs", "verdict"]);
+        for (name, races, sync) in litmus::run(l) {
+            t.row(vec![
+                name.to_string(),
+                races.to_string(),
+                sync.to_string(),
+                if races == 0 {
+                    "race-free".into()
+                } else {
+                    "STORAGE RACE".to_string()
+                },
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn base_spec(cmd: &'static str, about: &'static str) -> ArgSpec {
+    ArgSpec::new(cmd, about)
+        .opt("nodes", "LIST", Some("4"), "node counts, comma separated")
+        .opt("ppn", "P", Some("12"), "processes per node")
+        .opt("fs", "KIND", Some("both"), "posix|commit|session|mpiio|both|all")
+        .opt("testbed", "NAME", Some("catalyst"), "catalyst|expanse|hdd|pmem")
+        .opt("repeats", "R", Some("3"), "repetitions per cell")
+        .opt("seed", "S", Some("7"), "base RNG seed")
+}
+
+fn cmd_run(argv: &[String]) -> Result<(), String> {
+    let spec = base_spec("run", "synthetic N-to-1 workload on the DES cluster")
+        .opt("workload", "CFG", Some("CC-R"), "CN-W|SN-W|CC-R|CS-R")
+        .opt("size", "BYTES", Some("8K"), "access size (e.g. 8K, 8M)")
+        .opt("m", "N", Some("10"), "accesses per process")
+        .opt(
+            "config-file",
+            "PATH",
+            None,
+            "INI experiment file (overridden by flags)",
+        );
+    let args = spec.parse(argv)?;
+
+    let mut exp = Experiment::default();
+    if let Some(path) = args.get("config-file") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        exp.apply_ini(&parse_ini(&text)?)?;
+    }
+    let workload = WlConfig::parse(args.str("workload")?)?;
+    let size = args.bytes("size")?;
+    let m = args.usize("m")?;
+    let ppn = args.usize("ppn")?;
+    let testbed = Testbed::parse(args.str("testbed")?)?;
+    let fs_kinds = parse_fs_list(args.str("fs")?)?;
+    let nodes_list = parse_nodes_list(args.str("nodes")?)?;
+    let repeats = args.usize("repeats")?;
+
+    let write_phase = matches!(workload, WlConfig::CnW | WlConfig::SnW);
+    let cells = sweep_synthetic(
+        workload, size, &nodes_list, &fs_kinds, ppn, m, repeats, testbed, write_phase,
+    );
+    let title = format!(
+        "{} access={} ppn={} m={} testbed={} ({} bandwidth)",
+        workload.name(),
+        fmt_bytes(size),
+        ppn,
+        m,
+        testbed.name(),
+        if write_phase { "write" } else { "read" },
+    );
+    println!("{}", render_sweep(&title, &cells));
+    let mut payload = Json::obj();
+    payload.set(
+        "cells",
+        Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+    );
+    write_results(
+        &format!("run_{}_{}", workload.name(), fmt_bytes(size)),
+        payload,
+    );
+    Ok(())
+}
+
+fn cmd_scr(argv: &[String]) -> Result<(), String> {
+    let spec = base_spec("scr", "SCR + HACC-IO checkpoint/restart emulation (Fig 5)")
+        .opt("particles", "N", Some("10000000"), "global particle count");
+    let args = spec.parse(argv)?;
+    let nodes_list = parse_nodes_list(args.str("nodes")?)?;
+    let fs_kinds = parse_fs_list(args.str("fs")?)?;
+    let ppn = args.usize("ppn")?;
+    let particles = args.u64("particles")?;
+    let repeats = args.usize("repeats")?;
+    let testbed = Testbed::parse(args.str("testbed")?)?;
+
+    let rows = sweep_scr(&nodes_list, &fs_kinds, ppn, particles, repeats, testbed);
+    let mut t = Table::new(vec!["fs", "nodes", "checkpoint bw", "restart bw"]);
+    for (fs, nodes, ckpt, restart) in &rows {
+        t.row(vec![
+            fs.name().to_string(),
+            nodes.to_string(),
+            fmt_bandwidth(ckpt.mean()),
+            fmt_bandwidth(restart.mean()),
+        ]);
+    }
+    println!(
+        "HACC-IO with SCR (Partner scheme), {particles} particles, ppn={ppn}\n\n{}",
+        t.render()
+    );
+    Ok(())
+}
+
+fn cmd_dl(argv: &[String]) -> Result<(), String> {
+    let spec = base_spec("dl", "DL ingestion emulation (Fig 6)")
+        .opt("mode", "M", Some("weak"), "strong|weak scaling")
+        .opt(
+            "work",
+            "N",
+            Some("4"),
+            "batches/epoch (strong) or iterations/epoch (weak)",
+        );
+    let args = spec.parse(argv)?;
+    let nodes_list = parse_nodes_list(args.str("nodes")?)?;
+    let fs_kinds = parse_fs_list(args.str("fs")?)?;
+    let mut ppn = args.usize("ppn")?;
+    if args.get("ppn") == Some("12") {
+        ppn = 4; // the paper used 4 procs/node for DL (one per GPU)
+    }
+    let strong = match args.str("mode")? {
+        "strong" => true,
+        "weak" => false,
+        other => return Err(format!("--mode {other}: want strong|weak")),
+    };
+    let work = args.usize("work")?;
+    let repeats = args.usize("repeats")?;
+    let testbed = Testbed::parse(args.str("testbed")?)?;
+
+    let rows = sweep_dl(strong, &nodes_list, &fs_kinds, ppn, work, repeats, testbed);
+    let mut t = Table::new(vec!["fs", "nodes", "per-epoch read bw", "stddev"]);
+    for (fs, nodes, bw) in &rows {
+        t.row(vec![
+            fs.name().to_string(),
+            nodes.to_string(),
+            fmt_bandwidth(bw.mean()),
+            fmt_bandwidth(bw.stddev()),
+        ]);
+    }
+    println!(
+        "DL random-read ingestion, {} scaling, ppn={ppn}, 116KiB samples\n\n{}",
+        if strong { "strong" } else { "weak" },
+        t.render()
+    );
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("train", "drive the AOT train_step artifact through PJRT")
+        .opt("steps", "N", Some("20"), "SGD steps")
+        .opt("seed", "S", Some("42"), "init seed");
+    let args = spec.parse(argv)?;
+    let steps = args.usize("steps")?;
+    let seed = args.u64("seed")?;
+
+    let mut rt = Runtime::cpu(Runtime::default_dir()).map_err(|e| e.to_string())?;
+    let manifest = rt
+        .manifest()
+        .map_err(|e| format!("{e}\nhint: run `make artifacts` to produce artifacts/ first"))?;
+    println!(
+        "platform={} model: {}x{} -> {} -> {} classes",
+        rt.platform(),
+        manifest.batch,
+        manifest.feature_dim,
+        manifest.hidden,
+        manifest.classes
+    );
+    let mut state = TrainState::init(manifest.clone(), seed);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut x = vec![0f32; manifest.batch * manifest.feature_dim];
+    let mut y = vec![0i32; manifest.batch];
+    for v in x.iter_mut() {
+        *v = (rng.next_normal() * 0.1) as f32;
+    }
+    for (i, v) in y.iter_mut().enumerate() {
+        *v = (i % manifest.classes) as i32;
+    }
+    for step in 0..steps {
+        let loss = state.step(&mut rt, &x, &y).map_err(|e| e.to_string())?;
+        if step % 5 == 0 || step + 1 == steps {
+            println!("step {step:4}  loss {loss:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!(
+        "pscnf {} — TPDS'24 consistency-models reproduction",
+        env!("CARGO_PKG_VERSION")
+    );
+    let dir = Runtime::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    for name in ["train_step.hlo.txt", "predict.hlo.txt", "manifest.txt"] {
+        let p = dir.join(name);
+        match std::fs::metadata(&p) {
+            Ok(md) => println!("  {name}: {} bytes", md.len()),
+            Err(_) => println!("  {name}: MISSING (run `make artifacts`)"),
+        }
+    }
+    match Runtime::cpu(dir) {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! Litmus tests — storage analogues of the paper's Tables 1–3 memory
+//! examples, plus named scenarios used by `examples/race_detective.rs`
+//! and the `pscnf check` CLI. Each litmus carries an expected verdict per
+//! model so the suite doubles as an executable specification.
+
+use super::models::ConsistencyModel;
+use super::op::{StorageOp, SyncKind};
+use super::race;
+use super::trace::Trace;
+use crate::interval::Range;
+
+/// A named litmus scenario.
+pub struct Litmus {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub trace: Trace,
+    /// (model name, expected race-free?) — executable expectations.
+    pub expected: Vec<(&'static str, bool)>,
+}
+
+fn w(f: u32, s: u64, e: u64) -> StorageOp {
+    StorageOp::write(f, Range::new(s, e))
+}
+fn r(f: u32, s: u64, e: u64) -> StorageOp {
+    StorageOp::read(f, Range::new(s, e))
+}
+
+/// Table 1 analogue — load-after-store: two processes each write one
+/// range and read the other's range, with no synchronization at all.
+/// Races under every model (under POSIX/sequential consistency the
+/// *outcome set* is constrained; as a program it is racy).
+pub fn table1_load_after_store() -> Litmus {
+    let mut t = Trace::new();
+    t.push(0, w(0, 0, 8)); // L11: x = 100
+    t.push(0, r(1, 0, 8)); // L12: r1 = y
+    t.push(1, w(1, 0, 8)); // L21: y = 100
+    t.push(1, r(0, 0, 8)); // L22: r2 = x
+    Litmus {
+        name: "table1-load-after-store",
+        description: "Two ranks write one file range and read the other's, \
+                      unsynchronized (Table 1).",
+        trace: t,
+        expected: vec![
+            ("POSIX", false),
+            ("Commit", false),
+            ("Session", false),
+            ("MPI-IO", false),
+        ],
+    }
+}
+
+/// Table 2 analogue — flag synchronization: writer writes x then signals;
+/// reader waits on the signal then reads x. The signal is an external
+/// (message-passing) synchronization producing an so edge. POSIX is
+/// satisfied (hb orders the accesses); the relaxed storage models still
+/// require their storage sync ops, so they race.
+pub fn table2_flag_sync() -> Litmus {
+    let mut t = Trace::new();
+    let x = t.push(0, w(0, 0, 8)); // L11: x = 100
+    let y = t.push(1, r(0, 0, 8)); // L22: y = x (after flag)
+    t.add_so(x, y); // L12/L21: flag=1 / while(!flag)
+    Litmus {
+        name: "table2-flag-sync",
+        description: "Writer then message-passing flag then reader (Table 2). \
+                      hb-ordered, but no storage sync ops.",
+        trace: t,
+        expected: vec![
+            ("POSIX", true),
+            ("Commit", false),
+            ("Session", false),
+            ("MPI-IO", false),
+        ],
+    }
+}
+
+/// Table 3 analogue — entry-consistency idea mapped to files: w lives in
+/// file 1, x in file 0. Only x's file gets the session close/open pair;
+/// the write to w is not read by anyone, so no conflict arises and the
+/// program is properly synchronized under session consistency — the
+/// point of entry consistency (per-object sync) made with per-file sync
+/// objects.
+pub fn table3_per_object_sync() -> Litmus {
+    let mut t = Trace::new();
+    t.push(0, w(1, 0, 8)); // L11: w = 100 (file 1, never read)
+    t.push(0, w(0, 0, 8)); // L12: x = 100 (file 0)
+    let cl = t.push(0, StorageOp::sync(SyncKind::SessionClose, 0));
+    let op = t.push(1, StorageOp::sync(SyncKind::SessionOpen, 0));
+    t.push(1, r(0, 0, 8)); // L22: y = x
+    t.add_so(cl, op); // L13/L21: flag
+    Litmus {
+        name: "table3-per-object-sync",
+        description: "Per-file synchronization objects: only the conflicting \
+                      file needs its session pair (Table 3 / entry consistency).",
+        trace: t,
+        expected: vec![
+            ("POSIX", true),
+            ("Session", true),
+            ("Commit", false), // commit model has no session ops
+        ],
+    }
+}
+
+/// Checkpoint/restart shape: all ranks write disjoint ranges, commit,
+/// barrier, then all ranks read disjoint (shifted) ranges.
+pub fn checkpoint_restart(nranks: u32, block: u64) -> Litmus {
+    let mut t = Trace::new();
+    let mut commits = Vec::new();
+    for rank in 0..nranks {
+        let s = rank as u64 * block;
+        t.push(rank, w(0, s, s + block));
+        commits.push(t.push(rank, StorageOp::sync(SyncKind::Commit, 0)));
+    }
+    // Barrier: every commit so-precedes every first post-barrier op.
+    let mut reads = Vec::new();
+    for rank in 0..nranks {
+        // Shifted read: rank reads the block of rank+1 (mod n).
+        let peer = ((rank + 1) % nranks) as u64;
+        let s = peer * block;
+        reads.push(t.push(rank, r(0, s, s + block)));
+    }
+    for &c in &commits {
+        for &rd in &reads {
+            t.add_so(c, rd);
+        }
+    }
+    Litmus {
+        name: "checkpoint-restart",
+        description: "N-1 checkpoint: write disjoint, commit, barrier, \
+                      read neighbour's block.",
+        trace: t,
+        expected: vec![("POSIX", true), ("Commit", true)],
+    }
+}
+
+/// All built-in litmus scenarios.
+pub fn all() -> Vec<Litmus> {
+    vec![
+        table1_load_after_store(),
+        table2_flag_sync(),
+        table3_per_object_sync(),
+        checkpoint_restart(4, 1024),
+    ]
+}
+
+/// Run a litmus against all Table 4 models (+ strict commit); returns
+/// (model name, race count, properly synchronized pairs).
+pub fn run(litmus: &Litmus) -> Vec<(&'static str, usize, usize)> {
+    let mut models = ConsistencyModel::table4();
+    models.push(ConsistencyModel::commit_strict());
+    models
+        .iter()
+        .map(|m| {
+            let rep = race::detect(&litmus.trace, m).expect("litmus traces are acyclic");
+            (m.name, rep.races.len(), rep.synchronized_pairs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every litmus's expectations hold — the executable spec.
+    #[test]
+    fn all_expectations_hold() {
+        for litmus in all() {
+            let results = run(&litmus);
+            for (model_name, expected_rf) in &litmus.expected {
+                let (_, races, _) = results
+                    .iter()
+                    .find(|(n, _, _)| n == model_name)
+                    .unwrap_or_else(|| panic!("model {model_name} missing"));
+                assert_eq!(
+                    *races == 0,
+                    *expected_rf,
+                    "litmus `{}` under {model_name}: races={races}, expected race-free={expected_rf}",
+                    litmus.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table1_races_under_all() {
+        let l = table1_load_after_store();
+        for (name, races, _) in run(&l) {
+            assert!(races > 0, "{name} should race");
+        }
+    }
+
+    #[test]
+    fn checkpoint_restart_scales() {
+        for n in [2u32, 4, 8] {
+            let l = checkpoint_restart(n, 4096);
+            let results = run(&l);
+            let commit = results.iter().find(|(n, _, _)| *n == "Commit").unwrap();
+            assert_eq!(commit.1, 0, "commit-model races at n={n}");
+            // n conflicting pairs (each rank reads neighbour's block).
+            assert_eq!(commit.2 as u32, n, "synchronized pairs at n={n}");
+        }
+    }
+
+    #[test]
+    fn strict_commit_also_passes_checkpoint() {
+        let l = checkpoint_restart(4, 1024);
+        let results = run(&l);
+        let strict = results
+            .iter()
+            .find(|(n, _, _)| *n == "Commit(strict)")
+            .unwrap();
+        assert_eq!(strict.1, 0);
+    }
+}

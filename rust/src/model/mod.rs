@@ -1,0 +1,26 @@
+//! The formal framework of §4: a unified, machine-readable way to define
+//! properly-synchronized SCNF storage consistency models, plus the
+//! storage-race detector built on it.
+//!
+//! - [`op`] — data vs. synchronization storage operations, conflicts.
+//! - [`trace`] — executions, program order, synchronization order,
+//!   happens-before.
+//! - [`msc`] — Minimum Synchronization Constructs.
+//! - [`models`] — Table 4: POSIX, commit, session, MPI-IO (each fully
+//!   defined by `S` + MSCs).
+//! - [`race`] — the properly-synchronized relation and race detection.
+//! - [`litmus`] — executable litmus scenarios (Tables 1–3 analogues).
+
+pub mod exec;
+pub mod litmus;
+pub mod models;
+pub mod msc;
+pub mod op;
+pub mod race;
+pub mod trace;
+
+pub use models::ConsistencyModel;
+pub use msc::{EdgeKind, Msc};
+pub use op::{Access, Event, FileId, OpId, RankId, StorageOp, SyncKind};
+pub use race::{detect, race_free, RaceReport, StorageRace};
+pub use trace::{HappensBefore, Trace};

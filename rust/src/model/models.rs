@@ -1,0 +1,183 @@
+//! The properly-synchronized SCNF model definitions of Table 4. A model
+//! is completely specified by its set `S` of synchronization storage
+//! operations and its set of MSCs — exactly the paper's claim, made
+//! machine-readable so the race detector and the FS layers consume the
+//! *same* definition.
+
+use super::msc::{EdgeKind, Msc};
+use super::op::SyncKind;
+
+/// A properly-synchronized SCNF consistency model: name, `S`, MSCs.
+#[derive(Debug, Clone)]
+pub struct ConsistencyModel {
+    pub name: &'static str,
+    /// The set S of synchronization storage operations.
+    pub sync_ops: Vec<SyncKind>,
+    /// Any one MSC instance properly synchronizes a conflicting pair.
+    pub mscs: Vec<Msc>,
+}
+
+impl ConsistencyModel {
+    /// POSIX consistency: S = {}, MSC = --hb--> (Table 4 row 1).
+    /// Every write is visible to every hb-subsequent read.
+    pub fn posix() -> Self {
+        Self {
+            name: "POSIX",
+            sync_ops: vec![],
+            mscs: vec![Msc::direct(EdgeKind::Hb)],
+        }
+    }
+
+    /// Commit consistency as in Table 4 (the relaxed variant):
+    /// MSC = --hb--> commit --hb-->. Any process may commit on behalf of
+    /// the writer as long as the commit is hb-ordered between X and Y.
+    pub fn commit() -> Self {
+        Self {
+            name: "Commit",
+            sync_ops: vec![SyncKind::Commit],
+            mscs: vec![Msc::new(
+                vec![SyncKind::Commit],
+                vec![EdgeKind::Hb, EdgeKind::Hb],
+            )],
+        }
+    }
+
+    /// The strict commit variant most BB systems implement (§4.2.2):
+    /// MSC = --po--> commit --hb--> — the *writing* process must commit.
+    pub fn commit_strict() -> Self {
+        Self {
+            name: "Commit(strict)",
+            sync_ops: vec![SyncKind::Commit],
+            mscs: vec![Msc::new(
+                vec![SyncKind::Commit],
+                vec![EdgeKind::Po, EdgeKind::Hb],
+            )],
+        }
+    }
+
+    /// Session consistency (Table 4 row 3):
+    /// MSC = --po--> session_close --hb--> session_open --po-->.
+    pub fn session() -> Self {
+        Self {
+            name: "Session",
+            sync_ops: vec![SyncKind::SessionClose, SyncKind::SessionOpen],
+            mscs: vec![Msc::new(
+                vec![SyncKind::SessionClose, SyncKind::SessionOpen],
+                vec![EdgeKind::Po, EdgeKind::Hb, EdgeKind::Po],
+            )],
+        }
+    }
+
+    /// MPI-IO consistency, third level (§4.2.4): four MSCs
+    /// --po--> s1 --hb--> s2 --po--> with
+    /// s1 ∈ {MPI_File_close, MPI_File_sync}, s2 ∈ {MPI_File_sync,
+    /// MPI_File_open}.
+    pub fn mpiio() -> Self {
+        let s1s = [SyncKind::MpiFileClose, SyncKind::MpiFileSync];
+        let s2s = [SyncKind::MpiFileSync, SyncKind::MpiFileOpen];
+        let mut mscs = Vec::new();
+        for s1 in s1s {
+            for s2 in s2s {
+                mscs.push(Msc::new(
+                    vec![s1, s2],
+                    vec![EdgeKind::Po, EdgeKind::Hb, EdgeKind::Po],
+                ));
+            }
+        }
+        Self {
+            name: "MPI-IO",
+            sync_ops: vec![
+                SyncKind::MpiFileSync,
+                SyncKind::MpiFileClose,
+                SyncKind::MpiFileOpen,
+            ],
+            mscs,
+        }
+    }
+
+    /// All Table 4 models in paper order.
+    pub fn table4() -> Vec<Self> {
+        vec![
+            Self::posix(),
+            Self::commit(),
+            Self::session(),
+            Self::mpiio(),
+        ]
+    }
+
+    /// Render the Table 4 row for this model ("S" and "MSC" columns).
+    pub fn describe(&self) -> (String, String) {
+        let s = if self.sync_ops.is_empty() {
+            "{}".to_string()
+        } else {
+            format!(
+                "{{{}}}",
+                self.sync_ops
+                    .iter()
+                    .map(|k| k.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        };
+        let mscs = self
+            .mscs
+            .iter()
+            .map(|m| m.to_string())
+            .collect::<Vec<_>>()
+            .join("  |  ");
+        (s, mscs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posix_is_empty_s_direct_hb() {
+        let m = ConsistencyModel::posix();
+        assert!(m.sync_ops.is_empty());
+        assert_eq!(m.mscs.len(), 1);
+        assert_eq!(m.mscs[0].k(), 0);
+        let (s, msc) = m.describe();
+        assert_eq!(s, "{}");
+        assert_eq!(msc, "--hb-->");
+    }
+
+    #[test]
+    fn commit_table4_row() {
+        let (s, msc) = ConsistencyModel::commit().describe();
+        assert_eq!(s, "{commit}");
+        assert_eq!(msc, "--hb--> commit --hb-->");
+    }
+
+    #[test]
+    fn session_table4_row() {
+        let (s, msc) = ConsistencyModel::session().describe();
+        assert_eq!(s, "{session_close, session_open}");
+        assert_eq!(msc, "--po--> session_close --hb--> session_open --po-->");
+    }
+
+    #[test]
+    fn mpiio_has_four_mscs() {
+        let m = ConsistencyModel::mpiio();
+        assert_eq!(m.mscs.len(), 4);
+        assert_eq!(m.sync_ops.len(), 3);
+        // every MSC is po/hb/po with k=2
+        for msc in &m.mscs {
+            assert_eq!(msc.k(), 2);
+            assert_eq!(msc.edges[0], EdgeKind::Po);
+            assert_eq!(msc.edges[1], EdgeKind::Hb);
+            assert_eq!(msc.edges[2], EdgeKind::Po);
+        }
+    }
+
+    #[test]
+    fn table4_order_and_names() {
+        let names: Vec<&str> = ConsistencyModel::table4()
+            .iter()
+            .map(|m| m.name)
+            .collect();
+        assert_eq!(names, vec!["POSIX", "Commit", "Session", "MPI-IO"]);
+    }
+}

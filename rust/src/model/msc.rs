@@ -1,0 +1,262 @@
+//! Minimum Synchronization Constructs (§4.1).
+//!
+//! An MSC is a sequence of k synchronization storage operations joined by
+//! k+1 edges, each edge being program order (po) or happens-before (hb):
+//!
+//! ```text
+//! MSC = --r0--> S1 --r1--> S2 --r2--> ... Sk --rk--> ,  k >= 0
+//! ```
+//!
+//! An MSC *instance* between conflicting data operations X and Y is a
+//! choice of sync events s1..sk (of the required kinds, on the same
+//! synchronization object as X and Y) such that every edge holds:
+//! `X r0 s1`, `si r_i s(i+1)`, `sk rk Y`. For k = 0 the single edge
+//! relates X directly to Y (POSIX's `--hb-->`).
+
+use super::op::{OpId, StorageOp, SyncKind};
+use super::trace::{HappensBefore, Trace};
+
+/// Edge relation inside an MSC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Program order: both endpoints on the same process, in order.
+    /// (Implies hb; used where a model requires the sync op to be called
+    /// by one of the conflicting processes, e.g. session consistency.)
+    Po,
+    /// Happens-before.
+    Hb,
+}
+
+impl std::fmt::Display for EdgeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EdgeKind::Po => write!(f, "--po-->"),
+            EdgeKind::Hb => write!(f, "--hb-->"),
+        }
+    }
+}
+
+/// One MSC: `edges.len() == syncs.len() + 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Msc {
+    pub syncs: Vec<SyncKind>,
+    pub edges: Vec<EdgeKind>,
+}
+
+impl Msc {
+    pub fn new(syncs: Vec<SyncKind>, edges: Vec<EdgeKind>) -> Self {
+        assert_eq!(
+            edges.len(),
+            syncs.len() + 1,
+            "an MSC with k sync ops needs k+1 edges"
+        );
+        Self { syncs, edges }
+    }
+
+    /// The k = 0 construct (a single edge, POSIX-style).
+    pub fn direct(edge: EdgeKind) -> Self {
+        Self::new(Vec::new(), vec![edge])
+    }
+
+    pub fn k(&self) -> usize {
+        self.syncs.len()
+    }
+
+    /// Does an instance of this MSC exist between events `x` and `y`?
+    ///
+    /// Candidate sync events must (a) be sync ops of the required kind,
+    /// (b) name the same synchronization object (file) as `x`. The search
+    /// is a DFS over candidates per position; trace sizes the checker
+    /// handles keep this cheap (see `race.rs` for the pre-indexing the
+    /// detector layers on top).
+    pub fn instance_exists(
+        &self,
+        trace: &Trace,
+        hb: &HappensBefore,
+        x: OpId,
+        y: OpId,
+    ) -> bool {
+        let file = trace.event(x).op.file();
+        // Pre-collect candidate event ids per sync position.
+        let candidates: Vec<Vec<OpId>> = self
+            .syncs
+            .iter()
+            .map(|&kind| {
+                trace
+                    .events()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, ev)| {
+                        matches!(ev.op, StorageOp::Sync { kind: k, file: f } if k == kind && f == file)
+                    })
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .collect();
+
+        let edge_holds = |kind: EdgeKind, a: OpId, b: OpId| -> bool {
+            match kind {
+                EdgeKind::Po => trace.po(a, b),
+                EdgeKind::Hb => hb.hb(a, b),
+            }
+        };
+
+        // DFS over positions.
+        fn dfs(
+            pos: usize,
+            prev: OpId,
+            msc: &Msc,
+            candidates: &[Vec<OpId>],
+            y: OpId,
+            edge_holds: &dyn Fn(EdgeKind, OpId, OpId) -> bool,
+        ) -> bool {
+            if pos == msc.syncs.len() {
+                return edge_holds(msc.edges[pos], prev, y);
+            }
+            for &s in &candidates[pos] {
+                if edge_holds(msc.edges[pos], prev, s)
+                    && dfs(pos + 1, s, msc, candidates, y, edge_holds)
+                {
+                    return true;
+                }
+            }
+            false
+        }
+
+        dfs(0, x, self, &candidates, y, &edge_holds)
+    }
+}
+
+impl std::fmt::Display for Msc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.edges[0])?;
+        for (i, s) in self.syncs.iter().enumerate() {
+            write!(f, " {s} {}", self.edges[i + 1])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interval::Range;
+    use crate::model::op::StorageOp;
+
+    fn w(f: u32, s: u64, e: u64) -> StorageOp {
+        StorageOp::write(f, Range::new(s, e))
+    }
+    fn r(f: u32, s: u64, e: u64) -> StorageOp {
+        StorageOp::read(f, Range::new(s, e))
+    }
+
+    #[test]
+    fn k0_direct_hb() {
+        let msc = Msc::direct(EdgeKind::Hb);
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let y = t.push(0, r(0, 0, 10));
+        let hb = t.happens_before().unwrap();
+        assert!(msc.instance_exists(&t, &hb, x, y));
+        assert!(!msc.instance_exists(&t, &hb, y, x));
+    }
+
+    #[test]
+    fn commit_msc_found_when_present() {
+        // X --po--> commit --hb--> Y  (strict commit consistency)
+        let msc = Msc::new(
+            vec![SyncKind::Commit],
+            vec![EdgeKind::Po, EdgeKind::Hb],
+        );
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let c = t.push(0, StorageOp::sync(SyncKind::Commit, 0));
+        let s2 = t.push(1, StorageOp::sync(SyncKind::Custom(0), 0)); // barrier proxy
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(c, s2);
+        let hb = t.happens_before().unwrap();
+        assert!(msc.instance_exists(&t, &hb, x, y));
+    }
+
+    #[test]
+    fn commit_msc_missing_when_no_commit() {
+        let msc = Msc::new(
+            vec![SyncKind::Commit],
+            vec![EdgeKind::Po, EdgeKind::Hb],
+        );
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(x, y); // ordered, but without a commit in between
+        let hb = t.happens_before().unwrap();
+        assert!(!msc.instance_exists(&t, &hb, x, y));
+    }
+
+    #[test]
+    fn commit_on_other_file_does_not_count() {
+        let msc = Msc::new(
+            vec![SyncKind::Commit],
+            vec![EdgeKind::Po, EdgeKind::Hb],
+        );
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let c = t.push(0, StorageOp::sync(SyncKind::Commit, 1)); // wrong file!
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(c, y);
+        let hb = t.happens_before().unwrap();
+        assert!(!msc.instance_exists(&t, &hb, x, y));
+    }
+
+    #[test]
+    fn po_edge_rejects_cross_process_sync() {
+        // session MSC: X --po--> close --hb--> open --po--> Y
+        let msc = Msc::new(
+            vec![SyncKind::SessionClose, SyncKind::SessionOpen],
+            vec![EdgeKind::Po, EdgeKind::Hb, EdgeKind::Po],
+        );
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        // close performed by rank 2, NOT the writer: po edge must fail.
+        let cl = t.push(2, StorageOp::sync(SyncKind::SessionClose, 0));
+        let op = t.push(1, StorageOp::sync(SyncKind::SessionOpen, 0));
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(x, cl);
+        t.add_so(cl, op);
+        let hb = t.happens_before().unwrap();
+        assert!(!msc.instance_exists(&t, &hb, x, y));
+    }
+
+    #[test]
+    fn session_msc_full_chain() {
+        let msc = Msc::new(
+            vec![SyncKind::SessionClose, SyncKind::SessionOpen],
+            vec![EdgeKind::Po, EdgeKind::Hb, EdgeKind::Po],
+        );
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let cl = t.push(0, StorageOp::sync(SyncKind::SessionClose, 0));
+        let op = t.push(1, StorageOp::sync(SyncKind::SessionOpen, 0));
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(cl, op);
+        let hb = t.happens_before().unwrap();
+        assert!(msc.instance_exists(&t, &hb, x, y));
+    }
+
+    #[test]
+    fn display_renders_paper_notation() {
+        let msc = Msc::new(
+            vec![SyncKind::SessionClose, SyncKind::SessionOpen],
+            vec![EdgeKind::Po, EdgeKind::Hb, EdgeKind::Po],
+        );
+        assert_eq!(
+            msc.to_string(),
+            "--po--> session_close --hb--> session_open --po-->"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        Msc::new(vec![SyncKind::Commit], vec![EdgeKind::Hb]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Storage operations of the formal framework (§4.1): *data storage
+//! operations* (reads/writes of byte ranges, each naming a
+//! synchronization object — here, the file) and *synchronization storage
+//! operations* (model-specific: commit, session_open/close, the MPI-IO
+//! trio, POSIX open/close/fsync).
+
+use crate::interval::Range;
+
+/// A process (MPI-rank-like) identifier within an execution.
+pub type RankId = u32;
+
+/// A file identifier — the synchronization object data operations name.
+pub type FileId = u32;
+
+/// Index of an event within a [`super::trace::Trace`].
+pub type OpId = usize;
+
+/// Direction of a data storage operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+/// The synchronization storage operations used by the models of Table 4.
+/// `Custom` lets tests define new models without touching this enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SyncKind {
+    /// Commit consistency's `commit` (e.g. fsync in UnifyFS).
+    Commit,
+    /// Session consistency's `session_open`.
+    SessionOpen,
+    /// Session consistency's `session_close`.
+    SessionClose,
+    /// MPI-IO `MPI_File_open`.
+    MpiFileOpen,
+    /// MPI-IO `MPI_File_close`.
+    MpiFileClose,
+    /// MPI-IO `MPI_File_sync`.
+    MpiFileSync,
+    /// Escape hatch for user-defined models.
+    Custom(u16),
+}
+
+impl std::fmt::Display for SyncKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SyncKind::Commit => write!(f, "commit"),
+            SyncKind::SessionOpen => write!(f, "session_open"),
+            SyncKind::SessionClose => write!(f, "session_close"),
+            SyncKind::MpiFileOpen => write!(f, "MPI_File_open"),
+            SyncKind::MpiFileClose => write!(f, "MPI_File_close"),
+            SyncKind::MpiFileSync => write!(f, "MPI_File_sync"),
+            SyncKind::Custom(id) => write!(f, "custom#{id}"),
+        }
+    }
+}
+
+/// One executed storage operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageOp {
+    /// Data storage operation: read/write of `range` in `file`.
+    Data {
+        access: Access,
+        file: FileId,
+        range: Range,
+    },
+    /// Synchronization storage operation on synchronization object `file`.
+    Sync { kind: SyncKind, file: FileId },
+}
+
+impl StorageOp {
+    pub fn read(file: FileId, range: Range) -> Self {
+        StorageOp::Data {
+            access: Access::Read,
+            file,
+            range,
+        }
+    }
+
+    pub fn write(file: FileId, range: Range) -> Self {
+        StorageOp::Data {
+            access: Access::Write,
+            file,
+            range,
+        }
+    }
+
+    pub fn sync(kind: SyncKind, file: FileId) -> Self {
+        StorageOp::Sync { kind, file }
+    }
+
+    pub fn is_data(&self) -> bool {
+        matches!(self, StorageOp::Data { .. })
+    }
+
+    pub fn is_write(&self) -> bool {
+        matches!(
+            self,
+            StorageOp::Data {
+                access: Access::Write,
+                ..
+            }
+        )
+    }
+
+    pub fn is_read(&self) -> bool {
+        matches!(
+            self,
+            StorageOp::Data {
+                access: Access::Read,
+                ..
+            }
+        )
+    }
+
+    pub fn file(&self) -> FileId {
+        match self {
+            StorageOp::Data { file, .. } | StorageOp::Sync { file, .. } => *file,
+        }
+    }
+
+    /// Two *data* operations conflict iff they target the same file, their
+    /// ranges overlap, and at least one is a write (§4.1 "Conflict").
+    pub fn conflicts_with(&self, other: &StorageOp) -> bool {
+        match (self, other) {
+            (
+                StorageOp::Data {
+                    access: a1,
+                    file: f1,
+                    range: r1,
+                },
+                StorageOp::Data {
+                    access: a2,
+                    file: f2,
+                    range: r2,
+                },
+            ) => {
+                f1 == f2
+                    && r1.overlaps(r2)
+                    && (*a1 == Access::Write || *a2 == Access::Write)
+            }
+            _ => false,
+        }
+    }
+}
+
+/// An event in a trace: operation + issuing rank. Program order within a
+/// rank is the order of events in the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub rank: RankId,
+    pub op: StorageOp,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_rules() {
+        let w = StorageOp::write(0, Range::new(0, 10));
+        let w2 = StorageOp::write(0, Range::new(5, 15));
+        let r = StorageOp::read(0, Range::new(5, 15));
+        let r2 = StorageOp::read(0, Range::new(0, 10));
+        let w_other_file = StorageOp::write(1, Range::new(0, 10));
+        let w_disjoint = StorageOp::write(0, Range::new(10, 20));
+        let sync = StorageOp::sync(SyncKind::Commit, 0);
+
+        assert!(w.conflicts_with(&w2), "write-write overlap");
+        assert!(w.conflicts_with(&r), "write-read overlap");
+        assert!(r.conflicts_with(&w), "read-write overlap");
+        assert!(!r.conflicts_with(&r2), "read-read never conflicts");
+        assert!(!w.conflicts_with(&w_other_file), "different file");
+        assert!(!w.conflicts_with(&w_disjoint), "disjoint (half-open)");
+        assert!(!w.conflicts_with(&sync), "sync ops never conflict");
+    }
+
+    #[test]
+    fn accessors() {
+        let w = StorageOp::write(3, Range::new(0, 4));
+        assert!(w.is_data() && w.is_write() && !w.is_read());
+        assert_eq!(w.file(), 3);
+        let s = StorageOp::sync(SyncKind::SessionOpen, 9);
+        assert!(!s.is_data());
+        assert_eq!(s.file(), 9);
+        assert_eq!(format!("{}", SyncKind::MpiFileSync), "MPI_File_sync");
+    }
+}

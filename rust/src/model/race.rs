@@ -1,0 +1,377 @@
+//! The storage-race detector (§4.1): given an execution trace and a
+//! consistency model, find conflicting data-operation pairs that are not
+//! properly synchronized.
+//!
+//! Properly-Synchronized Relation (X --ps--> Y), X before Y in hb or
+//! concurrent:
+//! 1. X is a read and X --hb--> Y, or
+//! 2. X is a write and an MSC instance of the model exists between
+//!    X and Y.
+//!
+//! Two conflicting ops form a **storage race** iff neither X --ps--> Y
+//! nor Y --ps--> X holds.
+
+use super::models::ConsistencyModel;
+use super::op::{Access, OpId, StorageOp};
+use super::trace::{CycleError, HappensBefore, Trace};
+
+/// A detected storage race between two data operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StorageRace {
+    pub x: OpId,
+    pub y: OpId,
+}
+
+/// Full verdict for a trace under a model.
+#[derive(Debug, Clone)]
+pub struct RaceReport {
+    pub model: &'static str,
+    pub races: Vec<StorageRace>,
+    /// Conflicting pairs that were properly synchronized (for reporting).
+    pub synchronized_pairs: usize,
+}
+
+impl RaceReport {
+    pub fn race_free(&self) -> bool {
+        self.races.is_empty()
+    }
+}
+
+/// Detect storage races in `trace` under `model`.
+pub fn detect(trace: &Trace, model: &ConsistencyModel) -> Result<RaceReport, CycleError> {
+    let hb = trace.happens_before()?;
+    let mut races = Vec::new();
+    let mut synchronized = 0usize;
+
+    let data_ops: Vec<OpId> = trace
+        .events()
+        .iter()
+        .enumerate()
+        .filter(|(_, ev)| ev.op.is_data())
+        .map(|(i, _)| i)
+        .collect();
+
+    for (ai, &a) in data_ops.iter().enumerate() {
+        for &b in &data_ops[ai + 1..] {
+            let (oa, ob) = (&trace.event(a).op, &trace.event(b).op);
+            if !oa.conflicts_with(ob) {
+                continue;
+            }
+            if properly_synchronized(trace, &hb, model, a, b)
+                || properly_synchronized(trace, &hb, model, b, a)
+            {
+                synchronized += 1;
+            } else {
+                races.push(StorageRace { x: a, y: b });
+            }
+        }
+    }
+
+    Ok(RaceReport {
+        model: model.name,
+        races,
+        synchronized_pairs: synchronized,
+    })
+}
+
+/// X --ps--> Y under `model`?
+pub fn properly_synchronized(
+    trace: &Trace,
+    hb: &HappensBefore,
+    model: &ConsistencyModel,
+    x: OpId,
+    y: OpId,
+) -> bool {
+    let xop = &trace.event(x).op;
+    match xop {
+        StorageOp::Data {
+            access: Access::Read,
+            ..
+        } => hb.hb(x, y),
+        StorageOp::Data {
+            access: Access::Write,
+            ..
+        } => model
+            .mscs
+            .iter()
+            .any(|msc| msc.instance_exists(trace, hb, x, y)),
+        StorageOp::Sync { .. } => false,
+    }
+}
+
+/// Convenience: is the trace race-free under the model?
+pub fn race_free(trace: &Trace, model: &ConsistencyModel) -> Result<bool, CycleError> {
+    Ok(detect(trace, model)?.race_free())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interval::Range;
+    use crate::model::op::SyncKind;
+    use crate::testkit;
+
+    fn w(f: u32, s: u64, e: u64) -> StorageOp {
+        StorageOp::write(f, Range::new(s, e))
+    }
+    fn r(f: u32, s: u64, e: u64) -> StorageOp {
+        StorageOp::read(f, Range::new(s, e))
+    }
+    fn sync(k: SyncKind, f: u32) -> StorageOp {
+        StorageOp::sync(k, f)
+    }
+
+    /// Unordered conflicting writes race under every model.
+    #[test]
+    fn concurrent_writes_race_everywhere() {
+        for model in ConsistencyModel::table4() {
+            let mut t = Trace::new();
+            t.push(0, w(0, 0, 10));
+            t.push(1, w(0, 5, 15));
+            let rep = detect(&t, &model).unwrap();
+            assert_eq!(rep.races.len(), 1, "model {}", model.name);
+        }
+    }
+
+    /// Non-conflicting accesses never race.
+    #[test]
+    fn disjoint_or_readonly_never_race() {
+        for model in ConsistencyModel::table4() {
+            let mut t = Trace::new();
+            t.push(0, w(0, 0, 10));
+            t.push(1, w(0, 10, 20)); // disjoint
+            t.push(0, r(0, 30, 40));
+            t.push(1, r(0, 30, 40)); // read-read
+            t.push(1, w(1, 0, 10)); // other file
+            let rep = detect(&t, &model).unwrap();
+            assert!(rep.race_free(), "model {}", model.name);
+        }
+    }
+
+    /// POSIX: hb alone properly synchronizes.
+    #[test]
+    fn posix_hb_suffices() {
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(x, y);
+        assert!(race_free(&t, &ConsistencyModel::posix()).unwrap());
+        // ...but commit consistency needs a commit between them.
+        assert!(!race_free(&t, &ConsistencyModel::commit()).unwrap());
+        // ...and session needs close/open.
+        assert!(!race_free(&t, &ConsistencyModel::session()).unwrap());
+    }
+
+    /// The paper's canonical commit pattern:
+    /// P0: write; commit; (barrier)   P1: (barrier) read.
+    #[test]
+    fn commit_pattern_is_race_free_under_commit() {
+        let mut t = Trace::new();
+        let _x = t.push(0, w(0, 0, 10));
+        let c = t.push(0, sync(SyncKind::Commit, 0));
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(c, y); // barrier after commit, before read
+        assert!(race_free(&t, &ConsistencyModel::commit()).unwrap());
+        assert!(race_free(&t, &ConsistencyModel::commit_strict()).unwrap());
+        // Session model does NOT accept commit ops.
+        assert!(!race_free(&t, &ConsistencyModel::session()).unwrap());
+    }
+
+    /// Relaxed commit allows another process to commit; strict does not.
+    #[test]
+    fn relaxed_vs_strict_commit() {
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        // Rank 2 commits on behalf of rank 0.
+        let c = t.push(2, sync(SyncKind::Commit, 0));
+        let y = t.push(1, r(0, 0, 10));
+        t.add_so(x, c);
+        t.add_so(c, y);
+        assert!(race_free(&t, &ConsistencyModel::commit()).unwrap());
+        assert!(!race_free(&t, &ConsistencyModel::commit_strict()).unwrap());
+    }
+
+    /// Session pattern: close by writer --hb--> open by reader.
+    #[test]
+    fn session_pattern_race_free_under_session() {
+        let mut t = Trace::new();
+        let _x = t.push(0, w(0, 0, 10));
+        let cl = t.push(0, sync(SyncKind::SessionClose, 0));
+        let op = t.push(1, sync(SyncKind::SessionOpen, 0));
+        let _y = t.push(1, r(0, 0, 10));
+        t.add_so(cl, op);
+        assert!(race_free(&t, &ConsistencyModel::session()).unwrap());
+        // close/open unordered => race.
+        let mut t2 = Trace::new();
+        t2.push(0, w(0, 0, 10));
+        t2.push(0, sync(SyncKind::SessionClose, 0));
+        t2.push(1, sync(SyncKind::SessionOpen, 0));
+        t2.push(1, r(0, 0, 10));
+        assert!(!race_free(&t2, &ConsistencyModel::session()).unwrap());
+    }
+
+    /// MPI-IO sync-barrier-sync construct (§2.3.3): all four MSC shapes.
+    #[test]
+    fn mpiio_sync_barrier_sync() {
+        use SyncKind::*;
+        let cases = [
+            (MpiFileClose, MpiFileOpen),
+            (MpiFileClose, MpiFileSync),
+            (MpiFileSync, MpiFileSync),
+            (MpiFileSync, MpiFileOpen),
+        ];
+        for (s1, s2) in cases {
+            let mut t = Trace::new();
+            let _x = t.push(0, w(0, 0, 10));
+            let a = t.push(0, sync(s1, 0));
+            let b = t.push(1, sync(s2, 0));
+            let _y = t.push(1, r(0, 0, 10));
+            t.add_so(a, b); // the "barrier"
+            assert!(
+                race_free(&t, &ConsistencyModel::mpiio()).unwrap(),
+                "{s1:?} -> {s2:?}"
+            );
+        }
+        // Wrong direction: open cannot be s1.
+        let mut t = Trace::new();
+        t.push(0, w(0, 0, 10));
+        let a = t.push(0, sync(MpiFileOpen, 0));
+        let b = t.push(1, sync(MpiFileSync, 0));
+        t.push(1, r(0, 0, 10));
+        t.add_so(a, b);
+        assert!(!race_free(&t, &ConsistencyModel::mpiio()).unwrap());
+    }
+
+    /// Read-before-write direction: a read hb-before a write is properly
+    /// synchronized by rule (1) without any sync ops, under every model.
+    #[test]
+    fn read_then_write_rule1() {
+        for model in ConsistencyModel::table4() {
+            let mut t = Trace::new();
+            let x = t.push(0, r(0, 0, 10));
+            let y = t.push(1, w(0, 0, 10));
+            t.add_so(x, y);
+            assert!(race_free(&t, &model).unwrap(), "model {}", model.name);
+        }
+    }
+
+    /// A commit by the writer *after* the read doesn't help.
+    #[test]
+    fn commit_after_read_still_races() {
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let y = t.push(1, r(0, 0, 10));
+        let c = t.push(0, sync(SyncKind::Commit, 0));
+        t.add_so(x, y);
+        let _ = c;
+        assert!(!race_free(&t, &ConsistencyModel::commit()).unwrap());
+    }
+
+    /// Property: POSIX-race-freedom is implied by race-freedom under any
+    /// weaker model on the same trace (any MSC instance implies hb-order,
+    /// because every MSC edge implies hb).
+    #[test]
+    fn property_weaker_model_race_free_implies_posix_race_free() {
+        use SyncKind::*;
+        testkit::check("weaker rf => posix rf", |g| {
+            let models = [
+                ConsistencyModel::commit(),
+                ConsistencyModel::commit_strict(),
+                ConsistencyModel::session(),
+                ConsistencyModel::mpiio(),
+            ];
+            let model = g.choose(&models).clone();
+            let nranks = g.usize(1, 3) as u32;
+            let mut t = Trace::new();
+            let nev = g.usize(1, 14);
+            for _ in 0..nev {
+                let rank = g.u64(0, (nranks - 1) as u64) as u32;
+                let s = g.u64(0, 40);
+                let e = g.u64(s, 40.min(s + 16));
+                let op = match g.usize(0, 5) {
+                    0 => w(0, s, e),
+                    1 => r(0, s, e),
+                    2 => sync(Commit, 0),
+                    3 => sync(SessionClose, 0),
+                    4 => sync(SessionOpen, 0),
+                    _ => sync(MpiFileSync, 0),
+                };
+                t.push(rank, op);
+            }
+            for _ in 0..g.usize(0, 6) {
+                let a = g.usize(0, nev - 1);
+                let b = g.usize(0, nev - 1);
+                if a < b {
+                    t.add_so(a, b);
+                }
+            }
+            let weak_rf = race_free(&t, &model).map_err(|e| e.to_string())?;
+            let posix_rf =
+                race_free(&t, &ConsistencyModel::posix()).map_err(|e| e.to_string())?;
+            testkit::ensure(
+                !weak_rf || posix_rf,
+                format!("{} race-free but POSIX races", model.name),
+            )
+        });
+    }
+
+    /// Property: the MSC DFS agrees with brute-force enumeration of all
+    /// candidate sync tuples.
+    #[test]
+    fn property_msc_dfs_matches_bruteforce() {
+        use SyncKind::*;
+        testkit::check("msc dfs == brute force", |g| {
+            let model = ConsistencyModel::session();
+            let msc = &model.mscs[0];
+            let nranks = g.usize(1, 3) as u32;
+            let mut t = Trace::new();
+            let nev = g.usize(2, 12);
+            for _ in 0..nev {
+                let rank = g.u64(0, (nranks - 1) as u64) as u32;
+                let op = match g.usize(0, 3) {
+                    0 => w(0, 0, 10),
+                    1 => r(0, 0, 10),
+                    2 => sync(SessionClose, 0),
+                    _ => sync(SessionOpen, 0),
+                };
+                t.push(rank, op);
+            }
+            for _ in 0..g.usize(0, 5) {
+                let a = g.usize(0, nev - 1);
+                let b = g.usize(0, nev - 1);
+                if a < b {
+                    t.add_so(a, b);
+                }
+            }
+            let hb = t.happens_before().map_err(|e| e.to_string())?;
+            let closes: Vec<usize> = (0..nev)
+                .filter(|&i| {
+                    matches!(t.event(i).op, StorageOp::Sync { kind: SessionClose, file: 0 })
+                })
+                .collect();
+            let opens: Vec<usize> = (0..nev)
+                .filter(|&i| {
+                    matches!(t.event(i).op, StorageOp::Sync { kind: SessionOpen, file: 0 })
+                })
+                .collect();
+            for x in 0..nev {
+                for y in 0..nev {
+                    if x == y || !t.event(x).op.is_data() || !t.event(y).op.is_data() {
+                        continue;
+                    }
+                    let dfs = msc.instance_exists(&t, &hb, x, y);
+                    let brute = closes.iter().any(|&c| {
+                        opens.iter().any(|&o| {
+                            t.po(x, c) && hb.hb(c, o) && t.po(o, y)
+                        })
+                    });
+                    testkit::ensure(
+                        dfs == brute,
+                        format!("x={x} y={y}: dfs={dfs} brute={brute}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

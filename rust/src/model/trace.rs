@@ -1,0 +1,310 @@
+//! Execution traces and the three orders of §4.1: program order (po),
+//! synchronization order (so), and happens-before (hb = transitive
+//! closure of po ∪ so).
+//!
+//! Traces here are *analysis* objects — small recorded executions fed to
+//! the race detector and the litmus library. The live/DES engines record
+//! into this format through `trace::Recorder`.
+
+use super::op::{Event, OpId, RankId, StorageOp};
+
+/// A recorded execution: events plus cross-process so-edges.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    events: Vec<Event>,
+    /// Synchronization-order edges (a, b): a so-happens-before b.
+    /// These come from the parallel programming system (e.g. MPI barrier,
+    /// send/recv) — §4.1's "environment that provides well-defined
+    /// mechanisms to synchronize concurrent processes".
+    so_edges: Vec<(OpId, OpId)>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an event, returning its id.
+    pub fn push(&mut self, rank: RankId, op: StorageOp) -> OpId {
+        self.events.push(Event { rank, op });
+        self.events.len() - 1
+    }
+
+    /// Add a synchronization-order edge between two existing events.
+    pub fn add_so(&mut self, from: OpId, to: OpId) {
+        assert!(from < self.events.len() && to < self.events.len());
+        self.so_edges.push((from, to));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn event(&self, id: OpId) -> &Event {
+        &self.events[id]
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn so_edges(&self) -> &[(OpId, OpId)] {
+        &self.so_edges
+    }
+
+    /// Program order: same rank, `a` issued before `b`.
+    pub fn po(&self, a: OpId, b: OpId) -> bool {
+        a < b && self.events[a].rank == self.events[b].rank
+    }
+
+    /// Build the happens-before relation. Fails if po ∪ so is cyclic
+    /// (§4.1 requires so to be consistent with po).
+    pub fn happens_before(&self) -> Result<HappensBefore, CycleError> {
+        HappensBefore::build(self)
+    }
+}
+
+/// po ∪ so has a cycle — the trace is not a valid execution.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("po ∪ so contains a cycle through event {0}")]
+pub struct CycleError(pub OpId);
+
+/// Dense reachability closure of po ∪ so over a trace. For the trace
+/// sizes the checker sees (litmus tests, recorded test runs: up to a few
+/// thousand events) a bitset closure is simple and fast; see DESIGN.md
+/// §Perf for the measured costs.
+#[derive(Debug, Clone)]
+pub struct HappensBefore {
+    n: usize,
+    words_per_row: usize,
+    /// bits[i*words_per_row..][j] — event i happens-before event j.
+    bits: Vec<u64>,
+}
+
+impl HappensBefore {
+    fn build(trace: &Trace) -> Result<Self, CycleError> {
+        let n = trace.len();
+        let words = n.div_ceil(64).max(1);
+
+        // Successor adjacency: po successor (next event of same rank) +
+        // explicit so edges. Using only the *immediate* po successor keeps
+        // the edge count linear; transitivity fills in the rest.
+        let mut succ: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        let mut last_of_rank: std::collections::HashMap<RankId, OpId> =
+            std::collections::HashMap::new();
+        for (i, ev) in trace.events().iter().enumerate() {
+            if let Some(&prev) = last_of_rank.get(&ev.rank) {
+                succ[prev].push(i);
+            }
+            last_of_rank.insert(ev.rank, i);
+        }
+        for &(a, b) in trace.so_edges() {
+            succ[a].push(b);
+        }
+
+        // Topological order over po ∪ so (Kahn). A leftover node ⇒ cycle.
+        let mut indeg = vec![0usize; n];
+        for edges in &succ {
+            for &b in edges {
+                indeg[b] += 1;
+            }
+        }
+        let mut queue: Vec<OpId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut topo: Vec<OpId> = Vec::with_capacity(n);
+        while let Some(v) = queue.pop() {
+            topo.push(v);
+            for &b in &succ[v] {
+                indeg[b] -= 1;
+                if indeg[b] == 0 {
+                    queue.push(b);
+                }
+            }
+        }
+        if topo.len() != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).unwrap_or(0);
+            return Err(CycleError(stuck));
+        }
+
+        // Closure in reverse topological order: row(v) = ⋃ row(s) ∪ {s}.
+        let mut bits = vec![0u64; n * words];
+        for &v in topo.iter().rev() {
+            // Collect to avoid borrowing issues: successors' rows OR'd in.
+            for &s in &succ[v] {
+                let (dst_start, src_start) = (v * words, s * words);
+                for w in 0..words {
+                    let src = bits[src_start + w];
+                    bits[dst_start + w] |= src;
+                }
+                bits[v * words + s / 64] |= 1u64 << (s % 64);
+            }
+        }
+
+        Ok(Self {
+            n,
+            words_per_row: words,
+            bits,
+        })
+    }
+
+    /// Does event `a` happen-before event `b`?
+    pub fn hb(&self, a: OpId, b: OpId) -> bool {
+        debug_assert!(a < self.n && b < self.n);
+        (self.bits[a * self.words_per_row + b / 64] >> (b % 64)) & 1 == 1
+    }
+
+    /// Are `a` and `b` concurrent (neither hb the other, a != b)?
+    pub fn concurrent(&self, a: OpId, b: OpId) -> bool {
+        a != b && !self.hb(a, b) && !self.hb(b, a)
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interval::Range;
+    use crate::model::op::SyncKind;
+    use crate::testkit;
+
+    fn w(f: u32, s: u64, e: u64) -> StorageOp {
+        StorageOp::write(f, Range::new(s, e))
+    }
+
+    #[test]
+    fn po_within_rank_only() {
+        let mut t = Trace::new();
+        let a = t.push(0, w(0, 0, 10));
+        let b = t.push(0, w(0, 10, 20));
+        let c = t.push(1, w(0, 20, 30));
+        assert!(t.po(a, b));
+        assert!(!t.po(b, a));
+        assert!(!t.po(a, c));
+    }
+
+    #[test]
+    fn hb_includes_po_transitively() {
+        let mut t = Trace::new();
+        let a = t.push(0, w(0, 0, 1));
+        let b = t.push(0, w(0, 1, 2));
+        let c = t.push(0, w(0, 2, 3));
+        let hb = t.happens_before().unwrap();
+        assert!(hb.hb(a, b) && hb.hb(b, c) && hb.hb(a, c));
+        assert!(!hb.hb(c, a) && !hb.hb(b, a));
+        assert!(!hb.hb(a, a), "hb is irreflexive");
+    }
+
+    #[test]
+    fn so_bridges_ranks() {
+        let mut t = Trace::new();
+        let a = t.push(0, w(0, 0, 1));
+        let s1 = t.push(0, StorageOp::sync(SyncKind::SessionClose, 0));
+        let s2 = t.push(1, StorageOp::sync(SyncKind::SessionOpen, 0));
+        let b = t.push(1, w(0, 0, 1));
+        let hb0 = t.happens_before().unwrap();
+        assert!(!hb0.hb(a, b), "no so edge yet");
+        assert!(hb0.concurrent(a, b));
+        t.add_so(s1, s2);
+        let hb = t.happens_before().unwrap();
+        assert!(hb.hb(a, b), "a -po-> s1 -so-> s2 -po-> b");
+        assert!(!hb.hb(b, a));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut t = Trace::new();
+        let a = t.push(0, w(0, 0, 1));
+        let b = t.push(1, w(0, 1, 2));
+        t.add_so(a, b);
+        t.add_so(b, a);
+        assert!(t.happens_before().is_err());
+    }
+
+    #[test]
+    fn so_against_po_is_cycle() {
+        let mut t = Trace::new();
+        let a = t.push(0, w(0, 0, 1));
+        let b = t.push(0, w(0, 1, 2));
+        t.add_so(b, a); // contradicts po(a, b)
+        assert!(t.happens_before().is_err());
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = Trace::new();
+        let hb = t.happens_before().unwrap();
+        assert!(hb.is_empty());
+    }
+
+    /// Property: hb computed by the bitset closure equals a per-pair DFS
+    /// reachability oracle on random DAG traces.
+    #[test]
+    fn property_matches_dfs_oracle() {
+        testkit::check("hb == DFS reachability", |g| {
+            let nranks = g.usize(1, 4) as u32;
+            let nev = g.usize(1, 24);
+            let mut t = Trace::new();
+            for _ in 0..nev {
+                let rank = g.u64(0, (nranks - 1) as u64) as u32;
+                t.push(rank, w(0, 0, 1));
+            }
+            // Random forward so edges only (guarantees acyclic with po).
+            for _ in 0..g.usize(0, 8) {
+                let a = g.usize(0, nev - 1);
+                let b = g.usize(0, nev - 1);
+                if a < b {
+                    t.add_so(a, b);
+                }
+            }
+            let hb = t.happens_before().map_err(|e| e.to_string())?;
+
+            // Oracle: DFS over explicit edge list (all po pairs + so).
+            let mut adj = vec![Vec::new(); nev];
+            for i in 0..nev {
+                for j in (i + 1)..nev {
+                    if t.po(i, j) {
+                        adj[i].push(j);
+                    }
+                }
+            }
+            for &(a, b) in t.so_edges() {
+                adj[a].push(b);
+            }
+            let reach = |from: usize, to: usize| -> bool {
+                let mut seen = vec![false; nev];
+                let mut stack = vec![from];
+                while let Some(v) = stack.pop() {
+                    for &s in &adj[v] {
+                        if s == to {
+                            return true;
+                        }
+                        if !seen[s] {
+                            seen[s] = true;
+                            stack.push(s);
+                        }
+                    }
+                }
+                false
+            };
+            for i in 0..nev {
+                for j in 0..nev {
+                    testkit::ensure(
+                        hb.hb(i, j) == reach(i, j),
+                        format!("hb({i},{j})={} oracle={}", hb.hb(i, j), reach(i, j)),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

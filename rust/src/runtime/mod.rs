@@ -1,0 +1,264 @@
+//! The PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 event loop.
+//! Python never runs on this path — the rust binary is self-contained
+//! once `make artifacts` has produced `artifacts/*.hlo.txt`.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per model
+//! variant, cached by name.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Model geometry parsed from `artifacts/manifest.txt`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub batch: usize,
+    pub feature_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub learning_rate: f64,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> Result<f64> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing `{k}`"))?
+                .parse()
+                .with_context(|| format!("manifest field `{k}`"))
+        };
+        Ok(Self {
+            batch: get("batch")? as usize,
+            feature_dim: get("feature_dim")? as usize,
+            hidden: get("hidden")? as usize,
+            classes: get("classes")? as usize,
+            learning_rate: get("learning_rate")?,
+        })
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client over `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            exes: HashMap::new(),
+            artifacts_dir: artifacts_dir.into(),
+        })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(std::env::var("PSCNF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifacts_dir.join("manifest.txt"))
+    }
+
+    /// Compile (and cache) `<name>.hlo.txt`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. The aot.py lowering uses
+    /// `return_tuple=True`, so the single output is a tuple literal,
+    /// returned here flattened.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let exe = self.exes.get(name).expect("just loaded");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        out.to_tuple().context("untupling result")
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// f32 literal of the given dimensions.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect != data.len() as i64 {
+        bail!("literal_f32: {} values for dims {dims:?}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .context("reshaping f32 literal")
+}
+
+/// i32 literal of the given dimensions.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect != data.len() as i64 {
+        bail!("literal_i32: {} values for dims {dims:?}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .context("reshaping i32 literal")
+}
+
+/// The DL case-study's training state, mirroring model.py's flat
+/// parameter tuple. Bytes live rust-side; every step round-trips through
+/// the AOT-compiled `train_step` artifact.
+pub struct TrainState {
+    pub manifest: Manifest,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub steps: u64,
+}
+
+impl TrainState {
+    /// He-style init matching model.init_params closely enough for
+    /// optimization (exact RNG parity is not required — the loss curve
+    /// is validated by decrease, not by bit-equality).
+    pub fn init(manifest: Manifest, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        let (d, h, c) = (manifest.feature_dim, manifest.hidden, manifest.classes);
+        let scale1 = (2.0 / d as f64).sqrt();
+        let scale2 = (2.0 / h as f64).sqrt();
+        let mut randn = |n: usize, s: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.next_normal() * s) as f32).collect()
+        };
+        Self {
+            w1: randn(d * h, scale1),
+            b1: vec![0.0; h],
+            w2: randn(h * c, scale2),
+            b2: vec![0.0; c],
+            steps: 0,
+            manifest,
+        }
+    }
+
+    /// One SGD step on a batch; returns the loss.
+    pub fn step(&mut self, rt: &mut Runtime, x: &[f32], y: &[i32]) -> Result<f32> {
+        let m = self.manifest.clone();
+        let (b, d, h, c) = (m.batch, m.feature_dim, m.hidden, m.classes);
+        if x.len() != b * d {
+            bail!("batch features: got {}, want {}", x.len(), b * d);
+        }
+        if y.len() != b {
+            bail!("batch labels: got {}, want {}", y.len(), b);
+        }
+        let inputs = [
+            literal_f32(&self.w1, &[d as i64, h as i64])?,
+            literal_f32(&self.b1, &[h as i64])?,
+            literal_f32(&self.w2, &[h as i64, c as i64])?,
+            literal_f32(&self.b2, &[c as i64])?,
+            literal_f32(x, &[b as i64, d as i64])?,
+            literal_i32(y, &[b as i64])?,
+        ];
+        let mut out = rt.execute("train_step", &inputs)?;
+        if out.len() != 5 {
+            bail!("train_step returned {} outputs, want 5", out.len());
+        }
+        let loss_lit = out.pop().unwrap();
+        self.b2 = out.pop().unwrap().to_vec::<f32>()?;
+        self.w2 = out.pop().unwrap().to_vec::<f32>()?;
+        self.b1 = out.pop().unwrap().to_vec::<f32>()?;
+        self.w1 = out.pop().unwrap().to_vec::<f32>()?;
+        self.steps += 1;
+        Ok(loss_lit.to_vec::<f32>()?[0])
+    }
+
+    /// Predict class ids for a batch.
+    pub fn predict(&self, rt: &mut Runtime, x: &[f32]) -> Result<Vec<i32>> {
+        let m = self.manifest.clone();
+        let (b, d, h, c) = (m.batch, m.feature_dim, m.hidden, m.classes);
+        let inputs = [
+            literal_f32(&self.w1, &[d as i64, h as i64])?,
+            literal_f32(&self.b1, &[h as i64])?,
+            literal_f32(&self.w2, &[h as i64, c as i64])?,
+            literal_f32(&self.b2, &[c as i64])?,
+            literal_f32(x, &[b as i64, d as i64])?,
+        ];
+        let out = rt.execute("predict", &inputs)?;
+        out[0].to_vec::<i32>().context("predict ids")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            "batch=32\nfeature_dim=2048\nhidden=256\nclasses=100\nlearning_rate=0.05\n",
+        )
+        .unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.feature_dim, 2048);
+        assert!((m.learning_rate - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn manifest_missing_field_errors() {
+        assert!(Manifest::parse("batch=32\n").is_err());
+    }
+
+    #[test]
+    fn literal_helpers_validate_dims() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(literal_i32(&[1], &[2]).is_err());
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_integration.rs
+    // (they require `make artifacts`).
+}

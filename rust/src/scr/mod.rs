@@ -1,0 +1,470 @@
+//! SCR + HACC-IO emulation (§6.2, Fig 5).
+//!
+//! Multi-level checkpointing with the **Partner** redundancy scheme:
+//! each rank checkpoints to node-local storage and mirrors its
+//! checkpoint to a partner rank on another failure group (the next
+//! node). HACC-IO supplies the payload: 9 equal-length arrays, one per
+//! physical variable, sized by the particle count.
+//!
+//! Emulated run, matching the paper's setup:
+//! - `n` nodes, one of them spare. During **checkpoint**, the n−1
+//!   compute nodes write (file-per-process): own checkpoint + the
+//!   partner copy received via MPI, then commit/session_close.
+//! - A single-node failure is assumed. During **restart**, the n−2
+//!   surviving compute nodes re-read their own checkpoints (served from
+//!   the in-memory buffer — `mem_reads` pricing); the spare node's
+//!   ranks receive the failed ranks' checkpoints from their partners
+//!   over MPI. Reported restart bandwidth excludes the spare-node
+//!   transfer, exactly as in the paper.
+
+use crate::basefs::{DesFabric, FileId};
+use crate::fs::{FsKind, WorkloadFs};
+use crate::interval::Range;
+use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
+use crate::workload::build_fs;
+use std::collections::VecDeque;
+
+/// HACC-IO checkpoint layout.
+#[derive(Debug, Clone)]
+pub struct ScrParams {
+    /// Total nodes INCLUDING the spare.
+    pub nodes: usize,
+    /// Processes per node.
+    pub ppn: usize,
+    /// Global particle count (the paper used 10 million).
+    pub particles: u64,
+    /// Physical variables (HACC-IO writes 9 arrays).
+    pub arrays: usize,
+    /// Bytes per particle per array (f32).
+    pub elem_bytes: u64,
+}
+
+impl Default for ScrParams {
+    fn default() -> Self {
+        Self {
+            nodes: 4,
+            ppn: 12,
+            particles: 10_000_000,
+            arrays: 9,
+            elem_bytes: 4,
+        }
+    }
+}
+
+impl ScrParams {
+    pub fn with_nodes(nodes: usize, ppn: usize) -> Self {
+        assert!(
+            nodes >= 3,
+            "the Partner scheme needs >= 2 compute nodes plus the spare (nodes >= 3), got {nodes}"
+        );
+        Self {
+            nodes,
+            ppn,
+            ..Self::default()
+        }
+    }
+
+    /// Compute ranks (the spare node's ranks are excluded).
+    pub fn compute_ranks(&self) -> usize {
+        (self.nodes - 1) * self.ppn
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nodes * self.ppn
+    }
+
+    /// Per-rank array length (particles are split evenly).
+    pub fn particles_per_rank(&self) -> u64 {
+        self.particles / self.compute_ranks() as u64
+    }
+
+    /// Bytes of one array segment held by one rank.
+    pub fn array_bytes(&self) -> u64 {
+        self.particles_per_rank() * self.elem_bytes
+    }
+
+    /// Full checkpoint size of one rank (all 9 arrays).
+    pub fn ckpt_bytes(&self) -> u64 {
+        self.array_bytes() * self.arrays as u64
+    }
+
+    /// Partner of compute rank `r`: same slot on the next compute node.
+    pub fn partner(&self, r: usize) -> usize {
+        (r + self.ppn) % self.compute_ranks()
+    }
+}
+
+/// Fig 5 data point.
+#[derive(Debug, Clone)]
+pub struct ScrReport {
+    pub fs: &'static str,
+    pub nodes: usize,
+    /// Aggregate checkpoint write bandwidth (own + partner copies).
+    pub ckpt_bytes: u64,
+    pub ckpt_end: Ns,
+    /// Restart read bandwidth over surviving ranks (spare excluded).
+    pub restart_bytes: u64,
+    pub restart_start: Ns,
+    pub restart_end: Ns,
+    pub rpcs: u64,
+}
+
+impl ScrReport {
+    pub fn ckpt_bw(&self) -> f64 {
+        if self.ckpt_end == Ns::ZERO {
+            return 0.0;
+        }
+        self.ckpt_bytes as f64 / self.ckpt_end.as_secs_f64()
+    }
+
+    pub fn restart_bw(&self) -> f64 {
+        if self.restart_end <= self.restart_start {
+            return 0.0;
+        }
+        self.restart_bytes as f64 / (self.restart_end - self.restart_start).as_secs_f64()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    /// Write the 9 arrays of one's own checkpoint (array index).
+    WriteOwn(usize),
+    /// Ship the checkpoint to the partner.
+    SendCopy,
+    /// Receive the peer's checkpoint copy.
+    RecvCopy,
+    /// Write the partner copy (array index).
+    WritePartner(usize),
+    /// Publish both files (commit / session_close).
+    Publish,
+    BarrierThenRestart,
+    /// Open the restart session.
+    BeginRestart,
+    /// Read the 9 arrays back (array index).
+    ReadOwn(usize),
+    /// Spare ranks: wait for the partner of the failed rank.
+    SpareRecv,
+    /// Partner-of-failed ranks: send the stored copy to the spare.
+    SpareSend,
+    Finish,
+    Finished,
+}
+
+const TAG_COPY: u64 = 1;
+const TAG_SPARE: u64 = 2;
+
+pub struct ScrDriver {
+    fabric: DesFabric,
+    fs: Vec<Box<dyn WorkloadFs>>,
+    params: ScrParams,
+    own_file: Vec<FileId>,
+    partner_file: Vec<FileId>,
+    stage: Vec<Stage>,
+    pending: Vec<VecDeque<SimOp>>,
+    payload: Vec<u8>,
+    ckpt_end: Ns,
+    restart_start: Ns,
+    restart_end: Ns,
+}
+
+impl ScrDriver {
+    pub fn new(kind: FsKind, params: ScrParams) -> Self {
+        let nranks = params.nranks();
+        let node_of: Vec<usize> = (0..nranks).map(|r| r / params.ppn).collect();
+        let mut fabric = DesFabric::new_phantom(node_of);
+        let mut fs = build_fs(kind, &fabric);
+        let compute = params.compute_ranks();
+        // File-per-process: own checkpoint + the partner copy one hosts.
+        let mut own_file = vec![0; nranks];
+        let mut partner_file = vec![0; nranks];
+        for r in 0..nranks {
+            own_file[r] = fs[r].open(&mut fabric, &format!("/scr/ckpt.{r}"));
+            if r < compute {
+                // This rank HOSTS the copy of the rank whose partner it is.
+                let src = (r + compute - params.ppn) % compute;
+                partner_file[r] = fs[r].open(&mut fabric, &format!("/scr/ckpt.{src}.partner"));
+            }
+        }
+        for r in 0..nranks {
+            while fabric.pop_cost(r as u32).is_some() {}
+        }
+        let payload = vec![0u8; params.array_bytes() as usize];
+        let stage = (0..nranks)
+            .map(|r| {
+                if r < compute {
+                    Stage::WriteOwn(0)
+                } else {
+                    Stage::BarrierThenRestart // spare ranks idle through ckpt
+                }
+            })
+            .collect();
+        Self {
+            fabric,
+            fs,
+            own_file,
+            partner_file,
+            stage,
+            pending: (0..nranks).map(|_| VecDeque::new()).collect(),
+            payload,
+            params,
+            ckpt_end: Ns::ZERO,
+            restart_start: Ns(u64::MAX),
+            restart_end: Ns::ZERO,
+        }
+    }
+
+    pub fn run(mut self, cluster: Cluster) -> ScrReport {
+        let node_of: Vec<usize> = (0..self.params.nranks())
+            .map(|r| r / self.params.ppn)
+            .collect();
+        let mut engine = Engine::new(cluster, node_of);
+        engine.run(&mut self).expect("SCR emulation deadlock");
+        let p = &self.params;
+        // Survivors: compute ranks not on the failed node (node 0 fails).
+        let survivors = (p.compute_ranks() - p.ppn) as u64;
+        ScrReport {
+            fs: self.fs[0].kind().name(),
+            nodes: p.nodes,
+            ckpt_bytes: 2 * p.ckpt_bytes() * p.compute_ranks() as u64,
+            ckpt_end: self.ckpt_end,
+            restart_bytes: p.ckpt_bytes() * survivors,
+            restart_start: if self.restart_start == Ns(u64::MAX) {
+                Ns::ZERO
+            } else {
+                self.restart_start
+            },
+            restart_end: self.restart_end,
+            rpcs: self.fabric.counters.rpcs,
+        }
+    }
+
+    fn drain(&mut self, rank: usize) {
+        while let Some(op) = self.fabric.pop_cost(rank as u32) {
+            self.pending[rank].push_back(op);
+        }
+    }
+
+    /// The compute rank whose checkpoint this rank hosts a copy of.
+    fn copy_source(&self, rank: usize) -> usize {
+        let compute = self.params.compute_ranks();
+        (rank + compute - self.params.ppn) % compute
+    }
+
+    /// Is `rank` on the failed node (node 0)?
+    fn failed(&self, rank: usize) -> bool {
+        rank < self.params.ppn
+    }
+
+    /// Spare rank adopting failed rank `f`: spare slot i adopts f = i.
+    fn spare_of(&self, rank: usize) -> usize {
+        rank - self.params.compute_ranks()
+    }
+}
+
+impl Driver for ScrDriver {
+    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+        let p = self.params.clone();
+        loop {
+            if let Some(op) = self.pending[rank].pop_front() {
+                return op;
+            }
+            match self.stage[rank] {
+                Stage::WriteOwn(a) => {
+                    if a < p.arrays {
+                        let off = a as u64 * p.array_bytes();
+                        let payload = std::mem::take(&mut self.payload);
+                        self.fs[rank]
+                            .write_at(&mut self.fabric, self.own_file[rank], off, &payload)
+                            .expect("ckpt write");
+                        self.payload = payload;
+                        self.stage[rank] = Stage::WriteOwn(a + 1);
+                        self.drain(rank);
+                    } else {
+                        self.stage[rank] = Stage::SendCopy;
+                    }
+                }
+                Stage::SendCopy => {
+                    self.stage[rank] = Stage::RecvCopy;
+                    return SimOp::Send {
+                        to: p.partner(rank),
+                        tag: TAG_COPY,
+                        bytes: p.ckpt_bytes(),
+                    };
+                }
+                Stage::RecvCopy => {
+                    self.stage[rank] = Stage::WritePartner(0);
+                    return SimOp::Recv {
+                        from: self.copy_source(rank),
+                        tag: TAG_COPY,
+                    };
+                }
+                Stage::WritePartner(a) => {
+                    if a < p.arrays {
+                        let off = a as u64 * p.array_bytes();
+                        let payload = std::mem::take(&mut self.payload);
+                        self.fs[rank]
+                            .write_at(&mut self.fabric, self.partner_file[rank], off, &payload)
+                            .expect("partner write");
+                        self.payload = payload;
+                        self.stage[rank] = Stage::WritePartner(a + 1);
+                        self.drain(rank);
+                    } else {
+                        self.stage[rank] = Stage::Publish;
+                    }
+                }
+                Stage::Publish => {
+                    self.fs[rank]
+                        .end_write_phase(&mut self.fabric, self.own_file[rank])
+                        .expect("publish own");
+                    self.fs[rank]
+                        .end_write_phase(&mut self.fabric, self.partner_file[rank])
+                        .expect("publish partner");
+                    self.stage[rank] = Stage::BarrierThenRestart;
+                    self.drain(rank);
+                }
+                Stage::BarrierThenRestart => {
+                    self.stage[rank] = Stage::BeginRestart;
+                    return SimOp::Barrier;
+                }
+                Stage::BeginRestart => {
+                    // Checkpoint phase ends at barrier release.
+                    self.ckpt_end = self.ckpt_end.max(now);
+                    // Restart reads hit the in-memory buffers.
+                    self.fabric.mem_reads = true;
+                    let compute = p.compute_ranks();
+                    if rank >= compute {
+                        // Spare rank: receive the failed rank's checkpoint.
+                        self.stage[rank] = Stage::SpareRecv;
+                    } else if self.failed(rank) {
+                        // Failed node: dead, executes nothing.
+                        self.stage[rank] = Stage::Finish;
+                    } else {
+                        self.fs[rank]
+                            .begin_read_phase(&mut self.fabric, self.own_file[rank])
+                            .expect("restart session");
+                        self.restart_start = self.restart_start.min(now);
+                        self.stage[rank] = Stage::ReadOwn(0);
+                        self.drain(rank);
+                    }
+                }
+                Stage::ReadOwn(a) => {
+                    if a < p.arrays {
+                        let off = a as u64 * p.array_bytes();
+                        self.fs[rank]
+                            .read_at(
+                                &mut self.fabric,
+                                self.own_file[rank],
+                                Range::at(off, p.array_bytes()),
+                            )
+                            .expect("restart read");
+                        self.stage[rank] = Stage::ReadOwn(a + 1);
+                        self.drain(rank);
+                    } else {
+                        self.restart_end = self.restart_end.max(now);
+                        // Partners of failed ranks additionally ship the
+                        // stored copy to the adopting spare rank.
+                        if rank >= p.ppn && rank < 2 * p.ppn {
+                            self.stage[rank] = Stage::SpareSend;
+                        } else {
+                            self.stage[rank] = Stage::Finish;
+                        }
+                    }
+                }
+                Stage::SpareRecv => {
+                    // Failed rank f's partner is partner(f); spare adopts f.
+                    let f = self.spare_of(rank);
+                    self.stage[rank] = Stage::Finish;
+                    return SimOp::Recv {
+                        from: p.partner(f),
+                        tag: TAG_SPARE,
+                    };
+                }
+                Stage::SpareSend => {
+                    // This rank is partner(f) for failed rank f = rank - ppn:
+                    // send f's checkpoint copy to the spare rank adopting f.
+                    let f = rank - p.ppn;
+                    let spare = p.compute_ranks() + f;
+                    self.stage[rank] = Stage::Finish;
+                    return SimOp::Send {
+                        to: spare,
+                        tag: TAG_SPARE,
+                        bytes: p.ckpt_bytes(),
+                    };
+                }
+                Stage::Finish => {
+                    self.stage[rank] = Stage::Finished;
+                    return SimOp::Done;
+                }
+                Stage::Finished => unreachable!(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partner_mapping_wraps() {
+        let p = ScrParams::with_nodes(4, 2); // 3 compute nodes, 6 ranks
+        assert_eq!(p.compute_ranks(), 6);
+        assert_eq!(p.partner(0), 2);
+        assert_eq!(p.partner(4), 0); // wraps to node 0
+        assert_eq!(p.ckpt_bytes(), p.array_bytes() * 9);
+    }
+
+    #[test]
+    fn sizes_divide_particles() {
+        let p = ScrParams::with_nodes(5, 12);
+        assert_eq!(p.particles_per_rank(), 10_000_000 / 48);
+    }
+}
+
+#[cfg(test)]
+mod run_tests {
+    use super::*;
+
+    fn run(kind: FsKind, nodes: usize) -> ScrReport {
+        let mut p = ScrParams::with_nodes(nodes, 4);
+        p.particles = 1_000_000;
+        ScrDriver::new(kind, p).run(Cluster::catalyst(nodes, 3))
+    }
+
+    #[test]
+    fn scr_emulation_completes_both_models() {
+        for kind in [FsKind::Commit, FsKind::Session] {
+            let rep = run(kind, 4);
+            assert!(rep.ckpt_bw() > 0.0, "{kind:?}");
+            assert!(rep.restart_bw() > 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn ckpt_bw_model_insensitive_restart_sensitive() {
+        // Fig 5: checkpoint bandwidth ~equal; restart favors session.
+        let c = run(FsKind::Commit, 6);
+        let s = run(FsKind::Session, 6);
+        let ckpt_ratio = s.ckpt_bw() / c.ckpt_bw();
+        assert!((0.85..1.15).contains(&ckpt_ratio), "ckpt ratio {ckpt_ratio}");
+        assert!(
+            s.restart_bw() > 1.2 * c.restart_bw(),
+            "restart: session {} vs commit {}",
+            s.restart_bw(),
+            c.restart_bw()
+        );
+    }
+
+    #[test]
+    fn restart_reads_come_from_memory() {
+        // Restart bandwidth should far exceed SSD read bandwidth since
+        // reads are served from memory buffers.
+        let rep = run(FsKind::Session, 4);
+        let nodes_active = (rep.nodes - 2) as f64;
+        assert!(
+            rep.restart_bw() > nodes_active * 2e9,
+            "restart bw {} should beat SSD-bound reads",
+            rep.restart_bw()
+        );
+    }
+}

@@ -1,0 +1,585 @@
+//! The process-oriented discrete-event engine.
+//!
+//! Every rank is a logical process executing a sequence of blocking
+//! operations supplied by a [`Driver`]. The engine pops the rank with the
+//! earliest local time, asks the driver for that rank's next operation,
+//! prices it against the shared device models ([`Cluster`]), and
+//! reschedules the rank at the completion time. Barriers and matched
+//! send/recv park ranks until their counterpart arrives.
+//!
+//! Because the driver is invoked in global (virtual) time order, it can
+//! safely mutate shared *functional* state (the real BaseFS interval
+//! trees and buffers) at issue time: effects apply in exactly the order a
+//! FIFO server would process them.
+
+use super::devices::{
+    NetParams, NicDevice, ServerDevice, ServerParams, SsdDevice, SsdParams, UpfsDevice,
+    UpfsParams,
+};
+use super::time::Ns;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+/// Wire size of a synchronization RPC request/response — interval lists
+/// are tiny compared to data transfers.
+const RPC_BYTES: u64 = 256;
+
+/// The simulated cluster: one SSD + NIC per node, one global server, one
+/// underlying PFS.
+#[derive(Debug)]
+pub struct Cluster {
+    pub ssds: Vec<SsdDevice>,
+    pub nics: Vec<NicDevice>,
+    pub server: ServerDevice,
+    pub upfs: UpfsDevice,
+    pub net: NetParams,
+}
+
+impl Cluster {
+    pub fn new(
+        nodes: usize,
+        ssd: SsdParams,
+        net: NetParams,
+        server: ServerParams,
+        upfs: UpfsParams,
+        seed: u64,
+    ) -> Self {
+        Self {
+            ssds: (0..nodes)
+                .map(|i| SsdDevice::new(ssd.clone(), seed.wrapping_add(i as u64)))
+                .collect(),
+            nics: (0..nodes).map(|_| NicDevice::new(net.clone())).collect(),
+            server: ServerDevice::new(server),
+            upfs: UpfsDevice::new(upfs),
+            net,
+        }
+    }
+
+    /// Catalyst-like defaults (the paper's testbed).
+    pub fn catalyst(nodes: usize, seed: u64) -> Self {
+        Self::new(
+            nodes,
+            SsdParams::catalyst(),
+            NetParams::ib_qdr(),
+            ServerParams::catalyst(),
+            UpfsParams::catalyst_lustre(),
+            seed,
+        )
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.ssds.len()
+    }
+}
+
+/// One blocking operation of a rank, as priced by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimOp {
+    /// Pure local computation / think time.
+    Compute(Ns),
+    /// Write `bytes` to the rank's node-local SSD (burst buffer).
+    SsdWrite { bytes: u64 },
+    /// Read `bytes` from the rank's node-local SSD.
+    SsdRead { bytes: u64 },
+    /// Read `bytes` from a local in-memory buffer (SCR restart path).
+    MemRead { bytes: u64 },
+    /// Round-trip synchronization RPC to the global server touching
+    /// `intervals` interval-tree entries (attach/query/detach).
+    Rpc { intervals: usize },
+    /// Fetch `bytes` from `owner_node` into this rank's node via
+    /// RDMA-like client-to-client transfer. `from_ssd`: whether the owner
+    /// serves from its SSD (true) or its memory buffer (false).
+    RemoteFetch {
+        owner_node: usize,
+        bytes: u64,
+        from_ssd: bool,
+    },
+    /// Write/read through the underlying shared PFS (flush, cold read).
+    UpfsWrite { bytes: u64 },
+    UpfsRead { bytes: u64 },
+    /// Block until all live ranks reach the barrier.
+    Barrier,
+    /// Message passing (matched by (from, to, tag)). Send completes when
+    /// the payload is on the wire; Recv completes when it has arrived.
+    Send { to: usize, tag: u64, bytes: u64 },
+    Recv { from: usize, tag: u64 },
+    /// Rank is finished.
+    Done,
+}
+
+/// Supplies each rank's next operation. `now` is the completion time of
+/// the rank's previous operation (or barrier-release/message-arrival
+/// time), so drivers can timestamp phases.
+pub trait Driver {
+    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp;
+}
+
+impl<F: FnMut(usize, Ns) -> SimOp> Driver for F {
+    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+        self(rank, now)
+    }
+}
+
+/// Engine outcome: per-rank finish times and the makespan.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub finish: Vec<Ns>,
+    pub makespan: Ns,
+    pub ops_executed: u64,
+}
+
+/// Deadlock or driver error.
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("deadlock: {waiting} rank(s) parked ({barrier} at barrier, {recv} in recv) with no runnable rank")]
+    Deadlock {
+        waiting: usize,
+        barrier: usize,
+        recv: usize,
+    },
+    #[error("rank {0} issued an op after Done")]
+    OpAfterDone(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RankState {
+    Running,
+    AtBarrier,
+    InRecv { from: usize, tag: u64 },
+    Finished,
+}
+
+/// The engine. `node_of[rank]` maps ranks to nodes.
+pub struct Engine {
+    pub cluster: Cluster,
+    node_of: Vec<usize>,
+}
+
+impl Engine {
+    pub fn new(cluster: Cluster, node_of: Vec<usize>) -> Self {
+        assert!(!node_of.is_empty(), "need at least one rank");
+        let nodes = cluster.nodes();
+        assert!(
+            node_of.iter().all(|&n| n < nodes),
+            "rank mapped to nonexistent node"
+        );
+        Self { cluster, node_of }
+    }
+
+    /// Uniform mapping: `ppn` ranks per node, rank r on node r / ppn.
+    pub fn uniform(cluster: Cluster, ppn: usize) -> Self {
+        let nodes = cluster.nodes();
+        let node_of = (0..nodes * ppn).map(|r| r / ppn).collect();
+        Self::new(cluster, node_of)
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    /// Run `driver` to completion on all ranks; returns timing stats.
+    pub fn run(&mut self, driver: &mut dyn Driver) -> Result<RunStats, SimError> {
+        let n = self.node_of.len();
+        let mut heap: BinaryHeap<Reverse<(Ns, u64, usize)>> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        for rank in 0..n {
+            heap.push(Reverse((Ns::ZERO, seq, rank)));
+            seq += 1;
+        }
+        let mut state = vec![RankState::Running; n];
+        let mut finish = vec![Ns::ZERO; n];
+        let mut live = n;
+        let mut ops: u64 = 0;
+
+        // Barrier bookkeeping.
+        let mut barrier_arrivals: Vec<(usize, Ns)> = Vec::new();
+        // Mailboxes: (from, to, tag) -> queue of arrival-ready times.
+        let mut mail: HashMap<(usize, usize, u64), VecDeque<Ns>> = HashMap::new();
+        // Parked receivers: (from, to, tag) -> queue of (rank, parked_at).
+        let mut recv_wait: HashMap<(usize, usize, u64), VecDeque<(usize, Ns)>> = HashMap::new();
+
+        while let Some(Reverse((now, _, rank))) = heap.pop() {
+            debug_assert_eq!(state[rank], RankState::Running);
+            let op = driver.next_op(rank, now);
+            ops += 1;
+            let node = self.node_of[rank];
+            match op {
+                SimOp::Compute(d) => {
+                    heap.push(Reverse((now + d, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::SsdWrite { bytes } => {
+                    let t = self.cluster.ssds[node].write(now, bytes);
+                    heap.push(Reverse((t, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::SsdRead { bytes } => {
+                    let t = self.cluster.ssds[node].read(now, bytes);
+                    heap.push(Reverse((t, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::MemRead { bytes } => {
+                    let t = now + SsdDevice::memread_time(bytes);
+                    heap.push(Reverse((t, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::Rpc { intervals } => {
+                    // request: client tx + latency; server; response: latency.
+                    let sent = self.cluster.nics[node].send(now, RPC_BYTES);
+                    let replied = self.cluster.server.serve_rpc(sent, intervals);
+                    let t = replied + self.cluster.net.latency;
+                    heap.push(Reverse((t, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::RemoteFetch {
+                    owner_node,
+                    bytes,
+                    from_ssd,
+                } => {
+                    let t = if owner_node == node {
+                        // Local: straight from the owner buffer/SSD.
+                        if from_ssd {
+                            self.cluster.ssds[node].read(now, bytes)
+                        } else {
+                            now + SsdDevice::memread_time(bytes)
+                        }
+                    } else {
+                        // RDMA read: request latency, owner-side data
+                        // production, wire transfer, receive-side absorb.
+                        let req_at = now
+                            + self.cluster.net.latency
+                            + self.cluster.nics[owner_node].rdma_overhead();
+                        let data_ready = if from_ssd {
+                            self.cluster.ssds[owner_node].read(req_at, bytes)
+                        } else {
+                            req_at + SsdDevice::memread_time(bytes)
+                        };
+                        let on_wire = self.cluster.nics[owner_node].send(data_ready, bytes);
+                        self.cluster.nics[node].recv(on_wire, bytes)
+                    };
+                    heap.push(Reverse((t, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::UpfsWrite { bytes } => {
+                    let sent = self.cluster.nics[node].send(now, bytes);
+                    let t = self.cluster.upfs.write(sent, bytes);
+                    heap.push(Reverse((t, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::UpfsRead { bytes } => {
+                    let replied = self.cluster.upfs.read(now + self.cluster.net.latency, bytes);
+                    let t = self.cluster.nics[node].recv(replied, bytes);
+                    heap.push(Reverse((t, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::Barrier => {
+                    state[rank] = RankState::AtBarrier;
+                    barrier_arrivals.push((rank, now));
+                    if barrier_arrivals.len() == live {
+                        // Release everyone at the max arrival time (+ a
+                        // small collective cost scaling log2(n)).
+                        let max_t = barrier_arrivals
+                            .iter()
+                            .map(|&(_, t)| t)
+                            .max()
+                            .unwrap_or(now);
+                        let fan = (live.max(2) as f64).log2().ceil() as u64;
+                        let release =
+                            max_t + Ns(self.cluster.net.latency.0 * fan);
+                        for (r, _) in barrier_arrivals.drain(..) {
+                            state[r] = RankState::Running;
+                            heap.push(Reverse((release, seq, r)));
+                            seq += 1;
+                        }
+                    }
+                }
+                SimOp::Send { to, tag, bytes } => {
+                    let on_wire = self.cluster.nics[node].send(now, bytes);
+                    let to_node = self.node_of[to];
+                    let arrived = if to_node == node {
+                        on_wire
+                    } else {
+                        self.cluster.nics[to_node].recv(on_wire, bytes)
+                    };
+                    let key = (rank, to, tag);
+                    // Wake a parked receiver or store in the mailbox.
+                    if let Some(queue) = recv_wait.get_mut(&key) {
+                        if let Some((r, parked_at)) = queue.pop_front() {
+                            state[r] = RankState::Running;
+                            heap.push(Reverse((arrived.max(parked_at), seq, r)));
+                            seq += 1;
+                        } else {
+                            mail.entry(key).or_default().push_back(arrived);
+                        }
+                    } else {
+                        mail.entry(key).or_default().push_back(arrived);
+                    }
+                    // Sender resumes once the payload is on the wire.
+                    heap.push(Reverse((on_wire, seq, rank)));
+                    seq += 1;
+                }
+                SimOp::Recv { from, tag } => {
+                    let key = (from, rank, tag);
+                    if let Some(arrived) = mail.get_mut(&key).and_then(|q| q.pop_front()) {
+                        heap.push(Reverse((arrived.max(now), seq, rank)));
+                        seq += 1;
+                    } else {
+                        state[rank] = RankState::InRecv { from, tag };
+                        recv_wait.entry(key).or_default().push_back((rank, now));
+                    }
+                }
+                SimOp::Done => {
+                    state[rank] = RankState::Finished;
+                    finish[rank] = now;
+                    live -= 1;
+                    // A barrier may now be releasable.
+                    if live > 0 && !barrier_arrivals.is_empty() && barrier_arrivals.len() == live
+                    {
+                        let max_t = barrier_arrivals
+                            .iter()
+                            .map(|&(_, t)| t)
+                            .max()
+                            .unwrap_or(now);
+                        let fan = (live.max(2) as f64).log2().ceil() as u64;
+                        let release = max_t + Ns(self.cluster.net.latency.0 * fan);
+                        for (r, _) in barrier_arrivals.drain(..) {
+                            state[r] = RankState::Running;
+                            heap.push(Reverse((release, seq, r)));
+                            seq += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Anything still parked is deadlocked.
+        let barrier = state
+            .iter()
+            .filter(|s| matches!(s, RankState::AtBarrier))
+            .count();
+        let recv = state
+            .iter()
+            .filter(|s| matches!(s, RankState::InRecv { .. }))
+            .count();
+        if barrier + recv > 0 {
+            return Err(SimError::Deadlock {
+                waiting: barrier + recv,
+                barrier,
+                recv,
+            });
+        }
+
+        let makespan = finish.iter().copied().max().unwrap_or(Ns::ZERO);
+        Ok(RunStats {
+            finish,
+            makespan,
+            ops_executed: ops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive ranks from per-rank scripts.
+    struct ScriptDriver {
+        scripts: Vec<VecDeque<SimOp>>,
+        /// (rank, completion-time-before-op) log for assertions.
+        log: Vec<(usize, Ns)>,
+    }
+
+    impl ScriptDriver {
+        fn new(scripts: Vec<Vec<SimOp>>) -> Self {
+            Self {
+                scripts: scripts.into_iter().map(VecDeque::from).collect(),
+                log: Vec::new(),
+            }
+        }
+    }
+
+    impl Driver for ScriptDriver {
+        fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+            self.log.push((rank, now));
+            self.scripts[rank].pop_front().unwrap_or(SimOp::Done)
+        }
+    }
+
+    fn engine(nodes: usize, ppn: usize) -> Engine {
+        Engine::uniform(Cluster::catalyst(nodes, 42), ppn)
+    }
+
+    #[test]
+    fn compute_only_makespan() {
+        let mut e = engine(1, 2);
+        let mut d = ScriptDriver::new(vec![
+            vec![SimOp::Compute(Ns(100))],
+            vec![SimOp::Compute(Ns(300))],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        assert_eq!(stats.finish[0], Ns(100));
+        assert_eq!(stats.finish[1], Ns(300));
+        assert_eq!(stats.makespan, Ns(300));
+    }
+
+    #[test]
+    fn same_node_ssd_contention() {
+        // Two ranks on one node write 1 GiB each: SSD serializes → ~2 s.
+        let mut e = engine(1, 2);
+        let mut d = ScriptDriver::new(vec![
+            vec![SimOp::SsdWrite { bytes: 1 << 30 }],
+            vec![SimOp::SsdWrite { bytes: 1 << 30 }],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        assert!(stats.makespan.as_secs_f64() > 2.0);
+        // Different nodes run in parallel → ~1 s.
+        let mut e2 = engine(2, 1);
+        let mut d2 = ScriptDriver::new(vec![
+            vec![SimOp::SsdWrite { bytes: 1 << 30 }],
+            vec![SimOp::SsdWrite { bytes: 1 << 30 }],
+        ]);
+        let s2 = e2.run(&mut d2).unwrap();
+        assert!(s2.makespan.as_secs_f64() < 1.3);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        let mut e = engine(2, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![SimOp::Compute(Ns(1000)), SimOp::Barrier, SimOp::Compute(Ns(10))],
+            vec![SimOp::Compute(Ns(10)), SimOp::Barrier, SimOp::Compute(Ns(10))],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        // Both finish after the slow rank reaches the barrier.
+        assert!(stats.finish[1] >= Ns(1000));
+        assert!(stats.finish[0].0.abs_diff(stats.finish[1].0) < 100);
+    }
+
+    #[test]
+    fn send_recv_transfers_and_orders() {
+        let mut e = engine(2, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![
+                SimOp::Compute(Ns(5000)),
+                SimOp::Send {
+                    to: 1,
+                    tag: 7,
+                    bytes: 1 << 20,
+                },
+            ],
+            vec![SimOp::Recv { from: 0, tag: 7 }],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        // Receiver cannot finish before sender's compute + transfer.
+        assert!(stats.finish[1] > Ns(5000));
+        // 1 MiB at 4 GB/s ≈ 262 µs ≫ latency
+        assert!(stats.finish[1].as_secs_f64() > 5e-6 + 2.5e-4);
+    }
+
+    #[test]
+    fn recv_before_send_parks() {
+        let mut e = engine(2, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![SimOp::Compute(Ns(10_000)), SimOp::Send { to: 1, tag: 1, bytes: 64 }],
+            vec![SimOp::Recv { from: 0, tag: 1 }, SimOp::Compute(Ns(1))],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        assert!(stats.finish[1] > Ns(10_000));
+    }
+
+    #[test]
+    fn unmatched_recv_deadlocks() {
+        let mut e = engine(2, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![],
+            vec![SimOp::Recv { from: 0, tag: 9 }],
+        ]);
+        match e.run(&mut d) {
+            Err(SimError::Deadlock { recv: 1, .. }) => {}
+            other => panic!("expected recv deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn barrier_with_finished_rank_releases() {
+        // Rank 0 finishes immediately; ranks 1,2 barrier — must release.
+        let mut e = engine(3, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![],
+            vec![SimOp::Barrier, SimOp::Compute(Ns(5))],
+            vec![SimOp::Compute(Ns(100)), SimOp::Barrier, SimOp::Compute(Ns(5))],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        assert!(stats.finish[1] >= Ns(100));
+    }
+
+    #[test]
+    fn rpc_round_trip_and_server_queueing() {
+        // 64 ranks flooding RPCs: master dispatch serializes.
+        let nodes = 8;
+        let ppn = 8;
+        let mut e = engine(nodes, ppn);
+        let scripts: Vec<Vec<SimOp>> = (0..nodes * ppn)
+            .map(|_| vec![SimOp::Rpc { intervals: 1 }; 50])
+            .collect();
+        let mut d = ScriptDriver::new(scripts);
+        let stats = e.run(&mut d).unwrap();
+        let rpcs = e.cluster.server.rpcs_served();
+        assert_eq!(rpcs, (nodes * ppn * 50) as u64);
+        // Makespan at least master_dispatch * rpcs / 1 (serial master).
+        assert!(stats.makespan >= Ns(3_000 * 50));
+    }
+
+    #[test]
+    fn remote_fetch_slower_than_local() {
+        let mut e = engine(2, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![SimOp::RemoteFetch {
+                owner_node: 1,
+                bytes: 8 << 20,
+                from_ssd: true,
+            }],
+            vec![],
+        ]);
+        let remote = e.run(&mut d).unwrap().finish[0];
+        let mut e2 = engine(1, 1);
+        let mut d2 = ScriptDriver::new(vec![vec![SimOp::RemoteFetch {
+            owner_node: 0,
+            bytes: 8 << 20,
+            from_ssd: true,
+        }]]);
+        let local = e2.run(&mut d2).unwrap().finish[0];
+        assert!(remote > local);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run_once = || {
+            let mut e = engine(4, 4);
+            let scripts: Vec<Vec<SimOp>> = (0..16)
+                .map(|r| {
+                    vec![
+                        SimOp::SsdWrite { bytes: 1 << 20 },
+                        SimOp::Rpc { intervals: 2 },
+                        SimOp::Barrier,
+                        SimOp::SsdRead {
+                            bytes: 8 << 10,
+                        },
+                        SimOp::RemoteFetch {
+                            owner_node: (r + 1) % 4,
+                            bytes: 64 << 10,
+                            from_ssd: true,
+                        },
+                    ]
+                })
+                .collect();
+            let mut d = ScriptDriver::new(scripts);
+            e.run(&mut d).unwrap().makespan
+        };
+        assert_eq!(run_once(), run_once());
+    }
+}

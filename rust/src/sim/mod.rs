@@ -1,0 +1,18 @@
+//! Discrete-event simulation substrate: virtual time, queueing
+//! resources, device models calibrated to the paper's Catalyst testbed,
+//! and a process-oriented engine that prices each rank's blocking I/O
+//! operations. See DESIGN.md §2 for the substitution rationale and §5
+//! for the two execution engines.
+
+pub mod devices;
+pub mod engine;
+pub mod resource;
+pub mod time;
+
+pub use devices::{
+    NetParams, NicDevice, ServerDevice, ServerParams, SsdDevice, SsdParams, UpfsDevice,
+    UpfsParams,
+};
+pub use engine::{Cluster, Driver, Engine, RunStats, SimError, SimOp};
+pub use resource::{Dispatch, FifoResource, MultiServer};
+pub use time::{transfer_time, Ns};

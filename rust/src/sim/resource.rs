@@ -1,0 +1,167 @@
+//! Queueing resources for the DES. The engine issues requests in
+//! non-decreasing *pop* order; constant per-path latency offsets (e.g.
+//! network latency before a remote SSD read) can locally reorder issue
+//! times by a few µs. `start = max(now, available_at)` stays a faithful
+//! FIFO-by-arrival approximation under that jitter: `available_at` is
+//! monotone, so a late-arriving earlier request merely queues behind the
+//! at-most-one request that overtook it.
+
+use super::time::Ns;
+
+/// A single-server FIFO resource (an SSD channel, the UPFS, a NIC...).
+#[derive(Debug, Clone, Default)]
+pub struct FifoResource {
+    available_at: Ns,
+    busy: Ns,
+    served: u64,
+    last_issue: Ns,
+}
+
+impl FifoResource {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serve a request issued at `now` taking `service` time; returns the
+    /// completion time.
+    pub fn serve(&mut self, now: Ns, service: Ns) -> Ns {
+        self.last_issue = self.last_issue.max(now);
+        let start = self.available_at.max(now);
+        let end = start + service;
+        self.available_at = end;
+        self.busy += service;
+        self.served += 1;
+        end
+    }
+
+    /// Earliest time a new request could start service.
+    pub fn available_at(&self) -> Ns {
+        self.available_at
+    }
+
+    /// Total busy time accumulated (for utilization reporting).
+    pub fn busy_time(&self) -> Ns {
+        self.busy
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+}
+
+/// A k-server resource with a single queue. `dispatch` selects the
+/// round-robin policy of the paper's global server (master appends each
+/// task to one worker's FIFO in round-robin order) or least-loaded
+/// (used by ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Paper §5.1.2: workers picked cyclically regardless of their load.
+    RoundRobin,
+    /// Ablation: task goes to the earliest-available worker.
+    LeastLoaded,
+}
+
+#[derive(Debug, Clone)]
+pub struct MultiServer {
+    workers: Vec<FifoResource>,
+    next: usize,
+    dispatch: Dispatch,
+}
+
+impl MultiServer {
+    pub fn new(k: usize, dispatch: Dispatch) -> Self {
+        assert!(k > 0);
+        Self {
+            workers: vec![FifoResource::new(); k],
+            next: 0,
+            dispatch,
+        }
+    }
+
+    pub fn serve(&mut self, now: Ns, service: Ns) -> Ns {
+        let idx = match self.dispatch {
+            Dispatch::RoundRobin => {
+                let idx = self.next;
+                self.next = (self.next + 1) % self.workers.len();
+                idx
+            }
+            Dispatch::LeastLoaded => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.available_at())
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.workers[idx].serve(now, service)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn total_busy(&self) -> Ns {
+        Ns(self.workers.iter().map(|w| w.busy_time().0).sum())
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.workers.iter().map(|w| w.served()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_resource_serves_immediately() {
+        let mut r = FifoResource::new();
+        let end = r.serve(Ns(100), Ns(50));
+        assert_eq!(end, Ns(150));
+    }
+
+    #[test]
+    fn busy_resource_queues() {
+        let mut r = FifoResource::new();
+        assert_eq!(r.serve(Ns(0), Ns(100)), Ns(100));
+        // Issued at t=10 but resource busy until 100.
+        assert_eq!(r.serve(Ns(10), Ns(100)), Ns(200));
+        // Issued after idle gap: starts at issue time.
+        assert_eq!(r.serve(Ns(500), Ns(10)), Ns(510));
+        assert_eq!(r.busy_time(), Ns(210));
+        assert_eq!(r.served(), 3);
+    }
+
+    #[test]
+    fn slightly_late_issue_queues_behind() {
+        let mut r = FifoResource::new();
+        assert_eq!(r.serve(Ns(100), Ns(10)), Ns(110));
+        // Issued "earlier" due to latency offsets: queues behind.
+        assert_eq!(r.serve(Ns(95), Ns(10)), Ns(120));
+    }
+
+    #[test]
+    fn round_robin_cycles_workers() {
+        let mut s = MultiServer::new(2, Dispatch::RoundRobin);
+        // Worker 0 busy 0..100; worker 1 busy 0..100; third task queues on 0.
+        assert_eq!(s.serve(Ns(0), Ns(100)), Ns(100));
+        assert_eq!(s.serve(Ns(0), Ns(100)), Ns(100));
+        assert_eq!(s.serve(Ns(0), Ns(100)), Ns(200));
+        assert_eq!(s.total_served(), 3);
+    }
+
+    #[test]
+    fn round_robin_can_queue_despite_idle_worker() {
+        let mut s = MultiServer::new(2, Dispatch::RoundRobin);
+        s.serve(Ns(0), Ns(1000)); // worker 0 long task
+        s.serve(Ns(0), Ns(1)); // worker 1 quick
+        // RR sends this to worker 0 even though worker 1 is idle — the
+        // paper's round-robin behaviour we intentionally replicate.
+        assert_eq!(s.serve(Ns(10), Ns(1)), Ns(1001));
+        // Least-loaded would have picked worker 1:
+        let mut ll = MultiServer::new(2, Dispatch::LeastLoaded);
+        ll.serve(Ns(0), Ns(1000));
+        ll.serve(Ns(0), Ns(1));
+        assert_eq!(ll.serve(Ns(10), Ns(1)), Ns(11));
+    }
+}

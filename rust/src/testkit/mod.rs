@@ -1,0 +1,209 @@
+//! Property-based testing mini-framework (proptest substitute — the
+//! offline environment ships no proptest).
+//!
+//! Usage mirrors the proptest idiom:
+//!
+//! ```no_run
+//! use pscnf::testkit::{self, Gen};
+//!
+//! testkit::check("addition commutes", |g| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     testkit::ensure(a + b == b + a, format!("{a} + {b}"))
+//! });
+//! ```
+//!
+//! Controls: `PSCNF_PROPTEST_CASES` (default 256) and
+//! `PSCNF_PROPTEST_SEED` (default derived from the property name so each
+//! property explores a distinct but *reproducible* stream). On failure the
+//! harness reruns the failing case with the reported seed, so the panic
+//! message pinpoints a reproducer.
+
+use crate::util::rng::Rng;
+
+/// A generator handle passed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint grows over the run so early cases are small (cheap,
+    /// debuggable) and later cases stress harder — a lightweight stand-in
+    /// for proptest's shrinking.
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: Rng::seed_from_u64(seed),
+            size,
+        }
+    }
+
+    /// The current size hint (grows from 4 to ~max over a run).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self, lo: u64, hi_inclusive: u64) -> u64 {
+        assert!(lo <= hi_inclusive);
+        lo + self.rng.gen_range_u64(hi_inclusive - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.u64(lo as u64, hi_inclusive as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.gen_bool(0.5)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choose from empty slice");
+        &xs[self.rng.gen_range(0, xs.len())]
+    }
+
+    /// A vector with size-hint-bounded length, elements from `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let cap = max_len.min(self.size.max(1));
+        let len = self.usize(0, cap);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Assert helper producing a `CaseResult`.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// FNV-1a over the property name: stable per-property seed stream.
+fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Run a property over `PSCNF_PROPTEST_CASES` random cases. Panics with a
+/// reproducer (property name, case index, seed) on the first failure.
+pub fn check(name: &str, mut property: impl FnMut(&mut Gen) -> CaseResult) {
+    let cases = env_usize("PSCNF_PROPTEST_CASES", 256);
+    let base_seed = env_u64("PSCNF_PROPTEST_SEED").unwrap_or_else(|| name_seed(name));
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // Ramp the size hint: small early cases first.
+        let size = 4 + (case * 64) / cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases}\n  seed: PSCNF_PROPTEST_SEED={base_seed} (case seed {seed})\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property may panic instead of returning Err;
+/// useful for properties built from `assert_eq!` against an oracle.
+pub fn check_panics(name: &str, mut property: impl FnMut(&mut Gen) + std::panic::UnwindSafe + Copy) {
+    let cases = env_usize("PSCNF_PROPTEST_CASES", 256);
+    let base_seed = env_u64("PSCNF_PROPTEST_SEED").unwrap_or_else(|| name_seed(name));
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = 4 + (case * 64) / cases.max(1);
+        let result = std::panic::catch_unwind(move || {
+            let mut g = Gen::new(seed, size);
+            property(&mut g);
+        });
+        if result.is_err() {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed: PSCNF_PROPTEST_SEED={base_seed})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivially true", |g| {
+            count += 1;
+            let v = g.u64(0, 10);
+            ensure(v <= 10, "bound")
+        });
+        assert_eq!(count, env_usize("PSCNF_PROPTEST_CASES", 256));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_name() {
+        check("always fails", |_| ensure(false, "nope"));
+    }
+
+    #[test]
+    fn size_hint_ramps() {
+        let mut sizes = Vec::new();
+        check("size ramp", |g| {
+            sizes.push(g.size());
+            Ok(())
+        });
+        assert!(sizes.first().unwrap() < sizes.last().unwrap());
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        check("vec bounds", |g| {
+            let v = g.vec_of(16, |g| g.u64(0, 5));
+            ensure(
+                v.len() <= 16 && v.iter().all(|&x| x <= 5),
+                format!("{v:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Two runs of the same named property see identical streams.
+        let mut a = Vec::new();
+        check("det", |g| {
+            a.push(g.u64(0, 1_000_000));
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("det", |g| {
+            b.push(g.u64(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,294 @@
+//! Connecting §5 to §4: record real FS-layer executions as formal
+//! traces and check them with the race detector.
+//!
+//! [`RecordingFs`] wraps any [`WorkloadFs`] and logs every data and
+//! synchronization storage operation into a shared [`model::Trace`],
+//! mapping each layer's API onto the framework's operation vocabulary
+//! (CommitFS `end_write_phase` → `commit`, SessionFS phases →
+//! `session_close`/`session_open`, MpiioFS phases → `MPI_File_sync`).
+//! Barriers/collectives add the so-edges. After the run, `race::detect`
+//! answers "was this execution properly synchronized under model X?" —
+//! the programmer-facing *correctness* use case of §1.
+
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId};
+use crate::fs::{FsKind, WorkloadFs};
+use crate::interval::Range;
+use crate::model::op::{OpId, StorageOp, SyncKind};
+use crate::model::trace::Trace;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared trace under construction (one per recorded run).
+#[derive(Clone, Default)]
+pub struct SharedTrace {
+    inner: Arc<Mutex<TraceState>>,
+}
+
+#[derive(Default)]
+struct TraceState {
+    trace: Trace,
+    /// Last sync-op event of each rank in the current epoch, used to
+    /// materialize barrier so-edges.
+    pending_barrier: Vec<(u32, OpId)>,
+    /// file id (u64, basefs) -> compact u32 id for the framework.
+    files: HashMap<FileId, u32>,
+}
+
+impl SharedTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn file_of(state: &mut TraceState, file: FileId) -> u32 {
+        let next = state.files.len() as u32;
+        *state.files.entry(file).or_insert(next)
+    }
+
+    fn push(&self, rank: u32, file: FileId, mk: impl FnOnce(u32) -> StorageOp) -> OpId {
+        let mut s = self.inner.lock().unwrap();
+        let fid = Self::file_of(&mut s, file);
+        let op = mk(fid);
+        s.trace.push(rank, op)
+    }
+
+    /// Record a barrier: every rank's last recorded event so-precedes
+    /// every event recorded after the barrier. We model it by storing
+    /// each rank's latest event; the *next* event of any rank gets
+    /// so-edges from all of them.
+    pub fn barrier(&self, participants: &[u32]) {
+        let mut s = self.inner.lock().unwrap();
+        let mut lasts = Vec::new();
+        for &rank in participants {
+            // Find this rank's most recent event.
+            if let Some(id) = (0..s.trace.len())
+                .rev()
+                .find(|&i| s.trace.event(i).rank == rank)
+            {
+                lasts.push((rank, id));
+            }
+        }
+        s.pending_barrier = lasts;
+    }
+
+    fn flush_barrier_edges(&self, new_event: OpId) {
+        let mut s = self.inner.lock().unwrap();
+        let rank = s.trace.event(new_event).rank;
+        let edges: Vec<OpId> = s
+            .pending_barrier
+            .iter()
+            .filter(|&&(r, _)| r != rank)
+            .map(|&(_, id)| id)
+            .collect();
+        for from in edges {
+            s.trace.add_so(from, new_event);
+        }
+    }
+
+    /// Extract the finished trace.
+    pub fn finish(self) -> Trace {
+        Arc::try_unwrap(self.inner)
+            .map(|m| m.into_inner().unwrap().trace)
+            .unwrap_or_else(|arc| {
+                // Other clones still alive: clone the trace out.
+                arc.lock().unwrap().trace.clone()
+            })
+    }
+}
+
+/// A recording decorator over any consistency layer.
+pub struct RecordingFs<T: WorkloadFs> {
+    pub inner: T,
+    trace: SharedTrace,
+    /// True right after a barrier: the next recorded op gets so-edges.
+    after_barrier: bool,
+}
+
+impl<T: WorkloadFs> RecordingFs<T> {
+    pub fn new(inner: T, trace: SharedTrace) -> Self {
+        Self {
+            inner,
+            trace,
+            after_barrier: false,
+        }
+    }
+
+    /// Note that this rank passed a barrier (so-edges to its next op).
+    pub fn passed_barrier(&mut self) {
+        self.after_barrier = true;
+    }
+
+    fn record(&mut self, file: FileId, mk: impl FnOnce(u32) -> StorageOp) {
+        let rank = self.inner.client_id();
+        let id = self.trace.push(rank, file, mk);
+        if self.after_barrier {
+            self.trace.flush_barrier_edges(id);
+            self.after_barrier = false;
+        }
+    }
+
+    fn phase_sync_kind(&self, write_side: bool) -> Option<SyncKind> {
+        match (self.inner.kind(), write_side) {
+            (FsKind::Commit, true) => Some(SyncKind::Commit),
+            (FsKind::Commit, false) => None,
+            (FsKind::Session, true) => Some(SyncKind::SessionClose),
+            (FsKind::Session, false) => Some(SyncKind::SessionOpen),
+            (FsKind::Mpiio, _) => Some(SyncKind::MpiFileSync),
+            (FsKind::Posix, _) => None,
+        }
+    }
+}
+
+impl<T: WorkloadFs> WorkloadFs for RecordingFs<T> {
+    fn kind(&self) -> FsKind {
+        self.inner.kind()
+    }
+
+    fn client_id(&self) -> u32 {
+        self.inner.client_id()
+    }
+
+    fn open(&mut self, fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.inner.open(fabric, path)
+    }
+
+    fn close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.inner.close(fabric, file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        let n = self.inner.write_at(fabric, file, offset, buf)?;
+        self.record(file, |f| StorageOp::write(f, Range::at(offset, n as u64)));
+        Ok(n)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let out = self.inner.read_at(fabric, file, range)?;
+        self.record(file, |f| StorageOp::read(f, range));
+        Ok(out)
+    }
+
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.inner.end_write_phase(fabric, file)?;
+        if let Some(kind) = self.phase_sync_kind(true) {
+            self.record(file, |f| StorageOp::sync(kind, f));
+        }
+        Ok(())
+    }
+
+    fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.inner.begin_read_phase(fabric, file)?;
+        if let Some(kind) = self.phase_sync_kind(false) {
+            self.record(file, |f| StorageOp::sync(kind, f));
+        }
+        Ok(())
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        self.inner.core()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basefs::TestFabric;
+    use crate::fs::{CommitFs, SessionFs};
+    use crate::model::{race, ConsistencyModel};
+
+    /// A correctly synchronized two-phase run records a race-free trace
+    /// under the matching model.
+    #[test]
+    fn recorded_commit_run_is_race_free_under_commit() {
+        let mut fabric = TestFabric::new(2);
+        let trace = SharedTrace::new();
+        let mut w = RecordingFs::new(CommitFs::new(0, fabric.bb_of(0)), trace.clone());
+        let mut r = RecordingFs::new(CommitFs::new(1, fabric.bb_of(1)), trace.clone());
+        let f = w.open(&mut fabric, "/rec");
+        r.open(&mut fabric, "/rec");
+
+        w.write_at(&mut fabric, f, 0, &[1u8; 64]).unwrap();
+        w.end_write_phase(&mut fabric, f).unwrap();
+        trace.barrier(&[0, 1]);
+        r.passed_barrier();
+        r.begin_read_phase(&mut fabric, f).unwrap();
+        let _ = r.read_at(&mut fabric, f, Range::new(0, 64)).unwrap();
+
+        let t = trace.finish();
+        assert!(race::race_free(&t, &ConsistencyModel::commit()).unwrap());
+        // But NOT under session (no session ops in the trace).
+        assert!(!race::race_free(&t, &ConsistencyModel::session()).unwrap());
+    }
+
+    /// Skipping the barrier produces a storage race that the detector
+    /// catches — even though this single-threaded test "happened" to
+    /// read the right data.
+    #[test]
+    fn recorded_run_without_barrier_races() {
+        let mut fabric = TestFabric::new(2);
+        let trace = SharedTrace::new();
+        let mut w = RecordingFs::new(CommitFs::new(0, fabric.bb_of(0)), trace.clone());
+        let mut r = RecordingFs::new(CommitFs::new(1, fabric.bb_of(1)), trace.clone());
+        let f = w.open(&mut fabric, "/norace");
+        r.open(&mut fabric, "/norace");
+
+        w.write_at(&mut fabric, f, 0, &[1u8; 64]).unwrap();
+        w.end_write_phase(&mut fabric, f).unwrap();
+        // NO barrier, NO passed_barrier: the read is unordered.
+        r.begin_read_phase(&mut fabric, f).unwrap();
+        let _ = r.read_at(&mut fabric, f, Range::new(0, 64)).unwrap();
+
+        let t = trace.finish();
+        let rep = race::detect(&t, &ConsistencyModel::commit()).unwrap();
+        assert_eq!(rep.races.len(), 1, "unordered conflicting pair must race");
+    }
+
+    /// Session layer records close/open and passes under session model.
+    #[test]
+    fn recorded_session_run_race_free_under_session() {
+        let mut fabric = TestFabric::new(2);
+        let trace = SharedTrace::new();
+        let mut w = RecordingFs::new(SessionFs::new(0, fabric.bb_of(0)), trace.clone());
+        let mut r = RecordingFs::new(SessionFs::new(1, fabric.bb_of(1)), trace.clone());
+        let f = w.open(&mut fabric, "/sess");
+        r.open(&mut fabric, "/sess");
+
+        w.write_at(&mut fabric, f, 0, &[2u8; 32]).unwrap();
+        w.end_write_phase(&mut fabric, f).unwrap(); // session_close
+        trace.barrier(&[0, 1]);
+        r.passed_barrier();
+        r.begin_read_phase(&mut fabric, f).unwrap(); // session_open
+        let _ = r.read_at(&mut fabric, f, Range::new(0, 32)).unwrap();
+
+        let t = trace.finish();
+        assert!(race::race_free(&t, &ConsistencyModel::session()).unwrap());
+        assert!(race::race_free(&t, &ConsistencyModel::posix()).unwrap());
+    }
+
+    /// Disjoint writes never race regardless of synchronization.
+    #[test]
+    fn disjoint_recorded_writes_never_race() {
+        let mut fabric = TestFabric::new(2);
+        let trace = SharedTrace::new();
+        let mut a = RecordingFs::new(CommitFs::new(0, fabric.bb_of(0)), trace.clone());
+        let mut b = RecordingFs::new(CommitFs::new(1, fabric.bb_of(1)), trace.clone());
+        let f = a.open(&mut fabric, "/disjoint");
+        b.open(&mut fabric, "/disjoint");
+        a.write_at(&mut fabric, f, 0, &[1u8; 10]).unwrap();
+        b.write_at(&mut fabric, f, 10, &[2u8; 10]).unwrap();
+        let t = trace.finish();
+        for m in ConsistencyModel::table4() {
+            assert!(race::race_free(&t, &m).unwrap(), "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Tiny declarative command-line parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! auto-generated `--help`. Subcommand dispatch is handled by the caller
+//! (see `main.rs`): the first positional token selects the subcommand and
+//! the rest is parsed with that subcommand's `ArgSpec`.
+
+use std::collections::BTreeMap;
+
+/// Declarative option specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(metavar) => takes a value.
+    pub value: Option<&'static str>,
+    pub default: Option<&'static str>,
+}
+
+/// A set of options for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub command: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+impl ArgSpec {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Self {
+            command,
+            about,
+            opts: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            value: None,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        metavar: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            value: Some(metavar),
+            default,
+        });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  pscnf {}", self.command, self.about, self.command);
+        for (p, _) in &self.positional {
+            out.push_str(&format!(" <{p}>"));
+        }
+        if !self.opts.is_empty() {
+            out.push_str(" [OPTIONS]");
+        }
+        out.push('\n');
+        if !self.positional.is_empty() {
+            out.push_str("\nARGS:\n");
+            for (p, h) in &self.positional {
+                out.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let lhs = match o.value {
+                    Some(mv) => format!("--{} <{}>", o.name, mv),
+                    None => format!("--{}", o.name),
+                };
+                let def = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                out.push_str(&format!("  {lhs:<28} {}{def}\n", o.help));
+            }
+        }
+        out
+    }
+
+    /// Parse `argv` (not including the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<ParsedArgs, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positional: Vec<String> = Vec::new();
+
+        for o in &self.opts {
+            if let (Some(_), Some(d)) = (o.value, o.default) {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+            if o.value.is_none() {
+                flags.insert(o.name.to_string(), false);
+            }
+        }
+
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                match (spec.value, inline) {
+                    (None, None) => {
+                        flags.insert(name, true);
+                    }
+                    (None, Some(_)) => {
+                        return Err(format!("option --{name} does not take a value"));
+                    }
+                    (Some(_), Some(v)) => {
+                        values.insert(name, v);
+                    }
+                    (Some(_), None) => {
+                        i += 1;
+                        let v = argv
+                            .get(i)
+                            .ok_or_else(|| format!("option --{name} requires a value"))?;
+                        values.insert(name, v.clone());
+                    }
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+
+        if positional.len() < self.positional.len() {
+            return Err(format!(
+                "missing required argument <{}>\n\n{}",
+                self.positional[positional.len()].0,
+                self.usage()
+            ));
+        }
+        Ok(ParsedArgs {
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+/// Result of parsing; typed accessors do the string conversions.
+#[derive(Debug, Clone)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl ParsedArgs {
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing required option --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.str(name)?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name)?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name)?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    /// Byte-size option, e.g. `--size 8K`.
+    pub fn bytes(&self, name: &str) -> Result<u64, String> {
+        super::units::parse_bytes(self.str(name)?).map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("run", "run a workload")
+            .pos("workload", "workload name")
+            .opt("nodes", "N", Some("4"), "number of nodes")
+            .opt("size", "BYTES", Some("8K"), "access size")
+            .flag("verbose", "chatty output")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&args(&["cnw"])).unwrap();
+        assert_eq!(p.usize("nodes").unwrap(), 4);
+        assert_eq!(p.bytes("size").unwrap(), 8192);
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.positional(0), Some("cnw"));
+    }
+
+    #[test]
+    fn overrides_and_equals_form() {
+        let p = spec()
+            .parse(&args(&["cnw", "--nodes", "16", "--size=8M", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.usize("nodes").unwrap(), 16);
+        assert_eq!(p.bytes("size").unwrap(), 8 << 20);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&args(&["cnw", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let e = spec().parse(&args(&[])).unwrap_err();
+        assert!(e.contains("workload"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(&args(&["cnw", "--nodes"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = spec().parse(&args(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--nodes"));
+    }
+}

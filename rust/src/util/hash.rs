@@ -1,0 +1,88 @@
+//! A fast non-cryptographic hasher for integer keys (FxHash-style
+//! multiply-fold). The global server hashes a `FileId` per RPC; SipHash
+//! (std's default, HashDoS-resistant) is wasted work on internal u64
+//! ids — see EXPERIMENTS.md §Perf.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Firefox's FxHash fold constant (64-bit).
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+#[derive(Default, Clone, Copy)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// HashMap with the fast hasher — for internal integer-keyed maps only.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_keys_distinct_hashes() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..10_000u64 {
+            m.insert(i * 0x9E37_79B9, i as u32);
+        }
+        assert_eq!(m.len(), 10_000);
+        assert_eq!(m[&0], 0);
+        assert_eq!(m[&(9_999 * 0x9E37_79B9)], 9_999);
+    }
+
+    #[test]
+    fn hasher_is_deterministic() {
+        let h = |v: u64| {
+            let mut hh = FxHasher::default();
+            hh.write_u64(v);
+            hh.finish()
+        };
+        assert_eq!(h(42), h(42));
+        assert_ne!(h(42), h(43));
+    }
+}

@@ -1,0 +1,16 @@
+//! Dependency-free utility layer: PRNG, units, statistics, JSON, tables,
+//! CLI parsing, logging. Everything above `util` is domain code.
+
+pub mod cli;
+pub mod hash;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::{Samples, Summary};
+pub use table::Table;

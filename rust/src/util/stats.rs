@@ -1,0 +1,232 @@
+//! Summary statistics for benchmark reporting: mean, stddev, percentiles,
+//! min/max, plus a fixed-bucket latency histogram. All figures in the
+//! paper report averages over >=10 repeats; `Summary` is what every bench
+//! row prints.
+
+/// Single-pass-friendly collection of samples with summary accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self { values: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        debug_assert!(v.is_finite(), "non-finite sample {v}");
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator); 0 for n < 2.
+    pub fn stddev(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.values.iter().map(|v| (v - m) * (v - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, `q` in [0,100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q), "percentile q={q}");
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q / 100.0 * (sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = pos - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.len(),
+            mean: self.mean(),
+            stddev: self.stddev(),
+            min: if self.is_empty() { 0.0 } else { self.min() },
+            max: if self.is_empty() { 0.0 } else { self.max() },
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+        }
+    }
+}
+
+/// Immutable summary of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Relative stddev (coefficient of variation); 0 when mean is 0.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+}
+
+/// Log2-bucketed histogram for latencies/sizes spanning orders of magnitude.
+#[derive(Debug, Clone)]
+pub struct Log2Histogram {
+    /// counts[i] counts values v with 2^i <= v < 2^(i+1); counts[0] also
+    /// holds v < 1.
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Log2Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; 64],
+            total: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let bucket = if v < 1.0 {
+            0
+        } else {
+            (v.log2().floor() as usize).min(63)
+        };
+        self.counts[bucket] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Non-empty buckets as (lower_bound, count).
+    pub fn nonzero(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (if i == 0 { 0.0 } else { (1u64 << i) as f64 }, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let mut s = Samples::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(v);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // sample stddev of this classic set is ~2.138
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for v in 1..=100 {
+            s.push(v as f64);
+        }
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-12);
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = Samples::new();
+        let sum = s.summary();
+        assert_eq!(sum.n, 0);
+        assert_eq!(sum.mean, 0.0);
+        assert_eq!(sum.p99, 0.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = Samples::new();
+        s.push(3.25);
+        let sum = s.summary();
+        assert_eq!(sum.n, 1);
+        assert_eq!(sum.mean, 3.25);
+        assert_eq!(sum.stddev, 0.0);
+        assert_eq!(sum.min, 3.25);
+        assert_eq!(sum.max, 3.25);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Log2Histogram::new();
+        h.record(0.5);
+        h.record(1.0);
+        h.record(3.0);
+        h.record(1024.0);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.bucket_count(0), 2); // 0.5 and 1.0
+        assert_eq!(h.bucket_count(1), 1); // 3.0
+        assert_eq!(h.bucket_count(10), 1); // 1024
+        assert_eq!(h.nonzero().len(), 3);
+    }
+}

@@ -1,0 +1,160 @@
+//! Byte-size and duration parsing/formatting used by configs, the CLI,
+//! and report rendering. `1GiB`-style binary units are the default for
+//! storage sizes (the paper's "8KB"/"8MB" access sizes are binary).
+
+/// Parse a human byte size: `8K`, `8KB`, `8KiB`, `1m`, `2GiB`, `117`, `4096B`.
+/// Units are binary (K = 1024) as is conventional for I/O access sizes.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty byte-size string".into());
+    }
+    let lower = s.to_ascii_lowercase();
+    let split = lower
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(lower.len());
+    let (num, unit) = lower.split_at(split);
+    if num.is_empty() {
+        return Err(format!("byte size `{s}` has no numeric part"));
+    }
+    let value: f64 = num
+        .parse()
+        .map_err(|e| format!("bad byte size `{s}`: {e}"))?;
+    let mult: u64 = match unit.trim() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        "t" | "tb" | "tib" => 1 << 40,
+        other => return Err(format!("unknown byte unit `{other}` in `{s}`")),
+    };
+    let bytes = value * mult as f64;
+    if bytes < 0.0 || bytes > u64::MAX as f64 {
+        return Err(format!("byte size `{s}` out of range"));
+    }
+    Ok(bytes.round() as u64)
+}
+
+/// Format bytes with a binary-unit suffix, trimmed to 2 decimals.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [(&str, u64); 5] = [
+        ("TiB", 1 << 40),
+        ("GiB", 1 << 30),
+        ("MiB", 1 << 20),
+        ("KiB", 1 << 10),
+        ("B", 1),
+    ];
+    for (name, mult) in UNITS {
+        if bytes >= mult {
+            let v = bytes as f64 / mult as f64;
+            return if (v - v.round()).abs() < 1e-9 {
+                format!("{}{}", v.round() as u64, name)
+            } else {
+                format!("{v:.2}{name}")
+            };
+        }
+    }
+    "0B".to_string()
+}
+
+/// Format a bandwidth (bytes/sec) as `X.XX GiB/s` style.
+pub fn fmt_bandwidth(bytes_per_sec: f64) -> String {
+    const UNITS: [(&str, f64); 4] = [
+        ("GiB/s", (1u64 << 30) as f64),
+        ("MiB/s", (1u64 << 20) as f64),
+        ("KiB/s", (1u64 << 10) as f64),
+        ("B/s", 1.0),
+    ];
+    for (name, mult) in UNITS {
+        if bytes_per_sec >= mult {
+            return format!("{:.2}{}", bytes_per_sec / mult, name);
+        }
+    }
+    format!("{bytes_per_sec:.2}B/s")
+}
+
+/// Parse durations like `5s`, `120ms`, `2.5us`, `3m`, `100ns`.
+pub fn parse_duration_secs(s: &str) -> Result<f64, String> {
+    let s = s.trim().to_ascii_lowercase();
+    if s.is_empty() {
+        return Err("empty duration string".into());
+    }
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let value: f64 = num
+        .parse()
+        .map_err(|e| format!("bad duration `{s}`: {e}"))?;
+    let mult = match unit.trim() {
+        "" | "s" | "sec" | "secs" => 1.0,
+        "ms" => 1e-3,
+        "us" | "µs" => 1e-6,
+        "ns" => 1e-9,
+        "m" | "min" => 60.0,
+        "h" => 3600.0,
+        other => return Err(format!("unknown duration unit `{other}` in `{s}`")),
+    };
+    Ok(value * mult)
+}
+
+/// Format a duration in seconds with an adaptive unit.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_and_units() {
+        assert_eq!(parse_bytes("117").unwrap(), 117);
+        assert_eq!(parse_bytes("4096B").unwrap(), 4096);
+        assert_eq!(parse_bytes("8K").unwrap(), 8192);
+        assert_eq!(parse_bytes("8KB").unwrap(), 8192);
+        assert_eq!(parse_bytes("8KiB").unwrap(), 8192);
+        assert_eq!(parse_bytes("8M").unwrap(), 8 << 20);
+        assert_eq!(parse_bytes("1.5k").unwrap(), 1536);
+        assert_eq!(parse_bytes(" 2GiB ").unwrap(), 2 << 30);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("KB").is_err());
+        assert!(parse_bytes("12xyz").is_err());
+        assert!(parse_bytes("-5K").is_err());
+    }
+
+    #[test]
+    fn roundtrip_formatting() {
+        assert_eq!(fmt_bytes(0), "0B");
+        assert_eq!(fmt_bytes(8192), "8KiB");
+        assert_eq!(fmt_bytes(8 << 20), "8MiB");
+        assert_eq!(fmt_bytes(1536), "1.50KiB");
+    }
+
+    #[test]
+    fn bandwidth_formatting() {
+        assert_eq!(fmt_bandwidth((1u64 << 30) as f64), "1.00GiB/s");
+        assert_eq!(fmt_bandwidth(512.0 * 1024.0 * 1024.0), "512.00MiB/s");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(parse_duration_secs("5s").unwrap(), 5.0);
+        assert!((parse_duration_secs("120ms").unwrap() - 0.12).abs() < 1e-12);
+        assert!((parse_duration_secs("2.5us").unwrap() - 2.5e-6).abs() < 1e-15);
+        assert_eq!(fmt_duration(0.002), "2.000ms");
+        assert_eq!(fmt_duration(3.5), "3.500s");
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic N-to-1 workloads (§6.1): Table 7 parameters, Table 8
+//! configurations, access-pattern generators, and the DES driver that
+//! executes them on any consistency layer.
+
+pub mod driver;
+pub mod spec;
+
+pub use driver::{build_fs, PhaseReport, SyntheticDriver};
+pub use spec::{Config, Pattern, WorkloadParams};

@@ -1,0 +1,293 @@
+//! Synthetic workload specification — Table 7 parameters, Table 8
+//! configurations, and the three within-file access patterns of §6.1
+//! (contiguous, strided, random). All processes share one file (N-to-1).
+
+use crate::util::rng::Rng;
+
+/// Within-file access pattern (§6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Each process accesses one gap-free region; regions are adjacent.
+    Contiguous,
+    /// Processes interleave with a fixed stride of (nprocs * s).
+    Strided,
+    /// Uniform random s-aligned offsets within the file extent.
+    Random,
+}
+
+impl Pattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::Contiguous => "contiguous",
+            Pattern::Strided => "strided",
+            Pattern::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "contiguous" | "c" => Ok(Pattern::Contiguous),
+            "strided" | "s" => Ok(Pattern::Strided),
+            "random" | "r" => Ok(Pattern::Random),
+            other => Err(format!("unknown pattern `{other}`")),
+        }
+    }
+}
+
+/// Table 7: the parameters of the synthetic I/O workloads.
+#[derive(Debug, Clone)]
+pub struct WorkloadParams {
+    /// Number of writing nodes (all their processes only write).
+    pub n_w: usize,
+    /// Number of reading nodes (all their processes only read).
+    pub n_r: usize,
+    /// Processes per node.
+    pub p: usize,
+    /// Writes per writing process.
+    pub m_w: usize,
+    /// Reads per reading process.
+    pub m_r: usize,
+    /// Access size of every I/O operation, bytes.
+    pub s: u64,
+    pub write_pattern: Pattern,
+    /// None for write-only workloads.
+    pub read_pattern: Option<Pattern>,
+    /// Seed for Random patterns.
+    pub seed: u64,
+}
+
+impl WorkloadParams {
+    /// Total nodes n = n_w + n_r.
+    pub fn nodes(&self) -> usize {
+        self.n_w + self.n_r
+    }
+
+    pub fn n_writers(&self) -> usize {
+        self.n_w * self.p
+    }
+
+    pub fn n_readers(&self) -> usize {
+        self.n_r * self.p
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nodes() * self.p
+    }
+
+    /// Shared-file extent produced by the write phase.
+    pub fn file_extent(&self) -> u64 {
+        self.n_writers() as u64 * self.m_w as u64 * self.s
+    }
+
+    pub fn total_write_bytes(&self) -> u64 {
+        self.file_extent()
+    }
+
+    pub fn total_read_bytes(&self) -> u64 {
+        self.n_readers() as u64 * self.m_r as u64 * self.s
+    }
+
+    /// Is rank a writer? Ranks [0, n_w*p) live on writing nodes.
+    pub fn is_writer(&self, rank: usize) -> bool {
+        rank < self.n_writers()
+    }
+
+    /// Offsets written by writer index `w` (0-based among writers).
+    pub fn write_offsets(&self, w: usize) -> Vec<u64> {
+        debug_assert!(w < self.n_writers());
+        let nw = self.n_writers() as u64;
+        let m = self.m_w as u64;
+        match self.write_pattern {
+            Pattern::Contiguous => (0..m).map(|i| (w as u64 * m + i) * self.s).collect(),
+            Pattern::Strided => (0..m).map(|i| (i * nw + w as u64) * self.s).collect(),
+            Pattern::Random => {
+                // Disjoint randomization: permute the global block ids so
+                // writers never overlap (overlap would be a storage race).
+                let blocks = nw * m;
+                let mut ids: Vec<u64> = (0..blocks).collect();
+                let mut rng = Rng::seed_from_u64(self.seed ^ WRITE_SHUFFLE_SALT);
+                rng.shuffle(&mut ids);
+                ids[(w as u64 * m) as usize..((w as u64 + 1) * m) as usize]
+                    .iter()
+                    .map(|&b| b * self.s)
+                    .collect()
+            }
+        }
+    }
+
+    /// Offsets read by reader index `r` (0-based among readers).
+    pub fn read_offsets(&self, r: usize) -> Vec<u64> {
+        debug_assert!(r < self.n_readers());
+        let nr = self.n_readers() as u64;
+        let m = self.m_r as u64;
+        let extent_blocks = (self.file_extent() / self.s).max(1);
+        match self.read_pattern.expect("read phase not configured") {
+            Pattern::Contiguous => (0..m)
+                .map(|i| ((r as u64 * m + i) % extent_blocks) * self.s)
+                .collect(),
+            Pattern::Strided => (0..m)
+                .map(|i| ((i * nr + r as u64) % extent_blocks) * self.s)
+                .collect(),
+            Pattern::Random => {
+                let mut rng = Rng::seed_from_u64(
+                    self.seed ^ 0x5eed_0000_0000_0000 ^ (r as u64),
+                );
+                (0..m)
+                    .map(|_| rng.gen_range_u64(extent_blocks) * self.s)
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Salt separating the write-shuffle RNG stream from read streams.
+const WRITE_SHUFFLE_SALT: u64 = 0x77ab_cdef_1234_5678;
+
+/// Table 8: the four named configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Config {
+    /// Contiguous N-to-1 write, no read phase.
+    CnW,
+    /// Strided N-to-1 write, no read phase.
+    SnW,
+    /// Contiguous write by n/2 nodes, contiguous read by n/2 nodes.
+    CcR,
+    /// Contiguous write by n/2 nodes, strided read by n/2 nodes.
+    CsR,
+}
+
+impl Config {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Config::CnW => "CN-W",
+            Config::SnW => "SN-W",
+            Config::CcR => "CC-R",
+            Config::CsR => "CS-R",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_uppercase().replace('_', "-").as_str() {
+            "CN-W" | "CNW" => Ok(Config::CnW),
+            "SN-W" | "SNW" => Ok(Config::SnW),
+            "CC-R" | "CCR" => Ok(Config::CcR),
+            "CS-R" | "CSR" => Ok(Config::CsR),
+            other => Err(format!("unknown config `{other}` (CN-W|SN-W|CC-R|CS-R)")),
+        }
+    }
+
+    /// Instantiate Table 8 with n total nodes, p procs/node, access size
+    /// s, and m accesses per process (the paper used m_w = m_r = 10).
+    pub fn params(&self, n: usize, p: usize, s: u64, m: usize, seed: u64) -> WorkloadParams {
+        let (n_w, n_r, wp, rp) = match self {
+            Config::CnW => (n, 0, Pattern::Contiguous, None),
+            Config::SnW => (n, 0, Pattern::Strided, None),
+            Config::CcR => (n / 2, n - n / 2, Pattern::Contiguous, Some(Pattern::Contiguous)),
+            Config::CsR => (n / 2, n - n / 2, Pattern::Contiguous, Some(Pattern::Strided)),
+        };
+        WorkloadParams {
+            n_w,
+            n_r,
+            p,
+            m_w: m,
+            m_r: m,
+            s,
+            write_pattern: wp,
+            read_pattern: rp,
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(cfg: Config) -> WorkloadParams {
+        cfg.params(4, 2, 1024, 3, 42)
+    }
+
+    #[test]
+    fn cnw_layout() {
+        let p = params(Config::CnW);
+        assert_eq!(p.nranks(), 8);
+        assert_eq!(p.n_writers(), 8);
+        assert_eq!(p.n_readers(), 0);
+        assert_eq!(p.write_offsets(0), vec![0, 1024, 2048]);
+        assert_eq!(p.write_offsets(1), vec![3072, 4096, 5120]);
+        assert_eq!(p.file_extent(), 8 * 3 * 1024);
+    }
+
+    #[test]
+    fn snw_layout_interleaves() {
+        let p = params(Config::SnW);
+        // writer 0: blocks 0, 8, 16; writer 1: blocks 1, 9, 17...
+        assert_eq!(p.write_offsets(0), vec![0, 8 * 1024, 16 * 1024]);
+        assert_eq!(p.write_offsets(1), vec![1024, 9 * 1024, 17 * 1024]);
+    }
+
+    #[test]
+    fn writers_cover_extent_exactly_once() {
+        for cfg in [Config::CnW, Config::SnW] {
+            let p = params(cfg);
+            let mut all: Vec<u64> = (0..p.n_writers())
+                .flat_map(|w| p.write_offsets(w))
+                .collect();
+            all.sort_unstable();
+            let expect: Vec<u64> = (0..(p.file_extent() / p.s)).map(|b| b * p.s).collect();
+            assert_eq!(all, expect, "cfg {}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn random_writes_disjoint_and_cover() {
+        let mut p = params(Config::CnW);
+        p.write_pattern = Pattern::Random;
+        let mut all: Vec<u64> = (0..p.n_writers())
+            .flat_map(|w| p.write_offsets(w))
+            .collect();
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..(p.file_extent() / p.s)).map(|b| b * p.s).collect();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn ccr_reader_maps_to_single_writer() {
+        let p = params(Config::CcR); // 2 write nodes, 2 read nodes, p=2
+        assert_eq!(p.n_writers(), 4);
+        assert_eq!(p.n_readers(), 4);
+        // reader j reads exactly writer j's blocks (m_r == m_w).
+        for j in 0..4 {
+            assert_eq!(p.read_offsets(j), p.write_offsets(j));
+        }
+    }
+
+    #[test]
+    fn csr_reader_strides_across_writers() {
+        let p = params(Config::CsR);
+        let r0 = p.read_offsets(0);
+        // strided: blocks 0, 4, 8 (4 readers)
+        assert_eq!(r0, vec![0, 4 * 1024, 8 * 1024]);
+        // these blocks belong to writers 0, 1, 2 under contiguous writes
+        // (3 blocks each): block 0 -> w0, block 4 -> w1, block 8 -> w2.
+    }
+
+    #[test]
+    fn random_reads_within_extent_and_aligned() {
+        let mut p = params(Config::CcR);
+        p.read_pattern = Some(Pattern::Random);
+        for j in 0..p.n_readers() {
+            for off in p.read_offsets(j) {
+                assert!(off < p.file_extent());
+                assert_eq!(off % p.s, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn config_parse() {
+        assert_eq!(Config::parse("cc-r").unwrap(), Config::CcR);
+        assert_eq!(Config::parse("CNW").unwrap(), Config::CnW);
+        assert!(Config::parse("zz").is_err());
+    }
+}

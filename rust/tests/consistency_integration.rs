@@ -1,0 +1,182 @@
+//! Cross-module integration: the SCNF guarantee itself. For random
+//! *properly-synchronized* two-phase programs, every consistency layer
+//! must deliver the sequentially-consistent outcome (byte-exact against
+//! a write-log oracle) — §4's Properly-Synchronized SCNF System
+//! definition, checked end-to-end through the real BaseFS stack.
+
+use pscnf::basefs::TestFabric;
+use pscnf::fs::{CommitFs, FsKind, MpiioFs, PosixFs, SessionFs, WorkloadFs};
+use pscnf::interval::Range;
+use pscnf::testkit::{self, Gen};
+
+fn make_fs(kind: FsKind, id: u32, fabric: &TestFabric) -> Box<dyn WorkloadFs> {
+    match kind {
+        FsKind::Posix => Box::new(PosixFs::new(id, fabric.bb_of(id))),
+        FsKind::Commit => Box::new(CommitFs::new(id, fabric.bb_of(id))),
+        FsKind::Session => Box::new(SessionFs::new(id, fabric.bb_of(id))),
+        FsKind::Mpiio => Box::new(MpiioFs::new(id, fabric.bb_of(id))),
+    }
+}
+
+/// Two-phase properly-synchronized program: disjoint per-rank writes,
+/// phase sync, then reads of arbitrary ranges. The oracle is a byte map
+/// of all writes.
+fn scnf_roundtrip(kind: FsKind, g: &mut Gen) -> Result<(), String> {
+    const FILE_SIZE: u64 = 4096;
+    let nranks = g.usize(2, 4);
+    let mut fabric = TestFabric::new(nranks);
+    let mut fs: Vec<Box<dyn WorkloadFs>> = (0..nranks)
+        .map(|r| make_fs(kind, r as u32, &fabric))
+        .collect();
+    let mut file = 0;
+    for f in fs.iter_mut() {
+        file = f.open(&mut fabric, "/scnf/prog.dat");
+    }
+
+    // Write phase: rank r owns [r*slice, (r+1)*slice) and writes random
+    // sub-chunks of it (possibly overlapping its own earlier writes —
+    // same-rank overlap is po-ordered, not a race).
+    let slice = FILE_SIZE / nranks as u64;
+    let mut oracle = vec![0u8; FILE_SIZE as usize];
+    for (r, f) in fs.iter_mut().enumerate() {
+        let base = r as u64 * slice;
+        for _ in 0..g.usize(1, 6) {
+            let off = base + g.u64(0, slice - 1);
+            let len = g.u64(1, (base + slice - off).min(97));
+            let fill = g.u64(1, 255) as u8;
+            let data = vec![fill; len as usize];
+            f.write_at(&mut fabric, file, off, &data)
+                .map_err(|e| format!("write: {e}"))?;
+            for b in &mut oracle[off as usize..(off + len) as usize] {
+                *b = fill;
+            }
+        }
+        f.end_write_phase(&mut fabric, file)
+            .map_err(|e| format!("end_write_phase: {e}"))?;
+    }
+
+    // (Barrier happens here; TestFabric is single-threaded so ordering
+    // is immediate.)
+
+    // Read phase: every rank reads random ranges; must equal the oracle.
+    for f in fs.iter_mut() {
+        f.begin_read_phase(&mut fabric, file)
+            .map_err(|e| format!("begin_read_phase: {e}"))?;
+        for _ in 0..g.usize(1, 5) {
+            let off = g.u64(0, FILE_SIZE - 1);
+            let len = g.u64(1, (FILE_SIZE - off).min(301));
+            let got = f
+                .read_at(&mut fabric, file, Range::at(off, len))
+                .map_err(|e| format!("read: {e}"))?;
+            let want = &oracle[off as usize..(off + len) as usize];
+            testkit::ensure(
+                got == want,
+                format!(
+                    "{kind:?} rank {} read [{off},{}) diverged from SC oracle",
+                    f.client_id(),
+                    off + len
+                ),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn scnf_guarantee_commit() {
+    testkit::check("SCNF commit", |g| scnf_roundtrip(FsKind::Commit, g));
+}
+
+#[test]
+fn scnf_guarantee_session() {
+    testkit::check("SCNF session", |g| scnf_roundtrip(FsKind::Session, g));
+}
+
+#[test]
+fn scnf_guarantee_posix() {
+    testkit::check("SCNF posix", |g| scnf_roundtrip(FsKind::Posix, g));
+}
+
+#[test]
+fn scnf_guarantee_mpiio() {
+    testkit::check("SCNF mpiio", |g| scnf_roundtrip(FsKind::Mpiio, g));
+}
+
+/// Ownership takeover: when two ranks write the same range in different
+/// *ordered* phases, the later attach wins for subsequent readers.
+#[test]
+fn later_phase_overwrites_earlier() {
+    let mut fabric = TestFabric::new(3);
+    let mut a = CommitFs::new(0, fabric.bb_of(0));
+    let mut b = CommitFs::new(1, fabric.bb_of(1));
+    let mut r = CommitFs::new(2, fabric.bb_of(2));
+    let f = a.open(&mut fabric, "/tko");
+    b.open(&mut fabric, "/tko");
+    r.open(&mut fabric, "/tko");
+
+    a.write_at(&mut fabric, f, 0, &[1u8; 100]).unwrap();
+    a.commit(&mut fabric, f).unwrap();
+    // Phase 2 (ordered after phase 1): b overwrites the middle.
+    b.write_at(&mut fabric, f, 25, &[2u8; 50]).unwrap();
+    b.commit(&mut fabric, f).unwrap();
+
+    let got = r.read_at(&mut fabric, f, Range::new(0, 100)).unwrap();
+    assert_eq!(&got[..25], &[1u8; 25][..]);
+    assert_eq!(&got[25..75], &[2u8; 50][..]);
+    assert_eq!(&got[75..], &[1u8; 25][..]);
+}
+
+/// Flush + detach moves data to the underlying PFS; readers that query
+/// after the detach fall through to UPFS and still see the bytes.
+#[test]
+fn flush_detach_upfs_fallback() {
+    let mut fabric = TestFabric::new(2);
+    let mut w = CommitFs::new(0, fabric.bb_of(0));
+    let mut r = CommitFs::new(1, fabric.bb_of(1));
+    let f = w.open(&mut fabric, "/persist");
+    r.open(&mut fabric, "/persist");
+
+    w.write_at(&mut fabric, f, 0, b"durable-data").unwrap();
+    w.commit(&mut fabric, f).unwrap();
+    w.core().flush_file(&mut fabric, f).unwrap();
+    w.core().detach_file(&mut fabric, f).unwrap();
+
+    let got = r.read_at(&mut fabric, f, Range::new(0, 12)).unwrap();
+    assert_eq!(got, b"durable-data");
+}
+
+/// Failure injection: a stale session must NOT see writes published
+/// after its open — and a fresh session must.
+#[test]
+fn session_snapshot_isolation() {
+    let mut fabric = TestFabric::new(2);
+    let mut w = SessionFs::new(0, fabric.bb_of(0));
+    let mut r = SessionFs::new(1, fabric.bb_of(1));
+    let f = w.open(&mut fabric, "/iso");
+    r.open(&mut fabric, "/iso");
+
+    w.write_at(&mut fabric, f, 0, &[9u8; 8]).unwrap();
+    r.session_open(&mut fabric, f).unwrap(); // before close!
+    w.session_close(&mut fabric, f).unwrap();
+    let stale = r.read_at(&mut fabric, f, Range::new(0, 8)).unwrap();
+    assert_eq!(stale, vec![0u8; 8], "stale session stays stale");
+    r.session_open(&mut fabric, f).unwrap();
+    let fresh = r.read_at(&mut fabric, f, Range::new(0, 8)).unwrap();
+    assert_eq!(fresh, vec![9u8; 8]);
+}
+
+/// DES determinism at the integration level: identical seeds produce
+/// identical makespans and RPC counts across full runs.
+#[test]
+fn des_full_run_determinism() {
+    use pscnf::sim::Cluster;
+    use pscnf::workload::{Config, SyntheticDriver};
+    let run = || {
+        let params = Config::CsR.params(4, 4, 8 << 10, 5, 77);
+        SyntheticDriver::new(FsKind::Session, params).run(Cluster::catalyst(4, 77))
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.rpcs, b.rpcs);
+    assert_eq!(a.read_bw(), b.read_bw());
+}

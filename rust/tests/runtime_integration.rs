@@ -1,0 +1,108 @@
+//! Integration: the AOT artifact round-trip (python-lowered HLO text →
+//! rust PJRT compile → execute) and the full training loop through the
+//! compiled `train_step`. Skipped gracefully when `make artifacts`
+//! hasn't run.
+
+use pscnf::runtime::{Runtime, TrainState};
+use pscnf::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::cpu(dir).expect("PJRT CPU client"))
+}
+
+fn synth_batch(m: &pscnf::runtime::Manifest, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    // A learnable synthetic task: class = argmax over CLASSES block-sums
+    // of the feature vector (deterministic function of x).
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut x = vec![0f32; m.batch * m.feature_dim];
+    let mut y = vec![0i32; m.batch];
+    let block = m.feature_dim / m.classes;
+    for b in 0..m.batch {
+        for v in x[b * m.feature_dim..(b + 1) * m.feature_dim].iter_mut() {
+            *v = (rng.next_normal() * 0.1) as f32;
+        }
+        let cls = rng.gen_range(0, m.classes);
+        for j in 0..block {
+            x[b * m.feature_dim + cls * block + j] += 2.0;
+        }
+        y[b] = cls as i32;
+    }
+    (x, y)
+}
+
+#[test]
+fn artifact_loads_and_executes() {
+    let Some(mut rt) = runtime_or_skip() else {
+        return;
+    };
+    assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+    let m = rt.manifest().unwrap();
+    assert_eq!(m.batch, 32);
+    rt.load("train_step").unwrap();
+    rt.load("predict").unwrap();
+    assert_eq!(rt.loaded().len(), 2);
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(mut rt) = runtime_or_skip() else {
+        return;
+    };
+    let m = rt.manifest().unwrap();
+    let mut state = TrainState::init(m.clone(), 42);
+    let (x, y) = synth_batch(&m, 1);
+    let first = state.step(&mut rt, &x, &y).unwrap();
+    let mut last = first;
+    for _ in 0..49 {
+        last = state.step(&mut rt, &x, &y).unwrap();
+    }
+    assert!(last.is_finite() && first.is_finite());
+    assert!(
+        last < 0.5 * first,
+        "loss did not decrease: {first} -> {last}"
+    );
+    assert_eq!(state.steps, 50);
+}
+
+#[test]
+fn predict_learns_synthetic_task() {
+    let Some(mut rt) = runtime_or_skip() else {
+        return;
+    };
+    let m = rt.manifest().unwrap();
+    let mut state = TrainState::init(m.clone(), 7);
+    // Train over many batches of the same synthetic task.
+    for round in 0..6 {
+        for seed in 0..16 {
+            let (x, y) = synth_batch(&m, seed);
+            let _ = round;
+            state.step(&mut rt, &x, &y).unwrap();
+        }
+    }
+    // Held-out batch: accuracy must beat chance (1%) by a wide margin.
+    let (x, y) = synth_batch(&m, 999);
+    let ids = state.predict(&mut rt, &x).unwrap();
+    let correct = ids.iter().zip(&y).filter(|(a, b)| a == b).count();
+    assert!(
+        correct * 100 / m.batch >= 30,
+        "accuracy {}/{} too low",
+        correct,
+        m.batch
+    );
+}
+
+#[test]
+fn bad_input_shapes_error_cleanly() {
+    let Some(mut rt) = runtime_or_skip() else {
+        return;
+    };
+    let m = rt.manifest().unwrap();
+    let mut state = TrainState::init(m, 1);
+    let err = state.step(&mut rt, &[0.0; 8], &[0; 8]).unwrap_err();
+    assert!(err.to_string().contains("batch features"));
+}
