@@ -172,7 +172,7 @@ fn run_ingestion(kind: FsKind) -> (Vec<EpochStats>, Vec<(usize, Vec<u8>)>) {
     (agg, collected)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pscnf::util::error::Result<()> {
     println!(
         "END-TO-END: live ingestion ({RANKS} rank threads x {SAMPLES_PER_RANK} samples x 116KiB) -> AOT train_step\n"
     );
@@ -197,9 +197,20 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- L2/L1: train on the ingested bytes through PJRT --------------
-    let mut rt = Runtime::cpu(Runtime::default_dir())?;
+    let mut rt = match Runtime::cpu(Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Offline builds link the xla stub; the L3 half above still
+            // exercised the full live engine.
+            println!("\nSKIP L2/L1 training: {e}");
+            println!("dl_ingestion L3 OK (PJRT unavailable)");
+            return Ok(());
+        }
+    };
     let manifest = rt.manifest().map_err(|e| {
-        anyhow::anyhow!("{e}\nhint: run `make artifacts` before this example")
+        pscnf::util::error::Error::msg(format!(
+            "{e}\nhint: run `make artifacts` before this example"
+        ))
     })?;
     println!(
         "\nPJRT platform={} model {}x{} -> {} -> {}",

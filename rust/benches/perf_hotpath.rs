@@ -90,15 +90,14 @@ fn main() {
     add("server handle (2:1 attach:query)", &s);
 
     // 4. DES end-to-end: one Fig-4 cell (16 nodes x 12p, 8KiB CC-R).
-    let mut cell_events = 0u64;
-    {
+    let cell_events = {
         // count ops once
         let params = Config::CcR.params(16, 12, 8 << 10, 10, 7);
         let driver = SyntheticDriver::new(FsKind::Commit, params);
         let rep = driver.run(Testbed::Catalyst.cluster(16, 1));
-        cell_events = rep.rpcs * 4; // rough op count proxy, avoids plumbing
         std::hint::black_box(&rep);
-    }
+        rep.rpcs * 4 // rough op count proxy, avoids plumbing
+    };
     let t0 = Instant::now();
     let mut runs = 0u32;
     while t0.elapsed().as_secs_f64() < 2.0 {

@@ -8,21 +8,32 @@ use crate::interval::{LocalTreeError, OwnedInterval, Range};
 use std::collections::HashMap;
 
 /// BaseFS error surface (mirrors the -1 returns of Table 5).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum BfsError {
-    #[error("file not open: {0}")]
     NotOpen(FileId),
-    #[error("range {0} not (fully) readable from the requested owner")]
     NotOwned(Range),
-    #[error("attach of unwritten bytes in {0}")]
     AttachUnwritten(Range),
-    #[error("detach of never-attached range {0}")]
     DetachUnattached(Range),
-    #[error("seek before start of file")]
     BadSeek,
-    #[error("server error: {0}")]
     Server(String),
 }
+
+impl std::fmt::Display for BfsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BfsError::NotOpen(id) => write!(f, "file not open: {id}"),
+            BfsError::NotOwned(r) => {
+                write!(f, "range {r} not (fully) readable from the requested owner")
+            }
+            BfsError::AttachUnwritten(r) => write!(f, "attach of unwritten bytes in {r}"),
+            BfsError::DetachUnattached(r) => write!(f, "detach of never-attached range {r}"),
+            BfsError::BadSeek => write!(f, "seek before start of file"),
+            BfsError::Server(e) => write!(f, "server error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for BfsError {}
 
 impl From<LocalTreeError> for BfsError {
     fn from(e: LocalTreeError) -> Self {
@@ -37,8 +48,16 @@ impl From<LocalTreeError> for BfsError {
 /// attaches virtual-time costs to each call; the live fabric does the
 /// real thing over channels/shared memory.
 pub trait Fabric {
-    /// Synchronization RPC to the global server.
+    /// Synchronization RPC to the metadata plane.
     fn rpc(&mut self, client: ClientId, req: Request) -> Response;
+
+    /// Batched synchronization RPCs. Responses align with `reqs` by
+    /// index. The default degenerates to one RPC per request; sharded
+    /// fabrics override it to group requests into per-shard vectors and
+    /// pay one round trip per shard touched (DESIGN.md §Sharding).
+    fn rpc_batch(&mut self, client: ClientId, reqs: Vec<Request>) -> Vec<Response> {
+        reqs.into_iter().map(|r| self.rpc(client, r)).collect()
+    }
     /// Data-plane fetch of `range` of `file` from `owner`'s attached
     /// buffer (client-to-client RDMA path).
     fn fetch(
@@ -257,6 +276,75 @@ impl ClientCore {
             Response::Error(e) => Err(BfsError::Server(e)),
             other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
         }
+    }
+
+    /// Batched bfs_attach_file over many files: one Attach request per
+    /// file with unattached writes, issued through [`Fabric::rpc_batch`]
+    /// so sharded fabrics pay one RPC per shard instead of one per file.
+    /// Commit-heavy phases (CommitFS end-of-phase, SCR publish) call
+    /// this; with a single file it is identical to [`Self::attach_file`].
+    pub fn attach_files<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        // Validate every handle BEFORE mutating any local attach state:
+        // marking file A attached and then failing on an unopened file B
+        // would elide A's attach RPC forever (the retry finds nothing
+        // newly attached).
+        for &file in files {
+            self.opened(file)?;
+        }
+        let mut reqs = Vec::new();
+        for &file in files {
+            let newly = self.bb.write().unwrap().file(file).mark_all_attached();
+            if newly.is_empty() {
+                continue;
+            }
+            reqs.push(Request::Attach {
+                file,
+                client: self.id,
+                ranges: newly.iter().map(|s| s.file).collect(),
+            });
+        }
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        for resp in fabric.rpc_batch(self.id, reqs) {
+            match resp {
+                Response::Ok => {}
+                Response::Error(e) => return Err(BfsError::Server(e)),
+                other => return Err(BfsError::Server(format!("unexpected: {other:?}"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Batched bfs_query_file over many files; result `i` is the
+    /// ownership map of `files[i]`. Session-open-heavy phases use this
+    /// for one RPC per shard instead of one per file.
+    pub fn query_files<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        files: &[FileId],
+    ) -> Result<Vec<Vec<OwnedInterval>>, BfsError> {
+        let mut reqs = Vec::with_capacity(files.len());
+        for &file in files {
+            self.opened(file)?;
+            reqs.push(Request::QueryFile { file });
+        }
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(files.len());
+        for resp in fabric.rpc_batch(self.id, reqs) {
+            match resp {
+                Response::Intervals(ivs) => out.push(ivs),
+                Response::Error(e) => return Err(BfsError::Server(e)),
+                other => return Err(BfsError::Server(format!("unexpected: {other:?}"))),
+            }
+        }
+        Ok(out)
     }
 
     /// bfs_query: attached subranges of `[offset, offset+size)`.

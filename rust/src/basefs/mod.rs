@@ -19,6 +19,6 @@ pub mod store;
 
 pub use client::{BfsError, ClientCore, Fabric, Whence};
 pub use fabric::{DesFabric, FabricCounters, TestFabric};
-pub use proto::{file_id, ClientId, FileId, Request, Response};
-pub use server::GlobalServerState;
+pub use proto::{file_id, shard_of, ClientId, FileId, Request, Response};
+pub use server::{GlobalServerState, MetadataPlane};
 pub use store::{new_shared_bb, BbStore, FileBuf, SharedBb, UpfsStore};

@@ -1,9 +1,14 @@
-//! The global server's functional state (§5.1.2): a per-file global
-//! interval tree of attached ranges plus EOF metadata. Pure
-//! request-in/response-out so both engines (single-threaded DES, live
-//! thread pool) drive the same logic.
+//! The metadata plane (§5.1.2, sharded): per-file global interval trees
+//! of attached ranges plus EOF metadata. [`GlobalServerState`] is one
+//! shard's functional state — pure request-in/response-out so both
+//! engines (single-threaded DES, live thread pool) drive the same
+//! logic. [`MetadataPlane`] partitions the file space across N such
+//! shards by [`shard_of`](super::proto::shard_of); because every
+//! request touches exactly one file and every file lives on exactly one
+//! shard, the plane's responses are independent of the shard count
+//! (DESIGN.md §Sharding).
 
-use super::proto::{FileId, Request, Response};
+use super::proto::{shard_of, FileId, Request, Response};
 use crate::interval::{DetachOutcome, GlobalIntervalTree};
 use crate::util::hash::FxHashMap;
 
@@ -108,6 +113,66 @@ impl GlobalServerState {
     /// Total intervals across all files (reporting / perf counters).
     pub fn total_intervals(&self) -> usize {
         self.files.values().map(|e| e.tree.len()).sum()
+    }
+}
+
+/// N independent metadata shards behind one shard-count-agnostic
+/// `handle`. With `shards == 1` this is exactly the old single global
+/// server; callers that want per-shard placement (the engines) route
+/// with [`shard_index`](MetadataPlane::shard_index) themselves.
+#[derive(Debug)]
+pub struct MetadataPlane {
+    shards: Vec<GlobalServerState>,
+}
+
+impl Default for MetadataPlane {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl MetadataPlane {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards > 0, "MetadataPlane needs at least one shard");
+        Self {
+            shards: (0..shards).map(|_| GlobalServerState::new()).collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `file` under this plane's shard count.
+    pub fn shard_index(&self, file: FileId) -> usize {
+        shard_of(file, self.shards.len())
+    }
+
+    /// Handle one RPC on the owning shard.
+    pub fn handle(&mut self, req: Request) -> Response {
+        let s = self.shard_index(req.file());
+        self.shards[s].handle(req)
+    }
+
+    /// Borrow one shard's state (engines that hold per-shard locks, and
+    /// reporting).
+    pub fn shard(&self, idx: usize) -> &GlobalServerState {
+        &self.shards[idx]
+    }
+
+    /// Total RPCs handled across all shards.
+    pub fn requests_handled(&self) -> u64 {
+        self.shards.iter().map(|s| s.requests_handled()).sum()
+    }
+
+    /// Intervals stored for `file` (on its owning shard).
+    pub fn intervals_of(&self, file: FileId) -> usize {
+        self.shards[self.shard_index(file)].intervals_of(file)
+    }
+
+    /// Total intervals across all shards (reporting / perf counters).
+    pub fn total_intervals(&self) -> usize {
+        self.shards.iter().map(|s| s.total_intervals()).sum()
     }
 }
 
@@ -230,6 +295,55 @@ mod tests {
         let all = s.handle(Request::QueryFile { file: 1 }).intervals();
         assert_eq!(all.len(), 1);
         assert_eq!(all[0].owner, 2);
+    }
+
+    #[test]
+    fn plane_routes_to_owning_shard_and_aggregates() {
+        let mut plane = MetadataPlane::new(4);
+        for i in 0..16u64 {
+            let file = crate::basefs::proto::file_id(&format!("/p/{i}"));
+            let resp = plane.handle(Request::Attach {
+                file,
+                client: 1,
+                ranges: vec![Range::new(0, 64)],
+            });
+            assert_eq!(resp, Response::Ok);
+            assert_eq!(plane.intervals_of(file), 1);
+            // State landed on exactly the routed shard.
+            let s = plane.shard_index(file);
+            assert_eq!(plane.shard(s).intervals_of(file), 1);
+            for other in (0..4).filter(|&o| o != s) {
+                assert_eq!(plane.shard(other).intervals_of(file), 0);
+            }
+        }
+        assert_eq!(plane.requests_handled(), 16);
+        assert_eq!(plane.total_intervals(), 16);
+    }
+
+    #[test]
+    fn single_shard_plane_matches_flat_server() {
+        let reqs = |target: &mut dyn FnMut(Request) -> Response| -> Vec<Response> {
+            let mut out = Vec::new();
+            for i in 0..8u64 {
+                out.push(target(Request::Attach {
+                    file: i,
+                    client: (i % 3) as u32,
+                    ranges: vec![Range::new(i * 10, i * 10 + 10)],
+                }));
+                out.push(target(Request::Query {
+                    file: i,
+                    range: Range::new(0, 200),
+                }));
+                out.push(target(Request::Stat { file: i }));
+            }
+            out
+        };
+        let mut flat = GlobalServerState::new();
+        let mut plane = MetadataPlane::new(1);
+        let a = reqs(&mut |r| flat.handle(r));
+        let b = reqs(&mut |r| plane.handle(r));
+        assert_eq!(a, b);
+        assert_eq!(flat.requests_handled(), plane.requests_handled());
     }
 
     #[test]

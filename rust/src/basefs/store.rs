@@ -101,11 +101,22 @@ impl FileBuf {
 }
 
 /// Errors from byte stores.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StoreError {
-    #[error("range {0} not (fully) owned by the requested client")]
     NotOwned(Range),
 }
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::NotOwned(r) => {
+                write!(f, "range {r} not (fully) owned by the requested client")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
 
 /// A client's full burst-buffer store: one [`FileBuf`] per file. Shared
 /// (`Arc<RwLock<_>>`) so other clients can serve RDMA-style fetches from

@@ -94,11 +94,17 @@ impl Testbed {
 
     /// Build the simulated cluster for `nodes` nodes.
     pub fn cluster(&self, nodes: usize, seed: u64) -> Cluster {
+        self.cluster_sharded(nodes, seed, 1)
+    }
+
+    /// Cluster whose metadata plane has `shards` shards (1 = the
+    /// paper's single global server).
+    pub fn cluster_sharded(&self, nodes: usize, seed: u64, shards: usize) -> Cluster {
         Cluster::new(
             nodes,
             self.ssd(),
             NetParams::ib_qdr(),
-            ServerParams::catalyst(),
+            ServerParams::catalyst_sharded(shards),
             UpfsParams::catalyst_lustre(),
             seed,
         )
@@ -111,10 +117,15 @@ pub struct Experiment {
     pub testbed: Testbed,
     pub nodes: usize,
     pub ppn: usize,
+    /// Metadata-plane shards (`[cluster] shards`); 1 = the paper's
+    /// single global server.
+    pub shards: usize,
     pub fs: FsKind,
     pub workload: TableConfig,
     pub access_size: u64,
     pub accesses_per_proc: usize,
+    /// Shared files the dataset is striped over (`[workload] files`).
+    pub files: usize,
     pub seed: u64,
 }
 
@@ -124,10 +135,12 @@ impl Default for Experiment {
             testbed: Testbed::Catalyst,
             nodes: 4,
             ppn: 12,
+            shards: 1,
             fs: FsKind::Session,
             workload: TableConfig::CcR,
             access_size: 8 << 10,
             accesses_per_proc: 10,
+            files: 1,
             seed: 7,
         }
     }
@@ -146,6 +159,12 @@ impl Experiment {
             if let Some(v) = cluster.get("testbed") {
                 self.testbed = Testbed::parse(v)?;
             }
+            if let Some(v) = cluster.get("shards") {
+                self.shards = v.parse().map_err(|e| format!("cluster.shards: {e}"))?;
+                if self.shards == 0 {
+                    return Err("cluster.shards must be >= 1".to_string());
+                }
+            }
         }
         if let Some(w) = ini.get("workload") {
             if let Some(v) = w.get("config") {
@@ -163,22 +182,31 @@ impl Experiment {
             if let Some(v) = w.get("seed") {
                 self.seed = v.parse().map_err(|e| format!("workload.seed: {e}"))?;
             }
+            if let Some(v) = w.get("files") {
+                self.files = v.parse().map_err(|e| format!("workload.files: {e}"))?;
+                if self.files == 0 {
+                    return Err("workload.files must be >= 1".to_string());
+                }
+            }
         }
         Ok(())
     }
 
     pub fn params(&self) -> crate::workload::WorkloadParams {
-        self.workload.params(
-            self.nodes,
-            self.ppn,
-            self.access_size,
-            self.accesses_per_proc,
-            self.seed,
-        )
+        self.workload
+            .params(
+                self.nodes,
+                self.ppn,
+                self.access_size,
+                self.accesses_per_proc,
+                self.seed,
+            )
+            .with_files(self.files)
     }
 
     pub fn cluster(&self) -> Cluster {
-        self.testbed.cluster(self.nodes, self.seed ^ 0xC1A5)
+        self.testbed
+            .cluster_sharded(self.nodes, self.seed ^ 0xC1A5, self.shards)
     }
 }
 
@@ -219,6 +247,26 @@ mod tests {
         let p = e.params();
         assert_eq!(p.n_w, 8);
         assert_eq!(p.n_r, 8);
+    }
+
+    #[test]
+    fn shards_and_files_overlay() {
+        let mut e = Experiment::default();
+        assert_eq!(e.shards, 1);
+        assert_eq!(e.files, 1);
+        let ini = parse_ini("[cluster]\nshards=8\n[workload]\nfiles=16\n").unwrap();
+        e.apply_ini(&ini).unwrap();
+        assert_eq!(e.shards, 8);
+        assert_eq!(e.files, 16);
+        assert_eq!(e.params().files, 16);
+        assert_eq!(e.cluster().server.shard_count(), 8);
+        // Zero is rejected for both.
+        assert!(Experiment::default()
+            .apply_ini(&parse_ini("[cluster]\nshards=0\n").unwrap())
+            .is_err());
+        assert!(Experiment::default()
+            .apply_ini(&parse_ini("[workload]\nfiles=0\n").unwrap())
+            .is_err());
     }
 
     #[test]

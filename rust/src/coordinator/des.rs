@@ -23,6 +23,10 @@ pub struct SweepCell {
     pub config: Config,
     pub nodes: usize,
     pub access: u64,
+    /// Metadata shards the cell ran with (1 = the paper's layout).
+    pub shards: usize,
+    /// Shared files the dataset was striped over (1 = N-to-1).
+    pub files: usize,
     /// bytes/sec samples across repeats.
     pub bw: Samples,
     pub rpcs: u64,
@@ -35,6 +39,8 @@ impl SweepCell {
             .set("config", self.config.name())
             .set("nodes", self.nodes)
             .set("access_bytes", self.access)
+            .set("shards", self.shards)
+            .set("files", self.files)
             .set("bw_mean", self.bw.mean())
             .set("bw_stddev", self.bw.stddev())
             .set("repeats", self.bw.len())
@@ -45,7 +51,7 @@ impl SweepCell {
 
 /// Run one synthetic experiment once.
 pub fn run_synthetic(exp: &Experiment) -> PhaseReport {
-    let driver = SyntheticDriver::new(exp.fs, exp.params());
+    let driver = SyntheticDriver::new_sharded(exp.fs, exp.params(), exp.shards);
     driver.run(exp.cluster())
 }
 
@@ -64,6 +70,28 @@ pub fn sweep_synthetic(
     testbed: Testbed,
     write_phase: bool,
 ) -> Vec<SweepCell> {
+    sweep_synthetic_sharded(
+        config, access, nodes_list, fs_kinds, ppn, m, repeats, testbed, write_phase, 1, 1,
+    )
+}
+
+/// [`sweep_synthetic`] against an N-shard metadata plane with the
+/// dataset striped over `files` shared files; `shards == files == 1`
+/// is exactly the unsharded sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_synthetic_sharded(
+    config: Config,
+    access: u64,
+    nodes_list: &[usize],
+    fs_kinds: &[FsKind],
+    ppn: usize,
+    m: usize,
+    repeats: usize,
+    testbed: Testbed,
+    write_phase: bool,
+    shards: usize,
+    files: usize,
+) -> Vec<SweepCell> {
     let mut cells = Vec::new();
     for &fs in fs_kinds {
         for &nodes in nodes_list {
@@ -71,9 +99,9 @@ pub fn sweep_synthetic(
             let mut rpcs = 0;
             for rep in 0..repeats {
                 let seed = 1000 + rep as u64;
-                let params = config.params(nodes, ppn, access, m, seed);
-                let driver = SyntheticDriver::new(fs, params);
-                let report = driver.run(testbed.cluster(nodes, seed ^ 0xBEEF));
+                let params = config.params(nodes, ppn, access, m, seed).with_files(files);
+                let driver = SyntheticDriver::new_sharded(fs, params, shards);
+                let report = driver.run(testbed.cluster_sharded(nodes, seed ^ 0xBEEF, shards));
                 bw.push(if write_phase {
                     report.write_bw()
                 } else {
@@ -86,6 +114,8 @@ pub fn sweep_synthetic(
                 config,
                 nodes,
                 access,
+                shards,
+                files,
                 bw,
                 rpcs,
             });
@@ -192,6 +222,19 @@ pub fn write_results(name: &str, payload: Json) {
     }
     let path = dir.join(format!("{name}.json"));
     let _ = std::fs::write(path, payload.pretty());
+}
+
+/// Machine-readable bench output: when the bench was invoked with
+/// `--json`, write `target/results/BENCH_<name>.json` and echo the path
+/// (so CI / perf-trajectory tooling can diff results across PRs
+/// without scraping tables). No-op otherwise.
+pub fn maybe_write_bench_json(name: &str, payload: Json) {
+    if !std::env::args().any(|a| a == "--json") {
+        return;
+    }
+    let file = format!("BENCH_{name}");
+    write_results(&file, payload);
+    eprintln!("bench json: target/results/{file}.json");
 }
 
 #[cfg(test)]

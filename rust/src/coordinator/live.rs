@@ -1,14 +1,16 @@
 //! The live execution engine: real OS threads, real channels, real
-//! bytes. Clients run on their own threads; the global server is a
-//! master thread dispatching to a round-robin worker pool over the
-//! shared server state — the same structure §5.1.2 describes, actually
-//! concurrent. Used by integration tests and the end-to-end examples
-//! (where PJRT compute runs per batch); the DES engine remains the
-//! timing authority for benchmarks.
+//! bytes. Clients run on their own threads; the metadata plane is N
+//! independent shard groups, each a master thread dispatching to a
+//! round-robin worker pool over that shard's state — the structure
+//! §5.1.2 describes, actually concurrent, multiplied by the shard
+//! count. One lock per shard: workers of different shards never
+//! contend (DESIGN.md §Sharding). Used by integration tests and the
+//! end-to-end examples (where PJRT compute runs per batch); the DES
+//! engine remains the timing authority for benchmarks.
 
 use crate::basefs::{
-    new_shared_bb, BfsError, ClientId, Fabric, FileId, GlobalServerState, Request, Response,
-    SharedBb, UpfsStore,
+    new_shared_bb, shard_of, BfsError, ClientId, Fabric, FileId, GlobalServerState, Request,
+    Response, SharedBb, UpfsStore,
 };
 use crate::interval::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -20,41 +22,57 @@ struct Envelope {
     reply: Sender<Response>,
 }
 
+struct BatchEnvelope {
+    reqs: Vec<Request>,
+    reply: Sender<Vec<Response>>,
+}
+
 enum Msg {
     Rpc(Envelope),
-    /// Stop the server; safe even while fabric clones of the sender
+    /// A per-shard request vector: handled under ONE lock acquisition
+    /// and answered with one reply message (the batching fast path for
+    /// commit phases).
+    Batch(BatchEnvelope),
+    /// Stop the shard; safe even while fabric clones of the sender
     /// still exist (the master exits on receipt).
     Stop,
 }
 
-/// Handle to the running global server (master + workers).
-pub struct LiveServer {
-    master_tx: Sender<Msg>,
+/// One metadata shard's running threads + state.
+struct ShardGroup {
+    tx: Sender<Msg>,
     master: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// Kept so shutdown can assert the state outlives every worker.
+    state: Arc<Mutex<GlobalServerState>>,
 }
 
-impl LiveServer {
-    /// Spawn the master and `nworkers` workers.
-    pub fn spawn(nworkers: usize) -> Self {
+impl ShardGroup {
+    fn spawn(nworkers: usize) -> Self {
         assert!(nworkers > 0);
         let state = Arc::new(Mutex::new(GlobalServerState::new()));
-        let (master_tx, master_rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let (tx, master_rx): (Sender<Msg>, Receiver<Msg>) = channel();
 
         let mut worker_txs = Vec::new();
         let mut workers = Vec::new();
         for _ in 0..nworkers {
-            let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
-            worker_txs.push(tx);
+            let (wtx, wrx): (Sender<Msg>, Receiver<Msg>) = channel();
+            worker_txs.push(wtx);
             let state = state.clone();
             workers.push(std::thread::spawn(move || {
                 // Identical worker routine: drain the FIFO task queue.
-                while let Ok(msg) = rx.recv() {
+                while let Ok(msg) = wrx.recv() {
                     match msg {
                         Msg::Rpc(env) => {
                             let resp = state.lock().unwrap().handle(env.req);
                             // Receiver may have given up; ignore failure.
                             let _ = env.reply.send(resp);
+                        }
+                        Msg::Batch(env) => {
+                            let mut guard = state.lock().unwrap();
+                            let resps = env.reqs.into_iter().map(|r| guard.handle(r)).collect();
+                            drop(guard);
+                            let _ = env.reply.send(resps);
                         }
                         Msg::Stop => break,
                     }
@@ -62,13 +80,14 @@ impl LiveServer {
             }));
         }
 
-        // Master: receives every message, appends to workers round-robin.
+        // Master: receives the shard's messages, appends to workers
+        // round-robin.
         let master = std::thread::spawn(move || {
             let mut next = 0usize;
             while let Ok(msg) = master_rx.recv() {
                 match msg {
-                    Msg::Rpc(env) => {
-                        let _ = worker_txs[next].send(Msg::Rpc(env));
+                    Msg::Rpc(_) | Msg::Batch(_) => {
+                        let _ = worker_txs[next].send(msg);
                         next = (next + 1) % worker_txs.len();
                     }
                     Msg::Stop => {
@@ -82,32 +101,86 @@ impl LiveServer {
         });
 
         Self {
-            master_tx,
+            tx,
             master: Some(master),
             workers,
+            state,
         }
     }
 
-    fn tx(&self) -> Sender<Msg> {
-        self.master_tx.clone()
-    }
-
-    /// Stop the server and join all threads. Safe while fabric clones of
-    /// the sender are still alive; their later RPCs will error.
-    pub fn shutdown(mut self) {
-        let _ = self.master_tx.send(Msg::Stop);
+    /// Stop and join this shard's threads. Ordering matters: the state
+    /// must not be dropped while workers can still touch it, so workers
+    /// are joined *before* the `Arc` strong count is allowed to fall —
+    /// `self.state` is released only after every join returns.
+    fn stop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
         if let Some(m) = self.master.take() {
             let _ = m.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // After the joins, every worker's clone of the state has been
+        // released — ours must be the only strong reference left.
+        debug_assert_eq!(
+            Arc::strong_count(&self.state),
+            1,
+            "a worker outlived join and still holds the shard state"
+        );
+    }
+}
+
+impl Drop for ShardGroup {
+    fn drop(&mut self) {
+        // A LiveServer dropped without an explicit shutdown() must not
+        // leak parked threads or let them race the state teardown.
+        self.stop();
+    }
+}
+
+/// Handle to the running metadata plane (one master + worker pool per
+/// shard).
+pub struct LiveServer {
+    shards: Vec<ShardGroup>,
+}
+
+impl LiveServer {
+    /// Single-shard server — the historical layout.
+    pub fn spawn(nworkers: usize) -> Self {
+        Self::spawn_sharded(1, nworkers)
+    }
+
+    /// `nshards` independent shard groups with `nworkers` workers each.
+    pub fn spawn_sharded(nshards: usize, nworkers: usize) -> Self {
+        assert!(nshards > 0);
+        Self {
+            shards: (0..nshards).map(|_| ShardGroup::spawn(nworkers)).collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn txs(&self) -> Vec<Sender<Msg>> {
+        self.shards.iter().map(|s| s.tx.clone()).collect()
+    }
+
+    /// Stop the plane and join all threads (workers before state drop).
+    /// Safe while fabric clones of the senders are still alive; their
+    /// later RPCs will error. Dropping without calling this performs
+    /// the same ordered teardown.
+    pub fn shutdown(mut self) {
+        for shard in &mut self.shards {
+            shard.stop();
+        }
     }
 }
 
 /// One client's view of the live cluster.
 pub struct LiveFabric {
-    rpc_tx: Sender<Msg>,
+    /// Per-shard RPC channels; requests route by `shard_of(file)`.
+    shard_txs: Vec<Sender<Msg>>,
     /// All clients' BB stores (data plane; index = ClientId).
     bbs: Vec<SharedBb>,
     upfs: Arc<RwLock<UpfsStore>>,
@@ -117,18 +190,59 @@ impl LiveFabric {
     pub fn bb_of(&self, client: ClientId) -> SharedBb {
         self.bbs[client as usize].clone()
     }
+
+    fn tx_for(&self, file: FileId) -> &Sender<Msg> {
+        &self.shard_txs[shard_of(file, self.shard_txs.len())]
+    }
 }
 
 impl Fabric for LiveFabric {
     fn rpc(&mut self, _client: ClientId, req: Request) -> Response {
         let (reply_tx, reply_rx) = channel();
-        self.rpc_tx
+        self.tx_for(req.file())
             .send(Msg::Rpc(Envelope {
                 req,
                 reply: reply_tx,
             }))
             .expect("server gone");
         reply_rx.recv().expect("server dropped reply")
+    }
+
+    /// Group requests into per-shard vectors, send each vector as ONE
+    /// message, and reassemble the replies in request order.
+    fn rpc_batch(&mut self, _client: ClientId, reqs: Vec<Request>) -> Vec<Response> {
+        let nshards = self.shard_txs.len();
+        // position i of `reqs` -> (shard, index within that shard's vec)
+        let mut placement = Vec::with_capacity(reqs.len());
+        let mut per_shard: Vec<Vec<Request>> = (0..nshards).map(|_| Vec::new()).collect();
+        for req in reqs {
+            let s = shard_of(req.file(), nshards);
+            placement.push((s, per_shard[s].len()));
+            per_shard[s].push(req);
+        }
+        let mut replies: Vec<Option<Receiver<Vec<Response>>>> =
+            (0..nshards).map(|_| None).collect();
+        for (s, batch) in per_shard.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let (reply_tx, reply_rx) = channel();
+            self.shard_txs[s]
+                .send(Msg::Batch(BatchEnvelope {
+                    reqs: batch,
+                    reply: reply_tx,
+                }))
+                .expect("server gone");
+            replies[s] = Some(reply_rx);
+        }
+        let collected: Vec<Option<Vec<Response>>> = replies
+            .into_iter()
+            .map(|rx| rx.map(|rx| rx.recv().expect("server dropped batch reply")))
+            .collect();
+        placement
+            .into_iter()
+            .map(|(s, i)| collected[s].as_ref().expect("routed shard replied")[i].clone())
+            .collect()
     }
 
     fn fetch(
@@ -156,7 +270,8 @@ impl Fabric for LiveFabric {
     }
 }
 
-/// A live cluster: the server plus one fabric per client.
+/// A live cluster: the sharded metadata plane plus one fabric per
+/// client.
 pub struct LiveCluster {
     pub server: LiveServer,
     pub fabrics: Vec<LiveFabric>,
@@ -164,12 +279,17 @@ pub struct LiveCluster {
 
 impl LiveCluster {
     pub fn new(nclients: usize, nworkers: usize) -> Self {
-        let server = LiveServer::spawn(nworkers);
+        Self::new_sharded(nclients, 1, nworkers)
+    }
+
+    /// `nshards` shard groups with `nworkers` workers each.
+    pub fn new_sharded(nclients: usize, nshards: usize, nworkers: usize) -> Self {
+        let server = LiveServer::spawn_sharded(nshards, nworkers);
         let bbs = new_shared_bb(nclients, false);
         let upfs = Arc::new(RwLock::new(UpfsStore::new()));
         let fabrics = (0..nclients)
             .map(|_| LiveFabric {
-                rpc_tx: server.tx(),
+                shard_txs: server.txs(),
                 bbs: bbs.clone(),
                 upfs: upfs.clone(),
             })
@@ -236,5 +356,95 @@ mod tests {
             h.join().unwrap();
         }
         cluster.shutdown();
+    }
+
+    #[test]
+    fn sharded_live_cluster_isolates_files_per_shard() {
+        // 8 clients on a 4-shard plane, each client on its own file:
+        // concurrent attach+query traffic spread across shard locks.
+        const N: usize = 8;
+        let mut cluster = LiveCluster::new_sharded(N, 4, 2);
+        assert_eq!(cluster.server.shard_count(), 4);
+        let fabrics = cluster.take_fabrics();
+        let mut handles = Vec::new();
+        for (i, mut fabric) in fabrics.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let mut c = ClientCore::new(i as u32, fabric.bb_of(i as u32));
+                let f = c.open(&format!("/shard-iso/{i}"));
+                for k in 0..40u64 {
+                    c.write_at(&mut fabric, f, k * 32, &[i as u8; 32]).unwrap();
+                    c.attach(&mut fabric, f, k * 32, 32).unwrap();
+                }
+                let ivs = c.query(&mut fabric, f, 0, 40 * 32).unwrap();
+                assert_eq!(ivs.iter().map(|iv| iv.range.len()).sum::<u64>(), 40 * 32);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn live_batch_rpc_spans_shards() {
+        let mut cluster = LiveCluster::new_sharded(2, 4, 2);
+        let mut fabrics = cluster.take_fabrics();
+        let mut w = ClientCore::new(0, fabrics[0].bb_of(0));
+        let mut files = Vec::new();
+        for i in 0..12 {
+            let f = w.open(&format!("/batch-live/{i}"));
+            w.write(&mut fabrics[0], f, &vec![3u8; i + 1]).unwrap();
+            files.push(f);
+        }
+        w.attach_files(&mut fabrics[0], &files).unwrap();
+        let mut r = ClientCore::new(1, fabrics[1].bb_of(1));
+        for i in 0..12 {
+            r.open(&format!("/batch-live/{i}"));
+        }
+        let maps = r.query_files(&mut fabrics[1], &files).unwrap();
+        for (i, ivs) in maps.iter().enumerate() {
+            assert_eq!(ivs.len(), 1, "file {i}");
+            assert_eq!(ivs[0].range, Range::new(0, i as u64 + 1));
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_threads() {
+        // Regression: dropping a cluster (or server) without calling
+        // shutdown() must tear the threads down in order, not leak them.
+        for _ in 0..8 {
+            let mut cluster = LiveCluster::new_sharded(2, 3, 2);
+            let mut fabrics = cluster.take_fabrics();
+            let mut c = ClientCore::new(0, fabrics[0].bb_of(0));
+            let f = c.open("/drop");
+            c.write(&mut fabrics[0], f, b"x").unwrap();
+            c.attach_file(&mut fabrics[0], f).unwrap();
+            drop(cluster); // no shutdown() on purpose
+        }
+    }
+
+    #[test]
+    fn repeated_spawn_shutdown_no_deadlock() {
+        // Regression for shutdown ordering: spawn/stop a multi-shard
+        // plane repeatedly under live traffic.
+        for round in 0..12 {
+            let mut cluster = LiveCluster::new_sharded(4, 4, 3);
+            let fabrics = cluster.take_fabrics();
+            let mut handles = Vec::new();
+            for (i, mut fabric) in fabrics.into_iter().enumerate() {
+                handles.push(std::thread::spawn(move || {
+                    let mut c = ClientCore::new(i as u32, fabric.bb_of(i as u32));
+                    let f = c.open(&format!("/cycle/{round}/{i}"));
+                    c.write(&mut fabric, f, &[1u8; 128]).unwrap();
+                    c.attach_file(&mut fabric, f).unwrap();
+                    assert_eq!(c.query(&mut fabric, f, 0, 128).unwrap().len(), 1);
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            cluster.shutdown();
+        }
     }
 }

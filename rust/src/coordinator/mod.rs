@@ -10,7 +10,7 @@ pub mod des;
 pub mod live;
 
 pub use des::{
-    render_sweep, run_synthetic, sweep_dl, sweep_scr, sweep_synthetic, write_results, SweepCell,
-    DEFAULT_REPEATS,
+    maybe_write_bench_json, render_sweep, run_synthetic, sweep_dl, sweep_scr, sweep_synthetic,
+    sweep_synthetic_sharded, write_results, SweepCell, DEFAULT_REPEATS,
 };
 pub use live::{LiveCluster, LiveFabric, LiveServer};

@@ -104,6 +104,15 @@ impl WorkloadFs for CommitFs {
         self.commit(fabric, file)
     }
 
+    /// Multi-file commit: attach requests batched per metadata shard.
+    fn end_write_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        self.core.attach_files(fabric, files)
+    }
+
     /// Commit consistency needs nothing reader-side.
     fn begin_read_phase(
         &mut self,
@@ -152,6 +161,34 @@ mod tests {
         w.commit(&mut fabric, f).unwrap();
         let got = CommitFs::read_at(&mut r, &mut fabric, f, Range::new(0, 10)).unwrap();
         assert_eq!(got, b"ababababab");
+    }
+
+    #[test]
+    fn multi_file_commit_batches_to_one_rpc_per_shard() {
+        // Pins the INTENDED pricing change of PR 1: publishing two
+        // files (e.g. SCR's own + partner checkpoint) through
+        // end_write_phase_all costs ONE RPC on a 1-shard plane, where
+        // the old per-file path cost two. SCR/fig5 checkpoint numbers
+        // shift accordingly; this is batching, not drift.
+        let mut fabric = TestFabric::new(1);
+        let mut w = CommitFs::new(0, fabric.bb_of(0));
+        let a = w.open(&mut fabric, "/ckpt.own");
+        let b = w.open(&mut fabric, "/ckpt.partner");
+        CommitFs::write_at(&mut w, &mut fabric, a, 0, &[1u8; 64]).unwrap();
+        CommitFs::write_at(&mut w, &mut fabric, b, 0, &[2u8; 64]).unwrap();
+        w.end_write_phase_all(&mut fabric, &[a, b]).unwrap();
+        assert_eq!(fabric.inner.counters.rpcs, 1, "batched publish");
+
+        // The sequential path still costs one RPC per file.
+        let mut fabric2 = TestFabric::new(1);
+        let mut w2 = CommitFs::new(0, fabric2.bb_of(0));
+        let a2 = w2.open(&mut fabric2, "/ckpt.own");
+        let b2 = w2.open(&mut fabric2, "/ckpt.partner");
+        CommitFs::write_at(&mut w2, &mut fabric2, a2, 0, &[1u8; 64]).unwrap();
+        CommitFs::write_at(&mut w2, &mut fabric2, b2, 0, &[2u8; 64]).unwrap();
+        w2.end_write_phase(&mut fabric2, a2).unwrap();
+        w2.end_write_phase(&mut fabric2, b2).unwrap();
+        assert_eq!(fabric2.inner.counters.rpcs, 2, "per-file publish");
     }
 
     #[test]

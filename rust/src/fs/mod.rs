@@ -91,6 +91,35 @@ pub trait WorkloadFs {
     fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId)
         -> Result<(), BfsError>;
 
+    /// End-of-write-phase synchronization over many files at once.
+    /// Default: one `end_write_phase` per file. Layers whose sync is an
+    /// RPC (CommitFS, SessionFS) override this to batch the attach
+    /// requests into per-shard vectors — one RPC per metadata shard
+    /// touched instead of one per file.
+    fn end_write_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        for &file in files {
+            self.end_write_phase(fabric, file)?;
+        }
+        Ok(())
+    }
+
+    /// Start-of-read-phase synchronization over many files at once;
+    /// same batching contract as [`Self::end_write_phase_all`].
+    fn begin_read_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        for &file in files {
+            self.begin_read_phase(fabric, file)?;
+        }
+        Ok(())
+    }
+
     /// Underlying client (metrics, direct primitive access in tests).
     fn core(&mut self) -> &mut ClientCore;
 }

@@ -137,6 +137,38 @@ impl WorkloadFs for SessionFs {
         self.session_open(fabric, file)
     }
 
+    /// Multi-file session_close: one batched attach per metadata shard,
+    /// then drop all the session snapshots.
+    fn end_write_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        self.core.attach_files(fabric, files)?;
+        for file in files {
+            self.session_view.remove(file);
+        }
+        Ok(())
+    }
+
+    /// Multi-file session_open: one batched query_file per metadata
+    /// shard; snapshots cached per file as usual.
+    fn begin_read_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        let maps = self.core.query_files(fabric, files)?;
+        for (&file, ivs) in files.iter().zip(maps) {
+            let mut tree = GlobalIntervalTree::new();
+            for iv in ivs {
+                tree.attach(iv.range, iv.owner);
+            }
+            self.session_view.insert(file, tree);
+        }
+        Ok(())
+    }
+
     fn core(&mut self) -> &mut ClientCore {
         &mut self.core
     }

@@ -28,13 +28,24 @@ impl LocalInterval {
 }
 
 /// Errors surfaced to the BaseFS layer (Table 5 semantics).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LocalTreeError {
-    #[error("attach of unwritten bytes in {0}")]
     AttachUnwritten(String),
-    #[error("detach of range {0} that was never attached")]
     DetachUnattached(String),
 }
+
+impl std::fmt::Display for LocalTreeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LocalTreeError::AttachUnwritten(r) => write!(f, "attach of unwritten bytes in {r}"),
+            LocalTreeError::DetachUnattached(r) => {
+                write!(f, "detach of range {r} that was never attached")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LocalTreeError {}
 
 /// Non-overlapping map `file_start -> (file_end, bb_start, attached)`.
 #[derive(Debug, Clone, Default)]

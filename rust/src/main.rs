@@ -11,7 +11,9 @@
 //! ```
 
 use pscnf::config::{parse_ini, Experiment, Testbed};
-use pscnf::coordinator::{render_sweep, sweep_dl, sweep_scr, sweep_synthetic, write_results};
+use pscnf::coordinator::{
+    render_sweep, sweep_dl, sweep_scr, sweep_synthetic_sharded, write_results,
+};
 use pscnf::fs::FsKind;
 use pscnf::model::{litmus, ConsistencyModel};
 use pscnf::runtime::{Runtime, TrainState};
@@ -155,6 +157,18 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         .opt("size", "BYTES", Some("8K"), "access size (e.g. 8K, 8M)")
         .opt("m", "N", Some("10"), "accesses per process")
         .opt(
+            "shards",
+            "N",
+            Some("1"),
+            "metadata-plane shards (1 = the paper's single server)",
+        )
+        .opt(
+            "files",
+            "N",
+            Some("1"),
+            "shared files the dataset is striped over",
+        )
+        .opt(
             "config-file",
             "PATH",
             None,
@@ -162,31 +176,77 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         );
     let args = spec.parse(argv)?;
 
-    let mut exp = Experiment::default();
+    let mut workload = WlConfig::parse(args.str("workload")?)?;
+    let mut size = args.bytes("size")?;
+    let mut m = args.usize("m")?;
+    let mut ppn = args.usize("ppn")?;
+    let mut testbed = Testbed::parse(args.str("testbed")?)?;
+    let mut fs_kinds = parse_fs_list(args.str("fs")?)?;
+    let mut nodes_list = parse_nodes_list(args.str("nodes")?)?;
+    let repeats = args.usize("repeats")?;
+    let mut shards = args.usize("shards")?;
+    let mut files = args.usize("files")?;
+    // Config-file values apply wherever the flag was not given on the
+    // command line AND the file actually sets the key (CLI > file >
+    // built-in default; a file that omits a key must not disturb the
+    // CLI default — notably fs, whose CLI default "both" differs from
+    // the Experiment struct default).
     if let Some(path) = args.get("config-file") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        exp.apply_ini(&parse_ini(&text)?)?;
+        let ini = parse_ini(&text)?;
+        let mut exp = Experiment::default();
+        exp.apply_ini(&ini)?;
+        let in_file =
+            |sec: &str, key: &str| ini.get(sec).is_some_and(|s| s.contains_key(key));
+        if !args.explicit("workload") && in_file("workload", "config") {
+            workload = exp.workload;
+        }
+        if !args.explicit("size") && in_file("workload", "size") {
+            size = exp.access_size;
+        }
+        if !args.explicit("m") && in_file("workload", "m") {
+            m = exp.accesses_per_proc;
+        }
+        if !args.explicit("ppn") && in_file("cluster", "ppn") {
+            ppn = exp.ppn;
+        }
+        if !args.explicit("testbed") && in_file("cluster", "testbed") {
+            testbed = exp.testbed;
+        }
+        if !args.explicit("fs") && in_file("workload", "fs") {
+            fs_kinds = vec![exp.fs];
+        }
+        if !args.explicit("nodes") && in_file("cluster", "nodes") {
+            nodes_list = vec![exp.nodes];
+        }
+        if !args.explicit("shards") && in_file("cluster", "shards") {
+            shards = exp.shards;
+        }
+        if !args.explicit("files") && in_file("workload", "files") {
+            files = exp.files;
+        }
     }
-    let workload = WlConfig::parse(args.str("workload")?)?;
-    let size = args.bytes("size")?;
-    let m = args.usize("m")?;
-    let ppn = args.usize("ppn")?;
-    let testbed = Testbed::parse(args.str("testbed")?)?;
-    let fs_kinds = parse_fs_list(args.str("fs")?)?;
-    let nodes_list = parse_nodes_list(args.str("nodes")?)?;
-    let repeats = args.usize("repeats")?;
+    if shards == 0 {
+        return Err("--shards must be >= 1".to_string());
+    }
+    if files == 0 {
+        return Err("--files must be >= 1".to_string());
+    }
 
     let write_phase = matches!(workload, WlConfig::CnW | WlConfig::SnW);
-    let cells = sweep_synthetic(
-        workload, size, &nodes_list, &fs_kinds, ppn, m, repeats, testbed, write_phase,
+    let cells = sweep_synthetic_sharded(
+        workload, size, &nodes_list, &fs_kinds, ppn, m, repeats, testbed, write_phase, shards,
+        files,
     );
     let title = format!(
-        "{} access={} ppn={} m={} testbed={} ({} bandwidth)",
+        "{} access={} ppn={} m={} testbed={} shards={} files={} ({} bandwidth)",
         workload.name(),
         fmt_bytes(size),
         ppn,
         m,
         testbed.name(),
+        shards,
+        files,
         if write_phase { "write" } else { "read" },
     );
     println!("{}", render_sweep(&title, &cells));

@@ -69,9 +69,16 @@ impl Trace {
 }
 
 /// po ∪ so has a cycle — the trace is not a valid execution.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("po ∪ so contains a cycle through event {0}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CycleError(pub OpId);
+
+impl std::fmt::Display for CycleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "po ∪ so contains a cycle through event {}", self.0)
+    }
+}
+
+impl std::error::Error for CycleError {}
 
 /// Dense reachability closure of po ∪ so over a trace. For the trace
 /// sizes the checker sees (litmus tests, recorded test runs: up to a few

@@ -8,9 +8,13 @@
 //! `client.compile` → `execute`. One compiled executable per model
 //! variant, cached by name.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
+mod xla_stub;
+use xla_stub as xla;
 
 /// Model geometry parsed from `artifacts/manifest.txt`.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,0 +1,213 @@
+//! API-compatible stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment has neither the XLA shared libraries
+//! nor the binding crate, so [`super`] compiles against this shim
+//! instead (see DESIGN.md §6). Contract:
+//!
+//! - [`Literal`] is fully functional host-side (vec1/reshape/
+//!   element_count/to_vec) so shape-validation code and its tests work.
+//! - [`PjRtClient::cpu`] always errors with a clear message; everything
+//!   that requires a live client is therefore unreachable and returns
+//!   the same error defensively.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `runtime/mod.rs` (`use xla_stub as xla` → `use xla`); the rest of
+//! the runtime is written against the genuine API surface.
+
+use std::fmt;
+
+/// Stub-side error; mirrors the binding crate's Display-able error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+impl From<XlaError> for crate::util::error::Error {
+    fn from(e: XlaError) -> Self {
+        crate::util::error::Error::msg(e.0)
+    }
+}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT/XLA bindings unavailable in this build (offline stub); \
+         install the native XLA runtime to enable `pscnf train`"
+            .to_string(),
+    )
+}
+
+/// Element types a [`Literal`] can hold. Public only within the stub
+/// module (the module itself is private to `runtime`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Native element types convertible to/from [`Literal`] storage.
+pub trait NativeType: Copy {
+    fn wrap(v: &[Self]) -> Data;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>, XlaError>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: &[Self]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>, XlaError> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(XlaError("literal is not f32".to_string())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: &[Self]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>, XlaError> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(XlaError("literal is not i32".to_string())),
+        }
+    }
+}
+
+/// Host-side typed array with dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v),
+        }
+    }
+
+    /// Reinterpret with new dimensions; errors if element counts differ.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let want: i64 = dims.iter().product();
+        if want != self.data.len() as i64 {
+            return Err(XlaError(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data,
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::unwrap(self)
+    }
+
+    /// Flatten a tuple literal; the stub never produces tuples, so this
+    /// is only reachable through a (stubbed-out) execute path.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (opaque).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Computation wrapper (opaque).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (opaque).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle (opaque).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client. In the stub, construction always fails — callers
+/// already handle the error path (artifacts missing / platform absent).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let l = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let bad = Literal::vec1(&[1i32, 2]).reshape(&[3]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_with_clear_message() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}

@@ -313,12 +313,12 @@ impl Driver for ScrDriver {
                     }
                 }
                 Stage::Publish => {
+                    // Own checkpoint + partner copy published in one
+                    // batched sync (per-shard RPC vectors).
+                    let files = [self.own_file[rank], self.partner_file[rank]];
                     self.fs[rank]
-                        .end_write_phase(&mut self.fabric, self.own_file[rank])
-                        .expect("publish own");
-                    self.fs[rank]
-                        .end_write_phase(&mut self.fabric, self.partner_file[rank])
-                        .expect("publish partner");
+                        .end_write_phase_all(&mut self.fabric, &files)
+                        .expect("publish ckpt files");
                     self.stage[rank] = Stage::BarrierThenRestart;
                     self.drain(rank);
                 }

@@ -83,9 +83,10 @@ pub enum SimOp {
     SsdRead { bytes: u64 },
     /// Read `bytes` from a local in-memory buffer (SCR restart path).
     MemRead { bytes: u64 },
-    /// Round-trip synchronization RPC to the global server touching
-    /// `intervals` interval-tree entries (attach/query/detach).
-    Rpc { intervals: usize },
+    /// Round-trip synchronization RPC to metadata shard `shard`
+    /// touching `intervals` interval-tree entries (attach/query/detach).
+    /// Unsharded callers pass `shard: 0`.
+    Rpc { intervals: usize, shard: usize },
     /// Fetch `bytes` from `owner_node` into this rank's node via
     /// RDMA-like client-to-client transfer. `from_ssd`: whether the owner
     /// serves from its SSD (true) or its memory buffer (false).
@@ -129,17 +130,33 @@ pub struct RunStats {
 }
 
 /// Deadlock or driver error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("deadlock: {waiting} rank(s) parked ({barrier} at barrier, {recv} in recv) with no runnable rank")]
     Deadlock {
         waiting: usize,
         barrier: usize,
         recv: usize,
     },
-    #[error("rank {0} issued an op after Done")]
     OpAfterDone(usize),
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock {
+                waiting,
+                barrier,
+                recv,
+            } => write!(
+                f,
+                "deadlock: {waiting} rank(s) parked ({barrier} at barrier, {recv} in recv) with no runnable rank"
+            ),
+            SimError::OpAfterDone(rank) => write!(f, "rank {rank} issued an op after Done"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum RankState {
@@ -227,10 +244,10 @@ impl Engine {
                     heap.push(Reverse((t, seq, rank)));
                     seq += 1;
                 }
-                SimOp::Rpc { intervals } => {
+                SimOp::Rpc { intervals, shard } => {
                     // request: client tx + latency; server; response: latency.
                     let sent = self.cluster.nics[node].send(now, RPC_BYTES);
-                    let replied = self.cluster.server.serve_rpc(sent, intervals);
+                    let replied = self.cluster.server.serve_rpc(sent, shard, intervals);
                     let t = replied + self.cluster.net.latency;
                     heap.push(Reverse((t, seq, rank)));
                     seq += 1;
@@ -524,7 +541,7 @@ mod tests {
         let ppn = 8;
         let mut e = engine(nodes, ppn);
         let scripts: Vec<Vec<SimOp>> = (0..nodes * ppn)
-            .map(|_| vec![SimOp::Rpc { intervals: 1 }; 50])
+            .map(|_| vec![SimOp::Rpc { intervals: 1, shard: 0 }; 50])
             .collect();
         let mut d = ScriptDriver::new(scripts);
         let stats = e.run(&mut d).unwrap();
@@ -532,6 +549,39 @@ mod tests {
         assert_eq!(rpcs, (nodes * ppn * 50) as u64);
         // Makespan at least master_dispatch * rpcs / 1 (serial master).
         assert!(stats.makespan >= Ns(3_000 * 50));
+    }
+
+    #[test]
+    fn sharded_rpc_flood_beats_single_master() {
+        let run = |shards: usize| {
+            let cluster = Cluster::new(
+                8,
+                SsdParams::catalyst(),
+                NetParams::ib_qdr(),
+                ServerParams::catalyst_sharded(shards),
+                UpfsParams::catalyst_lustre(),
+                7,
+            );
+            let mut e = Engine::uniform(cluster, 8);
+            let scripts: Vec<Vec<SimOp>> = (0..64)
+                .map(|r| {
+                    (0..50)
+                        .map(|k| SimOp::Rpc {
+                            intervals: 1,
+                            shard: (r + k) % shards,
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut d = ScriptDriver::new(scripts);
+            e.run(&mut d).unwrap().makespan
+        };
+        let flat = run(1);
+        let sharded = run(4);
+        assert!(
+            sharded.as_secs_f64() < 0.5 * flat.as_secs_f64(),
+            "4 shards {sharded:?} should halve the 1-shard flood {flat:?}"
+        );
     }
 
     #[test]
@@ -564,7 +614,7 @@ mod tests {
                 .map(|r| {
                     vec![
                         SimOp::SsdWrite { bytes: 1 << 20 },
-                        SimOp::Rpc { intervals: 2 },
+                        SimOp::Rpc { intervals: 2, shard: 0 },
                         SimOp::Barrier,
                         SimOp::SsdRead {
                             bytes: 8 << 10,

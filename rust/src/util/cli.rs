@@ -103,6 +103,7 @@ impl ArgSpec {
     pub fn parse(&self, argv: &[String]) -> Result<ParsedArgs, String> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
         let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut explicit: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
         let mut positional: Vec<String> = Vec::new();
 
         for o in &self.opts {
@@ -132,12 +133,14 @@ impl ArgSpec {
                     .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
                 match (spec.value, inline) {
                     (None, None) => {
+                        explicit.insert(name.clone());
                         flags.insert(name, true);
                     }
                     (None, Some(_)) => {
                         return Err(format!("option --{name} does not take a value"));
                     }
                     (Some(_), Some(v)) => {
+                        explicit.insert(name.clone());
                         values.insert(name, v);
                     }
                     (Some(_), None) => {
@@ -145,6 +148,7 @@ impl ArgSpec {
                         let v = argv
                             .get(i)
                             .ok_or_else(|| format!("option --{name} requires a value"))?;
+                        explicit.insert(name.clone());
                         values.insert(name, v.clone());
                     }
                 }
@@ -164,6 +168,7 @@ impl ArgSpec {
         Ok(ParsedArgs {
             values,
             flags,
+            explicit,
             positional,
         })
     }
@@ -174,12 +179,19 @@ impl ArgSpec {
 pub struct ParsedArgs {
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    explicit: std::collections::BTreeSet<String>,
     positional: Vec<String>,
 }
 
 impl ParsedArgs {
     pub fn flag(&self, name: &str) -> bool {
         *self.flags.get(name).unwrap_or(&false)
+    }
+
+    /// Was `name` given on the command line (vs. filled from its
+    /// default)? Lets callers layer CLI > config-file > built-in.
+    pub fn explicit(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -242,6 +254,18 @@ mod tests {
         assert_eq!(p.bytes("size").unwrap(), 8192);
         assert!(!p.flag("verbose"));
         assert_eq!(p.positional(0), Some("cnw"));
+        assert!(!p.explicit("nodes"), "default must not count as explicit");
+    }
+
+    #[test]
+    fn explicit_tracks_cli_provenance() {
+        let p = spec()
+            .parse(&args(&["cnw", "--nodes", "16", "--size=8M", "--verbose"]))
+            .unwrap();
+        assert!(p.explicit("nodes"));
+        assert!(p.explicit("size"));
+        assert!(p.explicit("verbose"));
+        assert!(!p.explicit("unknown-name"));
     }
 
     #[test]

@@ -1,56 +1,113 @@
-//! Minimal `log`-facade backend: level from `PSCNF_LOG` (error..trace),
-//! plain stderr lines. Installed once by binaries/benches via `init()`.
+//! Self-contained stderr logger (the `log` facade crate is not
+//! available offline). Level from `PSCNF_LOG` (`error..trace`), plain
+//! stderr lines. Installed once by binaries/benches via `init()`; the
+//! [`log_warn!`](crate::log_warn) family of macros is usable anywhere
+//! in the crate without `init()` (messages below the level are dropped).
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger;
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
 
-static LOGGER: StderrLogger = StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let lvl = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
+
+/// Max enabled level; default Warn.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 
 /// Install the logger; idempotent. Level from `PSCNF_LOG` env var
 /// (`error|warn|info|debug|trace`), default `warn`.
 pub fn init() {
     let level = match std::env::var("PSCNF_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("info") => LevelFilter::Info,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Warn,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
     };
-    // set_logger errors if called twice; that's fine.
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record; prefer the `log_*!` macros.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {target}: {args}", level.tag());
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::warn!("logger smoke");
+        init();
+        init();
+        crate::log_warn!("logger smoke");
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        init();
+        // Default level is warn unless PSCNF_LOG overrides; error is
+        // always at least as enabled as trace.
+        assert!(enabled(Level::Error) || !enabled(Level::Warn));
+        assert!(!enabled(Level::Trace) || enabled(Level::Debug));
     }
 }

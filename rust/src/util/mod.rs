@@ -2,6 +2,7 @@
 //! CLI parsing, logging. Everything above `util` is domain code.
 
 pub mod cli;
+pub mod error;
 pub mod hash;
 pub mod json;
 pub mod logger;

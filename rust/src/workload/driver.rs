@@ -84,7 +84,9 @@ pub struct SyntheticDriver {
     pub fabric: DesFabric,
     fs: Vec<Box<dyn WorkloadFs>>,
     params: WorkloadParams,
-    file: FileId,
+    /// The shared files the dataset is striped over (len = params.files;
+    /// one entry — the paper's N-to-1 layout — unless striping is on).
+    files: Vec<FileId>,
     stage: Vec<Stage>,
     write_plan: Vec<Vec<u64>>,
     read_plan: Vec<Vec<u64>>,
@@ -100,29 +102,48 @@ pub struct SyntheticDriver {
 impl SyntheticDriver {
     /// Set up a run on `kind` with benchmark-scale (phantom) storage.
     pub fn new(kind: FsKind, params: WorkloadParams) -> Self {
-        Self::with_fabric(kind, params, true)
+        Self::with_fabric(kind, params, true, 1)
     }
 
     /// Non-phantom variant for byte-exact integration tests.
     pub fn new_with_data(kind: FsKind, params: WorkloadParams) -> Self {
-        Self::with_fabric(kind, params, false)
+        Self::with_fabric(kind, params, false, 1)
     }
 
-    fn with_fabric(kind: FsKind, params: WorkloadParams, phantom: bool) -> Self {
+    /// Phantom run against an N-shard metadata plane. `shards == 1`
+    /// reproduces [`Self::new`] exactly (the refactor's anchor).
+    pub fn new_sharded(kind: FsKind, params: WorkloadParams, shards: usize) -> Self {
+        Self::with_fabric(kind, params, true, shards)
+    }
+
+    /// Byte-exact run against an N-shard metadata plane.
+    pub fn new_with_data_sharded(kind: FsKind, params: WorkloadParams, shards: usize) -> Self {
+        Self::with_fabric(kind, params, false, shards)
+    }
+
+    fn with_fabric(kind: FsKind, params: WorkloadParams, phantom: bool, shards: usize) -> Self {
         let nranks = params.nranks();
         let node_of: Vec<usize> = (0..nranks).map(|r| r / params.p).collect();
         let fabric = if phantom {
-            DesFabric::new_phantom(node_of)
+            DesFabric::new_phantom_sharded(node_of, shards)
         } else {
-            DesFabric::new(node_of)
+            DesFabric::new_sharded(node_of, shards)
         };
         let mut fs = build_fs(kind, &fabric);
         let mut fabric = fabric;
-        // Open the shared file everywhere up front (the paper measures
-        // the I/O phases, not the initial open).
-        let mut file = 0;
+        // Open the shared file(s) everywhere up front (the paper
+        // measures the I/O phases, not the initial open). The single-
+        // file path keeps its historical name so byte-exact runs stay
+        // comparable across versions.
+        let mut files = vec![0 as FileId; params.files.max(1)];
         for f in fs.iter_mut() {
-            file = f.open(&mut fabric, "/shared/nto1.dat");
+            if params.files <= 1 {
+                files[0] = f.open(&mut fabric, "/shared/nto1.dat");
+            } else {
+                for (i, slot) in files.iter_mut().enumerate() {
+                    *slot = f.open(&mut fabric, &format!("/shared/nto1.{i}.dat"));
+                }
+            }
         }
         // Drop any costs from layer-specific opens (MpiioFs queries).
         for r in 0..nranks {
@@ -150,7 +171,7 @@ impl SyntheticDriver {
         Self {
             fabric,
             fs,
-            file,
+            files,
             stage: (0..nranks)
                 .map(|r| {
                     if params.is_writer(r) {
@@ -216,9 +237,9 @@ impl Driver for SyntheticDriver {
             match self.stage[rank] {
                 Stage::Write(i) => {
                     if i < self.write_plan[rank].len() {
-                        let off = self.write_plan[rank][i];
+                        let (fidx, off) = self.params.locate(self.write_plan[rank][i]);
                         self.fs[rank]
-                            .write_at(&mut self.fabric, self.file, off, &self.payload)
+                            .write_at(&mut self.fabric, self.files[fidx], off, &self.payload)
                             .expect("write failed");
                         self.stage[rank] = Stage::Write(i + 1);
                         self.drain(rank);
@@ -227,8 +248,12 @@ impl Driver for SyntheticDriver {
                     }
                 }
                 Stage::EndWrite => {
+                    // Batched across files: one sync RPC per metadata
+                    // shard touched (files-with-no-writes are skipped by
+                    // the layer).
+                    let files = self.files.clone();
                     self.fs[rank]
-                        .end_write_phase(&mut self.fabric, self.file)
+                        .end_write_phase_all(&mut self.fabric, &files)
                         .expect("end_write_phase failed");
                     self.stage[rank] = Stage::Barrier;
                     self.drain(rank);
@@ -243,8 +268,9 @@ impl Driver for SyntheticDriver {
                     if self.read_plan[rank].is_empty() {
                         self.stage[rank] = Stage::Finish;
                     } else {
+                        let files = self.files.clone();
                         self.fs[rank]
-                            .begin_read_phase(&mut self.fabric, self.file)
+                            .begin_read_phase_all(&mut self.fabric, &files)
                             .expect("begin_read_phase failed");
                         self.read_start_min = self.read_start_min.min(now);
                         self.stage[rank] = Stage::Read(0);
@@ -253,9 +279,13 @@ impl Driver for SyntheticDriver {
                 }
                 Stage::Read(i) => {
                     if i < self.read_plan[rank].len() {
-                        let off = self.read_plan[rank][i];
+                        let (fidx, off) = self.params.locate(self.read_plan[rank][i]);
                         let got = self.fs[rank]
-                            .read_at(&mut self.fabric, self.file, Range::at(off, self.params.s))
+                            .read_at(
+                                &mut self.fabric,
+                                self.files[fidx],
+                                Range::at(off, self.params.s),
+                            )
                             .expect("read failed");
                         debug_assert_eq!(got.len() as u64, self.params.s);
                         self.stage[rank] = Stage::Read(i + 1);
@@ -387,5 +417,66 @@ mod tests {
         let b = run(FsKind::Session, Config::CsR, 4, 8 << 10);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.rpcs, b.rpcs);
+    }
+
+    #[test]
+    fn one_shard_is_bit_for_bit_the_unsharded_engine() {
+        // Regression anchor: `new` and `new_sharded(.., 1)` must stay
+        // the same code path forever (a future shards>1-only "fast
+        // path" that drifts 1-shard behavior trips this). The
+        // pre-refactor equivalence itself is pinned elsewhere:
+        // `singleton_batch_prices_identically_to_single_rpc` (fabric)
+        // proves the new batched sync path emits the historical per-file
+        // SimOps/counters, and tests/shard_plane.rs proves plane
+        // responses are shard-count-independent.
+        for kind in [FsKind::Commit, FsKind::Session, FsKind::Posix] {
+            let params = Config::CcR.params(4, 4, 8 << 10, 6, 7);
+            let old = SyntheticDriver::new(kind, params.clone())
+                .run(Cluster::catalyst(4, 99));
+            let new = SyntheticDriver::new_sharded(kind, params, 1)
+                .run(Cluster::catalyst(4, 99));
+            assert_eq!(old.makespan, new.makespan, "{kind:?}");
+            assert_eq!(old.rpcs, new.rpcs, "{kind:?}");
+            assert_eq!(old.write_end, new.write_end, "{kind:?}");
+            assert_eq!(old.read_start, new.read_start, "{kind:?}");
+            assert_eq!(old.read_end, new.read_end, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sharding_helps_commit_small_reads_on_striped_files() {
+        use crate::sim::{NetParams, ServerParams, SsdParams, UpfsParams};
+        let run_sharded = |shards: usize| {
+            let params = Config::CcR.params(8, 8, 8 << 10, 10, 7).with_files(16);
+            let cluster = Cluster::new(
+                8,
+                SsdParams::catalyst(),
+                NetParams::ib_qdr(),
+                ServerParams::catalyst_sharded(shards),
+                UpfsParams::catalyst_lustre(),
+                99,
+            );
+            SyntheticDriver::new_sharded(FsKind::Commit, params, shards)
+                .run(cluster)
+                .read_bw()
+        };
+        let one = run_sharded(1);
+        let eight = run_sharded(8);
+        assert!(
+            eight > 1.2 * one,
+            "8 shards {eight} should beat 1 shard {one} on per-read queries"
+        );
+    }
+
+    #[test]
+    fn striped_files_byte_exact_read_back() {
+        // Non-phantom CC-R over 4 files and 4 shards: the visibility
+        // invariants (reader sees writer bytes) must survive striping.
+        let params = Config::CcR.params(2, 2, 4096, 4, 3).with_files(4);
+        for kind in [FsKind::Session, FsKind::Commit] {
+            let driver = SyntheticDriver::new_with_data_sharded(kind, params.clone(), 4);
+            let rep = driver.run(Cluster::catalyst(2, 1));
+            assert!(rep.read_bw() > 0.0, "{kind:?}");
+        }
     }
 }

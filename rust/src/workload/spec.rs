@@ -54,6 +54,11 @@ pub struct WorkloadParams {
     pub read_pattern: Option<Pattern>,
     /// Seed for Random patterns.
     pub seed: u64,
+    /// Number of shared files the dataset is striped over (block
+    /// `b = offset / s` lives in file `b % files`). 1 = the paper's
+    /// N-to-1 single shared file; larger values spread metadata across
+    /// shards of the sharded plane (the `ablate_sharding` bench).
+    pub files: usize,
 }
 
 impl WorkloadParams {
@@ -90,6 +95,26 @@ impl WorkloadParams {
     /// Is rank a writer? Ranks [0, n_w*p) live on writing nodes.
     pub fn is_writer(&self, rank: usize) -> bool {
         rank < self.n_writers()
+    }
+
+    /// Stripe the dataset over `files` shared files (builder style).
+    pub fn with_files(mut self, files: usize) -> Self {
+        self.files = files.max(1);
+        self
+    }
+
+    /// Map a global dataset offset to (file index, offset within that
+    /// file). Blocks are striped round-robin so every writer/reader pair
+    /// agrees on placement and CC-R/CS-R visibility is preserved
+    /// file-by-file. Identity for `files == 1`.
+    pub fn locate(&self, offset: u64) -> (usize, u64) {
+        if self.files <= 1 {
+            return (0, offset);
+        }
+        let f = self.files as u64;
+        let block = offset / self.s;
+        let within = offset % self.s;
+        ((block % f) as usize, (block / f) * self.s + within)
     }
 
     /// Offsets written by writer index `w` (0-based among writers).
@@ -195,6 +220,7 @@ impl Config {
             write_pattern: wp,
             read_pattern: rp,
             seed,
+            files: 1,
         }
     }
 }
@@ -282,6 +308,29 @@ mod tests {
                 assert_eq!(off % p.s, 0);
             }
         }
+    }
+
+    #[test]
+    fn locate_stripes_blocks_bijectively() {
+        let p = params(Config::CcR).with_files(3);
+        // Every dataset block maps to a distinct (file, local offset)
+        // slot, and files stay s-aligned and dense.
+        let blocks = p.file_extent() / p.s;
+        let mut seen = std::collections::BTreeSet::new();
+        for b in 0..blocks {
+            let (f, local) = p.locate(b * p.s);
+            assert!(f < 3);
+            assert_eq!(local % p.s, 0);
+            assert!(seen.insert((f, local)), "slot collision at block {b}");
+        }
+        assert_eq!(seen.len() as u64, blocks);
+        // Identity when unstriped.
+        let p1 = params(Config::CcR);
+        assert_eq!(p1.locate(5 * p1.s + 7), (0, 5 * p1.s + 7));
+        // Non-aligned offsets keep their within-block remainder.
+        let (f, local) = p.locate(4 * p.s + 100);
+        assert_eq!(f, (4 % 3) as usize);
+        assert_eq!(local, (4 / 3) * p.s + 100);
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Sharding correctness anchors: a 1-shard and an 8-shard
+//! `MetadataPlane` must produce IDENTICAL responses for identical
+//! request traces (sharding changes performance, never semantics), and
+//! the routing invariants every layer relies on.
+
+use pscnf::basefs::{file_id, shard_of, MetadataPlane, Request, Response};
+use pscnf::interval::Range;
+use pscnf::util::rng::Rng;
+
+/// Deterministic pseudo-random request trace over `nfiles` files and
+/// `nclients` clients, exercising every request variant.
+fn random_trace(seed: u64, len: usize, nfiles: usize, nclients: u32) -> Vec<Request> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let files: Vec<u64> = (0..nfiles)
+        .map(|i| file_id(&format!("/trace/file.{i}")))
+        .collect();
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        let file = files[rng.gen_range_u64(nfiles as u64) as usize];
+        let client = rng.gen_range_u64(nclients as u64) as u32;
+        let start = rng.gen_range_u64(64) * 512;
+        let len_b = (1 + rng.gen_range_u64(32)) * 512;
+        let range = Range::at(start, len_b);
+        out.push(match rng.gen_range_u64(8) {
+            0 | 1 => Request::Attach {
+                file,
+                client,
+                ranges: vec![range, Range::at(start + 64 * 512, len_b)],
+            },
+            2 | 3 => Request::Query { file, range },
+            4 => Request::QueryFile { file },
+            5 => Request::Detach {
+                file,
+                client,
+                range,
+            },
+            6 => Request::Stat { file },
+            _ => Request::FlushNotify {
+                file,
+                len: start + len_b,
+            },
+        });
+    }
+    out
+}
+
+#[test]
+fn one_vs_eight_shard_trace_equivalence() {
+    // The ISSUE's acceptance anchor: replay identical traces against a
+    // 1-shard and an 8-shard plane; every response must match, as must
+    // the aggregate bookkeeping.
+    for seed in [7u64, 42, 1234] {
+        let trace = random_trace(seed, 4000, 24, 8);
+        let mut p1 = MetadataPlane::new(1);
+        let mut p8 = MetadataPlane::new(8);
+        for (i, req) in trace.into_iter().enumerate() {
+            let a = p1.handle(req.clone());
+            let b = p8.handle(req.clone());
+            assert_eq!(a, b, "seed {seed}, request {i}: {req:?}");
+        }
+        assert_eq!(p1.requests_handled(), p8.requests_handled());
+        assert_eq!(p1.total_intervals(), p8.total_intervals());
+    }
+}
+
+#[test]
+fn detach_file_trace_equivalence() {
+    // DetachFile touches whole-file state; interleave it with attaches
+    // to stress the path the random trace hits rarely.
+    let files: Vec<u64> = (0..12).map(|i| file_id(&format!("/df/{i}"))).collect();
+    let mut p1 = MetadataPlane::new(1);
+    let mut p8 = MetadataPlane::new(8);
+    let mut apply = |req: Request| {
+        let a = p1.handle(req.clone());
+        let b = p8.handle(req.clone());
+        assert_eq!(a, b, "{req:?}");
+    };
+    for round in 0..6u64 {
+        for (i, &file) in files.iter().enumerate() {
+            apply(Request::Attach {
+                file,
+                client: (i % 3) as u32,
+                ranges: vec![Range::at(round * 100, 50)],
+            });
+        }
+        for (i, &file) in files.iter().enumerate() {
+            if (i as u64 + round) % 3 == 0 {
+                apply(Request::DetachFile {
+                    file,
+                    client: (i % 3) as u32,
+                });
+            }
+            apply(Request::QueryFile { file });
+        }
+    }
+}
+
+#[test]
+fn same_file_always_routes_to_same_shard() {
+    for shards in [1usize, 2, 4, 8, 16] {
+        for i in 0..200 {
+            let f = file_id(&format!("/route/{i}"));
+            let first = shard_of(f, shards);
+            assert!(first < shards);
+            // Stability across repeated calls and across Request variants
+            // (every variant routes by Request::file()).
+            assert_eq!(first, shard_of(f, shards));
+            let reqs = [
+                Request::Stat { file: f },
+                Request::QueryFile { file: f },
+                Request::FlushNotify { file: f, len: 1 },
+            ];
+            for r in reqs {
+                assert_eq!(shard_of(r.file(), shards), first);
+            }
+        }
+    }
+}
+
+#[test]
+fn plane_state_partition_is_disjoint_and_complete() {
+    // After a trace, the union of per-shard interval counts equals the
+    // plane total, and each file's intervals live on exactly its routed
+    // shard — no file is split or duplicated across shards.
+    let trace = random_trace(99, 2000, 16, 4);
+    let mut plane = MetadataPlane::new(8);
+    for req in trace {
+        plane.handle(req);
+    }
+    let per_shard: usize = (0..8).map(|s| plane.shard(s).total_intervals()).sum();
+    assert_eq!(per_shard, plane.total_intervals());
+    for i in 0..16 {
+        let f = file_id(&format!("/trace/file.{i}"));
+        let owner = plane.shard_index(f);
+        for s in 0..8 {
+            let n = plane.shard(s).intervals_of(f);
+            if s == owner {
+                assert_eq!(n, plane.intervals_of(f));
+            } else {
+                assert_eq!(n, 0, "file {i} leaked onto shard {s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn responses_never_depend_on_unrelated_files() {
+    // Per-file isolation (the property that makes sharding sound):
+    // interleaving traffic on OTHER files must not change a file's
+    // responses. Run file A's requests alone, then interleaved with
+    // noise on other files; the responses to A must be identical.
+    let a = file_id("/iso/target");
+    let a_reqs = vec![
+        Request::Attach {
+            file: a,
+            client: 1,
+            ranges: vec![Range::new(0, 100)],
+        },
+        Request::Query {
+            file: a,
+            range: Range::new(0, 200),
+        },
+        Request::Attach {
+            file: a,
+            client: 2,
+            ranges: vec![Range::new(50, 150)],
+        },
+        Request::QueryFile { file: a },
+        Request::Detach {
+            file: a,
+            client: 1,
+            range: Range::new(0, 50),
+        },
+        Request::Stat { file: a },
+    ];
+    let mut alone = MetadataPlane::new(4);
+    let alone_resps: Vec<Response> = a_reqs.iter().cloned().map(|r| alone.handle(r)).collect();
+
+    let mut noisy = MetadataPlane::new(4);
+    let noise = random_trace(5, 300, 10, 4);
+    let mut noise_iter = noise.into_iter();
+    let mut noisy_resps = Vec::new();
+    for req in a_reqs {
+        for n in noise_iter.by_ref().take(40) {
+            noisy.handle(n);
+        }
+        noisy_resps.push(noisy.handle(req));
+    }
+    assert_eq!(alone_resps, noisy_resps);
+}
