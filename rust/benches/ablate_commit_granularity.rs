@@ -2,111 +2,14 @@
 //! (fine, byte-range) vs one commit per phase (coarse). The paper notes
 //! finer granularity "may add additional overhead if used in a
 //! superfluous way" — here is that overhead, as a function of scale,
-//! for the CN-W small-write workload where it is purely superfluous.
-
-use pscnf::basefs::DesFabric;
-use pscnf::config::Testbed;
-use pscnf::fs::{CommitFs, FsKind};
-use pscnf::sim::{Driver, Engine, Ns, SimOp};
-use pscnf::util::table::Table;
-use pscnf::util::units::fmt_bandwidth;
-use pscnf::workload::{Config, SyntheticDriver};
-use std::collections::VecDeque;
-
-/// CN-W with a commit after EVERY write (the superfluous pattern).
-struct FineGrainedDriver {
-    fabric: DesFabric,
-    fs: Vec<CommitFs>,
-    file: u64,
-    plan: Vec<Vec<u64>>,
-    next: Vec<usize>,
-    pending: Vec<VecDeque<SimOp>>,
-    payload: Vec<u8>,
-    size: u64,
-    done_at: Ns,
-}
-
-impl FineGrainedDriver {
-    fn new(nodes: usize, ppn: usize, size: u64, m: usize) -> Self {
-        let params = Config::CnW.params(nodes, ppn, size, m, 7);
-        let nranks = params.nranks();
-        let node_of: Vec<usize> = (0..nranks).map(|r| r / ppn).collect();
-        let fabric = DesFabric::new_phantom(node_of);
-        let mut fs: Vec<CommitFs> = (0..nranks)
-            .map(|r| CommitFs::new(r as u32, fabric.bb_of(r as u32)))
-            .collect();
-        let mut fabric = fabric;
-        let mut file = 0;
-        for f in fs.iter_mut() {
-            file = pscnf::fs::WorkloadFs::open(f, &mut fabric, "/fine.dat");
-        }
-        let plan: Vec<Vec<u64>> = (0..nranks).map(|r| params.write_offsets(r)).collect();
-        Self {
-            fabric,
-            fs,
-            file,
-            plan,
-            next: vec![0; nranks],
-            pending: (0..nranks).map(|_| VecDeque::new()).collect(),
-            payload: vec![0u8; size as usize],
-            size,
-            done_at: Ns::ZERO,
-        }
-    }
-}
-
-impl Driver for FineGrainedDriver {
-    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
-        loop {
-            if let Some(op) = self.pending[rank].pop_front() {
-                return op;
-            }
-            let i = self.next[rank];
-            if i < self.plan[rank].len() {
-                let off = self.plan[rank][i];
-                CommitFs::write_at(&mut self.fs[rank], &mut self.fabric, self.file, off, &self.payload)
-                    .unwrap();
-                self.fs[rank]
-                    .commit_range(&mut self.fabric, self.file, off, self.size)
-                    .unwrap();
-                self.next[rank] = i + 1;
-                while let Some(op) = self.fabric.pop_cost(rank as u32) {
-                    self.pending[rank].push_back(op);
-                }
-            } else {
-                self.done_at = self.done_at.max(now);
-                return SimOp::Done;
-            }
-        }
-    }
-}
+//! for the CN-W small-write workload where it is purely superfluous:
+//! compare the `CN-W.coarse` and `CN-W.fine` rows at each node count.
+//!
+//! Thin wrapper over the `ablate_granularity` family of the bench
+//! registry (the fine-grained driver lives in `bench::runner`).
+//! `--json` additionally writes
+//! `target/results/BENCH_ablate_granularity.json`.
 
 fn main() {
-    let (ppn, size, m) = (12usize, 8u64 << 10, 10usize);
-    let mut t = Table::new(vec!["nodes", "coarse (1 commit)", "fine (commit/write)", "penalty"]);
-    for nodes in [2usize, 4, 8, 16] {
-        // Coarse: the normal CommitFS CN-W path.
-        let coarse = SyntheticDriver::new(FsKind::Commit, Config::CnW.params(nodes, ppn, size, m, 7))
-            .run(Testbed::Catalyst.cluster(nodes, 9));
-        let coarse_bw = coarse.write_bw();
-        // Fine: commit after every write.
-        let mut fine = FineGrainedDriver::new(nodes, ppn, size, m);
-        let node_of: Vec<usize> = (0..nodes * ppn).map(|r| r / ppn).collect();
-        let mut engine = Engine::new(Testbed::Catalyst.cluster(nodes, 9), node_of);
-        engine.run(&mut fine).unwrap();
-        let total = (nodes * ppn * m) as u64 * size;
-        let fine_bw = total as f64 / fine.done_at.as_secs_f64();
-        t.row(vec![
-            nodes.to_string(),
-            fmt_bandwidth(coarse_bw),
-            fmt_bandwidth(fine_bw),
-            format!("{:.2}x", coarse_bw / fine_bw),
-        ]);
-    }
-    println!(
-        "Commit-granularity ablation — CN-W, 8KiB writes, ppn=12, m=10\n\
-         (expected: superfluous per-write commits cost increasingly more\n\
-         as the commit RPCs pile onto the global server)\n\n{}",
-        t.render()
-    );
+    pscnf::bench::family_main("ablate_granularity");
 }

@@ -1,50 +1,13 @@
 //! Ablation — device-speed sensitivity (§6.4, third takeaway): the
 //! faster the storage device, the more the consistency model matters.
 //! Runs CC-R with 8 KiB reads across HDD / Catalyst SSD / Expanse NVMe /
-//! pmem device models and reports the session:commit ratio.
-
-use pscnf::config::Testbed;
-use pscnf::coordinator::{sweep_synthetic, write_results};
-use pscnf::fs::FsKind;
-use pscnf::util::json::Json;
-use pscnf::util::table::Table;
-use pscnf::util::units::fmt_bandwidth;
-use pscnf::workload::Config;
+//! pmem device models under all four models; the session:commit ratio
+//! grows as the device gets faster.
+//!
+//! Thin wrapper over the `ablate_device` family of the bench registry
+//! (scale tags `<testbed>.n8`). `--json` additionally writes
+//! `target/results/BENCH_ablate_device.json`.
 
 fn main() {
-    let mut t = Table::new(vec!["device", "commit", "session", "session/commit"]);
-    let mut payload = Json::obj();
-    for testbed in [Testbed::Hdd, Testbed::Catalyst, Testbed::Expanse, Testbed::Pmem] {
-        let cells = sweep_synthetic(
-            Config::CcR,
-            8 << 10,
-            &[8],
-            &[FsKind::Commit, FsKind::Session],
-            12,
-            10,
-            3,
-            testbed,
-            false,
-        );
-        let commit = cells.iter().find(|c| c.fs == FsKind::Commit).unwrap();
-        let session = cells.iter().find(|c| c.fs == FsKind::Session).unwrap();
-        let ratio = session.bw.mean() / commit.bw.mean();
-        t.row(vec![
-            testbed.name().to_string(),
-            fmt_bandwidth(commit.bw.mean()),
-            fmt_bandwidth(session.bw.mean()),
-            format!("{ratio:.2}x"),
-        ]);
-        let mut o = Json::obj();
-        o.set("commit", commit.bw.mean())
-            .set("session", session.bw.mean())
-            .set("ratio", ratio);
-        payload.set(testbed.name(), o);
-    }
-    println!(
-        "Device ablation — CC-R, 8KiB reads, 8 nodes x 12 procs\n\
-         (expected: ratio grows as the device gets faster)\n\n{}",
-        t.render()
-    );
-    write_results("ablate_device", payload);
+    pscnf::bench::family_main("ablate_device");
 }

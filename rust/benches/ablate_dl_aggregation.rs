@@ -2,46 +2,15 @@
 //! paper's benchmark deliberately does NOT aggregate same-destination
 //! sample transfers, "which places additional stress on the file
 //! system". This bench quantifies that choice: aggregating ownership
-//! queries per owner-group recovers much of commit consistency's gap,
-//! i.e. the Fig 6 separation depends on unaggregated small requests —
-//! exactly the regime the paper argues stresses strong consistency.
-
-use pscnf::config::Testbed;
-use pscnf::dl::{DlDriver, DlParams};
-use pscnf::fs::FsKind;
-use pscnf::util::table::Table;
-use pscnf::util::units::fmt_bandwidth;
+//! queries per owner-group (`dl.weak.agg` rows) recovers much of commit
+//! consistency's gap vs session, i.e. the Fig 6 separation depends on
+//! unaggregated small requests — exactly the regime the paper argues
+//! stresses strong consistency.
+//!
+//! Thin wrapper over the `ablate_dl_aggregation` family of the bench
+//! registry. `--json` additionally writes
+//! `target/results/BENCH_ablate_dl_aggregation.json`.
 
 fn main() {
-    let mut t = Table::new(vec![
-        "nodes",
-        "commit",
-        "commit+aggregation",
-        "session",
-    ]);
-    for nodes in [2usize, 4, 8, 16] {
-        let mk = |aggregate| {
-            let mut p = DlParams::weak(nodes, 4, 8, 11);
-            p.aggregate = aggregate;
-            p
-        };
-        let commit = DlDriver::new(FsKind::Commit, mk(false))
-            .run(Testbed::Catalyst.cluster(nodes, 5));
-        let agg = DlDriver::new(FsKind::Commit, mk(true))
-            .run(Testbed::Catalyst.cluster(nodes, 5));
-        let session = DlDriver::new(FsKind::Session, mk(false))
-            .run(Testbed::Catalyst.cluster(nodes, 5));
-        t.row(vec![
-            nodes.to_string(),
-            fmt_bandwidth(commit.read_bw()),
-            fmt_bandwidth(agg.read_bw()),
-            fmt_bandwidth(session.read_bw()),
-        ]);
-    }
-    println!(
-        "DL aggregation ablation — weak scaling, ppn=4, 116KiB samples\n\
-         (expected: aggregation recovers much of commit's deficit;\n\
-         session still wins without any aggregation effort)\n\n{}",
-        t.render()
-    );
+    pscnf::bench::family_main("ablate_dl_aggregation");
 }

@@ -1,80 +1,16 @@
 //! Ablation — global-server design choices (§5.1.2): worker-pool width
 //! and dispatch policy. The paper's server uses a master thread with
 //! round-robin FIFO workers; this bench shows (a) the master, not the
-//! workers, is the choke point for commit's per-read queries, and
-//! (b) round-robin vs least-loaded dispatch barely matters because
-//! query service times are uniform. (`ablate_sharding` shows the fix:
-//! multiply the masters, not the workers.)
+//! workers, is the choke point for commit's per-read queries (bandwidth
+//! stays flat beyond a few workers), and (b) round-robin vs
+//! least-loaded dispatch barely matters because query service times are
+//! uniform. (`ablate_sharding` shows the fix: multiply the masters, not
+//! the workers.)
 //!
-//! `--json` additionally writes target/results/BENCH_ablate_server.json.
-
-use pscnf::coordinator::maybe_write_bench_json;
-use pscnf::fs::FsKind;
-use pscnf::sim::{Cluster, Dispatch, NetParams, ServerParams, SsdParams, UpfsParams};
-use pscnf::util::json::Json;
-use pscnf::util::table::Table;
-use pscnf::util::units::fmt_bandwidth;
-use pscnf::workload::{Config, SyntheticDriver};
-
-fn run(workers: usize, dispatch: Dispatch) -> f64 {
-    let nodes = 8;
-    let params = Config::CcR.params(nodes, 12, 8 << 10, 10, 7);
-    let server = ServerParams {
-        workers,
-        dispatch,
-        ..ServerParams::catalyst()
-    };
-    let cluster = Cluster::new(
-        nodes,
-        SsdParams::catalyst(),
-        NetParams::ib_qdr(),
-        server,
-        UpfsParams::catalyst_lustre(),
-        99,
-    );
-    SyntheticDriver::new(FsKind::Commit, params)
-        .run(cluster)
-        .read_bw()
-}
+//! Thin wrapper over the `ablate_server` family of the bench registry
+//! (scenario scale tags are `w<workers>.<rr|ll>`). `--json`
+//! additionally writes `target/results/BENCH_ablate_server.json`.
 
 fn main() {
-    let mut t = Table::new(vec!["workers", "round-robin", "least-loaded"]);
-    let mut rows = Vec::new();
-    for workers in [1usize, 2, 4, 8, 16] {
-        let rr = run(workers, Dispatch::RoundRobin);
-        let ll = run(workers, Dispatch::LeastLoaded);
-        t.row(vec![
-            workers.to_string(),
-            fmt_bandwidth(rr),
-            fmt_bandwidth(ll),
-        ]);
-        rows.push((workers, rr, ll));
-    }
-    println!(
-        "Server ablation — CommitFS CC-R 8KiB reads, 8 nodes x 12 procs\n\
-         (expected: flat beyond a few workers — the serial master\n\
-         dispatch is the bottleneck, matching the paper's Fig 5/6 story)\n\n{}",
-        t.render()
-    );
-
-    let mut payload = Json::obj();
-    payload
-        .set("workload", Config::CcR.name())
-        .set("fs", FsKind::Commit.name())
-        .set("access_bytes", 8u64 << 10)
-        .set(
-            "cells",
-            Json::Arr(
-                rows.iter()
-                    .map(|&(workers, rr, ll)| {
-                        let mut o = Json::obj();
-                        o.set("workers", workers)
-                            .set("round_robin_bw", rr)
-                            .set("least_loaded_bw", ll);
-                        o
-                    })
-                    .collect(),
-            ),
-        );
-    maybe_write_bench_json("ablate_server", payload);
+    pscnf::bench::family_main("ablate_server");
 }

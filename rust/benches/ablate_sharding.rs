@@ -5,92 +5,18 @@
 //! master+worker groups with files hash-partitioned across them — is
 //! what actually scales it. CommitFS small-random-read CC-R, the
 //! workload where the paper's ~5x session-vs-commit gap lives, with
-//! the dataset striped over enough files to give the router something
-//! to spread.
+//! the dataset striped over 32 files to give the router something to
+//! spread.
 //!
 //! Expected shape: bandwidth improves monotonically (then saturates)
-//! as shards go 1 → 16, while the 1-shard row matches `ablate_server`'s
-//! baseline — sharding changes performance, not semantics (the
-//! trace-equivalence test in tests/shard_plane.rs proves the latter).
+//! as shards go 1 → 16 — sharding changes performance, not semantics
+//! (the trace-equivalence test in tests/shard_plane.rs proves the
+//! latter).
 //!
-//! `--json` additionally writes target/results/BENCH_ablate_sharding.json.
-
-use pscnf::coordinator::maybe_write_bench_json;
-use pscnf::fs::FsKind;
-use pscnf::sim::{Cluster, NetParams, ServerParams, SsdParams, UpfsParams};
-use pscnf::util::json::Json;
-use pscnf::util::table::Table;
-use pscnf::util::units::fmt_bandwidth;
-use pscnf::workload::{Config, Pattern, SyntheticDriver};
-
-const NODES: usize = 8;
-const PPN: usize = 12;
-const ACCESS: u64 = 8 << 10;
-const M: usize = 10;
-const FILES: usize = 32;
-
-fn run(shards: usize) -> f64 {
-    let mut params = Config::CcR
-        .params(NODES, PPN, ACCESS, M, 7)
-        .with_files(FILES);
-    // Small RANDOM reads: every read queries the plane, offsets (and
-    // therefore files, and therefore shards) are spread uniformly.
-    params.read_pattern = Some(Pattern::Random);
-    let cluster = Cluster::new(
-        NODES,
-        SsdParams::catalyst(),
-        NetParams::ib_qdr(),
-        ServerParams::catalyst_sharded(shards),
-        UpfsParams::catalyst_lustre(),
-        99,
-    );
-    SyntheticDriver::new_sharded(FsKind::Commit, params, shards)
-        .run(cluster)
-        .read_bw()
-}
+//! Thin wrapper over the `ablate_sharding` family of the bench registry
+//! (scale tags `s<shards>`). `--json` additionally writes
+//! `target/results/BENCH_ablate_sharding.json`.
 
 fn main() {
-    let shard_counts = [1usize, 2, 4, 8, 16];
-    let mut t = Table::new(vec!["shards", "read bw", "vs 1 shard"]);
-    let mut rows = Vec::new();
-    let base = run(1);
-    for &shards in &shard_counts {
-        let bw = if shards == 1 { base } else { run(shards) };
-        t.row(vec![
-            shards.to_string(),
-            fmt_bandwidth(bw),
-            format!("{:.2}x", bw / base),
-        ]);
-        rows.push((shards, bw));
-    }
-    println!(
-        "Sharding ablation — CommitFS CC-R 8KiB random reads,\n\
-         {NODES} nodes x {PPN} procs, dataset striped over {FILES} files\n\
-         (expected: monotone improvement then saturation — each shard\n\
-         adds serial master dispatch capacity; contrast ablate_server,\n\
-         where extra workers behind ONE master stay flat)\n\n{}",
-        t.render()
-    );
-
-    let mut payload = Json::obj();
-    payload
-        .set("workload", Config::CcR.name())
-        .set("fs", FsKind::Commit.name())
-        .set("access_bytes", ACCESS)
-        .set("nodes", NODES)
-        .set("ppn", PPN)
-        .set("files", FILES)
-        .set(
-            "cells",
-            Json::Arr(
-                rows.iter()
-                    .map(|&(shards, bw)| {
-                        let mut o = Json::obj();
-                        o.set("shards", shards).set("read_bw", bw);
-                        o
-                    })
-                    .collect(),
-            ),
-        );
-    maybe_write_bench_json("ablate_sharding", payload);
+    pscnf::bench::family_main("ablate_sharding");
 }

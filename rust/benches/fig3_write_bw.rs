@@ -1,6 +1,7 @@
 //! Fig 3 — write bandwidth of CN-W and SN-W with 8 MiB and 8 KiB access
-//! sizes, 1–16 nodes × 12 procs, commit vs session consistency, on the
-//! simulated Catalyst testbed.
+//! sizes, 1–16 nodes × 12 procs, on the simulated Catalyst testbed,
+//! under **all four** consistency models (the paper plots commit vs
+//! session; posix and mpiio complete the matrix).
 //!
 //! Paper shape to reproduce (§6.1.1):
 //! - CN-W ≈ SN-W (BB buffering converts N-1 to N-N writes);
@@ -8,48 +9,11 @@
 //!   does the same work as commit);
 //! - 8 MiB writes reach the SSD peak (~1 GB/s per node), 8 KiB writes
 //!   fall well short of saturation.
-
-use pscnf::config::Testbed;
-use pscnf::coordinator::{render_sweep, sweep_synthetic, write_results};
-use pscnf::fs::FsKind;
-use pscnf::util::json::Json;
-use pscnf::util::units::fmt_bytes;
-use pscnf::workload::Config;
+//!
+//! Thin wrapper over the `fig3` family of the bench registry
+//! (`pscnf bench --filter fig3` runs the same cells). `--json`
+//! additionally writes `target/results/BENCH_fig3.json`.
 
 fn main() {
-    let nodes = [1usize, 2, 4, 8, 16];
-    let fs = [FsKind::Commit, FsKind::Session];
-    let mut all = Json::obj();
-    for config in [Config::CnW, Config::SnW] {
-        for access in [8u64 << 20, 8 << 10] {
-            let cells = sweep_synthetic(
-                config,
-                access,
-                &nodes,
-                &fs,
-                12,
-                10,
-                5,
-                Testbed::Catalyst,
-                true,
-            );
-            println!(
-                "{}\n",
-                render_sweep(
-                    &format!(
-                        "Fig 3 — {} write bandwidth, access={} (ppn=12, m=10)",
-                        config.name(),
-                        fmt_bytes(access)
-                    ),
-                    &cells
-                )
-            );
-            all.set(
-                &format!("{}_{}", config.name(), fmt_bytes(access)),
-                Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
-            );
-        }
-    }
-    write_results("fig3_write_bw", all);
-    println!("results: target/results/fig3_write_bw.json");
+    pscnf::bench::family_main("fig3");
 }

@@ -1,5 +1,5 @@
 //! Fig 4 — read bandwidth of CC-R and CS-R with 8 MiB and 8 KiB access
-//! sizes, commit vs session, 2–16 nodes × 12 procs.
+//! sizes, 2–16 nodes × 12 procs, under all four consistency models.
 //!
 //! Paper shape to reproduce (§6.1.2):
 //! - CC-R > CS-R under both models and sizes (strided reads contend);
@@ -7,68 +7,11 @@
 //! - 8 KiB: session beats commit in bandwidth AND scalability (the
 //!   per-read query RPC saturates the global server's master thread);
 //!   session shows visibly higher variance (aged-SSD small-read jitter).
-
-use pscnf::config::Testbed;
-use pscnf::coordinator::{render_sweep, sweep_synthetic, write_results};
-use pscnf::fs::FsKind;
-use pscnf::util::json::Json;
-use pscnf::util::units::fmt_bytes;
-use pscnf::workload::Config;
+//!
+//! Thin wrapper over the `fig4` family of the bench registry
+//! (`pscnf bench --filter fig4` runs the same cells). `--json`
+//! additionally writes `target/results/BENCH_fig4.json`.
 
 fn main() {
-    let nodes = [2usize, 4, 8, 16];
-    let fs = [FsKind::Commit, FsKind::Session];
-    let mut all = Json::obj();
-    for config in [Config::CcR, Config::CsR] {
-        for access in [8u64 << 20, 8 << 10] {
-            let cells = sweep_synthetic(
-                config,
-                access,
-                &nodes,
-                &fs,
-                12,
-                10,
-                5,
-                Testbed::Catalyst,
-                false,
-            );
-            println!(
-                "{}\n",
-                render_sweep(
-                    &format!(
-                        "Fig 4 — {} read bandwidth, access={} (ppn=12, m=10)",
-                        config.name(),
-                        fmt_bytes(access)
-                    ),
-                    &cells
-                )
-            );
-            all.set(
-                &format!("{}_{}", config.name(), fmt_bytes(access)),
-                Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
-            );
-        }
-    }
-    write_results("fig4_read_bw", all);
-
-    // Headline check printed for EXPERIMENTS.md: session/commit ratio at
-    // 8 KiB, largest scale.
-    let cells = sweep_synthetic(
-        Config::CcR,
-        8 << 10,
-        &[16],
-        &fs,
-        12,
-        10,
-        5,
-        Testbed::Catalyst,
-        false,
-    );
-    let commit = cells.iter().find(|c| c.fs == FsKind::Commit).unwrap();
-    let session = cells.iter().find(|c| c.fs == FsKind::Session).unwrap();
-    println!(
-        "headline: 8KiB CC-R @16 nodes  session/commit = {:.2}x",
-        session.bw.mean() / commit.bw.mean()
-    );
-    println!("results: target/results/fig4_read_bw.json");
+    pscnf::bench::family_main("fig4");
 }

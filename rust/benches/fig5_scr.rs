@@ -1,63 +1,16 @@
 //! Fig 5 — HACC-IO with SCR: checkpoint and restart bandwidth vs node
 //! count (Partner scheme, 10 M particles, one spare node, single-node
-//! failure; restart reads served from memory buffers).
+//! failure; restart reads served from memory buffers), all four models.
 //!
 //! Paper shape to reproduce (§6.2): checkpoint bandwidth ~identical
 //! under commit and session and scaling ~linearly (SSD-bound); restart
 //! bandwidth scales under session but collapses under commit as the
 //! per-read query RPCs pile onto the global server.
-
-use pscnf::config::Testbed;
-use pscnf::coordinator::{sweep_scr, write_results};
-use pscnf::fs::FsKind;
-use pscnf::util::json::Json;
-use pscnf::util::table::Table;
-use pscnf::util::units::fmt_bandwidth;
+//!
+//! Thin wrapper over the `fig5` family of the bench registry
+//! (`pscnf bench --filter fig5` runs the same cells; the `restart_bw`
+//! metric is Fig 5b). `--json` writes `target/results/BENCH_fig5.json`.
 
 fn main() {
-    let nodes = [3usize, 4, 8, 16];
-    let rows = sweep_scr(
-        &nodes,
-        &[FsKind::Commit, FsKind::Session],
-        12,
-        10_000_000,
-        5,
-        Testbed::Catalyst,
-    );
-
-    let mut ckpt = Table::new(vec!["nodes", "commit", "session"]);
-    let mut rst = Table::new(vec!["nodes", "commit", "session"]);
-    let mut payload = Json::obj();
-    let mut arr = Vec::new();
-    for &n in &nodes {
-        let get = |fs: FsKind| {
-            rows.iter()
-                .find(|(f, nn, _, _)| *f == fs && *nn == n)
-                .unwrap()
-        };
-        let (_, _, cck, crs) = get(FsKind::Commit);
-        let (_, _, sck, srs) = get(FsKind::Session);
-        ckpt.row(vec![
-            n.to_string(),
-            fmt_bandwidth(cck.mean()),
-            fmt_bandwidth(sck.mean()),
-        ]);
-        rst.row(vec![
-            n.to_string(),
-            fmt_bandwidth(crs.mean()),
-            fmt_bandwidth(srs.mean()),
-        ]);
-        let mut o = Json::obj();
-        o.set("nodes", n)
-            .set("commit_ckpt", cck.mean())
-            .set("session_ckpt", sck.mean())
-            .set("commit_restart", crs.mean())
-            .set("session_restart", srs.mean());
-        arr.push(o);
-    }
-    payload.set("rows", Json::Arr(arr));
-    println!("Fig 5(a) — SCR checkpoint bandwidth (ppn=12, 10M particles)\n{}", ckpt.render());
-    println!("Fig 5(b) — SCR restart bandwidth\n{}", rst.render());
-    write_results("fig5_scr", payload);
-    println!("results: target/results/fig5_scr.json");
+    pscnf::bench::family_main("fig5");
 }

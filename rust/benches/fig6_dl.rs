@@ -1,60 +1,16 @@
 //! Fig 6 — random-read bandwidth of the DL "Preloaded" ingestion
 //! strategy: strong scaling (global mini-batch 1024) and weak scaling
 //! (32 samples per process per iteration), 116 KiB samples, 4 procs per
-//! node, commit vs session.
+//! node, all four consistency models.
 //!
 //! Paper shape to reproduce (§6.3): session outperforms commit in both
 //! bandwidth and scalability, with the gap *growing* with node count —
 //! significant even at small scales (the paper's headline ~5×).
-
-use pscnf::config::Testbed;
-use pscnf::coordinator::{sweep_dl, write_results};
-use pscnf::fs::FsKind;
-use pscnf::util::json::Json;
-use pscnf::util::table::Table;
-use pscnf::util::units::fmt_bandwidth;
+//!
+//! Thin wrapper over the `fig6` family of the bench registry
+//! (`pscnf bench --filter fig6` runs the same cells). `--json`
+//! additionally writes `target/results/BENCH_fig6.json`.
 
 fn main() {
-    let nodes = [1usize, 2, 4, 8, 16];
-    let mut payload = Json::obj();
-    for (strong, label, work) in [(true, "strong", 4), (false, "weak", 8)] {
-        let rows = sweep_dl(
-            strong,
-            &nodes,
-            &[FsKind::Commit, FsKind::Session],
-            4,
-            work,
-            5,
-            Testbed::Catalyst,
-        );
-        let mut t = Table::new(vec!["nodes", "commit", "session", "ratio"]);
-        let mut arr = Vec::new();
-        for &n in &nodes {
-            let get = |fs: FsKind| {
-                rows.iter()
-                    .find(|(f, nn, _)| *f == fs && *nn == n)
-                    .unwrap()
-            };
-            let (_, _, c) = get(FsKind::Commit);
-            let (_, _, s) = get(FsKind::Session);
-            t.row(vec![
-                n.to_string(),
-                fmt_bandwidth(c.mean()),
-                fmt_bandwidth(s.mean()),
-                format!("{:.2}x", s.mean() / c.mean()),
-            ]);
-            let mut o = Json::obj();
-            o.set("nodes", n)
-                .set("commit", c.mean())
-                .set("session", s.mean());
-            arr.push(o);
-        }
-        println!(
-            "Fig 6 — DL random-read bandwidth, {label} scaling (ppn=4, 116KiB samples)\n{}",
-            t.render()
-        );
-        payload.set(label, Json::Arr(arr));
-    }
-    write_results("fig6_dl", payload);
-    println!("results: target/results/fig6_dl.json");
+    pscnf::bench::family_main("fig6");
 }

@@ -1,0 +1,212 @@
+//! Baseline comparison — the perf-regression gate. Records are matched
+//! by scenario id; each shared metric is diffed in its "worse"
+//! direction and flagged when it moved strictly more than the gate
+//! percentage. Scenarios or metrics present on only one side are
+//! reported but non-fatal: adding a scenario (or retiring one) must not
+//! fail CI, only a measured regression may.
+
+use super::report::BenchMatrix;
+use crate::util::table::Table;
+
+/// One (scenario, metric) diff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricDelta {
+    pub scenario: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Percent change in the worse direction (positive = got worse;
+    /// `f64::INFINITY` when the baseline was 0 and the value moved the
+    /// wrong way).
+    pub worse_pct: f64,
+    /// `worse_pct` strictly exceeded the gate.
+    pub regression: bool,
+}
+
+/// Everything `--compare` found.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub gate_pct: f64,
+    pub deltas: Vec<MetricDelta>,
+    /// Scenario ids in the current run with no baseline record.
+    pub unknown_scenarios: Vec<String>,
+    /// Baseline scenario ids the current run did not produce.
+    pub missing_scenarios: Vec<String>,
+    /// (scenario, metric) pairs present on only one side.
+    pub missing_metrics: Vec<(String, String)>,
+    /// Both sides had records but not a single scenario id matched —
+    /// the gate would be vacuous, which is itself a failure (guards
+    /// against a wholesale id-scheme change smuggling a regression).
+    pub disjoint: bool,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> Vec<&MetricDelta> {
+        self.deltas.iter().filter(|d| d.regression).collect()
+    }
+
+    /// True when no metric regressed beyond the gate. Notices about
+    /// unknown/missing scenarios or metrics never fail the gate — but a
+    /// comparison where NOTHING overlapped does (see `disjoint`).
+    pub fn passed(&self) -> bool {
+        !self.disjoint && self.deltas.iter().all(|d| !d.regression)
+    }
+
+    /// Human-readable summary: regressions (and near-misses) first,
+    /// then the notices.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new(vec![
+            "scenario", "metric", "baseline", "current", "worse by", "verdict",
+        ]);
+        let mut shown = 0;
+        for d in &self.deltas {
+            // Keep the table signal-dense: print regressions and any
+            // movement past half the gate; identical metrics stay quiet.
+            if !d.regression && d.worse_pct.abs() < self.gate_pct / 2.0 {
+                continue;
+            }
+            shown += 1;
+            t.row(vec![
+                d.scenario.clone(),
+                d.metric.clone(),
+                format!("{:.4e}", d.baseline),
+                format!("{:.4e}", d.current),
+                if d.worse_pct == f64::INFINITY {
+                    "inf%".to_string()
+                } else if d.worse_pct == f64::NEG_INFINITY {
+                    "improved from 0".to_string()
+                } else {
+                    format!("{:+.2}%", d.worse_pct)
+                },
+                if d.regression {
+                    "REGRESSION".to_string()
+                } else {
+                    "ok".to_string()
+                },
+            ]);
+        }
+        let compared = self.deltas.len();
+        let regressed = self.regressions().len();
+        out.push_str(&format!(
+            "perf gate: {compared} metric(s) compared, {regressed} regression(s) beyond {:.1}%\n",
+            self.gate_pct
+        ));
+        if shown > 0 {
+            out.push_str(&t.render());
+        }
+        for s in &self.unknown_scenarios {
+            out.push_str(&format!(
+                "notice: `{s}` has no baseline record (new scenario?) — not gated\n"
+            ));
+        }
+        for s in &self.missing_scenarios {
+            out.push_str(&format!(
+                "notice: baseline scenario `{s}` missing from current run — not gated\n"
+            ));
+        }
+        for (s, m) in &self.missing_metrics {
+            out.push_str(&format!(
+                "notice: metric `{m}` of `{s}` present on only one side — not gated\n"
+            ));
+        }
+        if self.disjoint {
+            out.push_str(
+                "ERROR: no scenario id matched between baseline and current — \
+                 the gate would be vacuous, failing instead\n",
+            );
+        }
+        out
+    }
+}
+
+/// Percent change of `cur` vs `base` in the worse direction for the
+/// metric's polarity: positive = worse, negative = improved.
+fn worse_pct(base: f64, cur: f64, higher_is_better: bool) -> f64 {
+    if base == cur {
+        return 0.0;
+    }
+    if base == 0.0 {
+        // No reference point: any move in the worse direction is an
+        // unbounded regression; any other move is an improvement.
+        let worse = if higher_is_better { cur < 0.0 } else { cur > 0.0 };
+        return if worse { f64::INFINITY } else { f64::NEG_INFINITY };
+    }
+    let delta_pct = (cur - base) / base.abs() * 100.0;
+    if higher_is_better {
+        -delta_pct
+    } else {
+        delta_pct
+    }
+}
+
+/// Diff `current` against `baseline` with a `gate_pct` tolerance. A
+/// metric regresses when it moved in its worse direction by strictly
+/// more than `gate_pct` percent — a change of exactly the gate passes.
+pub fn compare(baseline: &BenchMatrix, current: &BenchMatrix, gate_pct: f64) -> CompareReport {
+    let mut deltas = Vec::new();
+    let mut unknown_scenarios = Vec::new();
+    let mut missing_metrics = Vec::new();
+    for rec in &current.records {
+        let Some(base) = baseline.find(&rec.id) else {
+            unknown_scenarios.push(rec.id.clone());
+            continue;
+        };
+        for (name, m) in &rec.metrics {
+            let Some(bm) = base.metrics.get(name) else {
+                missing_metrics.push((rec.id.clone(), name.clone()));
+                continue;
+            };
+            let pct = worse_pct(bm.value, m.value, m.higher_is_better);
+            deltas.push(MetricDelta {
+                scenario: rec.id.clone(),
+                metric: name.clone(),
+                baseline: bm.value,
+                current: m.value,
+                worse_pct: pct,
+                regression: pct > gate_pct,
+            });
+        }
+        for name in base.metrics.keys() {
+            if !rec.metrics.contains_key(name) {
+                missing_metrics.push((rec.id.clone(), name.clone()));
+            }
+        }
+    }
+    let missing_scenarios: Vec<String> = baseline
+        .records
+        .iter()
+        .filter(|b| current.find(&b.id).is_none())
+        .map(|b| b.id.clone())
+        .collect();
+    let disjoint = deltas.is_empty()
+        && !baseline.records.is_empty()
+        && !current.records.is_empty()
+        && unknown_scenarios.len() == current.records.len();
+    CompareReport {
+        gate_pct,
+        deltas,
+        unknown_scenarios,
+        missing_scenarios,
+        missing_metrics,
+        disjoint,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worse_pct_polarity() {
+        // Higher-is-better: a drop is worse.
+        assert!((worse_pct(100.0, 80.0, true) - 20.0).abs() < 1e-12);
+        assert!((worse_pct(100.0, 120.0, true) + 20.0).abs() < 1e-12);
+        // Lower-is-better: a rise is worse.
+        assert!((worse_pct(100.0, 120.0, false) - 20.0).abs() < 1e-12);
+        assert!((worse_pct(100.0, 80.0, false) + 20.0).abs() < 1e-12);
+        assert_eq!(worse_pct(0.0, 0.0, true), 0.0);
+        assert_eq!(worse_pct(0.0, 5.0, false), f64::INFINITY);
+        assert_eq!(worse_pct(0.0, 5.0, true), f64::NEG_INFINITY);
+    }
+}

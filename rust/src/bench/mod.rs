@@ -1,0 +1,211 @@
+//! The unified scenario-matrix bench subsystem (`pscnf bench`).
+//!
+//! Every bench in the repo — the four figure reproductions and the five
+//! ablations — is a registered *scenario*: one cell of consistency
+//! model × workload pattern × scale (module `registry`). The `runner`
+//! executes cells on the DES engine and folds repeats into
+//! schema-versioned records (module `report`); `compare` diffs a run
+//! against a stored baseline and gates regressions, which is what turns
+//! the bench trajectory into a CI signal instead of eyeballed tables.
+//!
+//! ```text
+//! pscnf bench --filter smoke --json          # run the CI subset, write BENCH_matrix.json
+//! pscnf bench --filter fig4 --models commit,session --scales 8,16
+//! pscnf bench --list --filter ablate         # show matching scenario ids
+//! pscnf bench --compare baseline.json --gate 15   # nonzero exit on regression
+//! ```
+
+pub mod compare;
+pub mod registry;
+pub mod report;
+pub mod runner;
+
+pub use compare::{compare, CompareReport, MetricDelta};
+pub use registry::{registry, Kind, Scenario};
+pub use report::{BenchMatrix, BenchRecord, Metric, SCHEMA_VERSION};
+pub use runner::{run_matrix, run_scenario};
+
+use crate::coordinator::{maybe_write_bench_json, write_results};
+use crate::fs::FsKind;
+use crate::util::cli::ArgSpec;
+use crate::util::table::Table;
+use crate::util::units::fmt_bandwidth;
+
+/// Where `--json` writes the matrix (and where `--compare` reads the
+/// current run from by default).
+pub const DEFAULT_OUT: &str = "target/results/BENCH_matrix.json";
+
+/// Render the matrix as a human table (one row per scenario).
+pub fn render_matrix(title: &str, m: &BenchMatrix) -> String {
+    let mut t = Table::new(vec!["scenario", "bw", "lat p50", "lat p95", "rpcs"]);
+    for r in &m.records {
+        let secs = |name: &str| {
+            r.metric_value(name)
+                .map(|v| format!("{:.2}ms", v * 1e3))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![
+            r.id.clone(),
+            r.metric_value("bw")
+                .map(fmt_bandwidth)
+                .unwrap_or_else(|| "-".into()),
+            secs("lat_p50_s"),
+            secs("lat_p95_s"),
+            r.metric_value("rpcs")
+                .map(|v| format!("{}", v as u64))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    format!("{title} — {} scenario(s)\n{}", m.records.len(), t.render())
+}
+
+/// Entry point for the thin `benches/*.rs` wrappers: run one family of
+/// the registry, print its table, persist `target/results/<family>.json`
+/// (the regenerable figure data) and — when invoked with `--json` —
+/// `target/results/BENCH_<family>.json` for the perf trajectory.
+pub fn family_main(family: &str) {
+    let scenarios: Vec<Scenario> = registry()
+        .into_iter()
+        .filter(|s| s.family == family)
+        .collect();
+    assert!(!scenarios.is_empty(), "unknown bench family `{family}`");
+    let matrix = run_matrix(&scenarios);
+    println!("{}", render_matrix(family, &matrix));
+    let json = matrix.to_json();
+    write_results(family, json.clone());
+    maybe_write_bench_json(family, json);
+    println!("results: target/results/{family}.json");
+}
+
+/// The `pscnf bench` subcommand.
+pub fn cli_main(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "bench",
+        "run the scenario matrix, or compare a run against a baseline",
+    )
+    .opt(
+        "filter",
+        "STR",
+        Some(""),
+        "substring filter on scenario id/family (`smoke` = CI subset; empty = all)",
+    )
+    .opt(
+        "models",
+        "LIST",
+        Some("all"),
+        "consistency models to keep: posix|commit|session|mpiio|both|all (comma list)",
+    )
+    .opt(
+        "scales",
+        "LIST",
+        Some(""),
+        "node counts to keep, comma separated (empty = all)",
+    )
+    .opt(
+        "repeats",
+        "N",
+        Some("0"),
+        "override per-scenario repeats (0 = registry default)",
+    )
+    .flag("json", "write the matrix to --out after running")
+    .opt("out", "PATH", Some(DEFAULT_OUT), "output path for --json")
+    .flag("list", "list matching scenario ids without running them")
+    .opt(
+        "compare",
+        "BASELINE",
+        None,
+        "compare --current against this baseline matrix (runs nothing)",
+    )
+    .opt(
+        "current",
+        "PATH",
+        Some(DEFAULT_OUT),
+        "current results file for --compare",
+    )
+    .opt(
+        "gate",
+        "PCT",
+        Some("10"),
+        "max tolerated per-metric regression percent for --compare",
+    );
+    let args = spec.parse(argv)?;
+
+    if let Some(baseline_path) = args.get("compare") {
+        let gate = args.f64("gate")?;
+        if !gate.is_finite() || gate < 0.0 {
+            return Err(format!("--gate {gate}: want a non-negative percentage"));
+        }
+        let baseline = BenchMatrix::load(baseline_path)?;
+        let current = BenchMatrix::load(args.str("current")?)?;
+        let rep = compare(&baseline, &current, gate);
+        print!("{}", rep.render());
+        return if rep.passed() {
+            println!("perf gate PASSED (gate {gate}%)");
+            Ok(())
+        } else {
+            Err(format!(
+                "perf gate FAILED: {} metric(s) regressed beyond {gate}% (see table above)",
+                rep.regressions().len()
+            ))
+        };
+    }
+
+    let filter = args.str("filter")?;
+    let models = FsKind::parse_list(args.str("models")?)?;
+    let scales = args.usize_list("scales")?;
+    let mut scenarios: Vec<Scenario> = registry()
+        .into_iter()
+        .filter(|s| {
+            filter.is_empty()
+                || s.family == filter
+                || s.id.contains(filter)
+                || (filter == "smoke" && s.smoke)
+        })
+        .filter(|s| models.contains(&s.fs))
+        .filter(|s| scales.is_empty() || scales.contains(&s.nodes))
+        .collect();
+    if scenarios.is_empty() {
+        return Err(format!(
+            "no scenarios match --filter `{filter}` --models {:?} --scales {scales:?}",
+            models.iter().map(|m| m.name()).collect::<Vec<_>>()
+        ));
+    }
+    if args.flag("list") {
+        for s in &scenarios {
+            println!("{}", s.id);
+        }
+        println!("{} scenario(s)", scenarios.len());
+        return Ok(());
+    }
+    let repeats = args.usize("repeats")?;
+    if repeats > 0 {
+        for s in scenarios.iter_mut() {
+            s.repeats = repeats;
+        }
+    }
+    let matrix = run_matrix(&scenarios);
+    println!("{}", render_matrix("bench matrix", &matrix));
+    if args.flag("json") {
+        let path = args.str("out")?;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        }
+        std::fs::write(path, matrix.to_json().pretty()).map_err(|e| format!("{path}: {e}"))?;
+        println!("bench json: {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_handles_missing_metrics() {
+        let mut m = BenchMatrix::new();
+        m.records.push(BenchRecord::new("x/y", "x"));
+        let out = render_matrix("t", &m);
+        assert!(out.contains("x/y"));
+        assert!(out.contains('-'));
+    }
+}

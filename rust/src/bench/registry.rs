@@ -1,0 +1,446 @@
+//! The scenario registry: every figure and ablation bench expressed as
+//! cells of one matrix — consistency model × workload pattern × scale.
+//! The `benches/*.rs` binaries are thin wrappers that run one family of
+//! this registry (one source of truth for parameters), and every figure
+//! family carries all four `FsKind`s, not just the two the paper plots.
+//!
+//! Scenario ids are stable strings of the form
+//! `family/workload[.variant]/access/model/scale` (see DESIGN.md
+//! §Benchmarks); the CI baseline is matched on them, so renaming an id
+//! retires the old cell and introduces a new (ungated) one.
+
+use crate::config::Testbed;
+use crate::fs::FsKind;
+use crate::sim::Dispatch;
+use crate::util::units::fmt_bytes;
+use crate::workload::{Config, Pattern};
+
+/// What a scenario runs — the workload half of the matrix.
+#[derive(Debug, Clone)]
+pub enum Kind {
+    /// Two-phase synthetic N-to-1 workload (Figs 3/4, most ablations).
+    Synthetic {
+        config: Config,
+        access: u64,
+        /// Override the Table-8 read pattern (e.g. `Random` for the
+        /// sharding ablation); `None` keeps the config's own.
+        read_pattern: Option<Pattern>,
+    },
+    /// SCR + HACC-IO checkpoint/restart (Fig 5).
+    Scr { particles: u64 },
+    /// DL random-read ingestion (Fig 6).
+    Dl {
+        strong: bool,
+        work: usize,
+        aggregate: bool,
+    },
+    /// Commit-granularity ablation: CN-W with one commit per write
+    /// (the "superfluous" fine-grained pattern of §2.3.1).
+    FineCommit { access: u64 },
+}
+
+/// One cell of the matrix: model × workload × scale, plus the device
+/// and server knobs the ablations sweep.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub id: String,
+    pub family: &'static str,
+    pub fs: FsKind,
+    pub testbed: Testbed,
+    pub nodes: usize,
+    pub ppn: usize,
+    /// Accesses per process (synthetic kinds).
+    pub m: usize,
+    /// Metadata-plane shards.
+    pub shards: usize,
+    /// Shared files the dataset is striped over.
+    pub files: usize,
+    pub repeats: usize,
+    /// Global-server worker-pool override (`ablate_server`); `None`
+    /// keeps the testbed preset.
+    pub workers: Option<usize>,
+    pub dispatch: Dispatch,
+    /// Member of the quick CI subset (`--filter smoke`).
+    pub smoke: bool,
+    pub kind: Kind,
+}
+
+impl Scenario {
+    /// Does this scenario exercise `pat` as its write or read pattern?
+    /// (Used by the registry-completeness test to prove the smoke set
+    /// covers every `FsKind` × `Pattern` cell.)
+    pub fn uses_pattern(&self, pat: Pattern) -> bool {
+        match &self.kind {
+            Kind::Synthetic {
+                config,
+                read_pattern,
+                ..
+            } => {
+                let p = config.params(2, 1, 1, 1, 0);
+                let effective_read = match (read_pattern, p.read_pattern) {
+                    (Some(over), Some(_)) => Some(*over),
+                    (_, base) => base,
+                };
+                p.write_pattern == pat || effective_read == Some(pat)
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Scenario defaults shared by most families.
+fn base(family: &'static str, fs: FsKind, nodes: usize, ppn: usize, kind: Kind) -> Scenario {
+    Scenario {
+        id: String::new(),
+        family,
+        fs,
+        testbed: Testbed::Catalyst,
+        nodes,
+        ppn,
+        m: 10,
+        shards: 1,
+        files: 1,
+        repeats: 5,
+        workers: None,
+        dispatch: Dispatch::RoundRobin,
+        smoke: false,
+        kind,
+    }
+}
+
+/// Finish a scenario: compose its id from the workload tag, access
+/// size, model, and scale tag.
+fn with_id(mut sc: Scenario, workload_tag: &str, access: Option<u64>, scale_tag: &str) -> Scenario {
+    let access_part = match access {
+        Some(a) => format!("/{}", fmt_bytes(a)),
+        None => String::new(),
+    };
+    sc.id = format!(
+        "{}/{}{}/{}/{}",
+        sc.family,
+        workload_tag,
+        access_part,
+        sc.fs.name(),
+        scale_tag
+    );
+    sc
+}
+
+fn synthetic(
+    family: &'static str,
+    config: Config,
+    access: u64,
+    fs: FsKind,
+    nodes: usize,
+    ppn: usize,
+) -> Scenario {
+    let sc = base(
+        family,
+        fs,
+        nodes,
+        ppn,
+        Kind::Synthetic {
+            config,
+            access,
+            read_pattern: None,
+        },
+    );
+    with_id(sc, config.name(), Some(access), &format!("n{nodes}"))
+}
+
+/// Build the full registry. Ids are unique (pinned by a test); the
+/// smoke family is small enough for CI and covers every consistency
+/// model × access pattern × workload driver.
+pub fn registry() -> Vec<Scenario> {
+    let mut v: Vec<Scenario> = Vec::new();
+
+    // fig3 — CN-W/SN-W write bandwidth, 8 MiB + 8 KiB, all four models
+    // (the paper plots commit and session; posix and mpiio complete the
+    // matrix).
+    for config in [Config::CnW, Config::SnW] {
+        for access in [8u64 << 20, 8 << 10] {
+            for fs in FsKind::ALL {
+                for nodes in [1usize, 2, 4, 8, 16] {
+                    v.push(synthetic("fig3", config, access, fs, nodes, 12));
+                }
+            }
+        }
+    }
+
+    // fig4 — CC-R/CS-R read bandwidth.
+    for config in [Config::CcR, Config::CsR] {
+        for access in [8u64 << 20, 8 << 10] {
+            for fs in FsKind::ALL {
+                for nodes in [2usize, 4, 8, 16] {
+                    v.push(synthetic("fig4", config, access, fs, nodes, 12));
+                }
+            }
+        }
+    }
+
+    // fig5 — SCR checkpoint/restart (nodes include the spare).
+    for fs in FsKind::ALL {
+        for nodes in [3usize, 4, 8, 16] {
+            let sc = base(
+                "fig5",
+                fs,
+                nodes,
+                12,
+                Kind::Scr {
+                    particles: 10_000_000,
+                },
+            );
+            v.push(with_id(sc, "scr", None, &format!("n{nodes}")));
+        }
+    }
+
+    // fig6 — DL ingestion, strong + weak scaling, ppn=4 (one per GPU).
+    for (strong, tag, work) in [(true, "dl.strong", 4usize), (false, "dl.weak", 8)] {
+        for fs in FsKind::ALL {
+            for nodes in [1usize, 2, 4, 8, 16] {
+                let sc = base(
+                    "fig6",
+                    fs,
+                    nodes,
+                    4,
+                    Kind::Dl {
+                        strong,
+                        work,
+                        aggregate: false,
+                    },
+                );
+                v.push(with_id(sc, tag, None, &format!("n{nodes}")));
+            }
+        }
+    }
+
+    // ablate_server — worker-pool width × dispatch policy behind ONE
+    // master (flat: the master is the choke point).
+    for workers in [1usize, 2, 4, 8, 16] {
+        for (dispatch, dtag) in [(Dispatch::RoundRobin, "rr"), (Dispatch::LeastLoaded, "ll")] {
+            let mut sc = base(
+                "ablate_server",
+                FsKind::Commit,
+                8,
+                12,
+                Kind::Synthetic {
+                    config: Config::CcR,
+                    access: 8 << 10,
+                    read_pattern: None,
+                },
+            );
+            sc.workers = Some(workers);
+            sc.dispatch = dispatch;
+            v.push(with_id(
+                sc,
+                "CC-R",
+                Some(8 << 10),
+                &format!("w{workers}.{dtag}"),
+            ));
+        }
+    }
+
+    // ablate_sharding — shard the plane 1 → 16; CommitFS small RANDOM
+    // reads over a striped dataset, the workload where the gap lives.
+    for shards in [1usize, 2, 4, 8, 16] {
+        let mut sc = base(
+            "ablate_sharding",
+            FsKind::Commit,
+            8,
+            12,
+            Kind::Synthetic {
+                config: Config::CcR,
+                access: 8 << 10,
+                read_pattern: Some(Pattern::Random),
+            },
+        );
+        sc.shards = shards;
+        sc.files = 32;
+        v.push(with_id(sc, "CC-R.rand", Some(8 << 10), &format!("s{shards}")));
+    }
+
+    // ablate_device — device-speed sensitivity across testbeds.
+    for testbed in [Testbed::Hdd, Testbed::Catalyst, Testbed::Expanse, Testbed::Pmem] {
+        for fs in FsKind::ALL {
+            let mut sc = base(
+                "ablate_device",
+                fs,
+                8,
+                12,
+                Kind::Synthetic {
+                    config: Config::CcR,
+                    access: 8 << 10,
+                    read_pattern: None,
+                },
+            );
+            sc.testbed = testbed;
+            sc.repeats = 3;
+            v.push(with_id(
+                sc,
+                "CC-R",
+                Some(8 << 10),
+                &format!("{}.n8", testbed.name()),
+            ));
+        }
+    }
+
+    // ablate_granularity — coarse (one commit per phase) vs fine (one
+    // commit per write) on CommitFS CN-W small writes.
+    for nodes in [2usize, 4, 8, 16] {
+        v.push(with_id(
+            base(
+                "ablate_granularity",
+                FsKind::Commit,
+                nodes,
+                12,
+                Kind::Synthetic {
+                    config: Config::CnW,
+                    access: 8 << 10,
+                    read_pattern: None,
+                },
+            ),
+            "CN-W.coarse",
+            Some(8 << 10),
+            &format!("n{nodes}"),
+        ));
+        v.push(with_id(
+            base(
+                "ablate_granularity",
+                FsKind::Commit,
+                nodes,
+                12,
+                Kind::FineCommit { access: 8 << 10 },
+            ),
+            "CN-W.fine",
+            Some(8 << 10),
+            &format!("n{nodes}"),
+        ));
+    }
+
+    // ablate_dl_aggregation — unaggregated vs aggregated ownership
+    // queries in the DL path, commit vs session.
+    for fs in [FsKind::Commit, FsKind::Session] {
+        for aggregate in [false, true] {
+            for nodes in [2usize, 4, 8, 16] {
+                let sc = base(
+                    "ablate_dl_aggregation",
+                    fs,
+                    nodes,
+                    4,
+                    Kind::Dl {
+                        strong: false,
+                        work: 8,
+                        aggregate,
+                    },
+                );
+                let tag = if aggregate { "dl.weak.agg" } else { "dl.weak" };
+                v.push(with_id(sc, tag, None, &format!("n{nodes}")));
+            }
+        }
+    }
+
+    // smoke — the CI perf-gate subset: tiny scales, every model ×
+    // Table-8 config (+ a random-read variant), plus one SCR and one DL
+    // cell per model so every workload driver is exercised.
+    for fs in FsKind::ALL {
+        for config in [Config::CnW, Config::SnW, Config::CcR, Config::CsR] {
+            let mut sc = base(
+                "smoke",
+                fs,
+                2,
+                2,
+                Kind::Synthetic {
+                    config,
+                    access: 8 << 10,
+                    read_pattern: None,
+                },
+            );
+            sc.m = 3;
+            sc.repeats = 2;
+            sc.smoke = true;
+            v.push(with_id(sc, config.name(), Some(8 << 10), "n2"));
+        }
+        let mut sc = base(
+            "smoke",
+            fs,
+            2,
+            2,
+            Kind::Synthetic {
+                config: Config::CcR,
+                access: 8 << 10,
+                read_pattern: Some(Pattern::Random),
+            },
+        );
+        sc.m = 3;
+        sc.repeats = 2;
+        sc.smoke = true;
+        v.push(with_id(sc, "CC-R.rand", Some(8 << 10), "n2"));
+
+        let mut sc = base("smoke", fs, 3, 2, Kind::Scr { particles: 240_000 });
+        sc.repeats = 2;
+        sc.smoke = true;
+        v.push(with_id(sc, "scr", None, "n3"));
+
+        let mut sc = base(
+            "smoke",
+            fs,
+            2,
+            2,
+            Kind::Dl {
+                strong: false,
+                work: 1,
+                aggregate: false,
+            },
+        );
+        sc.repeats = 2;
+        sc.smoke = true;
+        v.push(with_id(sc, "dl.weak", None, "n2"));
+    }
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_well_formed() {
+        let all = registry();
+        let mut seen = std::collections::BTreeSet::new();
+        for sc in &all {
+            assert!(seen.insert(sc.id.clone()), "duplicate scenario id {}", sc.id);
+            assert!(sc.id.starts_with(sc.family), "id {} != family {}", sc.id, sc.family);
+            assert!(sc.id.contains(sc.fs.name()), "id {} lacks model", sc.id);
+            assert!(sc.repeats >= 1 && sc.nodes >= 1 && sc.shards >= 1);
+        }
+    }
+
+    #[test]
+    fn every_figure_family_has_all_models() {
+        let all = registry();
+        for family in ["fig3", "fig4", "fig5", "fig6", "smoke"] {
+            for fs in FsKind::ALL {
+                assert!(
+                    all.iter().any(|s| s.family == family && s.fs == fs),
+                    "{family} missing {fs:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uses_pattern_reflects_config_and_override() {
+        let all = registry();
+        let rand = all
+            .iter()
+            .find(|s| s.id.contains("ablate_sharding") && s.id.contains("s8"))
+            .unwrap();
+        assert!(rand.uses_pattern(Pattern::Random));
+        assert!(rand.uses_pattern(Pattern::Contiguous)); // write side
+        assert!(!rand.uses_pattern(Pattern::Strided));
+        let snw = all.iter().find(|s| s.id.starts_with("fig3/SN-W")).unwrap();
+        assert!(snw.uses_pattern(Pattern::Strided));
+        assert!(!snw.uses_pattern(Pattern::Random));
+    }
+}

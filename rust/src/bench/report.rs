@@ -1,0 +1,242 @@
+//! Schema-versioned bench records: the one JSON shape every scenario in
+//! the matrix emits (`target/results/BENCH_matrix.json`) and the parse
+//! side that `pscnf bench --compare` consumes. See DESIGN.md
+//! §Benchmarks for the scenario-id scheme and the schema.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Version of the record schema. Bump on incompatible shape changes;
+/// [`BenchMatrix::from_json`] refuses files whose version it does not
+/// understand, so a stale CI baseline fails loudly instead of diffing
+/// garbage.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One measured metric with its improvement direction, so the compare
+/// gate knows which way "worse" points without a hard-coded name list.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metric {
+    pub value: f64,
+    pub higher_is_better: bool,
+}
+
+impl Metric {
+    /// A metric where bigger is better (bandwidth).
+    pub fn higher(value: f64) -> Self {
+        Self {
+            value,
+            higher_is_better: true,
+        }
+    }
+
+    /// A metric where smaller is better (latency, RPC counts).
+    pub fn lower(value: f64) -> Self {
+        Self {
+            value,
+            higher_is_better: false,
+        }
+    }
+}
+
+/// One scenario's record in the matrix: id + input params + measured
+/// metrics. `params` are informational (they pin down what ran);
+/// `metrics` are what the regression gate diffs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BenchRecord {
+    /// Stable scenario id (`family/workload/access/model/scale`).
+    pub id: String,
+    /// Bench family (`fig3` … `ablate_sharding`, `smoke`).
+    pub family: String,
+    pub params: BTreeMap<String, Json>,
+    pub metrics: BTreeMap<String, Metric>,
+}
+
+impl BenchRecord {
+    pub fn new(id: impl Into<String>, family: impl Into<String>) -> Self {
+        Self {
+            id: id.into(),
+            family: family.into(),
+            params: BTreeMap::new(),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    pub fn param(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.params.insert(key.to_string(), value.into());
+        self
+    }
+
+    pub fn metric(&mut self, name: &str, m: Metric) -> &mut Self {
+        self.metrics.insert(name.to_string(), m);
+        self
+    }
+
+    pub fn metric_value(&self, name: &str) -> Option<f64> {
+        self.metrics.get(name).map(|m| m.value)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", self.id.as_str())
+            .set("family", self.family.as_str())
+            .set("params", Json::Obj(self.params.clone()));
+        let mut metrics = Json::obj();
+        for (name, m) in &self.metrics {
+            let mut mo = Json::obj();
+            mo.set("value", m.value)
+                .set("higher_is_better", m.higher_is_better);
+            metrics.set(name, mo);
+        }
+        o.set("metrics", metrics);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or("record missing string `id`")?
+            .to_string();
+        let family = j
+            .get("family")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let params = j
+            .get("params")
+            .and_then(Json::entries)
+            .cloned()
+            .unwrap_or_default();
+        let mut metrics = BTreeMap::new();
+        if let Some(entries) = j.get("metrics").and_then(Json::entries) {
+            for (name, mj) in entries {
+                let value = mj
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("record `{id}` metric `{name}` missing `value`"))?;
+                let higher_is_better = mj
+                    .get("higher_is_better")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| {
+                        format!("record `{id}` metric `{name}` missing `higher_is_better`")
+                    })?;
+                metrics.insert(
+                    name.clone(),
+                    Metric {
+                        value,
+                        higher_is_better,
+                    },
+                );
+            }
+        }
+        Ok(Self {
+            id,
+            family,
+            params,
+            metrics,
+        })
+    }
+}
+
+/// The whole scenario matrix of one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BenchMatrix {
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchMatrix {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn find(&self, id: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.id == id)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema_version", SCHEMA_VERSION).set(
+            "records",
+            Json::Arr(self.records.iter().map(BenchRecord::to_json).collect()),
+        );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let version = j
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .ok_or("bench matrix missing `schema_version`")? as u64;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "bench matrix schema_version {version} not supported \
+                 (this build reads {SCHEMA_VERSION})"
+            ));
+        }
+        let records = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or("bench matrix missing `records` array")?
+            .iter()
+            .map(BenchRecord::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self { records })
+    }
+
+    /// Parse matrix text (the inverse of `to_json().pretty()`).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Load a matrix file from disk.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_round_trips() {
+        let mut r = BenchRecord::new("fig4/CC-R/8KiB/commit/n8", "fig4");
+        r.param("nodes", 8u64).param("fs", "commit");
+        r.metric("bw", Metric::higher(1.25e9))
+            .metric("rpcs", Metric::lower(960.0));
+        let back = BenchRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.metric_value("bw"), Some(1.25e9));
+        assert!(!back.metrics["rpcs"].higher_is_better);
+    }
+
+    #[test]
+    fn matrix_rejects_wrong_schema_version() {
+        let mut m = BenchMatrix::new();
+        m.records.push(BenchRecord::new("a/b", "a"));
+        let mut j = m.to_json();
+        assert!(BenchMatrix::from_json(&j).is_ok());
+        j.set("schema_version", 99u64);
+        let err = BenchMatrix::from_json(&j).unwrap_err();
+        assert!(err.contains("schema_version 99"), "{err}");
+        let mut no_version = Json::obj();
+        no_version.set("records", Json::Arr(vec![]));
+        assert!(BenchMatrix::from_json(&no_version).is_err());
+    }
+
+    #[test]
+    fn malformed_metric_is_an_error() {
+        let mut j = Json::obj();
+        j.set("schema_version", SCHEMA_VERSION);
+        let mut rec = Json::obj();
+        rec.set("id", "x/y");
+        let mut metrics = Json::obj();
+        let mut m = Json::obj();
+        m.set("value", 1.0); // missing higher_is_better
+        metrics.set("bw", m);
+        rec.set("metrics", metrics);
+        j.set("records", Json::Arr(vec![rec]));
+        assert!(BenchMatrix::from_json(&j).is_err());
+    }
+}

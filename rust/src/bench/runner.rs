@@ -1,0 +1,348 @@
+//! Scenario execution: run one registry cell on the DES engine and
+//! fold its repeats into a schema-versioned [`BenchRecord`] — bandwidth
+//! mean, virtual-time latency percentiles (via `util::stats`), and the
+//! fabric/engine counters (RPCs, priced intervals, executed events).
+
+use super::registry::{Kind, Scenario};
+use super::report::{BenchMatrix, BenchRecord, Metric};
+use crate::basefs::DesFabric;
+use crate::dl::{DlDriver, DlParams};
+use crate::fs::{CommitFs, WorkloadFs};
+use crate::scr::{ScrDriver, ScrParams};
+use crate::sim::{Cluster, Driver, Engine, NetParams, Ns, ServerParams, SimOp, UpfsParams};
+use crate::util::stats::Samples;
+use crate::workload::{Config, SyntheticDriver};
+use std::collections::VecDeque;
+
+/// Base RNG seed for repeat `rep` (kept stable so records diff cleanly
+/// across runs and PRs).
+fn rep_seed(rep: usize) -> u64 {
+    1000 + rep as u64
+}
+
+/// Build the scenario's cluster. Scenarios without a worker override go
+/// through [`crate::config::Testbed::cluster_sharded`] — the same
+/// constructor `pscnf run` uses — so bench cells and CLI runs can never
+/// model different clusters for the same testbed. Only the server
+/// ablation hand-assembles `ServerParams`.
+fn cluster(sc: &Scenario, seed: u64) -> Cluster {
+    match sc.workers {
+        None => sc.testbed.cluster_sharded(sc.nodes, seed, sc.shards),
+        Some(w) => {
+            let server = ServerParams {
+                workers: w,
+                dispatch: sc.dispatch,
+                ..ServerParams::catalyst_sharded(sc.shards)
+            };
+            Cluster::new(
+                sc.nodes,
+                sc.testbed.ssd(),
+                NetParams::ib_qdr(),
+                server,
+                UpfsParams::catalyst_lustre(),
+                seed,
+            )
+        }
+    }
+}
+
+/// Per-repeat observations folded into the record. Counters are folded
+/// as samples too (seed-sensitive scenarios vary per repeat; recording
+/// only the last repeat would make the gated value depend on
+/// `--repeats`).
+#[derive(Default)]
+struct Fold {
+    bw: Samples,
+    restart_bw: Samples,
+    lat_s: Samples,
+    rpcs: Samples,
+    rpc_intervals: Samples,
+    sim_ops: Samples,
+}
+
+/// Run a scenario to completion and produce its matrix record.
+pub fn run_scenario(sc: &Scenario) -> BenchRecord {
+    let mut fold = Fold::default();
+    for rep in 0..sc.repeats {
+        let seed = rep_seed(rep);
+        run_once(sc, seed, &mut fold);
+    }
+    let mut rec = BenchRecord::new(sc.id.clone(), sc.family);
+    rec.param("fs", sc.fs.name())
+        .param("testbed", sc.testbed.name())
+        .param("nodes", sc.nodes)
+        .param("ppn", sc.ppn)
+        .param("shards", sc.shards)
+        .param("files", sc.files)
+        .param("repeats", sc.repeats);
+    if let Some(w) = sc.workers {
+        rec.param("workers", w);
+    }
+    match &sc.kind {
+        Kind::Synthetic {
+            config,
+            access,
+            read_pattern,
+        } => {
+            rec.param("workload", config.name())
+                .param("access_bytes", *access)
+                .param("m", sc.m);
+            if let Some(p) = read_pattern {
+                rec.param("read_pattern", p.name());
+            }
+        }
+        Kind::Scr { particles } => {
+            rec.param("workload", "scr").param("particles", *particles);
+        }
+        Kind::Dl {
+            strong,
+            work,
+            aggregate,
+        } => {
+            rec.param("workload", if *strong { "dl.strong" } else { "dl.weak" })
+                .param("work", *work)
+                .param("aggregate", *aggregate);
+        }
+        Kind::FineCommit { access } => {
+            rec.param("workload", "CN-W.fine")
+                .param("access_bytes", *access)
+                .param("m", sc.m);
+        }
+    }
+    rec.metric("bw", Metric::higher(fold.bw.mean()));
+    if !fold.restart_bw.is_empty() {
+        rec.metric("restart_bw", Metric::higher(fold.restart_bw.mean()));
+    }
+    rec.metric("lat_p50_s", Metric::lower(fold.lat_s.percentile(50.0)))
+        .metric("lat_p95_s", Metric::lower(fold.lat_s.percentile(95.0)))
+        .metric("rpcs", Metric::lower(fold.rpcs.mean()))
+        .metric("rpc_intervals", Metric::lower(fold.rpc_intervals.mean()))
+        .metric("sim_ops", Metric::lower(fold.sim_ops.mean()));
+    rec
+}
+
+fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
+    match &sc.kind {
+        Kind::Synthetic {
+            config,
+            access,
+            read_pattern,
+        } => {
+            let mut params = config
+                .params(sc.nodes, sc.ppn, *access, sc.m, seed)
+                .with_files(sc.files);
+            if let (Some(over), Some(_)) = (read_pattern, params.read_pattern) {
+                params.read_pattern = Some(*over);
+            }
+            let write_phase = matches!(config, Config::CnW | Config::SnW);
+            let report = SyntheticDriver::new_sharded(sc.fs, params, sc.shards)
+                .run(cluster(sc, seed ^ 0xBEEF));
+            fold.bw.push(if write_phase {
+                report.write_bw()
+            } else {
+                report.read_bw()
+            });
+            fold.lat_s.push(report.makespan.as_secs_f64());
+            fold.rpcs.push(report.counters.rpcs as f64);
+            fold.rpc_intervals.push(report.counters.rpc_intervals as f64);
+            fold.sim_ops.push(report.sim_ops as f64);
+        }
+        Kind::Scr { particles } => {
+            let mut p = ScrParams::with_nodes(sc.nodes, sc.ppn);
+            p.particles = *particles;
+            let report = ScrDriver::new(sc.fs, p).run(cluster(sc, seed));
+            fold.bw.push(report.ckpt_bw());
+            fold.restart_bw.push(report.restart_bw());
+            fold.lat_s.push(report.restart_end.as_secs_f64());
+            fold.rpcs.push(report.counters.rpcs as f64);
+            fold.rpc_intervals.push(report.counters.rpc_intervals as f64);
+            fold.sim_ops.push(report.sim_ops as f64);
+        }
+        Kind::Dl {
+            strong,
+            work,
+            aggregate,
+        } => {
+            let mut p = if *strong {
+                DlParams::strong(sc.nodes, sc.ppn, *work, seed)
+            } else {
+                DlParams::weak(sc.nodes, sc.ppn, *work, seed)
+            };
+            p.aggregate = *aggregate;
+            let report = DlDriver::new(sc.fs, p).run(cluster(sc, seed));
+            fold.bw.push(report.read_bw());
+            fold.lat_s.push(report.epoch_time.as_secs_f64());
+            fold.rpcs.push(report.counters.rpcs as f64);
+            fold.rpc_intervals.push(report.counters.rpc_intervals as f64);
+            fold.sim_ops.push(report.sim_ops as f64);
+        }
+        Kind::FineCommit { access } => {
+            let mut driver = FineCommitDriver::new(sc.nodes, sc.ppn, *access, sc.m, seed);
+            let node_of: Vec<usize> = (0..sc.nodes * sc.ppn).map(|r| r / sc.ppn).collect();
+            let mut engine = Engine::new(cluster(sc, seed ^ 0xBEEF), node_of);
+            let stats = engine.run(&mut driver).expect("fine-commit deadlock");
+            let total = (sc.nodes * sc.ppn * sc.m) as u64 * *access;
+            fold.bw.push(total as f64 / driver.done_at.as_secs_f64());
+            fold.lat_s.push(driver.done_at.as_secs_f64());
+            fold.rpcs.push(driver.fabric.counters.rpcs as f64);
+            fold.rpc_intervals.push(driver.fabric.counters.rpc_intervals as f64);
+            fold.sim_ops.push(stats.ops_executed as f64);
+        }
+    }
+}
+
+/// Run a list of scenarios into one matrix.
+pub fn run_matrix(scenarios: &[Scenario]) -> BenchMatrix {
+    let mut m = BenchMatrix::new();
+    for sc in scenarios {
+        m.records.push(run_scenario(sc));
+    }
+    m
+}
+
+/// CN-W on CommitFS with a commit after EVERY write — the superfluous
+/// fine-grained pattern of §2.3.1, quantified by `ablate_granularity`.
+/// (Moved here from the old standalone bench so the bench binary is a
+/// thin registry wrapper like every other.)
+struct FineCommitDriver {
+    fabric: DesFabric,
+    fs: Vec<CommitFs>,
+    file: u64,
+    plan: Vec<Vec<u64>>,
+    next: Vec<usize>,
+    pending: Vec<VecDeque<SimOp>>,
+    payload: Vec<u8>,
+    size: u64,
+    done_at: Ns,
+}
+
+impl FineCommitDriver {
+    fn new(nodes: usize, ppn: usize, size: u64, m: usize, seed: u64) -> Self {
+        let params = Config::CnW.params(nodes, ppn, size, m, seed);
+        let nranks = params.nranks();
+        let node_of: Vec<usize> = (0..nranks).map(|r| r / ppn).collect();
+        let fabric = DesFabric::new_phantom(node_of);
+        let mut fs: Vec<CommitFs> = (0..nranks)
+            .map(|r| CommitFs::new(r as u32, fabric.bb_of(r as u32)))
+            .collect();
+        let mut fabric = fabric;
+        let mut file = 0;
+        for f in fs.iter_mut() {
+            file = WorkloadFs::open(f, &mut fabric, "/fine.dat");
+        }
+        for r in 0..nranks {
+            while fabric.pop_cost(r as u32).is_some() {}
+        }
+        let plan: Vec<Vec<u64>> = (0..nranks).map(|r| params.write_offsets(r)).collect();
+        Self {
+            fabric,
+            fs,
+            file,
+            plan,
+            next: vec![0; nranks],
+            pending: (0..nranks).map(|_| VecDeque::new()).collect(),
+            payload: vec![0u8; size as usize],
+            size,
+            done_at: Ns::ZERO,
+        }
+    }
+}
+
+impl Driver for FineCommitDriver {
+    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+        loop {
+            if let Some(op) = self.pending[rank].pop_front() {
+                return op;
+            }
+            let i = self.next[rank];
+            if i < self.plan[rank].len() {
+                let off = self.plan[rank][i];
+                WorkloadFs::write_at(
+                    &mut self.fs[rank],
+                    &mut self.fabric,
+                    self.file,
+                    off,
+                    &self.payload,
+                )
+                .expect("fine-commit write");
+                self.fs[rank]
+                    .commit_range(&mut self.fabric, self.file, off, self.size)
+                    .expect("fine-commit commit");
+                self.next[rank] = i + 1;
+                while let Some(op) = self.fabric.pop_cost(rank as u32) {
+                    self.pending[rank].push_back(op);
+                }
+            } else {
+                self.done_at = self.done_at.max(now);
+                return SimOp::Done;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::registry::registry;
+    use crate::fs::FsKind;
+
+    fn smoke(id_frag: &str, fs: FsKind) -> Scenario {
+        registry()
+            .into_iter()
+            .find(|s| s.smoke && s.id.contains(id_frag) && s.fs == fs)
+            .unwrap_or_else(|| panic!("no smoke scenario matching {id_frag} for {fs:?}"))
+    }
+
+    #[test]
+    fn synthetic_smoke_record_has_metrics_and_params() {
+        let sc = smoke("CC-R/8KiB", FsKind::Commit);
+        let rec = run_scenario(&sc);
+        assert_eq!(rec.id, sc.id);
+        assert_eq!(rec.family, "smoke");
+        assert!(rec.metric_value("bw").unwrap() > 0.0);
+        assert!(rec.metric_value("lat_p95_s").unwrap() > 0.0);
+        assert!(rec.metric_value("rpcs").unwrap() > 0.0);
+        assert!(rec.metric_value("sim_ops").unwrap() > 0.0);
+        assert_eq!(rec.params["nodes"].as_f64(), Some(2.0));
+        assert_eq!(rec.params["fs"].as_str(), Some("commit"));
+    }
+
+    #[test]
+    fn run_scenario_is_deterministic() {
+        let sc = smoke("dl.weak", FsKind::Session);
+        let a = run_scenario(&sc);
+        let b = run_scenario(&sc);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scr_smoke_reports_restart_bw() {
+        let sc = smoke("scr", FsKind::Session);
+        let rec = run_scenario(&sc);
+        assert!(rec.metric_value("bw").unwrap() > 0.0);
+        assert!(rec.metric_value("restart_bw").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fine_commit_pays_more_rpcs_than_coarse() {
+        let mk = |fine: bool| {
+            let mut sc = Scenario {
+                id: "t".into(),
+                ..registry()
+                    .into_iter()
+                    .find(|s| {
+                        s.family == "ablate_granularity"
+                            && s.nodes == 2
+                            && matches!(s.kind, Kind::FineCommit { .. }) == fine
+                    })
+                    .unwrap()
+            };
+            sc.repeats = 1;
+            run_scenario(&sc)
+        };
+        let fine = mk(true);
+        let coarse = mk(false);
+        assert!(fine.metric_value("rpcs").unwrap() > 2.0 * coarse.metric_value("rpcs").unwrap());
+        assert!(fine.metric_value("bw").unwrap() < coarse.metric_value("bw").unwrap());
+    }
+}

@@ -134,6 +134,10 @@ pub struct DlReport {
     pub epoch_time: Ns,
     pub rpcs: u64,
     pub remote_fraction: f64,
+    /// Full fabric traffic counters (`rpcs` is `counters.rpcs`).
+    pub counters: crate::basefs::FabricCounters,
+    /// DES events executed by the engine for this run.
+    pub sim_ops: u64,
 }
 
 impl DlReport {
@@ -211,7 +215,7 @@ impl DlDriver {
             .map(|r| r / self.params.ppn)
             .collect();
         let mut engine = Engine::new(cluster, node_of);
-        engine.run(&mut self).expect("DL emulation deadlock");
+        let stats = engine.run(&mut self).expect("DL emulation deadlock");
         let p = &self.params;
         let per_epoch: u64 =
             p.samples_per_rank_epoch as u64 * p.nranks() as u64 * p.sample_bytes;
@@ -230,6 +234,8 @@ impl DlDriver {
             } else {
                 self.remote as f64 / self.total_reads as f64
             },
+            counters: self.fabric.counters,
+            sim_ops: stats.ops_executed,
         }
     }
 

@@ -33,6 +33,11 @@ pub enum FsKind {
 }
 
 impl FsKind {
+    /// Every consistency model, in the paper's Table 6 order. The bench
+    /// registry iterates this so no model silently drops out of the
+    /// scenario matrix.
+    pub const ALL: [FsKind; 4] = [FsKind::Posix, FsKind::Commit, FsKind::Session, FsKind::Mpiio];
+
     pub fn name(&self) -> &'static str {
         match self {
             FsKind::Posix => "posix",
@@ -51,6 +56,17 @@ impl FsKind {
             other => Err(format!(
                 "unknown file system `{other}` (posix|commit|session|mpiio)"
             )),
+        }
+    }
+
+    /// Parse a model-list argument: `all`, `both` (the pair the paper
+    /// plots), or a comma-separated list of model names. One grammar
+    /// shared by `pscnf run --fs` and `pscnf bench --models`.
+    pub fn parse_list(s: &str) -> Result<Vec<FsKind>, String> {
+        match s {
+            "all" => Ok(FsKind::ALL.to_vec()),
+            "both" => Ok(vec![FsKind::Commit, FsKind::Session]),
+            _ => s.split(',').map(|x| FsKind::parse(x.trim())).collect(),
         }
     }
 }
@@ -177,6 +193,21 @@ mod tests {
         assert_eq!(FsKind::parse("MPI-IO").unwrap(), FsKind::Mpiio);
         assert!(FsKind::parse("zfs").is_err());
         assert_eq!(FsKind::Commit.name(), "commit");
+    }
+
+    #[test]
+    fn fskind_parse_list_grammar() {
+        assert_eq!(FsKind::parse_list("all").unwrap(), FsKind::ALL.to_vec());
+        assert_eq!(
+            FsKind::parse_list("both").unwrap(),
+            vec![FsKind::Commit, FsKind::Session]
+        );
+        assert_eq!(
+            FsKind::parse_list("posix, mpiio").unwrap(),
+            vec![FsKind::Posix, FsKind::Mpiio]
+        );
+        assert!(FsKind::parse_list("zfs").is_err());
+        assert!(FsKind::parse_list("").is_err());
     }
 
     #[test]

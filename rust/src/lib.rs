@@ -14,6 +14,7 @@
 //!   Pallas MLP kernel, AOT-lowered to HLO text loaded by [`runtime`].
 
 pub mod basefs;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod dl;

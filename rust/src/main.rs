@@ -6,6 +6,8 @@
 //! pscnf run --workload CC-R --fs session --nodes 8 --size 8K
 //! pscnf scr --nodes 8 --fs both        # Fig 5 emulation
 //! pscnf dl --mode weak --nodes 8       # Fig 6 emulation
+//! pscnf bench --filter smoke --json    # scenario matrix -> BENCH_matrix.json
+//! pscnf bench --compare base.json --gate 15   # CI perf-regression gate
 //! pscnf train --steps 50               # AOT train_step through PJRT
 //! pscnf info                           # platform + artifact status
 //! ```
@@ -33,6 +35,7 @@ fn main() {
         Some("run") => cmd_run(&argv[1..]),
         Some("scr") => cmd_scr(&argv[1..]),
         Some("dl") => cmd_dl(&argv[1..]),
+        Some("bench") => pscnf::bench::cli_main(&argv[1..]),
         Some("train") => cmd_train(&argv[1..]),
         Some("info") => cmd_info(),
         Some("--help") | Some("-h") | None => {
@@ -56,6 +59,7 @@ fn usage_text() -> String {
      \x20 run      run a synthetic N-to-1 workload on the DES cluster\n\
      \x20 scr      SCR + HACC-IO checkpoint/restart emulation (Fig 5)\n\
      \x20 dl       DL ingestion emulation (Fig 6)\n\
+     \x20 bench    run the scenario matrix / compare against a baseline\n\
      \x20 train    drive the AOT-compiled train_step through PJRT\n\
      \x20 info     platform, artifacts, build info\n\
      \n\
@@ -65,27 +69,6 @@ fn usage_text() -> String {
 
 fn print_usage() {
     println!("{}", usage_text());
-}
-
-fn parse_fs_list(s: &str) -> Result<Vec<FsKind>, String> {
-    if s == "both" {
-        return Ok(vec![FsKind::Commit, FsKind::Session]);
-    }
-    if s == "all" {
-        return Ok(vec![
-            FsKind::Posix,
-            FsKind::Commit,
-            FsKind::Session,
-            FsKind::Mpiio,
-        ]);
-    }
-    s.split(',').map(FsKind::parse).collect()
-}
-
-fn parse_nodes_list(s: &str) -> Result<Vec<usize>, String> {
-    s.split(',')
-        .map(|x| x.trim().parse().map_err(|e| format!("--nodes: {e}")))
-        .collect()
 }
 
 fn cmd_models() -> Result<(), String> {
@@ -181,8 +164,8 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let mut m = args.usize("m")?;
     let mut ppn = args.usize("ppn")?;
     let mut testbed = Testbed::parse(args.str("testbed")?)?;
-    let mut fs_kinds = parse_fs_list(args.str("fs")?)?;
-    let mut nodes_list = parse_nodes_list(args.str("nodes")?)?;
+    let mut fs_kinds = FsKind::parse_list(args.str("fs")?)?;
+    let mut nodes_list = args.usize_list("nodes")?;
     let repeats = args.usize("repeats")?;
     let mut shards = args.usize("shards")?;
     let mut files = args.usize("files")?;
@@ -266,8 +249,8 @@ fn cmd_scr(argv: &[String]) -> Result<(), String> {
     let spec = base_spec("scr", "SCR + HACC-IO checkpoint/restart emulation (Fig 5)")
         .opt("particles", "N", Some("10000000"), "global particle count");
     let args = spec.parse(argv)?;
-    let nodes_list = parse_nodes_list(args.str("nodes")?)?;
-    let fs_kinds = parse_fs_list(args.str("fs")?)?;
+    let nodes_list = args.usize_list("nodes")?;
+    let fs_kinds = FsKind::parse_list(args.str("fs")?)?;
     let ppn = args.usize("ppn")?;
     let particles = args.u64("particles")?;
     let repeats = args.usize("repeats")?;
@@ -300,8 +283,8 @@ fn cmd_dl(argv: &[String]) -> Result<(), String> {
             "batches/epoch (strong) or iterations/epoch (weak)",
         );
     let args = spec.parse(argv)?;
-    let nodes_list = parse_nodes_list(args.str("nodes")?)?;
-    let fs_kinds = parse_fs_list(args.str("fs")?)?;
+    let nodes_list = args.usize_list("nodes")?;
+    let fs_kinds = FsKind::parse_list(args.str("fs")?)?;
     let mut ppn = args.usize("ppn")?;
     if args.get("ppn") == Some("12") {
         ppn = 4; // the paper used 4 procs/node for DL (one per GPU)

@@ -17,7 +17,7 @@
 //!   over MPI. Reported restart bandwidth excludes the spare-node
 //!   transfer, exactly as in the paper.
 
-use crate::basefs::{DesFabric, FileId};
+use crate::basefs::{DesFabric, FabricCounters, FileId};
 use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
@@ -107,6 +107,10 @@ pub struct ScrReport {
     pub restart_start: Ns,
     pub restart_end: Ns,
     pub rpcs: u64,
+    /// Full fabric traffic counters (`rpcs` is `counters.rpcs`).
+    pub counters: FabricCounters,
+    /// DES events executed by the engine for this run.
+    pub sim_ops: u64,
 }
 
 impl ScrReport {
@@ -218,7 +222,7 @@ impl ScrDriver {
             .map(|r| r / self.params.ppn)
             .collect();
         let mut engine = Engine::new(cluster, node_of);
-        engine.run(&mut self).expect("SCR emulation deadlock");
+        let stats = engine.run(&mut self).expect("SCR emulation deadlock");
         let p = &self.params;
         // Survivors: compute ranks not on the failed node (node 0 fails).
         let survivors = (p.compute_ranks() - p.ppn) as u64;
@@ -235,6 +239,8 @@ impl ScrDriver {
             },
             restart_end: self.restart_end,
             rpcs: self.fabric.counters.rpcs,
+            counters: self.fabric.counters,
+            sim_ops: stats.ops_executed,
         }
     }
 

@@ -221,6 +221,19 @@ impl ParsedArgs {
             .map_err(|e| format!("--{name}: {e}"))
     }
 
+    /// Comma-separated list of unsigned integers, e.g. `--nodes 2,4,8`.
+    /// An empty string parses to an empty list (callers treat that as
+    /// "no filter").
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        let raw = self.str(name)?;
+        if raw.trim().is_empty() {
+            return Ok(Vec::new());
+        }
+        raw.split(',')
+            .map(|x| x.trim().parse().map_err(|e| format!("--{name}: {e}")))
+            .collect()
+    }
+
     /// Byte-size option, e.g. `--size 8K`.
     pub fn bytes(&self, name: &str) -> Result<u64, String> {
         super::units::parse_bytes(self.str(name)?).map_err(|e| format!("--{name}: {e}"))
@@ -292,6 +305,17 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(spec().parse(&args(&["cnw", "--nodes"])).is_err());
+    }
+
+    #[test]
+    fn usize_list_parses_and_empty_is_empty() {
+        let spec = ArgSpec::new("t", "t").opt("scales", "LIST", Some(""), "node counts");
+        let p = spec.parse(&args(&["--scales", "2, 4,8"])).unwrap();
+        assert_eq!(p.usize_list("scales").unwrap(), vec![2, 4, 8]);
+        let p = spec.parse(&args(&[])).unwrap();
+        assert!(p.usize_list("scales").unwrap().is_empty());
+        let p = spec.parse(&args(&["--scales", "2,x"])).unwrap();
+        assert!(p.usize_list("scales").is_err());
     }
 
     #[test]

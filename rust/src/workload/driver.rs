@@ -13,7 +13,7 @@
 //! ```
 
 use super::spec::WorkloadParams;
-use crate::basefs::{DesFabric, FileId};
+use crate::basefs::{DesFabric, FabricCounters, FileId};
 use crate::fs::{CommitFs, FsKind, MpiioFs, PosixFs, SessionFs, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
@@ -59,6 +59,11 @@ pub struct PhaseReport {
     pub read_end: Ns,
     pub makespan: Ns,
     pub rpcs: u64,
+    /// Full fabric traffic counters (`rpcs` above is kept as the
+    /// historical shorthand for `counters.rpcs`).
+    pub counters: FabricCounters,
+    /// DES events executed by the engine for this run.
+    pub sim_ops: u64,
 }
 
 impl PhaseReport {
@@ -212,6 +217,8 @@ impl SyntheticDriver {
             read_end: self.read_end_max,
             makespan: stats.makespan,
             rpcs: self.fabric.counters.rpcs,
+            counters: self.fabric.counters,
+            sim_ops: stats.ops_executed,
         }
     }
 

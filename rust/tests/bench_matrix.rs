@@ -1,0 +1,168 @@
+//! The machine-readable half of the bench harness: `dump → parse →
+//! compare` round trips, the exact regression-gate boundary, and the
+//! non-fatal handling of unknown scenarios / missing metrics — the
+//! contracts the CI perf-gate job relies on.
+
+use pscnf::bench::{compare, BenchMatrix, BenchRecord, Metric, SCHEMA_VERSION};
+use pscnf::util::json::Json;
+
+fn record(id: &str, bw: f64, rpcs: f64) -> BenchRecord {
+    let mut r = BenchRecord::new(id, id.split('/').next().unwrap());
+    r.param("nodes", 4u64).param("fs", "commit");
+    r.metric("bw", Metric::higher(bw))
+        .metric("rpcs", Metric::lower(rpcs));
+    r
+}
+
+fn matrix(records: Vec<BenchRecord>) -> BenchMatrix {
+    let mut m = BenchMatrix::new();
+    m.records = records;
+    m
+}
+
+#[test]
+fn dump_parse_compare_round_trip_is_identical() {
+    let m = matrix(vec![
+        record("fig4/CC-R/8KiB/commit/n4", 1.25e9, 960.0),
+        record("fig4/CC-R/8KiB/session/n4", 6.1e9, 130.0),
+        record("smoke/scr/mpiio/n3", 3.3e8, 48.0),
+    ]);
+    let text = m.to_json().pretty();
+    assert!(text.contains(&format!("\"schema_version\": {SCHEMA_VERSION}")));
+    let back = BenchMatrix::parse(&text).unwrap();
+    assert_eq!(back, m);
+    // Compact form parses to the same matrix too.
+    assert_eq!(BenchMatrix::parse(&m.to_json().dump()).unwrap(), m);
+
+    // Identical matrices compare clean at any gate, including 0.
+    for gate in [0.0, 15.0] {
+        let rep = compare(&m, &back, gate);
+        assert!(rep.passed(), "gate {gate}");
+        assert!(rep.regressions().is_empty());
+        assert!(rep.unknown_scenarios.is_empty());
+        assert!(rep.missing_scenarios.is_empty());
+        assert!(rep.missing_metrics.is_empty());
+        assert_eq!(rep.deltas.len(), 6); // 3 records × 2 metrics
+        assert!(rep.deltas.iter().all(|d| d.worse_pct == 0.0));
+    }
+}
+
+#[test]
+fn regression_at_exactly_the_gate_boundary() {
+    let base = matrix(vec![record("a/b/c", 200.0, 100.0)]);
+
+    // Higher-is-better: a drop of exactly 15% passes a 15% gate...
+    let cur = matrix(vec![record("a/b/c", 170.0, 100.0)]);
+    let rep = compare(&base, &cur, 15.0);
+    assert!(rep.passed(), "exact-boundary drop must pass: {:?}", rep.deltas);
+    let bw = rep.deltas.iter().find(|d| d.metric == "bw").unwrap();
+    assert!((bw.worse_pct - 15.0).abs() < 1e-12);
+
+    // ...and any drop strictly beyond it fails.
+    let cur = matrix(vec![record("a/b/c", 169.0, 100.0)]);
+    let rep = compare(&base, &cur, 15.0);
+    assert!(!rep.passed());
+    assert_eq!(rep.regressions().len(), 1);
+    assert_eq!(rep.regressions()[0].metric, "bw");
+
+    // Lower-is-better mirror: +15% rpcs passes, beyond fails.
+    let cur = matrix(vec![record("a/b/c", 200.0, 115.0)]);
+    assert!(compare(&base, &cur, 15.0).passed());
+    let cur = matrix(vec![record("a/b/c", 200.0, 116.0)]);
+    let rep = compare(&base, &cur, 15.0);
+    assert!(!rep.passed());
+    assert_eq!(rep.regressions()[0].metric, "rpcs");
+
+    // Improvements never trip the gate, however large.
+    let cur = matrix(vec![record("a/b/c", 2000.0, 1.0)]);
+    assert!(compare(&base, &cur, 15.0).passed());
+}
+
+#[test]
+fn unknown_scenario_and_missing_metric_are_reported_not_fatal() {
+    let base = matrix(vec![
+        record("a/b/c", 100.0, 10.0),
+        record("retired/cell", 5.0, 5.0),
+    ]);
+    let mut partial = record("a/b/c", 100.0, 10.0);
+    partial.metrics.remove("rpcs");
+    partial.metric("new_metric", Metric::higher(1.0));
+    let cur = matrix(vec![partial, record("brand/new/cell", 7.0, 7.0)]);
+
+    let rep = compare(&base, &cur, 15.0);
+    assert!(rep.passed(), "notices must not fail the gate");
+    assert_eq!(rep.unknown_scenarios, vec!["brand/new/cell".to_string()]);
+    assert_eq!(rep.missing_scenarios, vec!["retired/cell".to_string()]);
+    // `rpcs` vanished from current, `new_metric` has no baseline.
+    let mut missing = rep.missing_metrics.clone();
+    missing.sort();
+    assert_eq!(
+        missing,
+        vec![
+            ("a/b/c".to_string(), "new_metric".to_string()),
+            ("a/b/c".to_string(), "rpcs".to_string()),
+        ]
+    );
+    // Only the one shared metric was actually diffed.
+    assert_eq!(rep.deltas.len(), 1);
+    assert_eq!(rep.deltas[0].metric, "bw");
+    // The notices surface in the rendered report.
+    let text = rep.render();
+    assert!(text.contains("brand/new/cell"));
+    assert!(text.contains("retired/cell"));
+    assert!(text.contains("new_metric"));
+}
+
+#[test]
+fn fully_disjoint_id_sets_fail_instead_of_passing_vacuously() {
+    // A wholesale id-scheme change must not let a regression ride along
+    // behind an empty comparison.
+    let base = matrix(vec![record("old/scheme/a", 1.0, 1.0)]);
+    let cur = matrix(vec![record("new/scheme/a", 1.0, 1.0)]);
+    let rep = compare(&base, &cur, 15.0);
+    assert!(rep.disjoint);
+    assert!(!rep.passed());
+    assert!(rep.render().contains("vacuous"));
+    // Partial overlap keeps the documented non-fatal behavior.
+    let cur = matrix(vec![record("old/scheme/a", 1.0, 1.0), record("new/x", 1.0, 1.0)]);
+    let rep = compare(&base, &cur, 15.0);
+    assert!(!rep.disjoint);
+    assert!(rep.passed());
+}
+
+#[test]
+fn zero_baseline_wrong_direction_is_an_unbounded_regression() {
+    let base = matrix(vec![record("a/b/c", 100.0, 0.0)]);
+    let cur = matrix(vec![record("a/b/c", 100.0, 3.0)]);
+    let rep = compare(&base, &cur, 15.0);
+    assert!(!rep.passed());
+    assert!(rep.regressions()[0].worse_pct.is_infinite());
+}
+
+#[test]
+fn parse_rejects_foreign_or_stale_files() {
+    assert!(BenchMatrix::parse("not json").is_err());
+    assert!(BenchMatrix::parse("{\"records\": []}").is_err());
+    let mut j = matrix(vec![record("a/b/c", 1.0, 1.0)]).to_json();
+    j.set("schema_version", SCHEMA_VERSION + 1);
+    assert!(BenchMatrix::parse(&j.dump()).is_err());
+}
+
+#[test]
+fn record_json_shape_is_stable() {
+    // Pin the on-disk shape the CI baseline artifact depends on.
+    let r = record("fig4/CC-R/8KiB/commit/n4", 2.0, 3.0);
+    let j = r.to_json();
+    assert_eq!(
+        j.get("id").and_then(Json::as_str),
+        Some("fig4/CC-R/8KiB/commit/n4")
+    );
+    assert_eq!(j.get("family").and_then(Json::as_str), Some("fig4"));
+    let bw = j.get("metrics").and_then(|m| m.get("bw")).unwrap();
+    assert_eq!(bw.get("value").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(bw.get("higher_is_better").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        j.get("params").and_then(|p| p.get("nodes")).and_then(Json::as_f64),
+        Some(4.0)
+    );
+}

@@ -1,0 +1,80 @@
+//! Registry-completeness guard: the smoke subset of the scenario matrix
+//! must cover every consistency model × access pattern (and every
+//! workload driver), and every one of those cells must actually run in
+//! the DES engine and produce a finite, nonzero bandwidth — so no cell
+//! of the matrix can silently drop out or degenerate to zero.
+
+use pscnf::bench::{registry, run_scenario, Kind, Scenario};
+use pscnf::fs::FsKind;
+use pscnf::workload::Pattern;
+
+fn smoke_set() -> Vec<Scenario> {
+    let smoke: Vec<Scenario> = registry().into_iter().filter(|s| s.smoke).collect();
+    assert!(!smoke.is_empty(), "registry has no smoke scenarios");
+    smoke
+}
+
+#[test]
+fn smoke_covers_every_model_pattern_and_workload() {
+    let smoke = smoke_set();
+    for fs in FsKind::ALL {
+        for pat in [Pattern::Contiguous, Pattern::Strided, Pattern::Random] {
+            assert!(
+                smoke.iter().any(|s| s.fs == fs && s.uses_pattern(pat)),
+                "no smoke scenario covers {fs:?} × {pat:?}"
+            );
+        }
+        assert!(
+            smoke
+                .iter()
+                .any(|s| s.fs == fs && matches!(s.kind, Kind::Scr { .. })),
+            "no SCR smoke scenario for {fs:?}"
+        );
+        assert!(
+            smoke
+                .iter()
+                .any(|s| s.fs == fs && matches!(s.kind, Kind::Dl { .. })),
+            "no DL smoke scenario for {fs:?}"
+        );
+    }
+}
+
+#[test]
+fn every_smoke_cell_runs_with_finite_nonzero_bandwidth() {
+    for sc in smoke_set() {
+        let rec = run_scenario(&sc);
+        assert_eq!(rec.id, sc.id);
+        let bw = rec
+            .metric_value("bw")
+            .unwrap_or_else(|| panic!("scenario {} emitted no bw metric", sc.id));
+        assert!(
+            bw.is_finite() && bw > 0.0,
+            "scenario {} produced bandwidth {bw}",
+            sc.id
+        );
+        let lat = rec.metric_value("lat_p95_s").unwrap();
+        assert!(lat.is_finite() && lat > 0.0, "scenario {} lat {lat}", sc.id);
+    }
+}
+
+#[test]
+fn smoke_matrix_round_trips_through_json() {
+    use pscnf::bench::BenchMatrix;
+    // One cheap cell per model is enough to pin the end-to-end path the
+    // CI perf-gate uses: run → dump → parse → byte-identical records.
+    let cells: Vec<Scenario> = FsKind::ALL
+        .into_iter()
+        .map(|fs| {
+            smoke_set()
+                .into_iter()
+                .find(|s| s.fs == fs && s.id.contains("CC-R/8KiB"))
+                .expect("CC-R smoke cell per model")
+        })
+        .collect();
+    let matrix = pscnf::bench::run_matrix(&cells);
+    assert_eq!(matrix.records.len(), 4);
+    let back = BenchMatrix::parse(&matrix.to_json().pretty()).unwrap();
+    assert_eq!(back, matrix);
+    let rep = pscnf::bench::compare(&matrix, &back, 0.0);
+    assert!(rep.passed());
+}
