@@ -1,0 +1,23 @@
+//! Ablation — version-stamped ownership snapshots. The paper's
+//! headline ~5x session-vs-commit gap on small reads rests on clients
+//! *caching* ownership maps instead of querying per read; this bench
+//! measures the step beyond: a warm `session_open`/`MPI_File_sync`
+//! sends a lightweight `Revalidate` (a version compare, zero interval
+//! units) and only transfers the map when some other client attached
+//! in between.
+//!
+//! Workload: one contiguous write phase, then the reader half runs
+//! `r` sessions of small random reads each (scale tags `n4.r<rounds>`).
+//! Expected shape: the caching models' `revalidate_hit_rate` climbs
+//! toward 1.0 with rounds and their RPC count stays flat per session,
+//! while commit/posix RPCs scale with the read count. Writes are
+//! client-coalesced before attach, so `rpc_intervals` doubles as the
+//! coalescing-factor gauge.
+//!
+//! Thin wrapper over the `ablate_snapshot` family of the bench
+//! registry. `--json` additionally writes
+//! `target/results/BENCH_ablate_snapshot.json`.
+
+fn main() {
+    pscnf::bench::family_main("ablate_snapshot");
+}

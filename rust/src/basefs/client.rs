@@ -4,7 +4,7 @@
 
 use super::proto::{file_id, ClientId, FileId, Request, Response};
 use super::store::SharedBb;
-use crate::interval::{LocalTreeError, OwnedInterval, Range};
+use crate::interval::{coalesce_ranges, LocalTreeError, OwnedInterval, Range};
 use std::collections::HashMap;
 
 /// BaseFS error surface (mirrors the -1 returns of Table 5).
@@ -15,6 +15,9 @@ pub enum BfsError {
     AttachUnwritten(Range),
     DetachUnattached(Range),
     BadSeek,
+    /// `offset + len` exceeds `u64::MAX` — adversarial or corrupted
+    /// workload specs get an error return, not a panic.
+    RangeOverflow { offset: u64, len: u64 },
     Server(String),
 }
 
@@ -28,9 +31,17 @@ impl std::fmt::Display for BfsError {
             BfsError::AttachUnwritten(r) => write!(f, "attach of unwritten bytes in {r}"),
             BfsError::DetachUnattached(r) => write!(f, "detach of never-attached range {r}"),
             BfsError::BadSeek => write!(f, "seek before start of file"),
+            BfsError::RangeOverflow { offset, len } => {
+                write!(f, "range overflow: offset {offset} + len {len} exceeds u64")
+            }
             BfsError::Server(e) => write!(f, "server error: {e}"),
         }
     }
+}
+
+/// Overflow-checked range construction for caller-supplied offsets.
+fn range_at(offset: u64, len: u64) -> Result<Range, BfsError> {
+    Range::checked_at(offset, len).ok_or(BfsError::RangeOverflow { offset, len })
 }
 
 impl std::error::Error for BfsError {}
@@ -87,11 +98,28 @@ struct OpenFile {
     pos: u64,
 }
 
+/// Outcome of one file's snapshot synchronization
+/// ([`ClientCore::sync_snapshots`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapshotSync {
+    /// The cached version is still the file's current state — keep it.
+    Current,
+    /// New (or first) state: cache this version + ownership map.
+    Fresh {
+        version: u64,
+        intervals: Vec<OwnedInterval>,
+    },
+}
+
 /// One BaseFS client process.
 pub struct ClientCore {
     pub id: ClientId,
     bb: SharedBb,
     open: HashMap<FileId, OpenFile>,
+    /// Coalesce attach intervals into minimal range sets before the RPC
+    /// (on by default; the equivalence property test turns it off to
+    /// prove visibility is bit-for-bit unchanged).
+    coalesce: bool,
 }
 
 impl ClientCore {
@@ -100,11 +128,27 @@ impl ClientCore {
             id,
             bb,
             open: HashMap::new(),
+            coalesce: true,
         }
     }
 
     pub fn bb(&self) -> &SharedBb {
         &self.bb
+    }
+
+    /// Toggle client-side write coalescing (testing/ablation knob).
+    pub fn set_coalesce(&mut self, on: bool) {
+        self.coalesce = on;
+    }
+
+    /// Minimal attach-range set for a batch of newly attached segments.
+    fn attach_ranges(&self, segs: &[crate::interval::LocalInterval]) -> Vec<Range> {
+        let raw: Vec<Range> = segs.iter().map(|s| s.file).collect();
+        if self.coalesce {
+            coalesce_ranges(raw)
+        } else {
+            raw
+        }
     }
 
     fn opened(&mut self, file: FileId) -> Result<&mut OpenFile, BfsError> {
@@ -152,6 +196,9 @@ impl ClientCore {
         buf: &[u8],
     ) -> Result<usize, BfsError> {
         self.opened(file)?;
+        // Reject offsets whose end would wrap BEFORE touching the
+        // buffer — a wrapped range must never reach the interval trees.
+        range_at(offset, buf.len() as u64)?;
         let n = self.bb.write().unwrap().file(file).write(offset, buf);
         fabric.bb_io(self.id, true, buf.len() as u64);
         Ok(n)
@@ -167,7 +214,7 @@ impl ClientCore {
         owner: Option<ClientId>,
     ) -> Result<Vec<u8>, BfsError> {
         let pos = self.opened(file)?.pos;
-        let out = self.read_at(fabric, file, Range::at(pos, len), owner)?;
+        let out = self.read_at(fabric, file, range_at(pos, len)?, owner)?;
         self.opened(file)?.pos = pos + out.len() as u64;
         Ok(out)
     }
@@ -219,8 +266,9 @@ impl ClientCore {
     }
 
     /// bfs_attach: make local writes in `[offset, offset+size)` visible.
-    /// Packs all newly-attached intervals into a single RPC; a no-op RPC
-    /// is elided when everything was already attached.
+    /// Packs all newly-attached intervals — coalesced into the minimal
+    /// range set — into a single RPC; a no-op RPC is elided when
+    /// everything was already attached.
     pub fn attach<F: Fabric + ?Sized>(
         &mut self,
         fabric: &mut F,
@@ -229,7 +277,7 @@ impl ClientCore {
         size: u64,
     ) -> Result<(), BfsError> {
         self.opened(file)?;
-        let range = Range::at(offset, size);
+        let range = range_at(offset, size)?;
         let newly = self
             .bb
             .write()
@@ -240,7 +288,7 @@ impl ClientCore {
         if newly.is_empty() {
             return Ok(());
         }
-        let ranges: Vec<Range> = newly.iter().map(|s| s.file).collect();
+        let ranges = self.attach_ranges(&newly);
         match fabric.rpc(
             self.id,
             Request::Attach {
@@ -256,14 +304,20 @@ impl ClientCore {
     }
 
     /// bfs_attach_file: attach all local writes; no-op without buffered
-    /// writes.
-    pub fn attach_file<F: Fabric + ?Sized>(&mut self, fabric: &mut F, file: FileId) -> Result<(), BfsError> {
+    /// writes. Returns whether an Attach RPC was actually issued — the
+    /// consistency layers use this to decide if their cached snapshot
+    /// version just went stale (their own attach bumps it server-side).
+    pub fn attach_file<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+    ) -> Result<bool, BfsError> {
         self.opened(file)?;
         let newly = self.bb.write().unwrap().file(file).mark_all_attached();
         if newly.is_empty() {
-            return Ok(());
+            return Ok(false);
         }
-        let ranges: Vec<Range> = newly.iter().map(|s| s.file).collect();
+        let ranges = self.attach_ranges(&newly);
         match fabric.rpc(
             self.id,
             Request::Attach {
@@ -272,22 +326,24 @@ impl ClientCore {
                 ranges,
             },
         ) {
-            Response::Ok => Ok(()),
+            Response::Ok => Ok(true),
             Response::Error(e) => Err(BfsError::Server(e)),
             other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
         }
     }
 
     /// Batched bfs_attach_file over many files: one Attach request per
-    /// file with unattached writes, issued through [`Fabric::rpc_batch`]
-    /// so sharded fabrics pay one RPC per shard instead of one per file.
-    /// Commit-heavy phases (CommitFS end-of-phase, SCR publish) call
-    /// this; with a single file it is identical to [`Self::attach_file`].
+    /// file with unattached writes (ranges coalesced), issued through
+    /// [`Fabric::rpc_batch`] so sharded fabrics pay one RPC per shard
+    /// instead of one per file. Commit-heavy phases (CommitFS
+    /// end-of-phase, SCR publish) call this; with a single file it is
+    /// identical to [`Self::attach_file`]. Returns the files an Attach
+    /// was issued for (their server-side snapshot versions bumped).
     pub fn attach_files<F: Fabric + ?Sized>(
         &mut self,
         fabric: &mut F,
         files: &[FileId],
-    ) -> Result<(), BfsError> {
+    ) -> Result<Vec<FileId>, BfsError> {
         // Validate every handle BEFORE mutating any local attach state:
         // marking file A attached and then failing on an unopened file B
         // would elide A's attach RPC forever (the retry finds nothing
@@ -296,19 +352,21 @@ impl ClientCore {
             self.opened(file)?;
         }
         let mut reqs = Vec::new();
+        let mut attached = Vec::new();
         for &file in files {
             let newly = self.bb.write().unwrap().file(file).mark_all_attached();
             if newly.is_empty() {
                 continue;
             }
+            attached.push(file);
             reqs.push(Request::Attach {
                 file,
                 client: self.id,
-                ranges: newly.iter().map(|s| s.file).collect(),
+                ranges: self.attach_ranges(&newly),
             });
         }
         if reqs.is_empty() {
-            return Ok(());
+            return Ok(attached);
         }
         for resp in fabric.rpc_batch(self.id, reqs) {
             match resp {
@@ -317,7 +375,7 @@ impl ClientCore {
                 other => return Err(BfsError::Server(format!("unexpected: {other:?}"))),
             }
         }
-        Ok(())
+        Ok(attached)
     }
 
     /// Batched bfs_query_file over many files; result `i` is the
@@ -340,6 +398,44 @@ impl ClientCore {
         for resp in fabric.rpc_batch(self.id, reqs) {
             match resp {
                 Response::Intervals(ivs) => out.push(ivs),
+                Response::Snapshot { intervals, .. } => out.push(intervals),
+                Response::Error(e) => return Err(BfsError::Server(e)),
+                other => return Err(BfsError::Server(format!("unexpected: {other:?}"))),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Batched snapshot synchronization: for each `(file, cached)` pair,
+    /// send a lightweight `Revalidate` when a cached version exists and
+    /// a full `QueryFile` when it does not — all in one
+    /// [`Fabric::rpc_batch`], one round trip per shard touched. Result
+    /// `i` tells the caller whether `files[i]`'s cached snapshot is
+    /// still current or hands it the fresh one. This is the hot path of
+    /// `session_open` / `MPI_File_open` / `MPI_File_sync`.
+    pub fn sync_snapshots<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        files: &[(FileId, Option<u64>)],
+    ) -> Result<Vec<SnapshotSync>, BfsError> {
+        let mut reqs = Vec::with_capacity(files.len());
+        for &(file, cached) in files {
+            self.opened(file)?;
+            reqs.push(match cached {
+                Some(version) => Request::Revalidate { file, version },
+                None => Request::QueryFile { file },
+            });
+        }
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(files.len());
+        for resp in fabric.rpc_batch(self.id, reqs) {
+            match resp {
+                Response::Current { .. } => out.push(SnapshotSync::Current),
+                Response::Snapshot { version, intervals } => {
+                    out.push(SnapshotSync::Fresh { version, intervals })
+                }
                 Response::Error(e) => return Err(BfsError::Server(e)),
                 other => return Err(BfsError::Server(format!("unexpected: {other:?}"))),
             }
@@ -360,7 +456,7 @@ impl ClientCore {
             self.id,
             Request::Query {
                 file,
-                range: Range::at(offset, size),
+                range: range_at(offset, size)?,
             },
         ) {
             Response::Intervals(ivs) => Ok(ivs),
@@ -375,9 +471,20 @@ impl ClientCore {
         fabric: &mut F,
         file: FileId,
     ) -> Result<Vec<OwnedInterval>, BfsError> {
+        Ok(self.query_file_versioned(fabric, file)?.1)
+    }
+
+    /// bfs_query_file returning the snapshot version alongside the map —
+    /// what version-caching layers store for later revalidation.
+    pub fn query_file_versioned<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+    ) -> Result<(u64, Vec<OwnedInterval>), BfsError> {
         self.opened(file)?;
         match fabric.rpc(self.id, Request::QueryFile { file }) {
-            Response::Intervals(ivs) => Ok(ivs),
+            Response::Snapshot { version, intervals } => Ok((version, intervals)),
+            Response::Intervals(ivs) => Ok((0, ivs)),
             Response::Error(e) => Err(BfsError::Server(e)),
             other => Err(BfsError::Server(format!("unexpected: {other:?}"))),
         }
@@ -393,7 +500,7 @@ impl ClientCore {
         size: u64,
     ) -> Result<(), BfsError> {
         self.opened(file)?;
-        let range = Range::at(offset, size);
+        let range = range_at(offset, size)?;
         self.bb
             .write()
             .unwrap()
@@ -451,7 +558,7 @@ impl ClientCore {
         size: u64,
     ) -> Result<(), BfsError> {
         self.opened(file)?;
-        let range = Range::at(offset, size);
+        let range = range_at(offset, size)?;
         let segs: Vec<(Range, Vec<u8>)> = {
             let bb = self.bb.read().unwrap();
             match bb.get(file) {

@@ -20,6 +20,12 @@ use std::collections::VecDeque;
 pub struct FabricCounters {
     pub rpcs: u64,
     pub rpc_intervals: u64,
+    /// Snapshot `Revalidate` RPCs issued (subset of `rpcs`).
+    pub revalidates: u64,
+    /// Revalidations answered `Current` — no map transferred. The
+    /// hit-rate `revalidate_hits / revalidates` is what the
+    /// `ablate_snapshot` bench sweeps.
+    pub revalidate_hits: u64,
     pub fetch_bytes: u64,
     pub remote_fetches: u64,
     pub local_fetches: u64,
@@ -27,6 +33,30 @@ pub struct FabricCounters {
     pub upfs_write_bytes: u64,
     pub bb_write_bytes: u64,
     pub bb_read_bytes: u64,
+}
+
+impl FabricCounters {
+    /// Fraction of revalidations that hit (0.0 when none were issued).
+    pub fn revalidate_hit_rate(&self) -> f64 {
+        if self.revalidates == 0 {
+            0.0
+        } else {
+            self.revalidate_hits as f64 / self.revalidates as f64
+        }
+    }
+
+    /// Classify one handled request into the revalidation counters —
+    /// the single definition of what counts as a hit, shared by the
+    /// single-RPC and batched fabric paths.
+    fn count_revalidate(&mut self, was_revalidate: bool, resp: &Response) {
+        if !was_revalidate {
+            return;
+        }
+        self.revalidates += 1;
+        if matches!(resp, Response::Current { .. }) {
+            self.revalidate_hits += 1;
+        }
+    }
 }
 
 /// The DES fabric.
@@ -110,10 +140,14 @@ impl Fabric for DesFabric {
     fn rpc(&mut self, client: ClientId, req: Request) -> Response {
         let shard = self.server.shard_index(req.file());
         let req_units = req.interval_units();
+        let is_revalidate = matches!(req, Request::Revalidate { .. });
         let resp = self.server.handle(req);
+        // A revalidation that hits prices at ZERO intervals (version
+        // compare only); a miss upgrades to the snapshot it ships.
         let units = req_units.max(resp.interval_units());
         self.counters.rpcs += 1;
         self.counters.rpc_intervals += units as u64;
+        self.counters.count_revalidate(is_revalidate, &resp);
         self.push_cost(
             client,
             SimOp::Rpc {
@@ -136,9 +170,11 @@ impl Fabric for DesFabric {
         for req in reqs {
             let shard = self.server.shard_index(req.file());
             let req_units = req.interval_units();
+            let is_revalidate = matches!(req, Request::Revalidate { .. });
             let resp = self.server.handle(req);
             units_of[shard] += req_units.max(resp.interval_units());
             touched[shard] = true;
+            self.counters.count_revalidate(is_revalidate, &resp);
             out.push(resp);
         }
         for (shard, &units) in units_of.iter().enumerate() {

@@ -17,7 +17,7 @@ pub mod proto;
 pub mod server;
 pub mod store;
 
-pub use client::{BfsError, ClientCore, Fabric, Whence};
+pub use client::{BfsError, ClientCore, Fabric, SnapshotSync, Whence};
 pub use fabric::{DesFabric, FabricCounters, TestFabric};
 pub use proto::{file_id, shard_of, ClientId, FileId, Request, Response};
 pub use server::{GlobalServerState, MetadataPlane};

@@ -9,7 +9,7 @@
 //! (DESIGN.md §Sharding).
 
 use super::proto::{shard_of, FileId, Request, Response};
-use crate::interval::{DetachOutcome, GlobalIntervalTree};
+use crate::interval::{DetachOutcome, GlobalIntervalTree, OwnedInterval};
 use crate::util::hash::FxHashMap;
 
 #[derive(Debug, Default)]
@@ -17,6 +17,13 @@ struct FileEntry {
     tree: GlobalIntervalTree,
     attached_eof: u64,
     flushed_eof: u64,
+    /// Monotonic snapshot version, bumped on every mutation of the
+    /// ownership map (attach and effective detach). Lives in the shard
+    /// alongside the tree so a `Revalidate` is answered by the owning
+    /// shard with one integer compare — no cross-shard coordination and
+    /// no tree walk (DESIGN.md §Snapshot-Versioning). Files never
+    /// attached report version 0 (what clients cache for an empty map).
+    version: u64,
 }
 
 /// The global server state machine.
@@ -41,6 +48,7 @@ impl GlobalServerState {
                 ranges,
             } => {
                 let entry = self.files.entry(file).or_default();
+                entry.version += 1;
                 for range in ranges {
                     entry.attached_eof = entry.attached_eof.max(range.end);
                     entry.tree.attach(range, client);
@@ -56,12 +64,19 @@ impl GlobalServerState {
                 Response::Intervals(ivs)
             }
             Request::QueryFile { file } => {
-                let ivs = self
-                    .files
-                    .get(&file)
-                    .map(|e| e.tree.query_all())
-                    .unwrap_or_default();
-                Response::Intervals(ivs)
+                let (version, intervals) = self.snapshot_of(file);
+                Response::Snapshot { version, intervals }
+            }
+            Request::Revalidate { file, version } => {
+                let current = self.version_of(file);
+                if current == version {
+                    Response::Current { version: current }
+                } else {
+                    // Stale: hand back the fresh snapshot, exactly as
+                    // QueryFile would.
+                    let (version, intervals) = self.snapshot_of(file);
+                    Response::Snapshot { version, intervals }
+                }
             }
             Request::Detach {
                 file,
@@ -69,7 +84,15 @@ impl GlobalServerState {
                 range,
             } => {
                 let removed = match self.files.get_mut(&file) {
-                    Some(e) => e.tree.detach(range, client) == DetachOutcome::Detached,
+                    Some(e) => {
+                        let removed = e.tree.detach(range, client) == DetachOutcome::Detached;
+                        if removed {
+                            // The ownership map changed: cached snapshots
+                            // that include this range are stale.
+                            e.version += 1;
+                        }
+                        removed
+                    }
                     None => false,
                 };
                 Response::Detached { removed }
@@ -78,7 +101,13 @@ impl GlobalServerState {
                 let removed = self
                     .files
                     .get_mut(&file)
-                    .map(|e| e.tree.detach_all(client) > 0)
+                    .map(|e| {
+                        let removed = e.tree.detach_all(client) > 0;
+                        if removed {
+                            e.version += 1;
+                        }
+                        removed
+                    })
                     .unwrap_or(false);
                 Response::Detached { removed }
             }
@@ -108,6 +137,21 @@ impl GlobalServerState {
     /// Number of intervals currently stored for `file` (reporting).
     pub fn intervals_of(&self, file: FileId) -> usize {
         self.files.get(&file).map(|e| e.tree.len()).unwrap_or(0)
+    }
+
+    /// Current snapshot version of `file` (0 = never attached).
+    pub fn version_of(&self, file: FileId) -> u64 {
+        self.files.get(&file).map(|e| e.version).unwrap_or(0)
+    }
+
+    /// The (version, ownership map) pair QueryFile ships and a stale
+    /// Revalidate falls back to — one definition so the two reply
+    /// paths cannot diverge.
+    fn snapshot_of(&self, file: FileId) -> (u64, Vec<OwnedInterval>) {
+        self.files
+            .get(&file)
+            .map(|e| (e.version, e.tree.query_all()))
+            .unwrap_or_default()
     }
 
     /// Total intervals across all files (reporting / perf counters).
@@ -168,6 +212,11 @@ impl MetadataPlane {
     /// Intervals stored for `file` (on its owning shard).
     pub fn intervals_of(&self, file: FileId) -> usize {
         self.shards[self.shard_index(file)].intervals_of(file)
+    }
+
+    /// Snapshot version of `file` (on its owning shard).
+    pub fn version_of(&self, file: FileId) -> u64 {
+        self.shards[self.shard_index(file)].version_of(file)
     }
 
     /// Total intervals across all shards (reporting / perf counters).
@@ -344,6 +393,87 @@ mod tests {
         let b = reqs(&mut |r| plane.handle(r));
         assert_eq!(a, b);
         assert_eq!(flat.requests_handled(), plane.requests_handled());
+    }
+
+    #[test]
+    fn version_bumps_on_every_ownership_mutation() {
+        let mut s = GlobalServerState::new();
+        assert_eq!(s.version_of(1), 0);
+        s.handle(Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(0, 10), Range::new(20, 30)],
+        });
+        // One bump per Attach RPC, not per range.
+        assert_eq!(s.version_of(1), 1);
+        s.handle(Request::Attach {
+            file: 1,
+            client: 2,
+            ranges: vec![Range::new(0, 5)],
+        });
+        assert_eq!(s.version_of(1), 2);
+        // Reads never bump.
+        s.handle(Request::QueryFile { file: 1 });
+        s.handle(Request::Revalidate { file: 1, version: 0 });
+        s.handle(Request::Stat { file: 1 });
+        assert_eq!(s.version_of(1), 2);
+        // No-op detach (wrong owner) does not bump; effective detach does.
+        s.handle(Request::Detach {
+            file: 1,
+            client: 1,
+            range: Range::new(0, 5),
+        });
+        assert_eq!(s.version_of(1), 2);
+        s.handle(Request::Detach {
+            file: 1,
+            client: 2,
+            range: Range::new(0, 5),
+        });
+        assert_eq!(s.version_of(1), 3);
+        s.handle(Request::DetachFile { file: 1, client: 1 });
+        assert_eq!(s.version_of(1), 4);
+        // Nothing left for client 1: a second detach_file is a no-op.
+        s.handle(Request::DetachFile { file: 1, client: 1 });
+        assert_eq!(s.version_of(1), 4);
+    }
+
+    #[test]
+    fn revalidate_hit_and_miss() {
+        let mut s = GlobalServerState::new();
+        // Unknown file: version 0 is current (empty map).
+        assert_eq!(
+            s.handle(Request::Revalidate { file: 9, version: 0 }),
+            Response::Current { version: 0 }
+        );
+        s.handle(Request::Attach {
+            file: 9,
+            client: 3,
+            ranges: vec![Range::new(0, 64)],
+        });
+        let (v, ivs) = match s.handle(Request::QueryFile { file: 9 }) {
+            Response::Snapshot { version, intervals } => (version, intervals),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(v, 1);
+        assert_eq!(ivs.len(), 1);
+        // Cached version current -> hit.
+        assert_eq!(
+            s.handle(Request::Revalidate { file: 9, version: v }),
+            Response::Current { version: 1 }
+        );
+        // Remote attach bumps -> stale cache gets the fresh snapshot.
+        s.handle(Request::Attach {
+            file: 9,
+            client: 4,
+            ranges: vec![Range::new(64, 128)],
+        });
+        match s.handle(Request::Revalidate { file: 9, version: v }) {
+            Response::Snapshot { version, intervals } => {
+                assert_eq!(version, 2);
+                assert_eq!(intervals.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

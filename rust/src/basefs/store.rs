@@ -26,6 +26,13 @@ pub struct FileBuf {
     pub tree: LocalIntervalTree,
 }
 
+/// Compaction trigger: rewrite the cache file when more than half of it
+/// is garbage (superseded overwrites) and it is at least this large.
+/// The factor-2 rule amortizes to O(1) copied bytes per written byte,
+/// so overwrite-heavy workloads no longer grow the burst buffer without
+/// bound; the floor keeps tiny buffers from churning.
+const COMPACT_MIN_BYTES: u64 = 64 << 10;
+
 impl FileBuf {
     pub fn new_phantom() -> Self {
         Self {
@@ -43,7 +50,38 @@ impl FileBuf {
         self.virtual_len += buf.len() as u64;
         self.tree
             .record_write(Range::at(offset, buf.len() as u64), bb_start);
+        self.maybe_compact();
         buf.len()
+    }
+
+    /// Logical length of the cache file, garbage included (reporting +
+    /// compaction tests).
+    pub fn bb_len(&self) -> u64 {
+        self.virtual_len
+    }
+
+    fn maybe_compact(&mut self) {
+        let live = self.tree.buffered_bytes();
+        if self.virtual_len >= COMPACT_MIN_BYTES && self.virtual_len / 2 >= live {
+            self.compact();
+        }
+    }
+
+    /// Rewrite the cache file keeping only live segments: the tree hands
+    /// back a dense renumbering plan and the bytes are copied into a
+    /// fresh buffer in file order. Phantom buffers renumber lengths only.
+    pub fn compact(&mut self) {
+        let plan = self.tree.compact();
+        let live: u64 = plan.iter().map(|&(_, _, len)| len).sum();
+        if !self.phantom {
+            let mut packed = Vec::with_capacity(live as usize);
+            for &(old_bb, new_bb, len) in &plan {
+                debug_assert_eq!(new_bb, packed.len() as u64);
+                packed.extend_from_slice(&self.data[old_bb as usize..(old_bb + len) as usize]);
+            }
+            self.data = packed;
+        }
+        self.virtual_len = live;
     }
 
     /// Copy the bytes of one local-tree segment out of the cache file.
@@ -283,6 +321,62 @@ mod tests {
             fb.read_owned(Range::new(0, 10)).is_err(),
             "partially attached"
         );
+    }
+
+    #[test]
+    fn overwrite_heavy_buffer_stays_bounded() {
+        // Re-writing the same 4 KiB block must not grow the BB forever:
+        // once garbage crosses the factor-2 threshold the buffer is
+        // compacted back to the live byte count.
+        let mut fb = FileBuf::default();
+        let block = vec![7u8; 4 << 10];
+        for round in 0..200u64 {
+            fb.write(0, &block);
+            assert!(
+                fb.bb_len() <= super::COMPACT_MIN_BYTES + block.len() as u64,
+                "round {round}: bb grew to {}",
+                fb.bb_len()
+            );
+        }
+        // Live data is one block; read-back still returns the latest.
+        assert_eq!(fb.tree.buffered_bytes(), block.len() as u64);
+        let got = fb.read_local(Range::new(0, block.len() as u64));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1, block);
+    }
+
+    #[test]
+    fn compaction_preserves_bytes_and_attach_flags() {
+        let mut fb = FileBuf::default();
+        fb.write(0, &[1u8; 100]);
+        fb.write(20, &[2u8; 40]); // supersedes the middle
+        fb.mark_attached(Range::new(0, 10)).unwrap();
+        let before: Vec<(Range, Vec<u8>)> = fb.read_local(Range::new(0, 100));
+        let owned_err_before = fb.read_owned(Range::new(0, 100)).is_err();
+        fb.compact();
+        assert_eq!(fb.bb_len(), 100, "garbage dropped");
+        let after = fb.read_local(Range::new(0, 100));
+        let flatten = |segs: &[(Range, Vec<u8>)]| {
+            let mut flat = vec![0u8; 100];
+            for (r, bytes) in segs {
+                flat[r.start as usize..r.end as usize].copy_from_slice(bytes);
+            }
+            flat
+        };
+        assert_eq!(flatten(&before), flatten(&after));
+        assert_eq!(fb.read_owned(Range::new(0, 10)).unwrap(), vec![1u8; 10]);
+        assert_eq!(fb.read_owned(Range::new(0, 100)).is_err(), owned_err_before);
+    }
+
+    #[test]
+    fn phantom_buffer_compacts_lengths_only() {
+        let mut fb = FileBuf::new_phantom();
+        let block = vec![0u8; 8 << 10];
+        for _ in 0..100 {
+            fb.write(0, &block);
+        }
+        assert!(fb.bb_len() <= super::COMPACT_MIN_BYTES + block.len() as u64);
+        assert_eq!(fb.tree.buffered_bytes(), block.len() as u64);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The unified scenario-matrix bench subsystem (`pscnf bench`).
 //!
-//! Every bench in the repo — the four figure reproductions and the five
+//! Every bench in the repo — the four figure reproductions and the six
 //! ablations — is a registered *scenario*: one cell of consistency
 //! model × workload pattern × scale (module `registry`). The `runner`
 //! executes cells on the DES engine and folds repeats into

@@ -1,5 +1,6 @@
-//! The scenario registry: every figure and ablation bench expressed as
-//! cells of one matrix — consistency model × workload pattern × scale.
+//! The scenario registry: every figure and ablation bench (including
+//! the snapshot-revalidation sweep) expressed as cells of one matrix —
+//! consistency model × workload pattern × scale.
 //! The `benches/*.rs` binaries are thin wrappers that run one family of
 //! this registry (one source of truth for parameters), and every figure
 //! family carries all four `FsKind`s, not just the two the paper plots.
@@ -37,6 +38,13 @@ pub enum Kind {
     /// Commit-granularity ablation: CN-W with one commit per write
     /// (the "superfluous" fine-grained pattern of §2.3.1).
     FineCommit { access: u64 },
+    /// Snapshot-versioning ablation: one contiguous write phase, then
+    /// readers run `rounds` *sessions* of small random reads each
+    /// (open → read × m → close). The first open pays the full map
+    /// transfer; every warm reopen is a `Revalidate`, so the caching
+    /// models' hit-rate climbs with `rounds` while commit/posix keep
+    /// paying per-read queries.
+    Snapshot { access: u64, rounds: usize },
 }
 
 /// One cell of the matrix: model × workload × scale, plus the device
@@ -317,6 +325,28 @@ pub fn registry() -> Vec<Scenario> {
         ));
     }
 
+    // ablate_snapshot — warm-session reopen cost: sweep the number of
+    // read sessions (revalidation hit-rate rises with rounds for the
+    // snapshot-caching models) across all four models. Write ranges are
+    // client-coalesced, so the rpc_intervals metric doubles as the
+    // write-coalescing factor gauge.
+    for fs in FsKind::ALL {
+        for rounds in [1usize, 4, 16] {
+            let mut sc = base(
+                "ablate_snapshot",
+                fs,
+                4,
+                8,
+                Kind::Snapshot {
+                    access: 8 << 10,
+                    rounds,
+                },
+            );
+            sc.m = 8;
+            v.push(with_id(sc, "reopen", Some(8 << 10), &format!("n4.r{rounds}")));
+        }
+    }
+
     // ablate_dl_aggregation — unaggregated vs aggregated ownership
     // queries in the DL path, commit vs session.
     for fs in [FsKind::Commit, FsKind::Session] {
@@ -375,6 +405,25 @@ pub fn registry() -> Vec<Scenario> {
         sc.repeats = 2;
         sc.smoke = true;
         v.push(with_id(sc, "CC-R.rand", Some(8 << 10), "n2"));
+
+        // One ablate_snapshot cell per model rides the perf gate: a
+        // revalidation-hit-rate (or reopen-cost) regression trips CI.
+        let mut sc = base(
+            "ablate_snapshot",
+            fs,
+            2,
+            2,
+            Kind::Snapshot {
+                access: 8 << 10,
+                rounds: 3,
+            },
+        );
+        // 4 reads per session: enough that commit's per-read queries
+        // strictly exceed MPI-IO's two syncs per session at this scale.
+        sc.m = 4;
+        sc.repeats = 2;
+        sc.smoke = true;
+        v.push(with_id(sc, "reopen", Some(8 << 10), "n2.r3"));
 
         let mut sc = base("smoke", fs, 3, 2, Kind::Scr { particles: 240_000 });
         sc.repeats = 2;

@@ -82,6 +82,28 @@ impl BenchRecord {
             .set("params", Json::Obj(self.params.clone()));
         let mut metrics = Json::obj();
         for (name, m) in &self.metrics {
+            // Every emitted metric must be finite: `Json` serializes
+            // NaN/∞ as `null`, so one bad value would make every later
+            // parse/`--compare` of the stored baseline fail. Hard stop
+            // in debug/test builds; the release build (the CI perf-gate
+            // path) DROPS the metric with a loud notice — the record
+            // stays parseable and the gap shows up as a per-run
+            // "missing metric" notice in every compare, instead of a
+            // 0.0 baseline that later real values would compare against
+            // as a spurious improvement.
+            debug_assert!(
+                m.value.is_finite(),
+                "non-finite metric `{name}` = {} in record `{}`",
+                m.value,
+                self.id
+            );
+            if !m.value.is_finite() {
+                eprintln!(
+                    "warning: non-finite metric `{name}` = {} in record `{}` — not serialized",
+                    m.value, self.id
+                );
+                continue;
+            }
             let mut mo = Json::obj();
             mo.set("value", m.value)
                 .set("higher_is_better", m.higher_is_better);

@@ -5,13 +5,15 @@
 
 use super::registry::{Kind, Scenario};
 use super::report::{BenchMatrix, BenchRecord, Metric};
-use crate::basefs::DesFabric;
+use crate::basefs::{DesFabric, FileId};
 use crate::dl::{DlDriver, DlParams};
-use crate::fs::{CommitFs, WorkloadFs};
+use crate::fs::{CommitFs, FsKind, WorkloadFs};
+use crate::interval::Range;
 use crate::scr::{ScrDriver, ScrParams};
 use crate::sim::{Cluster, Driver, Engine, NetParams, Ns, ServerParams, SimOp, UpfsParams};
+use crate::util::rng::Rng;
 use crate::util::stats::Samples;
-use crate::workload::{Config, SyntheticDriver};
+use crate::workload::{build_fs, Config, SyntheticDriver};
 use std::collections::VecDeque;
 
 /// Base RNG seed for repeat `rep` (kept stable so records diff cleanly
@@ -58,6 +60,9 @@ struct Fold {
     rpcs: Samples,
     rpc_intervals: Samples,
     sim_ops: Samples,
+    /// Snapshot-revalidation hit rate (0.0 for models/workloads that
+    /// never revalidate) — gated so a warm-reopen regression trips CI.
+    reval_rate: Samples,
 }
 
 /// Run a scenario to completion and produce its matrix record.
@@ -108,6 +113,12 @@ pub fn run_scenario(sc: &Scenario) -> BenchRecord {
                 .param("access_bytes", *access)
                 .param("m", sc.m);
         }
+        Kind::Snapshot { access, rounds } => {
+            rec.param("workload", "reopen")
+                .param("access_bytes", *access)
+                .param("rounds", *rounds)
+                .param("m", sc.m);
+        }
     }
     rec.metric("bw", Metric::higher(fold.bw.mean()));
     if !fold.restart_bw.is_empty() {
@@ -117,7 +128,11 @@ pub fn run_scenario(sc: &Scenario) -> BenchRecord {
         .metric("lat_p95_s", Metric::lower(fold.lat_s.percentile(95.0)))
         .metric("rpcs", Metric::lower(fold.rpcs.mean()))
         .metric("rpc_intervals", Metric::lower(fold.rpc_intervals.mean()))
-        .metric("sim_ops", Metric::lower(fold.sim_ops.mean()));
+        .metric("sim_ops", Metric::lower(fold.sim_ops.mean()))
+        .metric(
+            "revalidate_hit_rate",
+            Metric::higher(fold.reval_rate.mean()),
+        );
     rec
 }
 
@@ -146,6 +161,7 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.rpcs.push(report.counters.rpcs as f64);
             fold.rpc_intervals.push(report.counters.rpc_intervals as f64);
             fold.sim_ops.push(report.sim_ops as f64);
+            fold.reval_rate.push(report.counters.revalidate_hit_rate());
         }
         Kind::Scr { particles } => {
             let mut p = ScrParams::with_nodes(sc.nodes, sc.ppn);
@@ -157,6 +173,7 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.rpcs.push(report.counters.rpcs as f64);
             fold.rpc_intervals.push(report.counters.rpc_intervals as f64);
             fold.sim_ops.push(report.sim_ops as f64);
+            fold.reval_rate.push(report.counters.revalidate_hit_rate());
         }
         Kind::Dl {
             strong,
@@ -175,6 +192,7 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.rpcs.push(report.counters.rpcs as f64);
             fold.rpc_intervals.push(report.counters.rpc_intervals as f64);
             fold.sim_ops.push(report.sim_ops as f64);
+            fold.reval_rate.push(report.counters.revalidate_hit_rate());
         }
         Kind::FineCommit { access } => {
             let mut driver = FineCommitDriver::new(sc.nodes, sc.ppn, *access, sc.m, seed);
@@ -187,6 +205,22 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.rpcs.push(driver.fabric.counters.rpcs as f64);
             fold.rpc_intervals.push(driver.fabric.counters.rpc_intervals as f64);
             fold.sim_ops.push(stats.ops_executed as f64);
+            fold.reval_rate
+                .push(driver.fabric.counters.revalidate_hit_rate());
+        }
+        Kind::Snapshot { access, rounds } => {
+            let mut driver =
+                SnapshotDriver::new(sc.fs, sc.nodes, sc.ppn, *access, sc.m, *rounds, seed);
+            let node_of: Vec<usize> = (0..sc.nodes * sc.ppn).map(|r| r / sc.ppn).collect();
+            let mut engine = Engine::new(cluster(sc, seed ^ 0xBEEF), node_of);
+            let stats = engine.run(&mut driver).expect("snapshot ablation deadlock");
+            fold.bw.push(driver.read_bw());
+            fold.lat_s.push(driver.read_end.as_secs_f64());
+            fold.rpcs.push(driver.fabric.counters.rpcs as f64);
+            fold.rpc_intervals.push(driver.fabric.counters.rpc_intervals as f64);
+            fold.sim_ops.push(stats.ops_executed as f64);
+            fold.reval_rate
+                .push(driver.fabric.counters.revalidate_hit_rate());
         }
     }
 }
@@ -280,6 +314,217 @@ impl Driver for FineCommitDriver {
     }
 }
 
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SnapStage {
+    Write(usize),
+    EndWrite,
+    Barrier,
+    AfterBarrier,
+    /// Session `r` of `rounds`: open (revalidate-or-fetch) ...
+    Open(usize),
+    /// ... then read `i` of `reads` ...
+    Read(usize, usize),
+    /// ... then close (publish — a no-op attach for pure readers).
+    Close(usize),
+    Finish,
+    Finished,
+}
+
+/// The `ablate_snapshot` driver: writer nodes run one contiguous write
+/// phase; after the barrier, reader nodes run `rounds` *sessions* of
+/// `reads` random small reads each. Session/MPI-IO pay one RPC per
+/// session boundary — a full map fetch the first time, a `Revalidate`
+/// every warm reopen — while commit/posix pay a query per read. The
+/// resulting hit-rate and RPC-count spread across models is the
+/// quantity the bench family sweeps.
+struct SnapshotDriver {
+    fabric: DesFabric,
+    fs: Vec<Box<dyn WorkloadFs>>,
+    file: FileId,
+    rounds: usize,
+    reads: usize,
+    size: u64,
+    extent_blocks: u64,
+    n_writers: usize,
+    stage: Vec<SnapStage>,
+    pending: Vec<VecDeque<SimOp>>,
+    rngs: Vec<Rng>,
+    payload: Vec<u8>,
+    read_start: Ns,
+    read_end: Ns,
+}
+
+impl SnapshotDriver {
+    fn new(
+        kind: FsKind,
+        nodes: usize,
+        ppn: usize,
+        size: u64,
+        reads: usize,
+        rounds: usize,
+        seed: u64,
+    ) -> Self {
+        let n_w = nodes / 2;
+        let nranks = nodes * ppn;
+        let n_writers = n_w * ppn;
+        let node_of: Vec<usize> = (0..nranks).map(|r| r / ppn).collect();
+        let fabric = DesFabric::new_phantom(node_of);
+        let mut fs = build_fs(kind, &fabric);
+        let mut fabric = fabric;
+        let mut file = 0;
+        for f in fs.iter_mut() {
+            file = f.open(&mut fabric, "/ablate/snapshot.dat");
+        }
+        // The paper measures the I/O phases, not the initial open.
+        for r in 0..nranks {
+            while fabric.pop_cost(r as u32).is_some() {}
+        }
+        let extent_blocks = (n_writers * reads) as u64;
+        Self {
+            fabric,
+            fs,
+            file,
+            rounds: rounds.max(1),
+            reads,
+            size,
+            extent_blocks: extent_blocks.max(1),
+            n_writers,
+            stage: (0..nranks)
+                .map(|r| {
+                    if r < n_writers {
+                        SnapStage::Write(0)
+                    } else {
+                        SnapStage::Barrier
+                    }
+                })
+                .collect(),
+            pending: (0..nranks).map(|_| VecDeque::new()).collect(),
+            rngs: (0..nranks)
+                .map(|r| {
+                    let salt = (0xab1a7e ^ r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                    Rng::seed_from_u64(seed ^ salt)
+                })
+                .collect(),
+            payload: vec![0u8; size as usize],
+            read_start: Ns(u64::MAX),
+            read_end: Ns::ZERO,
+        }
+    }
+
+    fn n_readers(&self) -> usize {
+        self.fs.len() - self.n_writers
+    }
+
+    fn total_read_bytes(&self) -> u64 {
+        self.n_readers() as u64 * self.rounds as u64 * self.reads as u64 * self.size
+    }
+
+    fn read_bw(&self) -> f64 {
+        if self.read_end <= self.read_start || self.read_start == Ns(u64::MAX) {
+            return 0.0;
+        }
+        self.total_read_bytes() as f64 / (self.read_end - self.read_start).as_secs_f64()
+    }
+
+    fn drain(&mut self, rank: usize) {
+        while let Some(op) = self.fabric.pop_cost(rank as u32) {
+            self.pending[rank].push_back(op);
+        }
+    }
+}
+
+impl Driver for SnapshotDriver {
+    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+        loop {
+            if let Some(op) = self.pending[rank].pop_front() {
+                return op;
+            }
+            match self.stage[rank] {
+                SnapStage::Write(i) => {
+                    if i < self.reads {
+                        // Writer w fills blocks [w*reads, (w+1)*reads).
+                        let off = (rank * self.reads + i) as u64 * self.size;
+                        self.fs[rank]
+                            .write_at(&mut self.fabric, self.file, off, &self.payload)
+                            .expect("snapshot-bench write");
+                        self.stage[rank] = SnapStage::Write(i + 1);
+                        self.drain(rank);
+                    } else {
+                        self.stage[rank] = SnapStage::EndWrite;
+                    }
+                }
+                SnapStage::EndWrite => {
+                    self.fs[rank]
+                        .end_write_phase(&mut self.fabric, self.file)
+                        .expect("snapshot-bench publish");
+                    self.stage[rank] = SnapStage::Barrier;
+                    self.drain(rank);
+                }
+                SnapStage::Barrier => {
+                    self.stage[rank] = SnapStage::AfterBarrier;
+                    return SimOp::Barrier;
+                }
+                SnapStage::AfterBarrier => {
+                    self.stage[rank] = if rank < self.n_writers {
+                        SnapStage::Finish
+                    } else {
+                        SnapStage::Open(0)
+                    };
+                }
+                SnapStage::Open(r) => {
+                    self.fs[rank]
+                        .begin_read_phase(&mut self.fabric, self.file)
+                        .expect("snapshot-bench open");
+                    if r == 0 {
+                        self.read_start = self.read_start.min(now);
+                    }
+                    self.stage[rank] = SnapStage::Read(r, 0);
+                    self.drain(rank);
+                }
+                SnapStage::Read(r, i) => {
+                    if i < self.reads {
+                        let block = self.rngs[rank].gen_range_u64(self.extent_blocks);
+                        let got = self.fs[rank]
+                            .read_at(
+                                &mut self.fabric,
+                                self.file,
+                                Range::at(block * self.size, self.size),
+                            )
+                            .expect("snapshot-bench read");
+                        debug_assert_eq!(got.len() as u64, self.size);
+                        self.stage[rank] = SnapStage::Read(r, i + 1);
+                        self.drain(rank);
+                    } else {
+                        self.stage[rank] = SnapStage::Close(r);
+                    }
+                }
+                SnapStage::Close(r) => {
+                    // Session close / MPI sync; a pure reader's attach is
+                    // elided, so its cached snapshot survives for the
+                    // next round's revalidation.
+                    self.fs[rank]
+                        .end_write_phase(&mut self.fabric, self.file)
+                        .expect("snapshot-bench close");
+                    self.stage[rank] = if r + 1 < self.rounds {
+                        SnapStage::Open(r + 1)
+                    } else {
+                        SnapStage::Finish
+                    };
+                    self.drain(rank);
+                }
+                SnapStage::Finish => {
+                    if rank >= self.n_writers {
+                        self.read_end = self.read_end.max(now);
+                    }
+                    self.stage[rank] = SnapStage::Finished;
+                    return SimOp::Done;
+                }
+                SnapStage::Finished => unreachable!("rank {rank} scheduled after Done"),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -321,6 +566,68 @@ mod tests {
         let rec = run_scenario(&sc);
         assert!(rec.metric_value("bw").unwrap() > 0.0);
         assert!(rec.metric_value("restart_bw").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_cells_caching_models_need_fewer_rpcs_than_commit() {
+        // Acceptance: at equal scale, session/mpiio small-random-read
+        // RPC counts are STRICTLY below commit (ownership comes from the
+        // versioned snapshot, not per-read queries), and their warm
+        // reopens revalidate (nonzero hit rate; rounds = 3 > 1).
+        let run = |fs: FsKind| {
+            let mut sc = smoke("ablate_snapshot", fs);
+            sc.repeats = 1;
+            run_scenario(&sc)
+        };
+        let commit = run(FsKind::Commit);
+        let session = run(FsKind::Session);
+        let mpiio = run(FsKind::Mpiio);
+        let rpcs = |r: &BenchRecord| r.metric_value("rpcs").unwrap();
+        assert!(
+            rpcs(&session) < rpcs(&commit),
+            "session {} !< commit {}",
+            rpcs(&session),
+            rpcs(&commit)
+        );
+        assert!(
+            rpcs(&mpiio) < rpcs(&commit),
+            "mpiio {} !< commit {}",
+            rpcs(&mpiio),
+            rpcs(&commit)
+        );
+        // Warm reopens revalidated; commit never revalidates.
+        assert!(session.metric_value("revalidate_hit_rate").unwrap() > 0.5);
+        assert!(mpiio.metric_value("revalidate_hit_rate").unwrap() > 0.5);
+        assert_eq!(commit.metric_value("revalidate_hit_rate").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_hit_rate_climbs_with_rounds() {
+        let run = |rounds_frag: &str| {
+            let mut sc = registry()
+                .into_iter()
+                .find(|s| {
+                    s.family == "ablate_snapshot"
+                        && !s.smoke
+                        && s.fs == FsKind::Session
+                        && s.id.ends_with(rounds_frag)
+                })
+                .unwrap();
+            sc.repeats = 1;
+            run_scenario(&sc)
+        };
+        let r1 = run(".r1");
+        let r16 = run(".r16");
+        assert_eq!(
+            r1.metric_value("revalidate_hit_rate").unwrap(),
+            0.0,
+            "single session has no warm reopen"
+        );
+        assert!(
+            r16.metric_value("revalidate_hit_rate").unwrap() > 0.8,
+            "16 rounds should be hit-dominated"
+        );
+        assert!(r16.metric_value("bw").unwrap() > 0.0);
     }
 
     #[test]

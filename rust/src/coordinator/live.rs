@@ -410,6 +410,34 @@ mod tests {
     }
 
     #[test]
+    fn live_session_reopen_revalidates_to_fresh_snapshot() {
+        // The versioned-snapshot litmus on the real thread-pool server:
+        // a client whose cached version went stale (remote session_close
+        // attached new bytes) must revalidate to the new snapshot. The
+        // live server answers a revalidation with a version compare
+        // under the shard lock — no tree clone unless stale.
+        use crate::fs::SessionFs;
+        let mut cluster = LiveCluster::new_sharded(2, 2, 2);
+        let mut fabrics = cluster.take_fabrics();
+        let mut a = SessionFs::new(0, fabrics[0].bb_of(0));
+        let mut b = SessionFs::new(1, fabrics[1].bb_of(1));
+        use crate::fs::WorkloadFs;
+        let f = a.open(&mut fabrics[0], "/live-reval");
+        b.open(&mut fabrics[1], "/live-reval");
+
+        a.session_open(&mut fabrics[0], f).unwrap();
+        a.session_close(&mut fabrics[0], f).unwrap(); // warm empty cache
+
+        SessionFs::write_at(&mut b, &mut fabrics[1], f, 0, b"live-fresh").unwrap();
+        b.session_close(&mut fabrics[1], f).unwrap();
+
+        a.session_open(&mut fabrics[0], f).unwrap(); // Revalidate -> miss
+        let got = SessionFs::read_at(&mut a, &mut fabrics[0], f, Range::new(0, 10)).unwrap();
+        assert_eq!(got, b"live-fresh");
+        cluster.shutdown();
+    }
+
+    #[test]
     fn drop_without_shutdown_joins_threads() {
         // Regression: dropping a cluster (or server) without calling
         // shutdown() must tear the threads down in order, not leak them.

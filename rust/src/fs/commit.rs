@@ -22,7 +22,7 @@ impl CommitFs {
     /// `commit`: all updates by this process to `file` since the previous
     /// commit become globally visible (bfs_attach_file).
     pub fn commit(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        self.core.attach_file(fabric, file)
+        self.core.attach_file(fabric, file).map(|_| ())
     }
 
     /// Fine-grained commit of a byte range (§2.3.1: "finer commit
@@ -110,7 +110,7 @@ impl WorkloadFs for CommitFs {
         fabric: &mut dyn Fabric,
         files: &[FileId],
     ) -> Result<(), BfsError> {
-        self.core.attach_files(fabric, files)
+        self.core.attach_files(fabric, files).map(|_| ())
     }
 
     /// Commit consistency needs nothing reader-side.

@@ -20,8 +20,9 @@ pub use mpiio::MpiioFs;
 pub use posix::PosixFs;
 pub use session::SessionFs;
 
-use crate::basefs::{BfsError, ClientCore, Fabric, FileId};
-use crate::interval::{OwnedInterval, Range};
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SnapshotSync};
+use crate::interval::{GlobalIntervalTree, OwnedInterval, Range};
+use std::collections::HashMap;
 
 /// Which consistency layer a workload runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,6 +139,101 @@ pub trait WorkloadFs {
 
     /// Underlying client (metrics, direct primitive access in tests).
     fn core(&mut self) -> &mut ClientCore;
+}
+
+/// Version-stamped ownership snapshots, shared by the two caching
+/// layers (SessionFS, MpiioFS). Each entry pairs a file's ownership map
+/// (as a global-tree clone, so range lookups stay O(log n + k)) with
+/// the snapshot version the server stamped it with. On refresh, files
+/// with a cached version send the lightweight `Revalidate` RPC and only
+/// transfer the map when stale; files without one pay the full
+/// `bfs_query_file`. Entries survive session close *unless the owner's
+/// own attach bumped the server version* (the layer invalidates then) —
+/// that is what makes a warm reopen one cheap RPC instead of a map
+/// transfer (DESIGN.md §Snapshot-Versioning).
+#[derive(Debug, Default)]
+pub(crate) struct SnapshotCache {
+    map: HashMap<FileId, (u64, GlobalIntervalTree)>,
+}
+
+impl SnapshotCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cached ownership map of `file`, if any.
+    pub fn tree(&self, file: FileId) -> Option<&GlobalIntervalTree> {
+        self.map.get(&file).map(|(_, t)| t)
+    }
+
+    /// Cached snapshot version of `file`, if any.
+    pub fn version(&self, file: FileId) -> Option<u64> {
+        self.map.get(&file).map(|(v, _)| *v)
+    }
+
+    /// Drop a stale entry (e.g. after this client's own attach).
+    pub fn invalidate(&mut self, file: FileId) {
+        self.map.remove(&file);
+    }
+
+    fn store(&mut self, file: FileId, version: u64, intervals: Vec<OwnedInterval>) {
+        let mut tree = GlobalIntervalTree::new();
+        for iv in intervals {
+            tree.attach(iv.range, iv.owner);
+        }
+        self.map.insert(file, (version, tree));
+    }
+
+    /// Bring the cache up to date for `files`: one batched RPC round
+    /// (revalidate where a version is cached, full query where not).
+    pub fn refresh_all(
+        &mut self,
+        core: &mut ClientCore,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        let wants: Vec<(FileId, Option<u64>)> =
+            files.iter().map(|&f| (f, self.version(f))).collect();
+        let syncs = core.sync_snapshots(fabric, &wants)?;
+        for (&file, sync) in files.iter().zip(syncs) {
+            match sync {
+                SnapshotSync::Current => {}
+                SnapshotSync::Fresh { version, intervals } => {
+                    self.store(file, version, intervals)
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Overlay this client's own buffered writes (always visible to the
+/// writing process) on a snapshot's owned intervals for `range` — the
+/// shared read-path step of the two snapshot-caching layers.
+pub(crate) fn overlay_own_writes(
+    core: &mut ClientCore,
+    file: FileId,
+    range: Range,
+    mut owned: Vec<OwnedInterval>,
+) -> Vec<OwnedInterval> {
+    let me = core.id;
+    let own: Vec<Range> = {
+        let bb = core.bb().read().unwrap();
+        bb.get(file)
+            .map(|fb| fb.tree.lookup(range).iter().map(|s| s.file).collect())
+            .unwrap_or_default()
+    };
+    if !own.is_empty() {
+        let mut tree = GlobalIntervalTree::new();
+        for iv in &owned {
+            tree.attach(iv.range, iv.owner);
+        }
+        for r in own {
+            tree.attach(r, me);
+        }
+        owned = tree.query(range);
+    }
+    owned
 }
 
 /// Assemble a read of `range` from an ownership map: owned subranges are

@@ -5,33 +5,40 @@
 //! `MPI_File_open` refreshes; `MPI_File_close` publishes.
 //!
 //! Like SessionFS, the ownership snapshot is cached between syncs, so
-//! read-side cost is one RPC per sync rather than one per read.
+//! read-side cost is one RPC per sync rather than one per read — and
+//! the snapshot is version-stamped (DESIGN.md §Snapshot-Versioning), so
+//! a sync/open over an unchanged file is a lightweight `Revalidate`
+//! (no map transfer) instead of a full `bfs_query_file`.
 
-use super::{assemble_read, FsKind, WorkloadFs};
+use super::{assemble_read, overlay_own_writes, FsKind, SnapshotCache, WorkloadFs};
 use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
-use crate::interval::{GlobalIntervalTree, Range};
-use std::collections::HashMap;
+use crate::interval::Range;
+use std::collections::HashSet;
 
 pub struct MpiioFs {
     core: ClientCore,
-    view: HashMap<FileId, GlobalIntervalTree>,
+    /// Version-stamped snapshots; persists across close/open so reopens
+    /// revalidate instead of refetching.
+    cache: SnapshotCache,
+    /// Files between `MPI_File_open` and `MPI_File_close`: only these
+    /// consult the snapshot on reads.
+    active: HashSet<FileId>,
 }
 
 impl MpiioFs {
     pub fn new(id: u32, bb: SharedBb) -> Self {
         Self {
             core: ClientCore::new(id, bb),
-            view: HashMap::new(),
+            cache: SnapshotCache::new(),
+            active: HashSet::new(),
         }
     }
 
+    /// Refresh the view: `Revalidate` when a stamped snapshot is
+    /// cached, full `bfs_query_file` otherwise.
     fn refresh_view(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        let ivs = self.core.query_file(fabric, file)?;
-        let mut tree = GlobalIntervalTree::new();
-        for iv in ivs {
-            tree.attach(iv.range, iv.owner);
-        }
-        self.view.insert(file, tree);
+        self.cache.refresh_all(&mut self.core, fabric, &[file])?;
+        self.active.insert(file);
         Ok(())
     }
 
@@ -42,9 +49,14 @@ impl MpiioFs {
         Ok(file)
     }
 
-    /// MPI_File_sync: publish local writes AND refresh the view.
+    /// MPI_File_sync: publish local writes AND refresh the view. A
+    /// writer's own attach stales its cached version, so the refresh
+    /// after a publishing sync transfers the map; a reader-side sync
+    /// over an unchanged file is a revalidation hit.
     pub fn mpi_sync(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        self.core.attach_file(fabric, file)?;
+        if self.core.attach_file(fabric, file)? {
+            self.cache.invalidate(file);
+        }
         self.refresh_view(fabric, file)
     }
 
@@ -53,8 +65,10 @@ impl MpiioFs {
     /// server's map); callers that really want the BB space back should
     /// flush + detach first.
     pub fn mpi_close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        self.core.attach_file(fabric, file)?;
-        self.view.remove(&file);
+        if self.core.attach_file(fabric, file)? {
+            self.cache.invalidate(file);
+        }
+        self.active.remove(&file);
         Ok(())
     }
 
@@ -74,28 +88,15 @@ impl MpiioFs {
         file: FileId,
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
-        let me = self.core.id;
-        let mut owned = self
-            .view
-            .get(&file)
-            .map(|t| t.query(range))
-            .unwrap_or_default();
-        let own: Vec<Range> = {
-            let bb = self.core.bb().read().unwrap();
-            bb.get(file)
-                .map(|fb| fb.tree.lookup(range).iter().map(|s| s.file).collect())
+        let owned = if self.active.contains(&file) {
+            self.cache
+                .tree(file)
+                .map(|t| t.query(range))
                 .unwrap_or_default()
+        } else {
+            Vec::new()
         };
-        if !own.is_empty() {
-            let mut tree = GlobalIntervalTree::new();
-            for iv in &owned {
-                tree.attach(iv.range, iv.owner);
-            }
-            for r in own {
-                tree.attach(r, me);
-            }
-            owned = tree.query(range);
-        }
+        let owned = overlay_own_writes(&mut self.core, file, range, owned);
         assemble_read(&mut self.core, fabric, file, range, &owned)
     }
 }
@@ -170,6 +171,25 @@ mod tests {
         r.mpi_sync(&mut fabric, f).unwrap();
         let got = MpiioFs::read_at(&mut r, &mut fabric, f, Range::new(0, 8)).unwrap();
         assert_eq!(got, b"mpi-data");
+    }
+
+    #[test]
+    fn reader_sync_over_unchanged_file_is_a_revalidation_hit() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = MpiioFs::new(0, fabric.bb_of(0));
+        let mut r = MpiioFs::new(1, fabric.bb_of(1));
+        let f = w.mpi_open(&mut fabric, "/rv").unwrap();
+        r.mpi_open(&mut fabric, "/rv").unwrap();
+        MpiioFs::write_at(&mut w, &mut fabric, f, 0, b"x1").unwrap();
+        w.mpi_sync(&mut fabric, f).unwrap();
+        r.mpi_sync(&mut fabric, f).unwrap(); // miss: writer bumped
+        let hits = fabric.inner.counters.revalidate_hits;
+        // Nothing changed since: the reader's next sync revalidates and
+        // hits — no map transfer.
+        r.mpi_sync(&mut fabric, f).unwrap();
+        assert_eq!(fabric.inner.counters.revalidate_hits, hits + 1);
+        let got = MpiioFs::read_at(&mut r, &mut fabric, f, Range::new(0, 2)).unwrap();
+        assert_eq!(got, b"x1");
     }
 
     #[test]

@@ -4,44 +4,54 @@
 //! within the session, reads are served from the snapshot with no
 //! server traffic at all. The amortization of that single query is why
 //! session consistency wins the paper's small-read benchmarks by ~5×.
+//!
+//! Snapshots are version-stamped (DESIGN.md §Snapshot-Versioning): the
+//! cached map outlives the session, so a *reopen* sends the lightweight
+//! `Revalidate` RPC and skips the map transfer entirely when no other
+//! client attached in between. The layer's own `session_close` attach
+//! invalidates its cache (its attach bumped the server version).
 
-use super::{assemble_read, FsKind, WorkloadFs};
+use super::{assemble_read, overlay_own_writes, FsKind, SnapshotCache, WorkloadFs};
 use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
-use crate::interval::{GlobalIntervalTree, Range};
-use std::collections::HashMap;
+use crate::interval::Range;
+use std::collections::HashSet;
 
 pub struct SessionFs {
     core: ClientCore,
-    /// Ownership snapshot per file, taken at session_open. Stored as a
-    /// global-tree clone so range lookups stay O(log n + k).
-    session_view: HashMap<FileId, GlobalIntervalTree>,
+    /// Version-stamped ownership snapshots; persists across sessions so
+    /// reopens can revalidate instead of refetching.
+    cache: SnapshotCache,
+    /// Files with an open session: only these consult the cache on
+    /// reads (a read without session_open must NOT see attached state).
+    active: HashSet<FileId>,
 }
 
 impl SessionFs {
     pub fn new(id: u32, bb: SharedBb) -> Self {
         Self {
             core: ClientCore::new(id, bb),
-            session_view: HashMap::new(),
+            cache: SnapshotCache::new(),
+            active: HashSet::new(),
         }
     }
 
-    /// `session_open`: one bfs_query_file RPC; snapshot cached for the
-    /// whole session.
+    /// `session_open`: one RPC — a full bfs_query_file on a cold cache,
+    /// a `Revalidate` (no map transfer on hit) on a warm one. The
+    /// snapshot serves every read of the session.
     pub fn session_open(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        let ivs = self.core.query_file(fabric, file)?;
-        let mut tree = GlobalIntervalTree::new();
-        for iv in ivs {
-            tree.attach(iv.range, iv.owner);
-        }
-        self.session_view.insert(file, tree);
+        self.cache.refresh_all(&mut self.core, fabric, &[file])?;
+        self.active.insert(file);
         Ok(())
     }
 
     /// `session_close`: make this process's writes visible
-    /// (bfs_attach_file) and drop the session snapshot.
+    /// (bfs_attach_file) and end the session. The snapshot is *kept*
+    /// for revalidation unless our own attach just made it stale.
     pub fn session_close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        self.core.attach_file(fabric, file)?;
-        self.session_view.remove(&file);
+        if self.core.attach_file(fabric, file)? {
+            self.cache.invalidate(file);
+        }
+        self.active.remove(&file);
         Ok(())
     }
 
@@ -64,30 +74,15 @@ impl SessionFs {
         file: FileId,
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
-        let me = self.core.id;
-        let mut owned = self
-            .session_view
-            .get(&file)
-            .map(|t| t.query(range))
-            .unwrap_or_default();
-        // Overlay own (possibly unattached) writes: a process always sees
-        // its own most recent data.
-        let own: Vec<Range> = {
-            let bb = self.core.bb().read().unwrap();
-            bb.get(file)
-                .map(|fb| fb.tree.lookup(range).iter().map(|s| s.file).collect())
+        let owned = if self.active.contains(&file) {
+            self.cache
+                .tree(file)
+                .map(|t| t.query(range))
                 .unwrap_or_default()
+        } else {
+            Vec::new()
         };
-        if !own.is_empty() {
-            let mut tree = GlobalIntervalTree::new();
-            for iv in &owned {
-                tree.attach(iv.range, iv.owner);
-            }
-            for r in own {
-                tree.attach(r, me);
-            }
-            owned = tree.query(range);
-        }
+        let owned = overlay_own_writes(&mut self.core, file, range, owned);
         assemble_read(&mut self.core, fabric, file, range, &owned)
     }
 }
@@ -106,7 +101,8 @@ impl WorkloadFs for SessionFs {
     }
 
     fn close(&mut self, _fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        self.session_view.remove(&file);
+        self.active.remove(&file);
+        self.cache.invalidate(file);
         self.core.close(file)
     }
 
@@ -138,34 +134,32 @@ impl WorkloadFs for SessionFs {
     }
 
     /// Multi-file session_close: one batched attach per metadata shard,
-    /// then drop all the session snapshots.
+    /// then end the sessions. Only the files whose attach went out lose
+    /// their cached snapshot (the attach bumped their version).
     fn end_write_phase_all(
         &mut self,
         fabric: &mut dyn Fabric,
         files: &[FileId],
     ) -> Result<(), BfsError> {
-        self.core.attach_files(fabric, files)?;
+        let attached = self.core.attach_files(fabric, files)?;
+        for file in attached {
+            self.cache.invalidate(file);
+        }
         for file in files {
-            self.session_view.remove(file);
+            self.active.remove(file);
         }
         Ok(())
     }
 
-    /// Multi-file session_open: one batched query_file per metadata
-    /// shard; snapshots cached per file as usual.
+    /// Multi-file session_open: one batched revalidate-or-query round
+    /// per metadata shard; warm files skip the map transfer.
     fn begin_read_phase_all(
         &mut self,
         fabric: &mut dyn Fabric,
         files: &[FileId],
     ) -> Result<(), BfsError> {
-        let maps = self.core.query_files(fabric, files)?;
-        for (&file, ivs) in files.iter().zip(maps) {
-            let mut tree = GlobalIntervalTree::new();
-            for iv in ivs {
-                tree.attach(iv.range, iv.owner);
-            }
-            self.session_view.insert(file, tree);
-        }
+        self.cache.refresh_all(&mut self.core, fabric, files)?;
+        self.active.extend(files.iter().copied());
         Ok(())
     }
 
@@ -223,6 +217,61 @@ mod tests {
             1,
             "exactly one RPC (the session_open) for 100 reads"
         );
+    }
+
+    #[test]
+    fn warm_reopen_revalidates_instead_of_refetching() {
+        let mut fabric = TestFabric::new(2);
+        let mut w = SessionFs::new(0, fabric.bb_of(0));
+        let mut r = SessionFs::new(1, fabric.bb_of(1));
+        let f = w.open(&mut fabric, "/warm");
+        r.open(&mut fabric, "/warm");
+        SessionFs::write_at(&mut w, &mut fabric, f, 0, &[9u8; 64]).unwrap();
+        w.session_close(&mut fabric, f).unwrap();
+
+        // Cold open: a full map transfer, no revalidation.
+        r.session_open(&mut fabric, f).unwrap();
+        assert_eq!(fabric.inner.counters.revalidates, 0);
+        r.session_close(&mut fabric, f).unwrap(); // no writes -> cache kept
+
+        // Warm reopen with no remote change: ONE revalidate, a hit.
+        r.session_open(&mut fabric, f).unwrap();
+        assert_eq!(fabric.inner.counters.revalidates, 1);
+        assert_eq!(fabric.inner.counters.revalidate_hits, 1);
+        let got = SessionFs::read_at(&mut r, &mut fabric, f, Range::new(0, 64)).unwrap();
+        assert_eq!(got, vec![9u8; 64]);
+
+        // Writer's own close invalidated ITS cache: its reopen refetches
+        // fully (no revalidate issued).
+        w.session_open(&mut fabric, f).unwrap();
+        assert_eq!(fabric.inner.counters.revalidates, 1, "writer must not revalidate");
+    }
+
+    #[test]
+    fn stale_version_revalidates_to_new_snapshot() {
+        // Litmus: A caches a snapshot, closes; B publishes new bytes;
+        // A's reopen revalidates (miss) and must see B's update.
+        let mut fabric = TestFabric::new(3);
+        let mut a = SessionFs::new(0, fabric.bb_of(0));
+        let mut b = SessionFs::new(1, fabric.bb_of(1));
+        let f = a.open(&mut fabric, "/litmus");
+        b.open(&mut fabric, "/litmus");
+
+        a.session_open(&mut fabric, f).unwrap();
+        a.session_close(&mut fabric, f).unwrap(); // warm empty snapshot
+
+        SessionFs::write_at(&mut b, &mut fabric, f, 0, b"fresh!").unwrap();
+        b.session_close(&mut fabric, f).unwrap(); // bumps the version
+
+        let hits_before = fabric.inner.counters.revalidate_hits;
+        a.session_open(&mut fabric, f).unwrap();
+        assert_eq!(fabric.inner.counters.revalidates, 1, "reopen revalidated");
+        assert_eq!(
+            fabric.inner.counters.revalidate_hits, hits_before,
+            "stale version must MISS"
+        );
+        let got = SessionFs::read_at(&mut a, &mut fabric, f, Range::new(0, 6)).unwrap();
+        assert_eq!(got, b"fresh!");
     }
 
     #[test]

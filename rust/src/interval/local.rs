@@ -51,6 +51,11 @@ impl std::error::Error for LocalTreeError {}
 #[derive(Debug, Clone, Default)]
 pub struct LocalIntervalTree {
     map: BTreeMap<u64, (u64, u64, bool)>,
+    /// Total live bytes (Σ end − start over `map`), maintained
+    /// incrementally by [`Self::insert_span`]/[`Self::remove_span`] so
+    /// the store's per-write compaction check is O(1) instead of a
+    /// full-map scan (`check_invariants` pins the equality).
+    live: u64,
 }
 
 impl LocalIntervalTree {
@@ -73,8 +78,27 @@ impl LocalIntervalTree {
             return;
         }
         self.carve(file);
-        self.map.insert(file.start, (file.end, bb_start, false));
+        self.insert_span(file.start, file.end, bb_start, false);
         self.merge_around(file.start);
+    }
+
+    /// Insert `[s, e)` (replacing any entry starting at `s`), keeping
+    /// the live-byte counter in sync. Every map mutation goes through
+    /// this or [`Self::remove_span`].
+    fn insert_span(&mut self, s: u64, e: u64, bb: u64, attached: bool) {
+        if let Some((old_e, _, _)) = self.map.insert(s, (e, bb, attached)) {
+            self.live -= old_e - s;
+        }
+        self.live += e - s;
+    }
+
+    /// Remove the entry starting at `s`, keeping the counter in sync.
+    fn remove_span(&mut self, s: u64) -> Option<(u64, u64, bool)> {
+        let old = self.map.remove(&s);
+        if let Some((e, _, _)) = old {
+            self.live -= e - s;
+        }
+        old
     }
 
     /// Resolve `range` to buffered segments, clipped, ascending. Holes
@@ -154,7 +178,7 @@ impl LocalIntervalTree {
                 continue;
             };
             if !attached {
-                self.map.insert(s, (e, bb, true));
+                self.insert_span(s, e, bb, true);
                 newly.push(LocalInterval {
                     file: Range::new(s, e),
                     bb_start: bb,
@@ -177,7 +201,7 @@ impl LocalIntervalTree {
                 continue;
             };
             if !attached {
-                self.map.insert(s, (e, bb, true));
+                self.insert_span(s, e, bb, true);
                 newly.push(LocalInterval {
                     file: Range::new(s, e),
                     bb_start: bb,
@@ -220,19 +244,48 @@ impl LocalIntervalTree {
             .unwrap_or(0)
     }
 
-    /// Total bytes currently buffered.
+    /// Total bytes currently buffered. O(1): the counter is maintained
+    /// incrementally (the store checks it on every write to decide
+    /// whether to compact).
     pub fn buffered_bytes(&self) -> u64 {
-        self.map
-            .iter()
-            .map(|(&s, &(e, _, _))| e - s)
-            .sum()
+        self.live
+    }
+
+    /// Renumber burst-buffer offsets compactly in file order, returning
+    /// the copy plan `(old_bb_start, new_bb_start, len)` the store uses
+    /// to rewrite its cache file. After superseded writes are carved
+    /// out, live segments are packed densely from BB offset 0 — the
+    /// garbage left behind by overwrites disappears. File ranges and
+    /// attached flags are untouched; newly BB-adjacent neighbours merge.
+    pub fn compact(&mut self) -> Vec<(u64, u64, u64)> {
+        let mut plan = Vec::with_capacity(self.map.len());
+        let mut cursor = 0u64;
+        let mut renumbered = BTreeMap::new();
+        for (&s, &(e, bb, attached)) in &self.map {
+            plan.push((bb, cursor, e - s));
+            renumbered.insert(s, (e, cursor, attached));
+            cursor += e - s;
+        }
+        self.map = renumbered;
+        // Coverage is unchanged by renumbering; re-anchor the counter
+        // to the freshly computed total all the same.
+        self.live = cursor;
+        // Packing can make file-contiguous neighbours BB-contiguous:
+        // fold them so the tree shrinks along with the buffer.
+        let keys: Vec<u64> = self.map.keys().copied().collect();
+        for k in keys {
+            if self.map.contains_key(&k) {
+                self.merge_around(k);
+            }
+        }
+        plan
     }
 
     fn split_at(&mut self, off: u64) {
         if let Some((&s, &(e, bb, attached))) = self.map.range(..off).next_back() {
             if s < off && off < e {
-                self.map.insert(s, (off, bb, attached));
-                self.map.insert(off, (e, bb + (off - s), attached));
+                self.insert_span(s, off, bb, attached);
+                self.insert_span(off, e, bb + (off - s), attached);
             }
         }
     }
@@ -260,10 +313,10 @@ impl LocalIntervalTree {
             }
         }
         for s in to_remove {
-            self.map.remove(&s);
+            self.remove_span(s);
         }
-        for (s, v) in to_insert {
-            self.map.insert(s, v);
+        for (s, (e, bb, attached)) in to_insert {
+            self.insert_span(s, e, bb, attached);
         }
     }
 
@@ -276,25 +329,26 @@ impl LocalIntervalTree {
         let mut start = key;
         if let Some((&ls, &(le, lbb, lat))) = self.map.range(..start).next_back() {
             if le == start && lat == attached && lbb + (le - ls) == bb {
-                self.map.remove(&ls);
+                self.remove_span(ls);
                 start = ls;
                 bb = lbb;
             }
         }
         if let Some(&(re, rbb, rat)) = self.map.get(&end) {
             if rat == attached && bb + (end - start) == rbb {
-                self.map.remove(&end);
+                self.remove_span(end);
                 end = re;
             }
         }
-        self.map.remove(&key);
-        self.map.insert(start, (end, bb, attached));
+        self.remove_span(key);
+        self.insert_span(start, end, bb, attached);
     }
 
     #[cfg(test)]
     pub fn check_invariants(&self) {
         let mut prev_end = 0u64;
         let mut first = true;
+        let mut total = 0u64;
         for (&s, &(e, _bb, _)) in &self.map {
             assert!(s < e, "empty interval");
             if !first {
@@ -302,7 +356,9 @@ impl LocalIntervalTree {
             }
             prev_end = e;
             first = false;
+            total += e - s;
         }
+        assert_eq!(self.live, total, "live-byte counter drifted");
     }
 }
 
@@ -445,6 +501,33 @@ mod tests {
         assert_eq!(t.buffered_bytes(), 40);
     }
 
+    #[test]
+    fn compact_packs_bb_and_preserves_mapping() {
+        let mut t = LocalIntervalTree::new();
+        t.record_write(Range::new(0, 100), 0); // bb [0,100)
+        t.record_write(Range::new(20, 60), 100); // bb [100,140), carves the middle
+        t.mark_attached(Range::new(0, 10)).unwrap();
+        let before = t.all();
+        let plan = t.compact();
+        // Plan is in file order with dense new offsets.
+        let mut cursor = 0;
+        for &(_, new_bb, len) in &plan {
+            assert_eq!(new_bb, cursor);
+            cursor += len;
+        }
+        assert_eq!(cursor, t.buffered_bytes());
+        // Same file coverage + attached flags (merging may fold
+        // neighbours, so compare per byte, not per segment).
+        let after = t.all();
+        let cover = |ivs: &[LocalInterval], b: u64| {
+            ivs.iter().find(|iv| iv.file.contains(b)).map(|iv| iv.attached)
+        };
+        for b in 0..100u64 {
+            assert_eq!(cover(&before, b), cover(&after, b), "byte {b}");
+        }
+        t.check_invariants();
+    }
+
     /// Oracle property: per-byte (latest bb byte, attached) agreement.
     #[test]
     fn property_matches_bytemap_oracle() {
@@ -456,6 +539,8 @@ mod tests {
             let mut bb_cursor: u64 = 0;
             let steps = g.usize(1, 30);
             for _ in 0..steps {
+                // Map/counter invariants must hold after every step.
+                tree.check_invariants();
                 let a = g.u64(0, UNIVERSE);
                 let b = g.u64(0, UNIVERSE);
                 let (s, e) = if a <= b { (a, b) } else { (b, a) };

@@ -35,9 +35,24 @@ impl Range {
         Self { start, end }
     }
 
-    /// Construct from offset + length.
+    /// Construct from offset + length. Panics (in every build profile,
+    /// with a precise message) when `offset + len` exceeds `u64` —
+    /// previously the release build wrapped and then failed the
+    /// `start <= end` assert with a misleading "invalid range". Callers
+    /// holding untrusted offsets use [`Range::checked_at`].
     pub fn at(offset: u64, len: u64) -> Self {
-        Self::new(offset, offset + len)
+        match offset.checked_add(len) {
+            Some(end) => Self::new(offset, end),
+            None => panic!("range overflow: offset {offset} + len {len} exceeds u64::MAX"),
+        }
+    }
+
+    /// Overflow-checked [`Range::at`]: `None` when `offset + len`
+    /// exceeds `u64`. The BaseFS client maps this to
+    /// `BfsError::RangeOverflow` so adversarial workload specs get an
+    /// error return instead of a panic.
+    pub fn checked_at(offset: u64, len: u64) -> Option<Self> {
+        offset.checked_add(len).map(|end| Self { start: offset, end })
     }
 
     pub fn len(&self) -> u64 {
@@ -81,6 +96,28 @@ impl std::fmt::Display for Range {
     }
 }
 
+/// Collapse a set of ranges into the minimal sorted set covering the
+/// same bytes: overlapping and touching ranges merge, empties drop.
+/// This is the client-side write-coalescing primitive — an attach of
+/// `m` contiguous writes ships one interval instead of `m`, shrinking
+/// both the RPC payload and the global tree it lands in.
+pub fn coalesce_ranges(mut ranges: Vec<Range>) -> Vec<Range> {
+    ranges.retain(|r| !r.is_empty());
+    if ranges.len() <= 1 {
+        return ranges;
+    }
+    ranges.sort_unstable_by_key(|r| r.start);
+    let mut out: Vec<Range> = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        match out.last_mut() {
+            // Half-open ranges: touching (`end == start`) coalesces too.
+            Some(last) if r.start <= last.end => last.end = last.end.max(r.end),
+            _ => out.push(r),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +157,58 @@ mod tests {
     #[should_panic]
     fn inverted_range_panics() {
         Range::new(10, 5);
+    }
+
+    #[test]
+    fn checked_at_catches_overflow() {
+        assert_eq!(Range::checked_at(10, 5), Some(Range::new(10, 15)));
+        assert_eq!(Range::checked_at(u64::MAX - 4, 4), Some(Range::new(u64::MAX - 4, u64::MAX)));
+        assert_eq!(Range::checked_at(u64::MAX - 4, 5), None);
+        assert_eq!(Range::checked_at(u64::MAX, 1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "range overflow")]
+    fn at_overflow_panics_with_clear_message() {
+        Range::at(u64::MAX - 4, 8);
+    }
+
+    #[test]
+    fn coalesce_merges_overlapping_and_touching() {
+        let got = coalesce_ranges(vec![
+            Range::new(20, 30),
+            Range::new(0, 10),
+            Range::new(10, 20), // touching both neighbours
+            Range::new(25, 40), // overlapping
+            Range::new(50, 50), // empty, dropped
+            Range::new(60, 70),
+        ]);
+        assert_eq!(got, vec![Range::new(0, 40), Range::new(60, 70)]);
+        assert!(coalesce_ranges(Vec::new()).is_empty());
+        assert_eq!(coalesce_ranges(vec![Range::new(3, 7)]), vec![Range::new(3, 7)]);
+    }
+
+    /// Coalescing must cover exactly the union of the input bytes.
+    #[test]
+    fn coalesce_property_matches_byteset() {
+        crate::testkit::check("coalesce == byte-set union", |g| {
+            let ranges = g.vec_of(12, |g| {
+                let s = g.u64(0, 100);
+                Range::new(s, g.u64(s, 100))
+            });
+            let out = coalesce_ranges(ranges.clone());
+            // Sorted, non-empty, non-touching.
+            for w in out.windows(2) {
+                crate::testkit::ensure(w[0].end < w[1].start, "must be disjoint+sorted")?;
+            }
+            let covered = |set: &[Range], b: u64| set.iter().any(|r| r.contains(b));
+            for b in 0..=100u64 {
+                crate::testkit::ensure(
+                    covered(&ranges, b) == covered(&out, b),
+                    format!("byte {b} coverage diverged"),
+                )?;
+            }
+            Ok(())
+        });
     }
 }

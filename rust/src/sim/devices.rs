@@ -298,6 +298,12 @@ impl ServerDevice {
     /// shard count so a fabric configured with more shards than the
     /// device still prices consistently (and `shard == 0` everywhere
     /// reproduces the single-server behavior bit-for-bit).
+    ///
+    /// `intervals == 0` is the snapshot-revalidation hit (a version
+    /// compare, no tree walk): it pays dispatch + `task_base` but zero
+    /// `per_interval` — strictly cheaper than any query, which is what
+    /// makes warm `session_open`/`MPI_File_sync` cheap at scale
+    /// (DESIGN.md §Snapshot-Versioning).
     pub fn serve_rpc(&mut self, now: Ns, shard: usize, intervals: usize) -> Ns {
         let q = &mut self.shards[shard % self.shards.len()];
         let enqueued = q.master.serve(now, self.params.dispatch_cost);
@@ -472,6 +478,20 @@ mod tests {
             "sharded {last:?} vs flat {flat_last:?}"
         );
         assert_eq!(srv.rpcs_served(), 1000);
+    }
+
+    #[test]
+    fn revalidation_hit_prices_below_any_query() {
+        // intervals = 0 (revalidate hit) must be strictly cheaper than
+        // the smallest possible query (1 interval), by per_interval.
+        let p = ServerParams::catalyst();
+        let per_interval = p.per_interval;
+        let mut a = ServerDevice::new(p.clone());
+        let mut b = ServerDevice::new(p);
+        let hit = a.serve_rpc(Ns::ZERO, 0, 0);
+        let query = b.serve_rpc(Ns::ZERO, 0, 1);
+        assert!(hit < query, "hit {hit:?} !< query {query:?}");
+        assert_eq!(query.0 - hit.0, per_interval.0);
     }
 
     #[test]

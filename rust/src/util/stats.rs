@@ -3,20 +3,37 @@
 //! paper report averages over >=10 repeats; `Summary` is what every bench
 //! row prints.
 
+use std::cell::OnceCell;
+
 /// Single-pass-friendly collection of samples with summary accessors.
 #[derive(Debug, Clone, Default)]
 pub struct Samples {
     values: Vec<f64>,
+    /// Lazily built sorted copy, shared by every percentile/min/max
+    /// call and invalidated on push — one sort per sample set instead
+    /// of one per call (p50 + p95 per bench row across ~280 scenario
+    /// cells used to re-sort twice per record).
+    sorted: OnceCell<Vec<f64>>,
 }
 
 impl Samples {
     pub fn new() -> Self {
-        Self { values: Vec::new() }
+        Self::default()
     }
 
     pub fn push(&mut self, v: f64) {
         debug_assert!(v.is_finite(), "non-finite sample {v}");
         self.values.push(v);
+        self.sorted.take(); // invalidate the cached order
+    }
+
+    /// The cached ascending copy of the values (built on first use).
+    fn sorted(&self) -> &[f64] {
+        self.sorted.get_or_init(|| {
+            let mut s = self.values.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -49,25 +66,26 @@ impl Samples {
         (ss / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest sample; 0.0 when empty (matching `mean`'s empty-case
+    /// convention — `±INFINITY` previously leaked non-finite values
+    /// into serialized bench records and poisoned `--compare`).
     pub fn min(&self) -> f64 {
-        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+        self.sorted().first().copied().unwrap_or(0.0)
     }
 
+    /// Largest sample; 0.0 when empty (see [`Samples::min`]).
     pub fn max(&self) -> f64 {
-        self.values
-            .iter()
-            .copied()
-            .fold(f64::NEG_INFINITY, f64::max)
+        self.sorted().last().copied().unwrap_or(0.0)
     }
 
-    /// Linear-interpolated percentile, `q` in [0,100].
+    /// Linear-interpolated percentile, `q` in [0,100]. Uses the cached
+    /// sorted copy — repeated calls cost one sort total.
     pub fn percentile(&self, q: f64) -> f64 {
         assert!((0.0..=100.0).contains(&q), "percentile q={q}");
-        if self.values.is_empty() {
+        let sorted = self.sorted();
+        if sorted.is_empty() {
             return 0.0;
         }
-        let mut sorted = self.values.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pos = q / 100.0 * (sorted.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -84,8 +102,8 @@ impl Samples {
             n: self.len(),
             mean: self.mean(),
             stddev: self.stddev(),
-            min: if self.is_empty() { 0.0 } else { self.min() },
-            max: if self.is_empty() { 0.0 } else { self.max() },
+            min: self.min(),
+            max: self.max(),
             p50: self.percentile(50.0),
             p95: self.percentile(95.0),
             p99: self.percentile(99.0),
@@ -202,6 +220,33 @@ mod tests {
         assert_eq!(sum.n, 0);
         assert_eq!(sum.mean, 0.0);
         assert_eq!(sum.p99, 0.0);
+    }
+
+    #[test]
+    fn empty_min_max_are_finite_zero() {
+        // Regression: the old fold identities returned ±INFINITY, which
+        // leaked non-finite values into BENCH json and broke --compare.
+        let s = Samples::new();
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert!(s.min().is_finite() && s.max().is_finite());
+    }
+
+    #[test]
+    fn sorted_cache_invalidates_on_push() {
+        let mut s = Samples::new();
+        s.push(5.0);
+        assert_eq!(s.percentile(50.0), 5.0); // builds the cache
+        assert_eq!(s.max(), 5.0);
+        s.push(1.0); // must invalidate
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        // Clones carry consistent state too.
+        let mut c = s.clone();
+        c.push(9.0);
+        assert_eq!(c.max(), 9.0);
+        assert_eq!(s.max(), 5.0);
     }
 
     #[test]

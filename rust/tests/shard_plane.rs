@@ -21,7 +21,7 @@ fn random_trace(seed: u64, len: usize, nfiles: usize, nclients: u32) -> Vec<Requ
         let start = rng.gen_range_u64(64) * 512;
         let len_b = (1 + rng.gen_range_u64(32)) * 512;
         let range = Range::at(start, len_b);
-        out.push(match rng.gen_range_u64(8) {
+        out.push(match rng.gen_range_u64(9) {
             0 | 1 => Request::Attach {
                 file,
                 client,
@@ -35,6 +35,13 @@ fn random_trace(seed: u64, len: usize, nfiles: usize, nclients: u32) -> Vec<Requ
                 range,
             },
             6 => Request::Stat { file },
+            7 => Request::Revalidate {
+                file,
+                // Low version numbers exercise both hit and miss paths
+                // early in the trace; both planes see the same per-file
+                // version history, so responses must match.
+                version: rng.gen_range_u64(4),
+            },
             _ => Request::FlushNotify {
                 file,
                 len: start + len_b,

@@ -1,0 +1,259 @@
+//! Integration guards for the version-stamped snapshot plane and
+//! client-side write coalescing (DESIGN.md §Snapshot-Versioning):
+//!
+//! - coalesced-attach visibility is bit-for-bit identical to
+//!   uncoalesced (property test over random write schedules through
+//!   CommitFS and SessionFS: read-back bytes AND server owner maps);
+//! - an m-write contiguous phase attaches ≤ ⌈m / merge-run⌉ intervals
+//!   with unchanged read-back bytes;
+//! - a warm-session reopen issues a `Revalidate` priced at ZERO
+//!   interval units on the DES fabric (not a full `bfs_query_file`);
+//! - a stale-version client revalidates to the new snapshot after a
+//!   remote `session_close` (litmus);
+//! - `Range`-overflow offsets surface `BfsError::RangeOverflow`
+//!   instead of panicking (regression: `offset = u64::MAX - 4`).
+
+use pscnf::basefs::{BfsError, DesFabric, Request, TestFabric};
+use pscnf::fs::{CommitFs, SessionFs, WorkloadFs};
+use pscnf::interval::{OwnedInterval, Range};
+use pscnf::sim::SimOp;
+use pscnf::testkit;
+
+/// One random write schedule: (writer index 0/1, offset, len, fill).
+type Schedule = Vec<(usize, u64, u64, u8)>;
+
+const UNIVERSE: u64 = 256;
+
+fn gen_schedule(g: &mut testkit::Gen) -> Schedule {
+    g.vec_of(24, |g| {
+        let off = g.u64(0, UNIVERSE - 1);
+        let len = g.u64(1, (UNIVERSE - off).min(32));
+        (g.usize(0, 1), off, len, g.u64(1, 255) as u8)
+    })
+}
+
+/// Run a schedule through CommitFS (writers commit at the end, reader
+/// queries per read); returns (read-back bytes, server owner map,
+/// attach interval count actually stored).
+fn run_commit(schedule: &Schedule, coalesce: bool) -> (Vec<u8>, Vec<OwnedInterval>, usize) {
+    let mut fabric = TestFabric::new(3);
+    let mut w: Vec<CommitFs> = (0..2).map(|i| CommitFs::new(i, fabric.bb_of(i))).collect();
+    for fs in w.iter_mut() {
+        fs.core().set_coalesce(coalesce);
+    }
+    let mut file = 0;
+    for fs in w.iter_mut() {
+        file = fs.open(&mut fabric, "/coalesce/commit");
+    }
+    for &(who, off, len, fill) in schedule {
+        CommitFs::write_at(&mut w[who], &mut fabric, file, off, &vec![fill; len as usize])
+            .unwrap();
+    }
+    for fs in w.iter_mut() {
+        fs.commit(&mut fabric, file).unwrap();
+    }
+    let mut r = CommitFs::new(2, fabric.bb_of(2));
+    r.open(&mut fabric, "/coalesce/commit");
+    let bytes = CommitFs::read_at(&mut r, &mut fabric, file, Range::new(0, UNIVERSE)).unwrap();
+    let map = fabric
+        .inner
+        .server
+        .handle(Request::QueryFile { file })
+        .intervals();
+    let stored = fabric.inner.server.intervals_of(file);
+    (bytes, map, stored)
+}
+
+/// Same schedule through SessionFS (close-to-open).
+fn run_session(schedule: &Schedule, coalesce: bool) -> (Vec<u8>, Vec<OwnedInterval>) {
+    let mut fabric = TestFabric::new(3);
+    let mut w: Vec<SessionFs> = (0..2).map(|i| SessionFs::new(i, fabric.bb_of(i))).collect();
+    for fs in w.iter_mut() {
+        fs.core().set_coalesce(coalesce);
+    }
+    let mut file = 0;
+    for fs in w.iter_mut() {
+        file = fs.open(&mut fabric, "/coalesce/session");
+    }
+    for &(who, off, len, fill) in schedule {
+        SessionFs::write_at(&mut w[who], &mut fabric, file, off, &vec![fill; len as usize])
+            .unwrap();
+    }
+    for fs in w.iter_mut() {
+        fs.session_close(&mut fabric, file).unwrap();
+    }
+    let mut r = SessionFs::new(2, fabric.bb_of(2));
+    r.open(&mut fabric, "/coalesce/session");
+    r.session_open(&mut fabric, file).unwrap();
+    let bytes = SessionFs::read_at(&mut r, &mut fabric, file, Range::new(0, UNIVERSE)).unwrap();
+    let map = fabric
+        .inner
+        .server
+        .handle(Request::QueryFile { file })
+        .intervals();
+    (bytes, map)
+}
+
+#[test]
+fn coalesced_attach_visibility_is_bit_for_bit_uncoalesced() {
+    testkit::check("coalesced == uncoalesced visibility", |g| {
+        let schedule = gen_schedule(g);
+        let (b_on, m_on, stored_on) = run_commit(&schedule, true);
+        let (b_off, m_off, stored_off) = run_commit(&schedule, false);
+        testkit::ensure(b_on == b_off, "commit read-back diverged")?;
+        testkit::ensure(m_on == m_off, "commit owner map diverged")?;
+        // Coalescing may only shrink (or keep) the stored interval set.
+        testkit::ensure(
+            stored_on <= stored_off,
+            format!("coalescing grew the tree: {stored_on} > {stored_off}"),
+        )?;
+        let (b_on, m_on) = run_session(&schedule, true);
+        let (b_off, m_off) = run_session(&schedule, false);
+        testkit::ensure(b_on == b_off, "session read-back diverged")?;
+        testkit::ensure(m_on == m_off, "session owner map diverged")
+    });
+}
+
+#[test]
+fn contiguous_write_phase_attaches_one_interval_per_run() {
+    // m = 16 small writes forming TWO file-contiguous runs (interleaved
+    // in time, so their burst-buffer placements never merge locally):
+    // the attach must ship ⌈m / merge-run⌉ = 2 intervals, and read-back
+    // must be unchanged bytes.
+    let m = 16u64;
+    let run_len = m / 2;
+    let s = 8u64;
+    let region_b = 1 << 20;
+    let mut fabric = TestFabric::new(2);
+    let mut w = CommitFs::new(0, fabric.bb_of(0));
+    let file = w.open(&mut fabric, "/runs");
+    for i in 0..run_len {
+        CommitFs::write_at(&mut w, &mut fabric, file, i * s, &vec![0xA; s as usize]).unwrap();
+        CommitFs::write_at(
+            &mut w,
+            &mut fabric,
+            file,
+            region_b + i * s,
+            &vec![0xB; s as usize],
+        )
+        .unwrap();
+    }
+    let intervals_before = fabric.inner.counters.rpc_intervals;
+    w.commit(&mut fabric, file).unwrap();
+    let shipped = fabric.inner.counters.rpc_intervals - intervals_before;
+    assert_eq!(fabric.inner.counters.rpcs, 1, "one attach RPC");
+    assert_eq!(shipped, 2, "⌈{m}/{run_len}⌉ = 2 coalesced intervals");
+    assert_eq!(fabric.inner.server.intervals_of(file), 2);
+
+    let mut r = CommitFs::new(1, fabric.bb_of(1));
+    r.open(&mut fabric, "/runs");
+    let a = CommitFs::read_at(&mut r, &mut fabric, file, Range::new(0, run_len * s)).unwrap();
+    assert_eq!(a, vec![0xA; (run_len * s) as usize]);
+    let b = CommitFs::read_at(
+        &mut r,
+        &mut fabric,
+        file,
+        Range::at(region_b, run_len * s),
+    )
+    .unwrap();
+    assert_eq!(b, vec![0xB; (run_len * s) as usize]);
+}
+
+#[test]
+fn warm_reopen_is_priced_as_zero_interval_revalidate() {
+    // DES fabric-counter assertion: the warm session_open issues a
+    // Revalidate — SimOp::Rpc { intervals: 0 } — not a full
+    // bfs_query_file, and rpc_intervals does not grow on the hit.
+    let mut fabric = DesFabric::new(vec![0, 0]);
+    let mut w = SessionFs::new(0, fabric.bb_of(0));
+    let mut r = SessionFs::new(1, fabric.bb_of(1));
+    let f = w.open(&mut fabric, "/priced");
+    r.open(&mut fabric, "/priced");
+    SessionFs::write_at(&mut w, &mut fabric, f, 0, &[1u8; 512]).unwrap();
+    w.session_close(&mut fabric, f).unwrap();
+    while fabric.pop_cost(0).is_some() {}
+
+    // Cold open: full snapshot, ≥1 interval priced.
+    r.session_open(&mut fabric, f).unwrap();
+    assert_eq!(
+        fabric.pop_cost(1),
+        Some(SimOp::Rpc {
+            intervals: 1,
+            shard: 0
+        }),
+        "cold open ships the map"
+    );
+    r.session_close(&mut fabric, f).unwrap();
+    assert_eq!(fabric.pop_cost(1), None, "readers publish nothing");
+
+    let intervals_before = fabric.counters.rpc_intervals;
+    r.session_open(&mut fabric, f).unwrap();
+    assert_eq!(
+        fabric.pop_cost(1),
+        Some(SimOp::Rpc {
+            intervals: 0,
+            shard: 0
+        }),
+        "warm reopen must be a zero-interval Revalidate"
+    );
+    assert_eq!(fabric.counters.rpc_intervals, intervals_before);
+    assert_eq!(fabric.counters.revalidates, 1);
+    assert_eq!(fabric.counters.revalidate_hits, 1);
+}
+
+#[test]
+fn stale_client_revalidates_to_remote_close_snapshot() {
+    // Litmus (close-to-open): P0 caches a snapshot and closes; P1
+    // writes and session_closes; P0's NEXT session must observe P1's
+    // update through a revalidation miss.
+    let mut fabric = TestFabric::new(2);
+    let mut p0 = SessionFs::new(0, fabric.bb_of(0));
+    let mut p1 = SessionFs::new(1, fabric.bb_of(1));
+    let f = p0.open(&mut fabric, "/litmus/c2o");
+    p1.open(&mut fabric, "/litmus/c2o");
+
+    p0.session_open(&mut fabric, f).unwrap();
+    assert_eq!(
+        SessionFs::read_at(&mut p0, &mut fabric, f, Range::new(0, 4)).unwrap(),
+        vec![0u8; 4]
+    );
+    p0.session_close(&mut fabric, f).unwrap();
+
+    SessionFs::write_at(&mut p1, &mut fabric, f, 0, b"done").unwrap();
+    p1.session_close(&mut fabric, f).unwrap();
+
+    p0.session_open(&mut fabric, f).unwrap();
+    assert_eq!(fabric.inner.counters.revalidates, 1);
+    assert_eq!(fabric.inner.counters.revalidate_hits, 0, "must miss");
+    assert_eq!(
+        SessionFs::read_at(&mut p0, &mut fabric, f, Range::new(0, 4)).unwrap(),
+        b"done"
+    );
+}
+
+#[test]
+fn range_overflow_is_an_error_not_a_panic() {
+    let mut fabric = TestFabric::new(1);
+    let mut c = CommitFs::new(0, fabric.bb_of(0));
+    let f = c.open(&mut fabric, "/overflow");
+    let off = u64::MAX - 4;
+
+    // Adversarial write whose end wraps.
+    let err = CommitFs::write_at(&mut c, &mut fabric, f, off, &[0u8; 8]).unwrap_err();
+    assert!(
+        matches!(err, BfsError::RangeOverflow { offset, len } if offset == off && len == 8),
+        "{err:?}"
+    );
+    // The buffer must be untouched: nothing to commit.
+    c.commit(&mut fabric, f).unwrap();
+    assert_eq!(fabric.inner.counters.rpcs, 0);
+
+    // Queries and range commits at wrapping offsets error too.
+    let err = c.core().query(&mut fabric, f, off, 8).unwrap_err();
+    assert!(matches!(err, BfsError::RangeOverflow { .. }), "{err:?}");
+    let err = c.commit_range(&mut fabric, f, off, 8).unwrap_err();
+    assert!(matches!(err, BfsError::RangeOverflow { .. }), "{err:?}");
+
+    // The exact boundary still works: [MAX-4, MAX) is a valid range.
+    assert!(Range::checked_at(off, 4).is_some());
+}
