@@ -1,119 +1,9 @@
-//! §Perf harness — wall-clock microbenchmarks of the L3 hot paths:
-//! global interval tree ops, server request handling, DES event
-//! throughput, and a full Fig-4-cell end-to-end run. Criterion is not
-//! available offline; this uses a warmup+repeat harness with
-//! mean/stddev, printed as a table (units: ns/op or events/s).
-
-use pscnf::basefs::{GlobalServerState, Request};
-use pscnf::config::Testbed;
-use pscnf::fs::FsKind;
-use pscnf::interval::{GlobalIntervalTree, Range};
-use pscnf::util::rng::Rng;
-use pscnf::util::stats::Samples;
-use pscnf::util::table::Table;
-use pscnf::workload::{Config, SyntheticDriver};
-use std::time::Instant;
-
-/// Run `f` (which performs `ops_per_iter` operations) with warmup, and
-/// report ns/op samples.
-fn bench(repeats: usize, ops_per_iter: u64, mut f: impl FnMut()) -> Samples {
-    f(); // warmup
-    let mut s = Samples::new();
-    for _ in 0..repeats {
-        let t0 = Instant::now();
-        f();
-        s.push(t0.elapsed().as_nanos() as f64 / ops_per_iter as f64);
-    }
-    s
-}
+//! Thin wrapper over the `perf_hotpath` registry family: wall-clock
+//! microbenches of the simulator itself (engine events/s via the pure
+//! event-loop flood and the fig4-cell end-to-end run, ns/op for the L3
+//! hot structures). The cells live in `bench::registry` like every
+//! other family; the fig4cell cell is in the gated smoke subset.
 
 fn main() {
-    let mut t = Table::new(vec!["hot path", "ns/op (mean)", "stddev", "ops/s"]);
-    let mut add = |name: &str, s: &Samples| {
-        let m = s.mean();
-        t.row(vec![
-            name.to_string(),
-            format!("{m:.0}"),
-            format!("{:.0}", s.stddev()),
-            format!("{:.0}", 1e9 / m),
-        ]);
-    };
-
-    // 1. Global interval tree: attach (split-heavy random pattern).
-    const N: u64 = 20_000;
-    let s = bench(10, N, || {
-        let mut tree = GlobalIntervalTree::new();
-        let mut rng = Rng::seed_from_u64(1);
-        for i in 0..N {
-            let start = rng.gen_range_u64(1 << 20);
-            tree.attach(Range::at(start, 64 + (i % 512)), (i % 16) as u32);
-        }
-    });
-    add("gtree attach (random)", &s);
-
-    // 2. Global interval tree: query on a populated tree.
-    let mut tree = GlobalIntervalTree::new();
-    let mut rng = Rng::seed_from_u64(2);
-    for i in 0..N {
-        tree.attach(Range::at(rng.gen_range_u64(1 << 20), 256), (i % 16) as u32);
-    }
-    let s = bench(10, N, || {
-        let mut rng = Rng::seed_from_u64(3);
-        for _ in 0..N {
-            let q = tree.query(Range::at(rng.gen_range_u64(1 << 20), 4096));
-            std::hint::black_box(q);
-        }
-    });
-    add("gtree query (4KiB range)", &s);
-
-    // 3. Server request handling (attach+query mix).
-    let s = bench(10, N, || {
-        let mut server = GlobalServerState::new();
-        let mut rng = Rng::seed_from_u64(4);
-        for i in 0..N {
-            let start = rng.gen_range_u64(1 << 20);
-            if i % 3 == 0 {
-                let resp = server.handle(Request::Query {
-                    file: 1,
-                    range: Range::at(start, 8192),
-                });
-                std::hint::black_box(resp);
-            } else {
-                server.handle(Request::Attach {
-                    file: 1,
-                    client: (i % 16) as u32,
-                    ranges: vec![Range::at(start, 512)],
-                });
-            }
-        }
-    });
-    add("server handle (2:1 attach:query)", &s);
-
-    // 4. DES end-to-end: one Fig-4 cell (16 nodes x 12p, 8KiB CC-R).
-    let cell_events = {
-        // count ops once
-        let params = Config::CcR.params(16, 12, 8 << 10, 10, 7);
-        let driver = SyntheticDriver::new(FsKind::Commit, params);
-        let rep = driver.run(Testbed::Catalyst.cluster(16, 1));
-        std::hint::black_box(&rep);
-        rep.rpcs * 4 // rough op count proxy, avoids plumbing
-    };
-    let t0 = Instant::now();
-    let mut runs = 0u32;
-    while t0.elapsed().as_secs_f64() < 2.0 {
-        let params = Config::CcR.params(16, 12, 8 << 10, 10, 7);
-        let driver = SyntheticDriver::new(FsKind::Commit, params);
-        std::hint::black_box(driver.run(Testbed::Catalyst.cluster(16, runs as u64)));
-        runs += 1;
-    }
-    let per_run_ms = t0.elapsed().as_secs_f64() * 1e3 / runs as f64;
-    t.row(vec![
-        "fig4 cell e2e (16n x 12p commit)".to_string(),
-        format!("{:.2}ms/run", per_run_ms),
-        "-".to_string(),
-        format!("{runs} runs/2s"),
-    ]);
-    let _ = cell_events;
-
-    println!("L3 hot-path microbenchmarks\n\n{}", t.render());
+    pscnf::bench::family_main("perf_hotpath");
 }

@@ -78,6 +78,22 @@ pub trait Fabric {
         file: FileId,
         range: Range,
     ) -> Result<Vec<u8>, BfsError>;
+    /// Fetch appending into a caller-owned buffer. The default goes
+    /// through [`Self::fetch`]; allocation-sensitive fabrics (the DES
+    /// benchmark path) override it to copy the owner's bytes exactly
+    /// once. Nothing is appended when an error is returned.
+    fn fetch_into(
+        &mut self,
+        client: ClientId,
+        owner: ClientId,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let data = self.fetch(client, owner, file, range)?;
+        out.extend_from_slice(&data);
+        Ok(())
+    }
     /// Read/write through the underlying PFS.
     fn upfs_read(&mut self, client: ClientId, file: FileId, range: Range) -> Vec<u8>;
     fn upfs_write(&mut self, client: ClientId, file: FileId, offset: u64, data: &[u8]);
@@ -234,34 +250,44 @@ impl ClientCore {
         range: Range,
         owner: Option<ClientId>,
     ) -> Result<Vec<u8>, BfsError> {
+        let mut out = Vec::with_capacity(range.len() as usize);
+        self.read_at_into(fabric, file, range, owner, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::read_at`] appending into a caller-owned buffer — the
+    /// copy-once, allocation-free read path the benchmark drivers reuse
+    /// a scratch buffer through. Nothing is appended on error.
+    pub fn read_at_into<F: Fabric + ?Sized>(
+        &mut self,
+        fabric: &mut F,
+        file: FileId,
+        range: Range,
+        owner: Option<ClientId>,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
         self.opened(file)?;
         match owner {
-            None => Ok(fabric.upfs_read(self.id, file, range)),
-            Some(o) if o == self.id => {
-                let bb = self.bb.read().unwrap();
-                let Some(fb) = bb.get(file) else {
-                    return Err(BfsError::NotOwned(range));
-                };
-                let segs = fb.read_local(range);
-                // Require full coverage: a single-owner read must be
-                // entirely served by that owner (Table 5).
-                let mut out = Vec::with_capacity(range.len() as usize);
-                let mut cursor = range.start;
-                for (r, bytes) in segs {
-                    if r.start != cursor {
-                        return Err(BfsError::NotOwned(range));
-                    }
-                    out.extend_from_slice(&bytes);
-                    cursor = r.end;
-                }
-                if cursor != range.end {
-                    return Err(BfsError::NotOwned(range));
-                }
-                drop(bb);
-                fabric.bb_io(self.id, false, range.len());
-                Ok(out)
+            None => {
+                let data = fabric.upfs_read(self.id, file, range);
+                out.extend_from_slice(&data);
+                Ok(())
             }
-            Some(o) => fabric.fetch(self.id, o, file, range),
+            Some(o) if o == self.id => {
+                {
+                    let bb = self.bb.read().unwrap();
+                    let Some(fb) = bb.get(file) else {
+                        return Err(BfsError::NotOwned(range));
+                    };
+                    // Full coverage required: a single-owner read must be
+                    // entirely served by that owner (Table 5).
+                    fb.read_into(range, out)
+                        .map_err(|_| BfsError::NotOwned(range))?;
+                }
+                fabric.bb_io(self.id, false, range.len());
+                Ok(())
+            }
+            Some(o) => fabric.fetch_into(self.id, o, file, range, out),
         }
     }
 

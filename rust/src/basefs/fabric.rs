@@ -68,6 +68,11 @@ pub struct DesFabric {
     node_of: Vec<usize>,
     /// Per-client pending virtual-time costs, drained by the driver.
     costs: Vec<VecDeque<SimOp>>,
+    /// Reused per-shard scratch for [`Fabric::rpc_batch`] pricing (the
+    /// same idiom as `GlobalIntervalTree`'s carve scratch): interval
+    /// units and touched flags per shard, cleared per batch.
+    shard_units: Vec<usize>,
+    shard_touched: Vec<bool>,
     /// When true, local buffer reads are priced as memory reads instead
     /// of SSD reads (SCR's restart path reads checkpoints still resident
     /// in the in-memory buffer, §6.2).
@@ -108,6 +113,8 @@ impl DesFabric {
             },
             node_of,
             costs: (0..n).map(|_| VecDeque::new()).collect(),
+            shard_units: Vec::new(),
+            shard_touched: Vec::new(),
             mem_reads: false,
             counters: FabricCounters::default(),
         }
@@ -124,6 +131,13 @@ impl DesFabric {
     /// Drain the next pending cost for `client`, if any.
     pub fn pop_cost(&mut self, client: ClientId) -> Option<SimOp> {
         self.costs[client as usize].pop_front()
+    }
+
+    /// Drain every pending cost for `client` into `out` — one rank-step
+    /// batch for [`crate::sim::Driver::next_ops`]. Keeps the drivers'
+    /// hot loops free of the per-op pop/push round trips.
+    pub fn drain_costs_into(&mut self, client: ClientId, out: &mut Vec<SimOp>) {
+        out.extend(self.costs[client as usize].drain(..));
     }
 
     /// Pending cost count (test/debug).
@@ -164,8 +178,14 @@ impl Fabric for DesFabric {
     /// is handled inline); only the *pricing* is coalesced.
     fn rpc_batch(&mut self, client: ClientId, reqs: Vec<Request>) -> Vec<Response> {
         let shards = self.server.shard_count();
-        let mut units_of = vec![0usize; shards];
-        let mut touched = vec![false; shards];
+        // Persistent scratch: commit-heavy phases call this per rank per
+        // phase, so the per-shard accumulators must not reallocate.
+        let mut units_of = std::mem::take(&mut self.shard_units);
+        let mut touched = std::mem::take(&mut self.shard_touched);
+        units_of.clear();
+        units_of.resize(shards, 0);
+        touched.clear();
+        touched.resize(shards, false);
         let mut out = Vec::with_capacity(reqs.len());
         for req in reqs {
             let shard = self.server.shard_index(req.file());
@@ -193,6 +213,8 @@ impl Fabric for DesFabric {
                 },
             );
         }
+        self.shard_units = units_of;
+        self.shard_touched = touched;
         out
     }
 
@@ -203,14 +225,31 @@ impl Fabric for DesFabric {
         file: FileId,
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
-        let data = {
+        let mut out = Vec::with_capacity(range.len() as usize);
+        self.fetch_into(client, owner, file, range, &mut out)?;
+        Ok(out)
+    }
+
+    /// Copy-once fetch: the owner's attached bytes are appended straight
+    /// into the caller's buffer (no per-segment intermediates), which is
+    /// what keeps the benchmark-scale read loop allocation-free.
+    fn fetch_into(
+        &mut self,
+        client: ClientId,
+        owner: ClientId,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        {
             let bb = self.bbs[owner as usize].read().unwrap();
             let fb = bb.get(file).ok_or(BfsError::NotOwned(range))?;
-            fb.read_owned(range).map_err(|_| BfsError::NotOwned(range))?
-        };
+            fb.read_owned_into(range, out)
+                .map_err(|_| BfsError::NotOwned(range))?;
+        }
         let owner_node = self.node_of[owner as usize];
         let client_node = self.node_of[client as usize];
-        self.counters.fetch_bytes += data.len() as u64;
+        self.counters.fetch_bytes += range.len();
         if owner_node == client_node {
             self.counters.local_fetches += 1;
         } else {
@@ -224,7 +263,7 @@ impl Fabric for DesFabric {
                 from_ssd: !self.mem_reads,
             },
         );
-        Ok(data)
+        Ok(())
     }
 
     fn upfs_read(&mut self, client: ClientId, file: FileId, range: Range) -> Vec<u8> {
@@ -299,6 +338,16 @@ impl Fabric for TestFabric {
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
         self.inner.fetch(client, owner, file, range)
+    }
+    fn fetch_into(
+        &mut self,
+        client: ClientId,
+        owner: ClientId,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        self.inner.fetch_into(client, owner, file, range, out)
     }
     fn upfs_read(&mut self, client: ClientId, file: FileId, range: Range) -> Vec<u8> {
         self.inner.upfs_read(client, file, range)

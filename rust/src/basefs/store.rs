@@ -86,10 +86,19 @@ impl FileBuf {
 
     /// Copy the bytes of one local-tree segment out of the cache file.
     pub fn read_segment(&self, seg: &LocalInterval) -> Vec<u8> {
+        let mut out = Vec::with_capacity(seg.file.len() as usize);
+        self.read_segment_into(seg, &mut out);
+        out
+    }
+
+    /// Append one segment's bytes to a caller-owned buffer — the
+    /// copy-once path of the BB read hot loop. Phantom buffers append
+    /// zeros without materializing a payload vector.
+    pub fn read_segment_into(&self, seg: &LocalInterval, out: &mut Vec<u8>) {
         if self.phantom {
-            vec![0u8; seg.file.len() as usize]
+            out.resize(out.len() + seg.file.len() as usize, 0);
         } else {
-            self.data[seg.bb_start as usize..seg.bb_end() as usize].to_vec()
+            out.extend_from_slice(&self.data[seg.bb_start as usize..seg.bb_end() as usize]);
         }
     }
 
@@ -108,25 +117,54 @@ impl FileBuf {
     /// segments are visible, and the whole range must be owned
     /// (bfs_read fails if the owner does not own the specified range).
     pub fn read_owned(&self, range: Range) -> Result<Vec<u8>, StoreError> {
-        let segs: Vec<LocalInterval> = self
-            .tree
-            .lookup(range)
-            .into_iter()
-            .filter(|s| s.attached)
-            .collect();
-        let mut cursor = range.start;
         let mut out = Vec::with_capacity(range.len() as usize);
-        for seg in &segs {
-            if seg.file.start != cursor {
-                return Err(StoreError::NotOwned(range));
+        self.read_owned_into(range, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::read_owned`] appending into a caller-owned buffer; copies
+    /// each byte exactly once, no intermediate segment vectors. On error
+    /// `out` is restored to its original length.
+    pub fn read_owned_into(&self, range: Range, out: &mut Vec<u8>) -> Result<(), StoreError> {
+        self.copy_contiguous(range, true, out)
+    }
+
+    /// Self-read of `range` into a caller-owned buffer: *all* local
+    /// writes are visible (attached or not — a write is immediately
+    /// visible to the writing process, Table 5), but the range must be
+    /// fully covered. On error `out` is restored to its original length.
+    pub fn read_into(&self, range: Range, out: &mut Vec<u8>) -> Result<(), StoreError> {
+        self.copy_contiguous(range, false, out)
+    }
+
+    /// Shared hot loop of the two `*_into` reads: walk the segments of
+    /// `range` in order, requiring gap-free coverage (by attached
+    /// segments only, when `attached_only`), appending bytes as we go.
+    fn copy_contiguous(
+        &self,
+        range: Range,
+        attached_only: bool,
+        out: &mut Vec<u8>,
+    ) -> Result<(), StoreError> {
+        let base = out.len();
+        let mut cursor = range.start;
+        let mut contiguous = true;
+        self.tree.for_each_in(range, |seg| {
+            if (attached_only && !seg.attached) || !contiguous {
+                return;
             }
-            out.extend_from_slice(&self.read_segment(seg));
+            if seg.file.start != cursor {
+                contiguous = false;
+                return;
+            }
+            self.read_segment_into(&seg, out);
             cursor = seg.file.end;
-        }
-        if cursor != range.end {
+        });
+        if !contiguous || cursor != range.end {
+            out.truncate(base);
             return Err(StoreError::NotOwned(range));
         }
-        Ok(out)
+        Ok(())
     }
 
     pub fn mark_attached(&mut self, range: Range) -> Result<Vec<LocalInterval>, LocalTreeError> {
@@ -321,6 +359,48 @@ mod tests {
             fb.read_owned(Range::new(0, 10)).is_err(),
             "partially attached"
         );
+    }
+
+    #[test]
+    fn read_into_variants_match_allocating_reads_and_restore_on_error() {
+        let mut fb = FileBuf::default();
+        fb.write(0, b"0123456789");
+        fb.write(20, b"abcd");
+        fb.mark_attached(Range::new(0, 10)).unwrap();
+        // read_owned_into == read_owned on success, appending.
+        let mut out = b"prefix".to_vec();
+        fb.read_owned_into(Range::new(2, 8), &mut out).unwrap();
+        assert_eq!(&out, b"prefix234567");
+        assert_eq!(fb.read_owned(Range::new(2, 8)).unwrap(), b"234567");
+        // Error (hole in [10,20)) leaves the buffer untouched.
+        let mut out = b"keep".to_vec();
+        assert!(fb.read_owned_into(Range::new(0, 24), &mut out).is_err());
+        assert_eq!(&out, b"keep");
+        // read_into sees unattached writes too; read_owned_into must not.
+        let mut out = Vec::new();
+        fb.read_into(Range::new(20, 24), &mut out).unwrap();
+        assert_eq!(&out, b"abcd");
+        let mut out = Vec::new();
+        assert!(fb.read_owned_into(Range::new(20, 24), &mut out).is_err());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn phantom_read_into_appends_zeros_without_payload() {
+        let mut fb = FileBuf::new_phantom();
+        fb.write(0, &[1u8; 4096]); // content ignored in phantom mode
+        fb.mark_attached(Range::new(0, 4096)).unwrap();
+        // The large-scale audit: lengths tracked, zero payload bytes
+        // materialized anywhere in the buffer.
+        assert_eq!(fb.bb_len(), 4096);
+        assert!(fb.data.is_empty(), "phantom buffers must hold no bytes");
+        let mut out = Vec::new();
+        fb.read_owned_into(Range::new(0, 4096), &mut out).unwrap();
+        assert_eq!(out, vec![0u8; 4096]);
+        out.clear();
+        fb.read_into(Range::new(1024, 2048), &mut out).unwrap();
+        assert_eq!(out, vec![0u8; 1024]);
+        assert!(fb.data.is_empty(), "reads must not materialize bytes");
     }
 
     #[test]

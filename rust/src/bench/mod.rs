@@ -9,11 +9,15 @@
 //! the bench trajectory into a CI signal instead of eyeballed tables.
 //!
 //! ```text
-//! pscnf bench --filter smoke --json          # run the CI subset, write BENCH_matrix.json
-//! pscnf bench --filter fig4 --models commit,session --scales 8,16
+//! pscnf bench --filter smoke --jobs 4 --json # run the CI subset, write BENCH_matrix.json
+//! pscnf bench --filter fig4 --models commit,session --scales 32,64,128 --jobs 8
 //! pscnf bench --list --filter ablate         # show matching scenario ids
 //! pscnf bench --compare baseline.json --gate 15   # nonzero exit on regression
 //! ```
+//!
+//! `--jobs N` fans cells out to N worker threads; records are emitted
+//! in registry order with per-cell seeds, so the matrix is
+//! byte-identical to the serial run (`tests/bench_parallel.rs`).
 
 pub mod compare;
 pub mod registry;
@@ -21,19 +25,52 @@ pub mod report;
 pub mod runner;
 
 pub use compare::{compare, CompareReport, MetricDelta};
-pub use registry::{registry, Kind, Scenario};
+pub use registry::{registry, HotPathCase, Kind, Scenario};
 pub use report::{BenchMatrix, BenchRecord, Metric, SCHEMA_VERSION};
-pub use runner::{run_matrix, run_scenario};
+pub use runner::{run_matrix, run_matrix_timed, run_scenario, run_scenario_timed};
 
 use crate::coordinator::{maybe_write_bench_json, write_results};
 use crate::fs::FsKind;
 use crate::util::cli::ArgSpec;
+use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::util::units::fmt_bandwidth;
 
 /// Where `--json` writes the matrix (and where `--compare` reads the
 /// current run from by default).
 pub const DEFAULT_OUT: &str = "target/results/BENCH_matrix.json";
+
+/// Sidecar path for the per-cell harness wall times: `<out>.wall.json`
+/// with a trailing `.json` folded (`BENCH_matrix.json` →
+/// `BENCH_matrix.wall.json`). Kept OUT of the matrix so the matrix
+/// stays byte-identical across runs and job counts; the wall file is a
+/// trend-only artifact, never read by `--compare`.
+pub fn wall_sidecar_path(out: &str) -> String {
+    match out.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.wall.json"),
+        None => format!("{out}.wall.json"),
+    }
+}
+
+/// Serialize the per-cell wall times (registry order) for the sidecar.
+pub fn wall_json(jobs: usize, walls: &[(String, u64)]) -> Json {
+    let mut o = Json::obj();
+    o.set("schema_version", SCHEMA_VERSION).set("jobs", jobs as u64);
+    o.set(
+        "wall",
+        Json::Arr(
+            walls
+                .iter()
+                .map(|(id, ns)| {
+                    let mut w = Json::obj();
+                    w.set("id", id.as_str()).set("wall_ns", *ns);
+                    w
+                })
+                .collect(),
+        ),
+    );
+    o
+}
 
 /// Render the matrix as a human table (one row per scenario).
 pub fn render_matrix(title: &str, m: &BenchMatrix) -> String {
@@ -106,6 +143,12 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         "N",
         Some("0"),
         "override per-scenario repeats (0 = registry default)",
+    )
+    .opt(
+        "jobs",
+        "N",
+        Some("1"),
+        "parallel scenario workers; the matrix is byte-identical to --jobs 1",
     )
     .flag("json", "write the matrix to --out after running")
     .opt("out", "PATH", Some(DEFAULT_OUT), "output path for --json")
@@ -183,7 +226,11 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
             s.repeats = repeats;
         }
     }
-    let matrix = run_matrix(&scenarios);
+    let jobs = args.usize("jobs")?;
+    if jobs == 0 {
+        return Err("--jobs must be >= 1".to_string());
+    }
+    let (matrix, walls) = run_matrix_timed(&scenarios, jobs);
     println!("{}", render_matrix("bench matrix", &matrix));
     if args.flag("json") {
         let path = args.str("out")?;
@@ -192,6 +239,12 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         }
         std::fs::write(path, matrix.to_json().pretty()).map_err(|e| format!("{path}: {e}"))?;
         println!("bench json: {path}");
+        // Harness wall times ride a sidecar (trend-only): keeping them
+        // out of the matrix is what makes the matrix deterministic.
+        let wall_path = wall_sidecar_path(path);
+        std::fs::write(&wall_path, wall_json(jobs, &walls).pretty())
+            .map_err(|e| format!("{wall_path}: {e}"))?;
+        println!("wall json:  {wall_path}");
     }
     Ok(())
 }

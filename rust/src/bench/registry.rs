@@ -45,6 +45,41 @@ pub enum Kind {
     /// models' hit-rate climbs with `rounds` while commit/posix keep
     /// paying per-read queries.
     Snapshot { access: u64, rounds: usize },
+    /// Wall-clock hot-path microbench (`perf_hotpath`): measures the
+    /// simulator itself (engine events/s, tree/server ns/op), not
+    /// simulated bandwidth. The ONLY nondeterministic cells in the
+    /// matrix — excluded from the byte-identity guarantee of parallel
+    /// runs (see DESIGN.md §Benchmarks).
+    HotPath(HotPathCase),
+}
+
+/// Which hot path a `perf_hotpath` cell times.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HotPathCase {
+    /// Global interval tree: split-heavy random attaches.
+    GtreeAttach,
+    /// Global interval tree: 4 KiB range queries on a populated tree.
+    GtreeQuery,
+    /// `GlobalServerState::handle` with a 2:1 attach:query mix.
+    ServerHandle,
+    /// Pure DES event-loop flood (no functional FS state): heap +
+    /// indexed mailboxes + device pricing, in events per second.
+    EngineLoop,
+    /// One fig4 small-read commit cell end to end, in engine events per
+    /// wall second — the engine-throughput metric the CI gate watches.
+    Fig4Cell,
+}
+
+impl HotPathCase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HotPathCase::GtreeAttach => "gtree.attach",
+            HotPathCase::GtreeQuery => "gtree.query",
+            HotPathCase::ServerHandle => "server.handle",
+            HotPathCase::EngineLoop => "engine.loop",
+            HotPathCase::Fig4Cell => "fig4cell",
+        }
+    }
 }
 
 /// One cell of the matrix: model × workload × scale, plus the device
@@ -164,23 +199,33 @@ pub fn registry() -> Vec<Scenario> {
 
     // fig3 — CN-W/SN-W write bandwidth, 8 MiB + 8 KiB, all four models
     // (the paper plots commit and session; posix and mpiio complete the
-    // matrix).
+    // matrix). The n=32/64/128 rows extend the paper's sweep to the
+    // scales the allocation-free engine opened up (fewer repeats: the
+    // big cells are there for the scaling trend, not tight error bars).
     for config in [Config::CnW, Config::SnW] {
         for access in [8u64 << 20, 8 << 10] {
             for fs in FsKind::ALL {
-                for nodes in [1usize, 2, 4, 8, 16] {
-                    v.push(synthetic("fig3", config, access, fs, nodes, 12));
+                for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+                    let mut sc = synthetic("fig3", config, access, fs, nodes, 12);
+                    if nodes >= 32 {
+                        sc.repeats = 2;
+                    }
+                    v.push(sc);
                 }
             }
         }
     }
 
-    // fig4 — CC-R/CS-R read bandwidth.
+    // fig4 — CC-R/CS-R read bandwidth (large-scale rows as in fig3).
     for config in [Config::CcR, Config::CsR] {
         for access in [8u64 << 20, 8 << 10] {
             for fs in FsKind::ALL {
-                for nodes in [2usize, 4, 8, 16] {
-                    v.push(synthetic("fig4", config, access, fs, nodes, 12));
+                for nodes in [2usize, 4, 8, 16, 32, 64, 128] {
+                    let mut sc = synthetic("fig4", config, access, fs, nodes, 12);
+                    if nodes >= 32 {
+                        sc.repeats = 2;
+                    }
+                    v.push(sc);
                 }
             }
         }
@@ -202,11 +247,12 @@ pub fn registry() -> Vec<Scenario> {
         }
     }
 
-    // fig6 — DL ingestion, strong + weak scaling, ppn=4 (one per GPU).
+    // fig6 — DL ingestion, strong + weak scaling, ppn=4 (one per GPU),
+    // with n=32/64/128 rows beyond the paper's 16-node sweep.
     for (strong, tag, work) in [(true, "dl.strong", 4usize), (false, "dl.weak", 8)] {
         for fs in FsKind::ALL {
-            for nodes in [1usize, 2, 4, 8, 16] {
-                let sc = base(
+            for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+                let mut sc = base(
                     "fig6",
                     fs,
                     nodes,
@@ -217,9 +263,74 @@ pub fn registry() -> Vec<Scenario> {
                         aggregate: false,
                     },
                 );
+                if nodes >= 32 {
+                    sc.repeats = 2;
+                }
                 v.push(with_id(sc, tag, None, &format!("n{nodes}")));
             }
         }
+    }
+
+    // scale_dl — the thousand-rank DL weak-scaling family: 4× the fig6
+    // per-rank read volume (work=32 → 1024 samples/rank/epoch) at
+    // n=16…128 (up to 512 ranks, ~524k random sample reads per run).
+    // Only feasible in CI-tolerable time with the allocation-free
+    // engine; all cells phantom, of course.
+    for fs in FsKind::ALL {
+        for nodes in [16usize, 32, 64, 128] {
+            let mut sc = base(
+                "scale_dl",
+                fs,
+                nodes,
+                4,
+                Kind::Dl {
+                    strong: false,
+                    work: 32,
+                    aggregate: false,
+                },
+            );
+            sc.repeats = 2;
+            v.push(with_id(sc, "dl.weak.xl", None, &format!("n{nodes}")));
+        }
+    }
+
+    // scale_gate — one large-scale cell (768 ranks of small commit
+    // reads) run by CI as its own wall-clock-budgeted step, so a scale
+    // regression of the simulator fails loudly without putting a
+    // long-running cell inside the gated smoke subset. (Named so no
+    // "smoke" substring lands in its id: `--filter smoke` matches by
+    // substring and must not pick this up.)
+    {
+        let mut sc = base(
+            "scale_gate",
+            FsKind::Commit,
+            64,
+            12,
+            Kind::Synthetic {
+                config: Config::CcR,
+                access: 8 << 10,
+                read_pattern: None,
+            },
+        );
+        sc.repeats = 1;
+        v.push(with_id(sc, "CC-R", Some(8 << 10), "n64"));
+    }
+
+    // perf_hotpath — wall-clock microbenches of the simulator itself
+    // (the old standalone table-printing binary, as real gated cells).
+    // ns_per_op cells pin the L3 hot structures; events_per_sec cells
+    // pin engine throughput. The fig4cell cell is the smoke/gated one.
+    for (case, nodes, ppn, smoke) in [
+        (HotPathCase::GtreeAttach, 1usize, 1usize, false),
+        (HotPathCase::GtreeQuery, 1, 1, false),
+        (HotPathCase::ServerHandle, 1, 1, false),
+        (HotPathCase::EngineLoop, 16, 12, false),
+        (HotPathCase::Fig4Cell, 16, 12, true),
+    ] {
+        let mut sc = base("perf_hotpath", FsKind::Commit, nodes, ppn, Kind::HotPath(case));
+        sc.repeats = 3;
+        sc.smoke = smoke;
+        v.push(with_id(sc, case.name(), None, &format!("n{nodes}")));
     }
 
     // ablate_server — worker-pool width × dispatch policy behind ONE

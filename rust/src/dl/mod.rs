@@ -19,7 +19,6 @@ use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
 use crate::util::rng::Rng;
 use crate::workload::build_fs;
-use std::collections::VecDeque;
 
 /// Fig 6 workload parameters.
 #[derive(Debug, Clone)]
@@ -169,8 +168,9 @@ pub struct DlDriver {
     file: FileId,
     assignment: Vec<Vec<Vec<usize>>>, // [epoch][rank] -> sample ids
     stage: Vec<Stage>,
-    pending: Vec<VecDeque<SimOp>>,
     payload: Vec<u8>,
+    /// Reusable sample-read destination (alloc-free read hot loop).
+    read_buf: Vec<u8>,
     epoch_start: Vec<Ns>,
     epoch_end: Vec<Ns>,
     remote: u64,
@@ -200,8 +200,8 @@ impl DlDriver {
             file,
             assignment,
             stage: vec![Stage::Preload(0); nranks],
-            pending: (0..nranks).map(|_| VecDeque::new()).collect(),
             payload,
+            read_buf: Vec::new(),
             epoch_start: vec![Ns(u64::MAX); params.epochs],
             epoch_end: vec![Ns::ZERO; params.epochs],
             remote: 0,
@@ -238,21 +238,12 @@ impl DlDriver {
             sim_ops: stats.ops_executed,
         }
     }
-
-    fn drain(&mut self, rank: usize) {
-        while let Some(op) = self.fabric.pop_cost(rank as u32) {
-            self.pending[rank].push_back(op);
-        }
-    }
 }
 
 impl Driver for DlDriver {
-    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+    fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
         let p = self.params.clone();
         loop {
-            if let Some(op) = self.pending[rank].pop_front() {
-                return op;
-            }
             match self.stage[rank] {
                 Stage::Preload(i) => {
                     // Write the contiguous shard sample-by-sample.
@@ -265,7 +256,10 @@ impl Driver for DlDriver {
                             .expect("preload write");
                         self.payload = payload;
                         self.stage[rank] = Stage::Preload(i + 1);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     } else {
                         self.stage[rank] = Stage::PublishShard;
                     }
@@ -275,11 +269,15 @@ impl Driver for DlDriver {
                         .end_write_phase(&mut self.fabric, self.file)
                         .expect("publish shard");
                     self.stage[rank] = Stage::PreloadBarrier;
-                    self.drain(rank);
+                    self.fabric.drain_costs_into(rank as u32, out);
+                    if !out.is_empty() {
+                        return;
+                    }
                 }
                 Stage::PreloadBarrier => {
                     self.stage[rank] = Stage::EpochOpen(0);
-                    return SimOp::Barrier;
+                    out.push(SimOp::Barrier);
+                    return;
                 }
                 Stage::EpochOpen(epoch) => {
                     if epoch >= p.epochs {
@@ -291,7 +289,10 @@ impl Driver for DlDriver {
                         .begin_read_phase(&mut self.fabric, self.file)
                         .expect("epoch open");
                     self.stage[rank] = Stage::EpochRead { epoch, i: 0 };
-                    self.drain(rank);
+                    self.fabric.drain_costs_into(rank as u32, out);
+                    if !out.is_empty() {
+                        return;
+                    }
                 }
                 Stage::EpochRead { epoch, i } => {
                     let ids = &self.assignment[epoch][rank];
@@ -324,26 +325,33 @@ impl Driver for DlDriver {
                                     .query(&mut self.fabric, self.file, span.start, span.len())
                                     .expect("group query");
                             }
+                            self.read_buf.clear();
                             self.fs[rank]
                                 .core()
-                                .read_at(
+                                .read_at_into(
                                     &mut self.fabric,
                                     self.file,
                                     Range::at(off, p.sample_bytes),
                                     Some(owner as u32),
+                                    &mut self.read_buf,
                                 )
                                 .expect("aggregated sample read");
                         } else {
+                            self.read_buf.clear();
                             self.fs[rank]
-                                .read_at(
+                                .read_at_into(
                                     &mut self.fabric,
                                     self.file,
                                     Range::at(off, p.sample_bytes),
+                                    &mut self.read_buf,
                                 )
                                 .expect("sample read");
                         }
                         self.stage[rank] = Stage::EpochRead { epoch, i: i + 1 };
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     } else {
                         self.epoch_end[epoch] = self.epoch_end[epoch].max(now);
                         self.stage[rank] = Stage::EpochBarrier(epoch);
@@ -351,11 +359,13 @@ impl Driver for DlDriver {
                 }
                 Stage::EpochBarrier(epoch) => {
                     self.stage[rank] = Stage::EpochOpen(epoch + 1);
-                    return SimOp::Barrier;
+                    out.push(SimOp::Barrier);
+                    return;
                 }
                 Stage::Finish => {
                     self.stage[rank] = Stage::Finished;
-                    return SimOp::Done;
+                    out.push(SimOp::Done);
+                    return;
                 }
                 Stage::Finished => unreachable!(),
             }

@@ -61,6 +61,18 @@ impl CommitFs {
         let owned = self.core.query(fabric, file, range.start, range.len())?;
         assemble_read(&mut self.core, fabric, file, range, &owned)
     }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        super::assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
+    }
 }
 
 impl WorkloadFs for CommitFs {
@@ -97,6 +109,16 @@ impl WorkloadFs for CommitFs {
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
         CommitFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        CommitFs::read_at_into(self, fabric, file, range, out)
     }
 
     /// Write phase ends with a commit.

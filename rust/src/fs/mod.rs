@@ -98,6 +98,24 @@ pub trait WorkloadFs {
         range: Range,
     ) -> Result<Vec<u8>, BfsError>;
 
+    /// [`Self::read_at`] appending into a caller-owned buffer, so the
+    /// benchmark drivers' read hot loops can reuse one scratch vector
+    /// instead of allocating a fresh payload per access. The default
+    /// delegates to [`Self::read_at`]; every in-tree layer overrides it
+    /// with the copy-once [`assemble_read_into`] path. Nothing is
+    /// appended when an error is returned.
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let data = self.read_at(fabric, file, range)?;
+        out.extend_from_slice(&data);
+        Ok(())
+    }
+
     /// Writer-side synchronization after a write phase (commit /
     /// session_close / no-op).
     fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId)
@@ -249,6 +267,39 @@ pub fn assemble_read(
     owned: &[OwnedInterval],
 ) -> Result<Vec<u8>, BfsError> {
     let mut out = Vec::with_capacity(range.len() as usize);
+    assemble_read_into(core, fabric, file, range, owned, &mut out)?;
+    Ok(out)
+}
+
+/// [`assemble_read`] appending into a caller-owned buffer: every byte is
+/// copied exactly once, from its source straight into `out`. On error
+/// `out` is restored to its original length.
+pub fn assemble_read_into(
+    core: &mut ClientCore,
+    fabric: &mut dyn Fabric,
+    file: FileId,
+    range: Range,
+    owned: &[OwnedInterval],
+    out: &mut Vec<u8>,
+) -> Result<(), BfsError> {
+    let base = out.len();
+    let res = assemble_read_inner(core, fabric, file, range, owned, out);
+    if res.is_err() {
+        out.truncate(base);
+    } else {
+        debug_assert_eq!((out.len() - base) as u64, range.len());
+    }
+    res
+}
+
+fn assemble_read_inner(
+    core: &mut ClientCore,
+    fabric: &mut dyn Fabric,
+    file: FileId,
+    range: Range,
+    owned: &[OwnedInterval],
+    out: &mut Vec<u8>,
+) -> Result<(), BfsError> {
     let mut cursor = range.start;
     for iv in owned {
         let Some(clip) = iv.range.intersect(&range) else {
@@ -256,26 +307,15 @@ pub fn assemble_read(
         };
         if clip.start > cursor {
             // Hole before this interval: underlying PFS.
-            out.extend_from_slice(&core.read_at(
-                fabric,
-                file,
-                Range::new(cursor, clip.start),
-                None,
-            )?);
+            core.read_at_into(fabric, file, Range::new(cursor, clip.start), None, out)?;
         }
-        out.extend_from_slice(&core.read_at(fabric, file, clip, Some(iv.owner))?);
+        core.read_at_into(fabric, file, clip, Some(iv.owner), out)?;
         cursor = clip.end;
     }
     if cursor < range.end {
-        out.extend_from_slice(&core.read_at(
-            fabric,
-            file,
-            Range::new(cursor, range.end),
-            None,
-        )?);
+        core.read_at_into(fabric, file, Range::new(cursor, range.end), None, out)?;
     }
-    debug_assert_eq!(out.len() as u64, range.len());
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

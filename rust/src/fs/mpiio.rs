@@ -10,7 +10,7 @@
 //! a sync/open over an unchanged file is a lightweight `Revalidate`
 //! (no map transfer) instead of a full `bfs_query_file`.
 
-use super::{assemble_read, overlay_own_writes, FsKind, SnapshotCache, WorkloadFs};
+use super::{overlay_own_writes, FsKind, SnapshotCache, WorkloadFs};
 use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
 use crate::interval::Range;
 use std::collections::HashSet;
@@ -88,6 +88,19 @@ impl MpiioFs {
         file: FileId,
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
+        let mut out = Vec::with_capacity(range.len() as usize);
+        self.read_at_into(fabric, file, range, &mut out)?;
+        Ok(out)
+    }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
         let owned = if self.active.contains(&file) {
             self.cache
                 .tree(file)
@@ -97,7 +110,7 @@ impl MpiioFs {
             Vec::new()
         };
         let owned = overlay_own_writes(&mut self.core, file, range, owned);
-        assemble_read(&mut self.core, fabric, file, range, &owned)
+        super::assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
     }
 }
 
@@ -135,6 +148,16 @@ impl WorkloadFs for MpiioFs {
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
         MpiioFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        MpiioFs::read_at_into(self, fabric, file, range, out)
     }
 
     fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {

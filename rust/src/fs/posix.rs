@@ -41,6 +41,18 @@ impl PosixFs {
         let owned = self.core.query(fabric, file, range.start, range.len())?;
         assemble_read(&mut self.core, fabric, file, range, &owned)
     }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        super::assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
+    }
 }
 
 impl WorkloadFs for PosixFs {
@@ -77,6 +89,16 @@ impl WorkloadFs for PosixFs {
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
         PosixFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        PosixFs::read_at_into(self, fabric, file, range, out)
     }
 
     fn end_write_phase(

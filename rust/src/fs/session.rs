@@ -11,7 +11,7 @@
 //! client attached in between. The layer's own `session_close` attach
 //! invalidates its cache (its attach bumped the server version).
 
-use super::{assemble_read, overlay_own_writes, FsKind, SnapshotCache, WorkloadFs};
+use super::{overlay_own_writes, FsKind, SnapshotCache, WorkloadFs};
 use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
 use crate::interval::Range;
 use std::collections::HashSet;
@@ -74,6 +74,19 @@ impl SessionFs {
         file: FileId,
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
+        let mut out = Vec::with_capacity(range.len() as usize);
+        self.read_at_into(fabric, file, range, &mut out)?;
+        Ok(out)
+    }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
         let owned = if self.active.contains(&file) {
             self.cache
                 .tree(file)
@@ -83,7 +96,7 @@ impl SessionFs {
             Vec::new()
         };
         let owned = overlay_own_writes(&mut self.core, file, range, owned);
-        assemble_read(&mut self.core, fabric, file, range, &owned)
+        super::assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
     }
 }
 
@@ -123,6 +136,16 @@ impl WorkloadFs for SessionFs {
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
         SessionFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        SessionFs::read_at_into(self, fabric, file, range, out)
     }
 
     fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {

@@ -56,6 +56,13 @@ pub struct LocalIntervalTree {
     /// the store's per-write compaction check is O(1) instead of a
     /// full-map scan (`check_invariants` pins the equality).
     live: u64,
+    /// Reused scratch, the same idiom as `GlobalIntervalTree`'s carve
+    /// scratch (§Perf): key lists for the attach/compact walks and the
+    /// carve remove/insert staging. Most ops touch 0–2 intervals, so
+    /// persistent buffers keep the hot paths allocation-free.
+    scratch_keys: Vec<u64>,
+    scratch_remove: Vec<u64>,
+    scratch_insert: Vec<(u64, (u64, u64, bool))>,
 }
 
 impl LocalIntervalTree {
@@ -104,10 +111,18 @@ impl LocalIntervalTree {
     /// Resolve `range` to buffered segments, clipped, ascending. Holes
     /// (bytes never written locally) are simply absent from the result.
     pub fn lookup(&self, range: Range) -> Vec<LocalInterval> {
-        if range.is_empty() {
-            return Vec::new();
-        }
         let mut out = Vec::new();
+        self.for_each_in(range, |seg| out.push(seg));
+        out
+    }
+
+    /// Visit the buffered segments of `range` (clipped, ascending)
+    /// without materializing a result vector — the allocation-free
+    /// backbone of [`Self::lookup`] and the store's read hot loop.
+    pub fn for_each_in(&self, range: Range, mut f: impl FnMut(LocalInterval)) {
+        if range.is_empty() {
+            return;
+        }
         let first = self
             .map
             .range(..=range.start)
@@ -117,14 +132,13 @@ impl LocalIntervalTree {
         for (&s, &(e, bb, attached)) in self.map.range(first..range.end) {
             let iv = Range::new(s, e);
             if let Some(clip) = iv.intersect(&range) {
-                out.push(LocalInterval {
+                f(LocalInterval {
                     file: clip,
                     bb_start: bb + (clip.start - s),
                     attached,
                 });
             }
         }
-        out
     }
 
     /// All entries (ascending).
@@ -167,12 +181,10 @@ impl LocalIntervalTree {
         self.split_at(range.start);
         self.split_at(range.end);
         let mut newly = Vec::new();
-        let keys: Vec<u64> = self
-            .map
-            .range(range.start..range.end)
-            .map(|(&s, _)| s)
-            .collect();
-        for s in keys {
+        let mut keys = std::mem::take(&mut self.scratch_keys);
+        keys.clear();
+        keys.extend(self.map.range(range.start..range.end).map(|(&s, _)| s));
+        for &s in &keys {
             // A previous iteration's merge may have absorbed this key.
             let Some(&(e, bb, attached)) = self.map.get(&s) else {
                 continue;
@@ -187,15 +199,18 @@ impl LocalIntervalTree {
                 self.merge_around(s);
             }
         }
+        self.scratch_keys = keys;
         Ok(newly)
     }
 
     /// Mark every written range attached (bfs_attach_file). Returns newly
     /// attached segments; no-op (empty vec) if everything was attached.
     pub fn mark_all_attached(&mut self) -> Vec<LocalInterval> {
-        let keys: Vec<u64> = self.map.keys().copied().collect();
+        let mut keys = std::mem::take(&mut self.scratch_keys);
+        keys.clear();
+        keys.extend(self.map.keys().copied());
         let mut newly = Vec::new();
-        for s in keys {
+        for &s in &keys {
             // Key may have been merged away by a previous iteration.
             let Some(&(e, bb, attached)) = self.map.get(&s) else {
                 continue;
@@ -210,6 +225,7 @@ impl LocalIntervalTree {
                 self.merge_around(s);
             }
         }
+        self.scratch_keys = keys;
         newly
     }
 
@@ -225,10 +241,20 @@ impl LocalIntervalTree {
         Ok(segs)
     }
 
-    /// Remove all attached ranges (bfs_detach_file); returns them.
+    /// Remove all attached ranges (bfs_detach_file); returns them. The
+    /// return vector is the only allocation — the walk itself collects
+    /// straight into it, no intermediate full-map copy.
     pub fn detach_all_attached(&mut self) -> Vec<LocalInterval> {
-        let attached: Vec<LocalInterval> =
-            self.all().into_iter().filter(|iv| iv.attached).collect();
+        let mut attached = Vec::new();
+        for (&s, &(e, bb, is_attached)) in &self.map {
+            if is_attached {
+                attached.push(LocalInterval {
+                    file: Range::new(s, e),
+                    bb_start: bb,
+                    attached: true,
+                });
+            }
+        }
         for iv in &attached {
             self.carve(iv.file);
         }
@@ -272,12 +298,15 @@ impl LocalIntervalTree {
         self.live = cursor;
         // Packing can make file-contiguous neighbours BB-contiguous:
         // fold them so the tree shrinks along with the buffer.
-        let keys: Vec<u64> = self.map.keys().copied().collect();
-        for k in keys {
+        let mut keys = std::mem::take(&mut self.scratch_keys);
+        keys.clear();
+        keys.extend(self.map.keys().copied());
+        for &k in &keys {
             if self.map.contains_key(&k) {
                 self.merge_around(k);
             }
         }
+        self.scratch_keys = keys;
         plan
     }
 
@@ -291,8 +320,10 @@ impl LocalIntervalTree {
     }
 
     fn carve(&mut self, range: Range) {
-        let mut to_remove = Vec::new();
-        let mut to_insert = Vec::new();
+        let mut to_remove = std::mem::take(&mut self.scratch_remove);
+        let mut to_insert = std::mem::take(&mut self.scratch_insert);
+        to_remove.clear();
+        to_insert.clear();
         let first = self
             .map
             .range(..=range.start)
@@ -312,12 +343,14 @@ impl LocalIntervalTree {
                 to_insert.push((range.end, (e, bb + (range.end - s), attached)));
             }
         }
-        for s in to_remove {
+        for &s in &to_remove {
             self.remove_span(s);
         }
-        for (s, (e, bb, attached)) in to_insert {
+        for &(s, (e, bb, attached)) in &to_insert {
             self.insert_span(s, e, bb, attached);
         }
+        self.scratch_remove = to_remove;
+        self.scratch_insert = to_insert;
     }
 
     /// Merge the interval starting at `key` with neighbours when file

@@ -22,7 +22,6 @@ use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
 use crate::workload::build_fs;
-use std::collections::VecDeque;
 
 /// HACC-IO checkpoint layout.
 #[derive(Debug, Clone)]
@@ -164,8 +163,9 @@ pub struct ScrDriver {
     own_file: Vec<FileId>,
     partner_file: Vec<FileId>,
     stage: Vec<Stage>,
-    pending: Vec<VecDeque<SimOp>>,
     payload: Vec<u8>,
+    /// Reusable restart-read destination (alloc-free read hot loop).
+    read_buf: Vec<u8>,
     ckpt_end: Ns,
     restart_start: Ns,
     restart_end: Ns,
@@ -208,8 +208,8 @@ impl ScrDriver {
             own_file,
             partner_file,
             stage,
-            pending: (0..nranks).map(|_| VecDeque::new()).collect(),
             payload,
+            read_buf: Vec::new(),
             params,
             ckpt_end: Ns::ZERO,
             restart_start: Ns(u64::MAX),
@@ -244,12 +244,6 @@ impl ScrDriver {
         }
     }
 
-    fn drain(&mut self, rank: usize) {
-        while let Some(op) = self.fabric.pop_cost(rank as u32) {
-            self.pending[rank].push_back(op);
-        }
-    }
-
     /// The compute rank whose checkpoint this rank hosts a copy of.
     fn copy_source(&self, rank: usize) -> usize {
         let compute = self.params.compute_ranks();
@@ -268,12 +262,9 @@ impl ScrDriver {
 }
 
 impl Driver for ScrDriver {
-    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+    fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
         let p = self.params.clone();
         loop {
-            if let Some(op) = self.pending[rank].pop_front() {
-                return op;
-            }
             match self.stage[rank] {
                 Stage::WriteOwn(a) => {
                     if a < p.arrays {
@@ -284,25 +275,30 @@ impl Driver for ScrDriver {
                             .expect("ckpt write");
                         self.payload = payload;
                         self.stage[rank] = Stage::WriteOwn(a + 1);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     } else {
                         self.stage[rank] = Stage::SendCopy;
                     }
                 }
                 Stage::SendCopy => {
                     self.stage[rank] = Stage::RecvCopy;
-                    return SimOp::Send {
+                    out.push(SimOp::Send {
                         to: p.partner(rank),
                         tag: TAG_COPY,
                         bytes: p.ckpt_bytes(),
-                    };
+                    });
+                    return;
                 }
                 Stage::RecvCopy => {
                     self.stage[rank] = Stage::WritePartner(0);
-                    return SimOp::Recv {
+                    out.push(SimOp::Recv {
                         from: self.copy_source(rank),
                         tag: TAG_COPY,
-                    };
+                    });
+                    return;
                 }
                 Stage::WritePartner(a) => {
                     if a < p.arrays {
@@ -313,7 +309,10 @@ impl Driver for ScrDriver {
                             .expect("partner write");
                         self.payload = payload;
                         self.stage[rank] = Stage::WritePartner(a + 1);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     } else {
                         self.stage[rank] = Stage::Publish;
                     }
@@ -326,11 +325,15 @@ impl Driver for ScrDriver {
                         .end_write_phase_all(&mut self.fabric, &files)
                         .expect("publish ckpt files");
                     self.stage[rank] = Stage::BarrierThenRestart;
-                    self.drain(rank);
+                    self.fabric.drain_costs_into(rank as u32, out);
+                    if !out.is_empty() {
+                        return;
+                    }
                 }
                 Stage::BarrierThenRestart => {
                     self.stage[rank] = Stage::BeginRestart;
-                    return SimOp::Barrier;
+                    out.push(SimOp::Barrier);
+                    return;
                 }
                 Stage::BeginRestart => {
                     // Checkpoint phase ends at barrier release.
@@ -350,21 +353,29 @@ impl Driver for ScrDriver {
                             .expect("restart session");
                         self.restart_start = self.restart_start.min(now);
                         self.stage[rank] = Stage::ReadOwn(0);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     }
                 }
                 Stage::ReadOwn(a) => {
                     if a < p.arrays {
                         let off = a as u64 * p.array_bytes();
+                        self.read_buf.clear();
                         self.fs[rank]
-                            .read_at(
+                            .read_at_into(
                                 &mut self.fabric,
                                 self.own_file[rank],
                                 Range::at(off, p.array_bytes()),
+                                &mut self.read_buf,
                             )
                             .expect("restart read");
                         self.stage[rank] = Stage::ReadOwn(a + 1);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     } else {
                         self.restart_end = self.restart_end.max(now);
                         // Partners of failed ranks additionally ship the
@@ -380,10 +391,11 @@ impl Driver for ScrDriver {
                     // Failed rank f's partner is partner(f); spare adopts f.
                     let f = self.spare_of(rank);
                     self.stage[rank] = Stage::Finish;
-                    return SimOp::Recv {
+                    out.push(SimOp::Recv {
                         from: p.partner(f),
                         tag: TAG_SPARE,
-                    };
+                    });
+                    return;
                 }
                 Stage::SpareSend => {
                     // This rank is partner(f) for failed rank f = rank - ppn:
@@ -391,15 +403,17 @@ impl Driver for ScrDriver {
                     let f = rank - p.ppn;
                     let spare = p.compute_ranks() + f;
                     self.stage[rank] = Stage::Finish;
-                    return SimOp::Send {
+                    out.push(SimOp::Send {
                         to: spare,
                         tag: TAG_SPARE,
                         bytes: p.ckpt_bytes(),
-                    };
+                    });
+                    return;
                 }
                 Stage::Finish => {
                     self.stage[rank] = Stage::Finished;
-                    return SimOp::Done;
+                    out.push(SimOp::Done);
+                    return;
                 }
                 Stage::Finished => unreachable!(),
             }

@@ -2,15 +2,36 @@
 //!
 //! Every rank is a logical process executing a sequence of blocking
 //! operations supplied by a [`Driver`]. The engine pops the rank with the
-//! earliest local time, asks the driver for that rank's next operation,
-//! prices it against the shared device models ([`Cluster`]), and
-//! reschedules the rank at the completion time. Barriers and matched
-//! send/recv park ranks until their counterpart arrives.
+//! earliest local time, asks the driver for that rank's next *step* — one
+//! or more operations priced back-to-back — prices it against the shared
+//! device models ([`Cluster`]), and reschedules the rank at the
+//! completion time. Barriers and matched send/recv park ranks until
+//! their counterpart arrives.
 //!
 //! Because the driver is invoked in global (virtual) time order, it can
 //! safely mutate shared *functional* state (the real BaseFS interval
 //! trees and buffers) at issue time: effects apply in exactly the order a
 //! FIFO server would process them.
+//!
+//! ## Hot-loop architecture (DESIGN.md §Perf)
+//!
+//! The event loop is allocation-free in steady state:
+//!
+//! - **Indexed mailboxes.** Message matching uses flat, rank-indexed
+//!   slots sized once from the cluster instead of a
+//!   `HashMap<(from, to, tag), VecDeque>`: undelivered messages for
+//!   receiver `r` live in `mail[r]` (a short vec scanned in arrival
+//!   order), and a rank blocked in `Recv` occupies `recv_parked[r]` —
+//!   a rank can wait on at most one receive, so an `Option` per rank is
+//!   exact. No hashing, no per-message map entries.
+//! - **Batched rank-steps.** [`Driver::next_ops`] hands the engine a
+//!   whole rank-step (every cost of one functional operation) at once;
+//!   the ops are priced sequentially and the heap sees ONE entry per
+//!   rank-step instead of one per op. Blocking ops (`Barrier`, `Recv`,
+//!   `Done`) terminate a batch.
+//! - **Scratch reuse.** The batch vec and the barrier arrival list are
+//!   reused across iterations; barrier release tracks the running max
+//!   arrival instead of re-scanning arrivals.
 
 use super::devices::{
     NetParams, NicDevice, ServerDevice, ServerParams, SsdDevice, SsdParams, UpfsDevice,
@@ -18,7 +39,7 @@ use super::devices::{
 };
 use super::time::Ns;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::BinaryHeap;
 
 /// Wire size of a synchronization RPC request/response — interval lists
 /// are tiny compared to data transfers.
@@ -108,16 +129,24 @@ pub enum SimOp {
     Done,
 }
 
-/// Supplies each rank's next operation. `now` is the completion time of
-/// the rank's previous operation (or barrier-release/message-arrival
-/// time), so drivers can timestamp phases.
+/// Supplies each rank's operations. `now` is the completion time of
+/// the rank's previous step (or barrier-release/message-arrival time),
+/// so drivers can timestamp phases.
 pub trait Driver {
-    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp;
+    /// Push one *rank-step* — every cost of the rank's next functional
+    /// operation — into `out`. The engine prices the ops back-to-back
+    /// (each starting at the previous one's completion) and schedules a
+    /// single heap event at the completion of the last. The batch must
+    /// be non-empty, and a blocking op (`Barrier`, `Recv`, `Done`) must
+    /// be the last op pushed (`Send` may appear mid-batch: the sender
+    /// resumes once the payload is on the wire).
+    fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>);
 }
 
+/// Closures supply one op per step (the pre-batching behavior).
 impl<F: FnMut(usize, Ns) -> SimOp> Driver for F {
-    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
-        self(rank, now)
+    fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
+        out.push(self(rank, now));
     }
 }
 
@@ -162,7 +191,7 @@ impl std::error::Error for SimError {}
 enum RankState {
     Running,
     AtBarrier,
-    InRecv { from: usize, tag: u64 },
+    InRecv,
     Finished,
 }
 
@@ -198,10 +227,31 @@ impl Engine {
         self.node_of[rank]
     }
 
+    /// Release a completed barrier: every arrived rank resumes at the
+    /// max arrival time plus a log2(n)-scaled collective cost.
+    fn release_barrier(
+        arrived: &mut Vec<usize>,
+        max_arrival: &mut Ns,
+        state: &mut [RankState],
+        heap: &mut BinaryHeap<Reverse<(Ns, u64, usize)>>,
+        seq: &mut u64,
+        live: usize,
+        latency: Ns,
+    ) {
+        let fan = (live.max(2) as f64).log2().ceil() as u64;
+        let release = *max_arrival + Ns(latency.0 * fan);
+        for r in arrived.drain(..) {
+            state[r] = RankState::Running;
+            heap.push(Reverse((release, *seq, r)));
+            *seq += 1;
+        }
+        *max_arrival = Ns::ZERO;
+    }
+
     /// Run `driver` to completion on all ranks; returns timing stats.
     pub fn run(&mut self, driver: &mut dyn Driver) -> Result<RunStats, SimError> {
         let n = self.node_of.len();
-        let mut heap: BinaryHeap<Reverse<(Ns, u64, usize)>> = BinaryHeap::new();
+        let mut heap: BinaryHeap<Reverse<(Ns, u64, usize)>> = BinaryHeap::with_capacity(n + 1);
         let mut seq: u64 = 0;
         for rank in 0..n {
             heap.push(Reverse((Ns::ZERO, seq, rank)));
@@ -212,164 +262,156 @@ impl Engine {
         let mut live = n;
         let mut ops: u64 = 0;
 
-        // Barrier bookkeeping.
-        let mut barrier_arrivals: Vec<(usize, Ns)> = Vec::new();
-        // Mailboxes: (from, to, tag) -> queue of arrival-ready times.
-        let mut mail: HashMap<(usize, usize, u64), VecDeque<Ns>> = HashMap::new();
-        // Parked receivers: (from, to, tag) -> queue of (rank, parked_at).
-        let mut recv_wait: HashMap<(usize, usize, u64), VecDeque<(usize, Ns)>> = HashMap::new();
+        // Barrier bookkeeping: arrived ranks + running max arrival time.
+        let mut barrier_ranks: Vec<usize> = Vec::with_capacity(n);
+        let mut barrier_max = Ns::ZERO;
+        // Indexed mailboxes (module docs): undelivered (from, tag,
+        // arrival) triples per receiver, scanned in arrival order, and
+        // the at-most-one (from, tag, parked_at) wait slot per rank.
+        let mut mail: Vec<Vec<(usize, u64, Ns)>> = vec![Vec::new(); n];
+        let mut recv_parked: Vec<Option<(usize, u64, Ns)>> = vec![None; n];
+        // Reused scratch for each rank-step's op batch.
+        let mut batch: Vec<SimOp> = Vec::with_capacity(8);
 
         while let Some(Reverse((now, _, rank))) = heap.pop() {
             debug_assert_eq!(state[rank], RankState::Running);
-            let op = driver.next_op(rank, now);
-            ops += 1;
+            batch.clear();
+            driver.next_ops(rank, now, &mut batch);
+            // Hard assert: an empty batch would otherwise reschedule the
+            // rank at the same instant forever.
+            assert!(!batch.is_empty(), "empty op batch for rank {rank}");
+            ops += batch.len() as u64;
             let node = self.node_of[rank];
-            match op {
-                SimOp::Compute(d) => {
-                    heap.push(Reverse((now + d, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::SsdWrite { bytes } => {
-                    let t = self.cluster.ssds[node].write(now, bytes);
-                    heap.push(Reverse((t, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::SsdRead { bytes } => {
-                    let t = self.cluster.ssds[node].read(now, bytes);
-                    heap.push(Reverse((t, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::MemRead { bytes } => {
-                    let t = now + SsdDevice::memread_time(bytes);
-                    heap.push(Reverse((t, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::Rpc { intervals, shard } => {
-                    // request: client tx + latency; server; response: latency.
-                    let sent = self.cluster.nics[node].send(now, RPC_BYTES);
-                    let replied = self.cluster.server.serve_rpc(sent, shard, intervals);
-                    let t = replied + self.cluster.net.latency;
-                    heap.push(Reverse((t, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::RemoteFetch {
-                    owner_node,
-                    bytes,
-                    from_ssd,
-                } => {
-                    let t = if owner_node == node {
-                        // Local: straight from the owner buffer/SSD.
-                        if from_ssd {
-                            self.cluster.ssds[node].read(now, bytes)
+            let mut t = now;
+            // Set false by ops that park or finish the rank.
+            let mut reschedule = true;
+            let last = batch.len() - 1;
+            for (k, &op) in batch.iter().enumerate() {
+                match op {
+                    SimOp::Compute(d) => t += d,
+                    SimOp::SsdWrite { bytes } => t = self.cluster.ssds[node].write(t, bytes),
+                    SimOp::SsdRead { bytes } => t = self.cluster.ssds[node].read(t, bytes),
+                    SimOp::MemRead { bytes } => t += SsdDevice::memread_time(bytes),
+                    SimOp::Rpc { intervals, shard } => {
+                        // request: client tx + latency; server; response:
+                        // latency.
+                        let sent = self.cluster.nics[node].send(t, RPC_BYTES);
+                        let replied = self.cluster.server.serve_rpc(sent, shard, intervals);
+                        t = replied + self.cluster.net.latency;
+                    }
+                    SimOp::RemoteFetch {
+                        owner_node,
+                        bytes,
+                        from_ssd,
+                    } => {
+                        t = if owner_node == node {
+                            // Local: straight from the owner buffer/SSD.
+                            if from_ssd {
+                                self.cluster.ssds[node].read(t, bytes)
+                            } else {
+                                t + SsdDevice::memread_time(bytes)
+                            }
                         } else {
-                            now + SsdDevice::memread_time(bytes)
-                        }
-                    } else {
-                        // RDMA read: request latency, owner-side data
-                        // production, wire transfer, receive-side absorb.
-                        let req_at = now
-                            + self.cluster.net.latency
-                            + self.cluster.nics[owner_node].rdma_overhead();
-                        let data_ready = if from_ssd {
-                            self.cluster.ssds[owner_node].read(req_at, bytes)
-                        } else {
-                            req_at + SsdDevice::memread_time(bytes)
+                            // RDMA read: request latency, owner-side data
+                            // production, wire transfer, receive absorb.
+                            let req_at = t
+                                + self.cluster.net.latency
+                                + self.cluster.nics[owner_node].rdma_overhead();
+                            let data_ready = if from_ssd {
+                                self.cluster.ssds[owner_node].read(req_at, bytes)
+                            } else {
+                                req_at + SsdDevice::memread_time(bytes)
+                            };
+                            let on_wire = self.cluster.nics[owner_node].send(data_ready, bytes);
+                            self.cluster.nics[node].recv(on_wire, bytes)
                         };
-                        let on_wire = self.cluster.nics[owner_node].send(data_ready, bytes);
-                        self.cluster.nics[node].recv(on_wire, bytes)
-                    };
-                    heap.push(Reverse((t, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::UpfsWrite { bytes } => {
-                    let sent = self.cluster.nics[node].send(now, bytes);
-                    let t = self.cluster.upfs.write(sent, bytes);
-                    heap.push(Reverse((t, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::UpfsRead { bytes } => {
-                    let replied = self.cluster.upfs.read(now + self.cluster.net.latency, bytes);
-                    let t = self.cluster.nics[node].recv(replied, bytes);
-                    heap.push(Reverse((t, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::Barrier => {
-                    state[rank] = RankState::AtBarrier;
-                    barrier_arrivals.push((rank, now));
-                    if barrier_arrivals.len() == live {
-                        // Release everyone at the max arrival time (+ a
-                        // small collective cost scaling log2(n)).
-                        let max_t = barrier_arrivals
-                            .iter()
-                            .map(|&(_, t)| t)
-                            .max()
-                            .unwrap_or(now);
-                        let fan = (live.max(2) as f64).log2().ceil() as u64;
-                        let release =
-                            max_t + Ns(self.cluster.net.latency.0 * fan);
-                        for (r, _) in barrier_arrivals.drain(..) {
-                            state[r] = RankState::Running;
-                            heap.push(Reverse((release, seq, r)));
-                            seq += 1;
+                    }
+                    SimOp::UpfsWrite { bytes } => {
+                        let sent = self.cluster.nics[node].send(t, bytes);
+                        t = self.cluster.upfs.write(sent, bytes);
+                    }
+                    SimOp::UpfsRead { bytes } => {
+                        let replied = self.cluster.upfs.read(t + self.cluster.net.latency, bytes);
+                        t = self.cluster.nics[node].recv(replied, bytes);
+                    }
+                    SimOp::Barrier => {
+                        assert!(k == last, "Barrier must end a rank-step batch");
+                        state[rank] = RankState::AtBarrier;
+                        barrier_ranks.push(rank);
+                        barrier_max = barrier_max.max(t);
+                        reschedule = false;
+                        if barrier_ranks.len() == live {
+                            Self::release_barrier(
+                                &mut barrier_ranks,
+                                &mut barrier_max,
+                                &mut state,
+                                &mut heap,
+                                &mut seq,
+                                live,
+                                self.cluster.net.latency,
+                            );
                         }
                     }
-                }
-                SimOp::Send { to, tag, bytes } => {
-                    let on_wire = self.cluster.nics[node].send(now, bytes);
-                    let to_node = self.node_of[to];
-                    let arrived = if to_node == node {
-                        on_wire
-                    } else {
-                        self.cluster.nics[to_node].recv(on_wire, bytes)
-                    };
-                    let key = (rank, to, tag);
-                    // Wake a parked receiver or store in the mailbox.
-                    if let Some(queue) = recv_wait.get_mut(&key) {
-                        if let Some((r, parked_at)) = queue.pop_front() {
-                            state[r] = RankState::Running;
-                            heap.push(Reverse((arrived.max(parked_at), seq, r)));
-                            seq += 1;
+                    SimOp::Send { to, tag, bytes } => {
+                        let on_wire = self.cluster.nics[node].send(t, bytes);
+                        let to_node = self.node_of[to];
+                        let arrived = if to_node == node {
+                            on_wire
                         } else {
-                            mail.entry(key).or_default().push_back(arrived);
+                            self.cluster.nics[to_node].recv(on_wire, bytes)
+                        };
+                        // Wake the parked receiver or store in the mailbox.
+                        match recv_parked[to] {
+                            Some((from, wtag, parked_at)) if from == rank && wtag == tag => {
+                                recv_parked[to] = None;
+                                state[to] = RankState::Running;
+                                heap.push(Reverse((arrived.max(parked_at), seq, to)));
+                                seq += 1;
+                            }
+                            _ => mail[to].push((rank, tag, arrived)),
                         }
-                    } else {
-                        mail.entry(key).or_default().push_back(arrived);
+                        // Sender resumes once the payload is on the wire.
+                        t = on_wire;
                     }
-                    // Sender resumes once the payload is on the wire.
-                    heap.push(Reverse((on_wire, seq, rank)));
-                    seq += 1;
-                }
-                SimOp::Recv { from, tag } => {
-                    let key = (from, rank, tag);
-                    if let Some(arrived) = mail.get_mut(&key).and_then(|q| q.pop_front()) {
-                        heap.push(Reverse((arrived.max(now), seq, rank)));
-                        seq += 1;
-                    } else {
-                        state[rank] = RankState::InRecv { from, tag };
-                        recv_wait.entry(key).or_default().push_back((rank, now));
-                    }
-                }
-                SimOp::Done => {
-                    state[rank] = RankState::Finished;
-                    finish[rank] = now;
-                    live -= 1;
-                    // A barrier may now be releasable.
-                    if live > 0 && !barrier_arrivals.is_empty() && barrier_arrivals.len() == live
-                    {
-                        let max_t = barrier_arrivals
+                    SimOp::Recv { from, tag } => {
+                        assert!(k == last, "Recv must end a rank-step batch");
+                        // First matching message in arrival order.
+                        let pos = mail[rank]
                             .iter()
-                            .map(|&(_, t)| t)
-                            .max()
-                            .unwrap_or(now);
-                        let fan = (live.max(2) as f64).log2().ceil() as u64;
-                        let release = max_t + Ns(self.cluster.net.latency.0 * fan);
-                        for (r, _) in barrier_arrivals.drain(..) {
-                            state[r] = RankState::Running;
-                            heap.push(Reverse((release, seq, r)));
-                            seq += 1;
+                            .position(|&(f, g, _)| f == from && g == tag);
+                        if let Some(pos) = pos {
+                            let (_, _, arrived) = mail[rank].remove(pos);
+                            t = arrived.max(t);
+                        } else {
+                            state[rank] = RankState::InRecv;
+                            recv_parked[rank] = Some((from, tag, t));
+                            reschedule = false;
+                        }
+                    }
+                    SimOp::Done => {
+                        assert!(k == last, "Done must end a rank-step batch");
+                        state[rank] = RankState::Finished;
+                        finish[rank] = t;
+                        live -= 1;
+                        reschedule = false;
+                        // A barrier may now be releasable.
+                        if live > 0 && !barrier_ranks.is_empty() && barrier_ranks.len() == live {
+                            Self::release_barrier(
+                                &mut barrier_ranks,
+                                &mut barrier_max,
+                                &mut state,
+                                &mut heap,
+                                &mut seq,
+                                live,
+                                self.cluster.net.latency,
+                            );
                         }
                     }
                 }
+            }
+            if reschedule {
+                heap.push(Reverse((t, seq, rank)));
+                seq += 1;
             }
         }
 
@@ -380,7 +422,7 @@ impl Engine {
             .count();
         let recv = state
             .iter()
-            .filter(|s| matches!(s, RankState::InRecv { .. }))
+            .filter(|s| matches!(s, RankState::InRecv))
             .count();
         if barrier + recv > 0 {
             return Err(SimError::Deadlock {
@@ -402,27 +444,54 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::VecDeque;
 
-    /// Drive ranks from per-rank scripts.
+    /// Drive ranks from per-rank scripts, one op per step (exercises the
+    /// engine's per-op scheduling exactly like the pre-batching loop).
     struct ScriptDriver {
         scripts: Vec<VecDeque<SimOp>>,
-        /// (rank, completion-time-before-op) log for assertions.
-        log: Vec<(usize, Ns)>,
     }
 
     impl ScriptDriver {
         fn new(scripts: Vec<Vec<SimOp>>) -> Self {
             Self {
                 scripts: scripts.into_iter().map(VecDeque::from).collect(),
-                log: Vec::new(),
             }
         }
     }
 
     impl Driver for ScriptDriver {
-        fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
-            self.log.push((rank, now));
-            self.scripts[rank].pop_front().unwrap_or(SimOp::Done)
+        fn next_ops(&mut self, rank: usize, _now: Ns, out: &mut Vec<SimOp>) {
+            out.push(self.scripts[rank].pop_front().unwrap_or(SimOp::Done));
+        }
+    }
+
+    /// Same scripts, but each step hands the engine a whole batch: all
+    /// ops up to and including the next blocking op.
+    struct BatchScriptDriver {
+        scripts: Vec<VecDeque<SimOp>>,
+    }
+
+    impl Driver for BatchScriptDriver {
+        fn next_ops(&mut self, rank: usize, _now: Ns, out: &mut Vec<SimOp>) {
+            loop {
+                let op = self.scripts[rank].pop_front().unwrap_or(SimOp::Done);
+                let blocking =
+                    matches!(op, SimOp::Barrier | SimOp::Recv { .. } | SimOp::Done);
+                out.push(op);
+                if blocking {
+                    return;
+                }
+                if self.scripts[rank]
+                    .front()
+                    .map(|next| matches!(next, SimOp::Barrier | SimOp::Recv { .. }))
+                    .unwrap_or(false)
+                {
+                    // Leave the blocking op for the next step so phase
+                    // timestamps land on batch boundaries.
+                    return;
+                }
+            }
         }
     }
 
@@ -519,6 +588,47 @@ mod tests {
             Err(SimError::Deadlock { recv: 1, .. }) => {}
             other => panic!("expected recv deadlock, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn mailbox_matches_on_tag_and_sender() {
+        // Two sends with distinct tags arrive before the receiver asks
+        // for the SECOND tag: the mailbox must match by (from, tag),
+        // not deliver in plain arrival order.
+        let mut e = engine(2, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![
+                SimOp::Send { to: 1, tag: 1, bytes: 64 },
+                SimOp::Send { to: 1, tag: 2, bytes: 64 },
+            ],
+            vec![
+                SimOp::Compute(Ns(1_000_000)),
+                SimOp::Recv { from: 0, tag: 2 },
+                SimOp::Recv { from: 0, tag: 1 },
+            ],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        assert!(stats.finish[1] >= Ns(1_000_000));
+    }
+
+    #[test]
+    fn same_tag_messages_deliver_in_arrival_order() {
+        // Two same-tag sends queue; two recvs drain them FIFO. The
+        // second recv cannot complete before the second send's arrival.
+        let mut e = engine(2, 1);
+        let mut d = ScriptDriver::new(vec![
+            vec![
+                SimOp::Send { to: 1, tag: 5, bytes: 8 << 20 },
+                SimOp::Send { to: 1, tag: 5, bytes: 8 << 20 },
+            ],
+            vec![
+                SimOp::Recv { from: 0, tag: 5 },
+                SimOp::Recv { from: 0, tag: 5 },
+            ],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        // 16 MiB over a 4 GB/s link ≈ 4 ms.
+        assert!(stats.finish[1].as_secs_f64() > 3.9e-3);
     }
 
     #[test]
@@ -631,5 +741,54 @@ mod tests {
             e.run(&mut d).unwrap().makespan
         };
         assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn single_rank_batch_prices_like_per_op() {
+        // With one rank there is no cross-rank interleaving, so a whole
+        // batch must price bit-for-bit like per-op scheduling, and the
+        // op count must reflect ops, not heap entries.
+        let script = vec![
+            SimOp::Compute(Ns(100)),
+            SimOp::SsdWrite { bytes: 1 << 20 },
+            SimOp::Rpc { intervals: 3, shard: 0 },
+            SimOp::SsdRead { bytes: 8 << 10 },
+            SimOp::UpfsWrite { bytes: 1 << 20 },
+        ];
+        let mut per_op = ScriptDriver::new(vec![script.clone()]);
+        let a = engine(1, 1).run(&mut per_op).unwrap();
+        let mut batched = BatchScriptDriver {
+            scripts: vec![VecDeque::from(script)],
+        };
+        let b = engine(1, 1).run(&mut batched).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.ops_executed, b.ops_executed);
+        assert_eq!(a.ops_executed, 6); // 5 scripted + Done
+    }
+
+    #[test]
+    fn disjoint_node_batches_match_per_op_makespan() {
+        // One rank per node, each touching only its own node's devices:
+        // batching cannot change any FIFO order, so makespans match.
+        let scripts: Vec<Vec<SimOp>> = (0..4)
+            .map(|r| {
+                vec![
+                    SimOp::Compute(Ns(10 * (r as u64 + 1))),
+                    SimOp::SsdWrite { bytes: 4 << 20 },
+                    SimOp::SsdRead { bytes: 64 << 10 },
+                    SimOp::Barrier,
+                    SimOp::SsdRead { bytes: 8 << 10 },
+                ]
+            })
+            .collect();
+        let mut per_op = ScriptDriver::new(scripts.clone());
+        let a = engine(4, 1).run(&mut per_op).unwrap();
+        let mut batched = BatchScriptDriver {
+            scripts: scripts.into_iter().map(VecDeque::from).collect(),
+        };
+        let b = engine(4, 1).run(&mut batched).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.ops_executed, b.ops_executed);
     }
 }

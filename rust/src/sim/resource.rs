@@ -1,10 +1,18 @@
-//! Queueing resources for the DES. The engine issues requests in
-//! non-decreasing *pop* order; constant per-path latency offsets (e.g.
-//! network latency before a remote SSD read) can locally reorder issue
-//! times by a few µs. `start = max(now, available_at)` stays a faithful
-//! FIFO-by-arrival approximation under that jitter: `available_at` is
-//! monotone, so a late-arriving earlier request merely queues behind the
-//! at-most-one request that overtook it.
+//! Queueing resources for the DES. Resources serve FIFO **by issue
+//! order**: `start = max(now, available_at)` with `available_at`
+//! monotone, so whichever request is *priced* first occupies the
+//! resource first. The engine pops rank-steps in non-decreasing global
+//! time and prices each step's ops back-to-back
+//! ([`crate::sim::Driver::next_ops`]), so issue order can run ahead of
+//! virtual arrival order by up to one rank-step (plus the constant
+//! per-path latency offsets, e.g. network latency before a remote SSD
+//! read). A later-priced request with an earlier virtual arrival queues
+//! behind the steps that overtook it — a deliberate approximation:
+//! within a step the reordering bound is the step's own service time,
+//! device totals (Σ service) are unaffected, and the engine's
+//! batch-equivalence tests pin the cases where no cross-rank
+//! contention exists (single-rank and disjoint-node scripts are
+//! bit-for-bit the per-op pricing).
 
 use super::time::Ns;
 

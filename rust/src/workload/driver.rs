@@ -17,7 +17,6 @@ use crate::basefs::{DesFabric, FabricCounters, FileId};
 use crate::fs::{CommitFs, FsKind, MpiioFs, PosixFs, SessionFs, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
-use std::collections::VecDeque;
 
 /// Build one consistency-layer FS per rank over the fabric's BB stores.
 pub fn build_fs(kind: FsKind, fabric: &DesFabric) -> Vec<Box<dyn WorkloadFs>> {
@@ -95,9 +94,11 @@ pub struct SyntheticDriver {
     stage: Vec<Stage>,
     write_plan: Vec<Vec<u64>>,
     read_plan: Vec<Vec<u64>>,
-    pending: Vec<VecDeque<SimOp>>,
     /// Reusable payload buffer (phantom fabric ignores content).
     payload: Vec<u8>,
+    /// Reusable read destination — with `read_at_into` the read hot
+    /// loop is allocation-free per access.
+    read_buf: Vec<u8>,
     // metrics
     write_done_max: Ns,
     read_start_min: Ns,
@@ -188,8 +189,8 @@ impl SyntheticDriver {
                 .collect(),
             write_plan,
             read_plan,
-            pending: (0..nranks).map(|_| VecDeque::new()).collect(),
             payload,
+            read_buf: Vec::new(),
             params,
             write_done_max: Ns::ZERO,
             read_start_min: Ns(u64::MAX),
@@ -221,14 +222,6 @@ impl SyntheticDriver {
             sim_ops: stats.ops_executed,
         }
     }
-
-    /// Drain fabric costs accrued by the last functional op into the
-    /// rank's pending queue.
-    fn drain(&mut self, rank: usize) {
-        while let Some(op) = self.fabric.pop_cost(rank as u32) {
-            self.pending[rank].push_back(op);
-        }
-    }
 }
 
 fn kind_name(fs: &[Box<dyn WorkloadFs>]) -> &'static str {
@@ -236,11 +229,10 @@ fn kind_name(fs: &[Box<dyn WorkloadFs>]) -> &'static str {
 }
 
 impl Driver for SyntheticDriver {
-    fn next_op(&mut self, rank: usize, now: Ns) -> SimOp {
+    /// One functional step per call; its fabric costs are drained
+    /// straight into `out` as one batch (one heap event per step).
+    fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
         loop {
-            if let Some(op) = self.pending[rank].pop_front() {
-                return op;
-            }
             match self.stage[rank] {
                 Stage::Write(i) => {
                     if i < self.write_plan[rank].len() {
@@ -249,7 +241,10 @@ impl Driver for SyntheticDriver {
                             .write_at(&mut self.fabric, self.files[fidx], off, &self.payload)
                             .expect("write failed");
                         self.stage[rank] = Stage::Write(i + 1);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     } else {
                         self.stage[rank] = Stage::EndWrite;
                     }
@@ -263,11 +258,15 @@ impl Driver for SyntheticDriver {
                         .end_write_phase_all(&mut self.fabric, &files)
                         .expect("end_write_phase failed");
                     self.stage[rank] = Stage::Barrier;
-                    self.drain(rank);
+                    self.fabric.drain_costs_into(rank as u32, out);
+                    if !out.is_empty() {
+                        return;
+                    }
                 }
                 Stage::Barrier => {
                     self.stage[rank] = Stage::BeginRead;
-                    return SimOp::Barrier;
+                    out.push(SimOp::Barrier);
+                    return;
                 }
                 Stage::BeginRead => {
                     // Barrier released: the write phase is globally over.
@@ -281,22 +280,30 @@ impl Driver for SyntheticDriver {
                             .expect("begin_read_phase failed");
                         self.read_start_min = self.read_start_min.min(now);
                         self.stage[rank] = Stage::Read(0);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     }
                 }
                 Stage::Read(i) => {
                     if i < self.read_plan[rank].len() {
                         let (fidx, off) = self.params.locate(self.read_plan[rank][i]);
-                        let got = self.fs[rank]
-                            .read_at(
+                        self.read_buf.clear();
+                        self.fs[rank]
+                            .read_at_into(
                                 &mut self.fabric,
                                 self.files[fidx],
                                 Range::at(off, self.params.s),
+                                &mut self.read_buf,
                             )
                             .expect("read failed");
-                        debug_assert_eq!(got.len() as u64, self.params.s);
+                        debug_assert_eq!(self.read_buf.len() as u64, self.params.s);
                         self.stage[rank] = Stage::Read(i + 1);
-                        self.drain(rank);
+                        self.fabric.drain_costs_into(rank as u32, out);
+                        if !out.is_empty() {
+                            return;
+                        }
                     } else {
                         self.stage[rank] = Stage::Finish;
                     }
@@ -306,7 +313,8 @@ impl Driver for SyntheticDriver {
                         self.read_end_max = self.read_end_max.max(now);
                     }
                     self.stage[rank] = Stage::Finished;
-                    return SimOp::Done;
+                    out.push(SimOp::Done);
+                    return;
                 }
                 Stage::Finished => unreachable!("rank {rank} scheduled after Done"),
             }

@@ -1,0 +1,116 @@
+//! Runner-parallelism guarantees: `pscnf bench --jobs N` must emit a
+//! BENCH_matrix.json byte-identical to the serial run for the same
+//! scenario filter, per-cell seeds must be independent of execution
+//! order, and the wall-time sidecar must track the input order.
+//!
+//! The `perf_hotpath` family is the deliberate exception: its cells
+//! time the simulator itself with a wall clock, so they are excluded
+//! from the byte-identity property (and from the smoke sets used
+//! below) by construction.
+
+use pscnf::bench::{registry, run_matrix_timed, run_scenario, Kind, Scenario};
+use pscnf::fs::FsKind;
+
+/// The smoke family minus the wall-clock cells.
+fn smoke_virtual() -> Vec<Scenario> {
+    let v: Vec<Scenario> = registry()
+        .into_iter()
+        .filter(|s| s.smoke && !matches!(s.kind, Kind::HotPath(_)))
+        .collect();
+    assert!(v.len() >= 8, "smoke set unexpectedly small: {}", v.len());
+    v
+}
+
+#[test]
+fn parallel_matrix_is_byte_identical_to_serial() {
+    let scenarios = smoke_virtual();
+    let (serial, _) = run_matrix_timed(&scenarios, 1);
+    let (parallel, _) = run_matrix_timed(&scenarios, 8);
+    assert_eq!(
+        serial.to_json().pretty(),
+        parallel.to_json().pretty(),
+        "--jobs 8 must serialize byte-identically to --jobs 1"
+    );
+}
+
+#[test]
+fn cell_records_are_independent_of_execution_order() {
+    // A small mixed subset (every workload driver represented): running
+    // the cells reversed and in parallel must reproduce each record
+    // bit-for-bit — per-cell seeds cannot depend on position or on what
+    // ran before.
+    let mut subset: Vec<Scenario> = smoke_virtual()
+        .into_iter()
+        .filter(|s| {
+            s.fs == FsKind::Session
+                || (s.fs == FsKind::Commit && s.id.contains("CC-R/8KiB"))
+        })
+        .collect();
+    assert!(subset.len() >= 4);
+    let (forward, _) = run_matrix_timed(&subset, 1);
+    subset.reverse();
+    let (reversed, _) = run_matrix_timed(&subset, 3);
+    assert_eq!(forward.records.len(), reversed.records.len());
+    for rec in &forward.records {
+        let other = reversed
+            .find(&rec.id)
+            .unwrap_or_else(|| panic!("{} missing from reversed run", rec.id));
+        assert_eq!(rec, other, "record {} depends on execution order", rec.id);
+    }
+    // And a lone rerun of a single cell matches its in-matrix record.
+    let one = subset.last().unwrap();
+    let solo = run_scenario(one);
+    assert_eq!(reversed.find(&one.id), Some(&solo));
+}
+
+#[test]
+fn wall_sidecar_tracks_input_order() {
+    let scenarios: Vec<Scenario> = smoke_virtual()
+        .into_iter()
+        .filter(|s| s.fs == FsKind::Posix)
+        .collect();
+    let (_, walls) = run_matrix_timed(&scenarios, 2);
+    assert_eq!(walls.len(), scenarios.len());
+    for (sc, (id, _)) in scenarios.iter().zip(&walls) {
+        assert_eq!(&sc.id, id, "wall sidecar out of input order");
+    }
+    // Wall times are real measurements (nonzero), but never metrics.
+    assert!(walls.iter().all(|&(_, ns)| ns > 0));
+}
+
+#[test]
+fn hotpath_cells_report_simulator_throughput() {
+    let cells: Vec<Scenario> = registry()
+        .into_iter()
+        .filter(|s| s.family == "perf_hotpath")
+        .collect();
+    assert_eq!(cells.len(), 5, "expected the five hot-path cells");
+    // One ns/op cell and the gated fig4cell events/s cell actually run.
+    let mut attach = cells
+        .iter()
+        .find(|s| s.id.contains("gtree.attach"))
+        .unwrap()
+        .clone();
+    attach.repeats = 1;
+    let rec = run_scenario(&attach);
+    let ns = rec.metric_value("ns_per_op").unwrap();
+    assert!(ns.is_finite() && ns > 0.0, "gtree.attach ns/op {ns}");
+    assert!(!rec.metrics["ns_per_op"].higher_is_better);
+
+    let mut fig4 = cells
+        .iter()
+        .find(|s| s.id.contains("fig4cell"))
+        .unwrap()
+        .clone();
+    assert!(fig4.smoke, "fig4cell must ride the gated smoke subset");
+    // Shrink the cell so the test stays fast; the metric shape is what
+    // is under test here.
+    fig4.nodes = 2;
+    fig4.ppn = 2;
+    fig4.m = 2;
+    fig4.repeats = 1;
+    let rec = run_scenario(&fig4);
+    let eps = rec.metric_value("events_per_sec").unwrap();
+    assert!(eps.is_finite() && eps > 0.0, "fig4cell events/s {eps}");
+    assert!(rec.metrics["events_per_sec"].higher_is_better);
+}
