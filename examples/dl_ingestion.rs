@@ -20,7 +20,7 @@
 
 use pscnf::basefs::Fabric;
 use pscnf::coordinator::LiveCluster;
-use pscnf::fs::{CommitFs, FsKind, SessionFs, WorkloadFs};
+use pscnf::fs::{FsKind, PolicyFs, WorkloadFs};
 use pscnf::interval::Range;
 use pscnf::runtime::{Runtime, TrainState};
 use pscnf::util::rng::Rng;
@@ -80,10 +80,8 @@ fn run_ingestion(kind: FsKind) -> (Vec<EpochStats>, Vec<(usize, Vec<u8>)>) {
     for (rank, mut fabric) in fabrics.into_iter().enumerate() {
         let sample_tx = sample_tx.clone();
         handles.push(std::thread::spawn(move || -> Vec<EpochStats> {
-            let mut fs: Box<dyn WorkloadFs> = match kind {
-                FsKind::Session => Box::new(SessionFs::new(rank as u32, fabric.bb_of(rank as u32))),
-                _ => Box::new(CommitFs::new(rank as u32, fabric.bb_of(rank as u32))),
-            };
+            let mut fs: Box<dyn WorkloadFs> =
+                Box::new(PolicyFs::new(kind, rank as u32, fabric.bb_of(rank as u32)));
             let file = fs.open(&mut fabric, "/dl/dataset.bin");
 
             // ---- preload this rank's contiguous shard (real bytes) ----
@@ -179,7 +177,7 @@ fn main() -> pscnf::util::error::Result<()> {
 
     // ---- L3: ingestion under both consistency models ------------------
     let mut all_samples = None;
-    for kind in [FsKind::Commit, FsKind::Session] {
+    for kind in [FsKind::COMMIT, FsKind::SESSION] {
         let (stats, samples) = run_ingestion(kind);
         for s in &stats {
             println!(
@@ -191,7 +189,7 @@ fn main() -> pscnf::util::error::Result<()> {
                 s.secs
             );
         }
-        if kind == FsKind::Session {
+        if kind == FsKind::SESSION {
             all_samples = Some(samples);
         }
     }

@@ -6,15 +6,17 @@
 //! ```
 
 use pscnf::basefs::TestFabric;
-use pscnf::fs::{CommitFs, SessionFs, WorkloadFs};
+use pscnf::fs::{FsKind, PolicyFs, WorkloadFs};
 use pscnf::interval::Range;
 use pscnf::model::{litmus, ConsistencyModel};
 
 fn main() {
-    // ---- 1. CommitFS: writes are invisible until `commit` ------------
+    // ---- 1. Commit model: writes are invisible until published -------
+    // One generic layer interprets every model's SyncPolicy; the model
+    // is a VALUE (FsKind::COMMIT here), not a dedicated struct.
     let mut fabric = TestFabric::new(2);
-    let mut writer = CommitFs::new(0, fabric.bb_of(0));
-    let mut reader = CommitFs::new(1, fabric.bb_of(1));
+    let mut writer = PolicyFs::new(FsKind::COMMIT, 0, fabric.bb_of(0));
+    let mut reader = PolicyFs::new(FsKind::COMMIT, 1, fabric.bb_of(1));
 
     let f = writer.open(&mut fabric, "/demo/commit.dat");
     reader.open(&mut fabric, "/demo/commit.dat");
@@ -24,23 +26,23 @@ fn main() {
         .unwrap();
     let before = reader.read_at(&mut fabric, f, Range::new(0, 17)).unwrap();
     assert_eq!(before, vec![0u8; 17], "uncommitted writes are invisible");
-    println!("commitfs: before commit reader sees zeros ... ok");
+    println!("commit: before publish reader sees zeros ... ok");
 
-    writer.commit(&mut fabric, f).unwrap();
+    writer.publish(&mut fabric, f).unwrap(); // = commit
     let after = reader.read_at(&mut fabric, f, Range::new(0, 17)).unwrap();
     assert_eq!(after, b"hello consistency");
-    println!("commitfs: after  commit reader sees data  ... ok");
+    println!("commit: after  publish reader sees data  ... ok");
 
-    // ---- 2. SessionFS: close-to-open visibility, one RPC per session -
+    // ---- 2. Session model: close-to-open visibility, one RPC/session -
     let mut fabric = TestFabric::new(2);
-    let mut writer = SessionFs::new(0, fabric.bb_of(0));
-    let mut reader = SessionFs::new(1, fabric.bb_of(1));
+    let mut writer = PolicyFs::new(FsKind::SESSION, 0, fabric.bb_of(0));
+    let mut reader = PolicyFs::new(FsKind::SESSION, 1, fabric.bb_of(1));
     let f = writer.open(&mut fabric, "/demo/session.dat");
     reader.open(&mut fabric, "/demo/session.dat");
 
     writer.write_at(&mut fabric, f, 0, b"session bytes").unwrap();
-    writer.session_close(&mut fabric, f).unwrap();
-    reader.session_open(&mut fabric, f).unwrap();
+    writer.publish(&mut fabric, f).unwrap(); // = session_close
+    reader.acquire(&mut fabric, f).unwrap(); // = session_open
     let rpcs_at_open = fabric.inner.counters.rpcs;
     for off in (0..13).step_by(4) {
         let end = (off + 4).min(13);

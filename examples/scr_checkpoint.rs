@@ -31,7 +31,7 @@ fn main() {
 
     let rows = sweep_scr(
         &nodes,
-        &[FsKind::Commit, FsKind::Session],
+        &[FsKind::COMMIT, FsKind::SESSION],
         ppn,
         particles,
         3,
@@ -46,8 +46,8 @@ fn main() {
                 .find(|(f, nn, _, _)| *f == fs && *nn == n)
                 .expect("row")
         };
-        let (_, _, c_ck, c_rs) = find(FsKind::Commit);
-        let (_, _, s_ck, s_rs) = find(FsKind::Session);
+        let (_, _, c_ck, c_rs) = find(FsKind::COMMIT);
+        let (_, _, s_ck, s_rs) = find(FsKind::SESSION);
         ckpt.row(vec![
             n.to_string(),
             fmt_bandwidth(c_ck.mean()),

@@ -16,7 +16,7 @@ use crate::sim::SimOp;
 use std::collections::VecDeque;
 
 /// Cumulative traffic counters (per fabric; reporting).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FabricCounters {
     pub rpcs: u64,
     pub rpc_intervals: u64,

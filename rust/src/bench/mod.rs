@@ -130,8 +130,15 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         "models",
         "LIST",
         Some("all"),
-        "consistency models to keep: posix|commit|session|mpiio|both|all (comma list)",
+        "consistency models to keep: all|paper|both or a comma list of registered model names",
     )
+    .opt(
+        "config",
+        "PATH",
+        None,
+        "experiment file whose [model.<name>] blocks are registered before the matrix is built",
+    )
+    .opt("config-file", "PATH", None, "alias of --config (matches `pscnf run`)")
     .opt(
         "scales",
         "LIST",
@@ -172,6 +179,20 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         "max tolerated per-metric regression percent for --compare",
     );
     let args = spec.parse(argv)?;
+
+    // Register config-defined models FIRST: the registry() call below
+    // emits `model_ext` cells for every registered model, and --models
+    // must be able to name them. This is the no-Rust-change path: a
+    // model that exists only as a [model.<name>] block runs the same
+    // scenario matrix as the built-ins.
+    if let Some(path) = args.get("config").or_else(|| args.get("config-file")) {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let ini = crate::config::parse_ini(&text)?;
+        let registered = FsKind::register_from_ini(&ini)?;
+        for kind in &registered {
+            eprintln!("registered model `{}` from {path}", kind.name());
+        }
+    }
 
     if let Some(baseline_path) = args.get("compare") {
         let gate = args.f64("gate")?;

@@ -204,7 +204,7 @@ pub fn registry() -> Vec<Scenario> {
     // big cells are there for the scaling trend, not tight error bars).
     for config in [Config::CnW, Config::SnW] {
         for access in [8u64 << 20, 8 << 10] {
-            for fs in FsKind::ALL {
+            for fs in FsKind::PAPER {
                 for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128] {
                     let mut sc = synthetic("fig3", config, access, fs, nodes, 12);
                     if nodes >= 32 {
@@ -219,7 +219,7 @@ pub fn registry() -> Vec<Scenario> {
     // fig4 — CC-R/CS-R read bandwidth (large-scale rows as in fig3).
     for config in [Config::CcR, Config::CsR] {
         for access in [8u64 << 20, 8 << 10] {
-            for fs in FsKind::ALL {
+            for fs in FsKind::PAPER {
                 for nodes in [2usize, 4, 8, 16, 32, 64, 128] {
                     let mut sc = synthetic("fig4", config, access, fs, nodes, 12);
                     if nodes >= 32 {
@@ -232,7 +232,7 @@ pub fn registry() -> Vec<Scenario> {
     }
 
     // fig5 — SCR checkpoint/restart (nodes include the spare).
-    for fs in FsKind::ALL {
+    for fs in FsKind::PAPER {
         for nodes in [3usize, 4, 8, 16] {
             let sc = base(
                 "fig5",
@@ -250,7 +250,7 @@ pub fn registry() -> Vec<Scenario> {
     // fig6 — DL ingestion, strong + weak scaling, ppn=4 (one per GPU),
     // with n=32/64/128 rows beyond the paper's 16-node sweep.
     for (strong, tag, work) in [(true, "dl.strong", 4usize), (false, "dl.weak", 8)] {
-        for fs in FsKind::ALL {
+        for fs in FsKind::PAPER {
             for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128] {
                 let mut sc = base(
                     "fig6",
@@ -276,7 +276,7 @@ pub fn registry() -> Vec<Scenario> {
     // n=16…128 (up to 512 ranks, ~524k random sample reads per run).
     // Only feasible in CI-tolerable time with the allocation-free
     // engine; all cells phantom, of course.
-    for fs in FsKind::ALL {
+    for fs in FsKind::PAPER {
         for nodes in [16usize, 32, 64, 128] {
             let mut sc = base(
                 "scale_dl",
@@ -303,7 +303,7 @@ pub fn registry() -> Vec<Scenario> {
     {
         let mut sc = base(
             "scale_gate",
-            FsKind::Commit,
+            FsKind::COMMIT,
             64,
             12,
             Kind::Synthetic {
@@ -327,7 +327,7 @@ pub fn registry() -> Vec<Scenario> {
         (HotPathCase::EngineLoop, 16, 12, false),
         (HotPathCase::Fig4Cell, 16, 12, true),
     ] {
-        let mut sc = base("perf_hotpath", FsKind::Commit, nodes, ppn, Kind::HotPath(case));
+        let mut sc = base("perf_hotpath", FsKind::COMMIT, nodes, ppn, Kind::HotPath(case));
         sc.repeats = 3;
         sc.smoke = smoke;
         v.push(with_id(sc, case.name(), None, &format!("n{nodes}")));
@@ -339,7 +339,7 @@ pub fn registry() -> Vec<Scenario> {
         for (dispatch, dtag) in [(Dispatch::RoundRobin, "rr"), (Dispatch::LeastLoaded, "ll")] {
             let mut sc = base(
                 "ablate_server",
-                FsKind::Commit,
+                FsKind::COMMIT,
                 8,
                 12,
                 Kind::Synthetic {
@@ -364,7 +364,7 @@ pub fn registry() -> Vec<Scenario> {
     for shards in [1usize, 2, 4, 8, 16] {
         let mut sc = base(
             "ablate_sharding",
-            FsKind::Commit,
+            FsKind::COMMIT,
             8,
             12,
             Kind::Synthetic {
@@ -380,7 +380,7 @@ pub fn registry() -> Vec<Scenario> {
 
     // ablate_device — device-speed sensitivity across testbeds.
     for testbed in [Testbed::Hdd, Testbed::Catalyst, Testbed::Expanse, Testbed::Pmem] {
-        for fs in FsKind::ALL {
+        for fs in FsKind::PAPER {
             let mut sc = base(
                 "ablate_device",
                 fs,
@@ -409,7 +409,7 @@ pub fn registry() -> Vec<Scenario> {
         v.push(with_id(
             base(
                 "ablate_granularity",
-                FsKind::Commit,
+                FsKind::COMMIT,
                 nodes,
                 12,
                 Kind::Synthetic {
@@ -425,7 +425,7 @@ pub fn registry() -> Vec<Scenario> {
         v.push(with_id(
             base(
                 "ablate_granularity",
-                FsKind::Commit,
+                FsKind::COMMIT,
                 nodes,
                 12,
                 Kind::FineCommit { access: 8 << 10 },
@@ -441,7 +441,7 @@ pub fn registry() -> Vec<Scenario> {
     // snapshot-caching models) across all four models. Write ranges are
     // client-coalesced, so the rpc_intervals metric doubles as the
     // write-coalescing factor gauge.
-    for fs in FsKind::ALL {
+    for fs in FsKind::PAPER {
         for rounds in [1usize, 4, 16] {
             let mut sc = base(
                 "ablate_snapshot",
@@ -458,9 +458,55 @@ pub fn registry() -> Vec<Scenario> {
         }
     }
 
+    // model_ext — the extended-model matrix: every registered model
+    // BEYOND the paper's four (the built-ins commit_strict, cto and
+    // eventual, plus any `[model.<name>]` block registered from config
+    // before this registry was built) runs fig3/fig4-style write and
+    // read cells. This is what makes `pscnf bench` execute a model that
+    // exists only as data. Built-in extras contribute smoke cells to
+    // the gated CI subset; config-defined models never do (the CI
+    // baseline can't be assumed to contain them).
+    for fs in FsKind::registered() {
+        if FsKind::PAPER.contains(&fs) {
+            continue;
+        }
+        for (config, access) in [
+            (Config::CnW, 8u64 << 10),
+            (Config::CnW, 8 << 20),
+            (Config::CcR, 8 << 10),
+            (Config::CcR, 8 << 20),
+        ] {
+            for nodes in [2usize, 4, 8, 16] {
+                v.push(synthetic("model_ext", config, access, fs, nodes, 12));
+            }
+        }
+        for config in [Config::CnW, Config::CcR] {
+            let mut sc = base(
+                "model_ext",
+                fs,
+                2,
+                2,
+                Kind::Synthetic {
+                    config,
+                    access: 8 << 10,
+                    read_pattern: None,
+                },
+            );
+            sc.m = 3;
+            sc.repeats = 2;
+            sc.smoke = fs.is_builtin();
+            v.push(with_id(
+                sc,
+                &format!("{}.s", config.name()),
+                Some(8 << 10),
+                "n2",
+            ));
+        }
+    }
+
     // ablate_dl_aggregation — unaggregated vs aggregated ownership
     // queries in the DL path, commit vs session.
-    for fs in [FsKind::Commit, FsKind::Session] {
+    for fs in [FsKind::COMMIT, FsKind::SESSION] {
         for aggregate in [false, true] {
             for nodes in [2usize, 4, 8, 16] {
                 let sc = base(
@@ -483,7 +529,7 @@ pub fn registry() -> Vec<Scenario> {
     // smoke — the CI perf-gate subset: tiny scales, every model ×
     // Table-8 config (+ a random-read variant), plus one SCR and one DL
     // cell per model so every workload driver is exercised.
-    for fs in FsKind::ALL {
+    for fs in FsKind::PAPER {
         for config in [Config::CnW, Config::SnW, Config::CcR, Config::CsR] {
             let mut sc = base(
                 "smoke",
@@ -580,12 +626,43 @@ mod tests {
     fn every_figure_family_has_all_models() {
         let all = registry();
         for family in ["fig3", "fig4", "fig5", "fig6", "smoke"] {
-            for fs in FsKind::ALL {
+            for fs in FsKind::PAPER {
                 assert!(
                     all.iter().any(|s| s.family == family && s.fs == fs),
                     "{family} missing {fs:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn model_ext_covers_every_non_paper_model() {
+        // Snapshot the model set BEFORE building the scenario registry:
+        // sibling tests register models concurrently, and registration
+        // is append-only, so every kind in this snapshot is guaranteed
+        // to have cells in the (later-built) scenario registry.
+        let kinds = FsKind::registered();
+        let all = registry();
+        for fs in kinds {
+            if FsKind::PAPER.contains(&fs) {
+                continue;
+            }
+            assert!(
+                all.iter().any(|s| s.family == "model_ext" && s.fs == fs),
+                "model_ext misses registered model {}",
+                fs.name()
+            );
+            // Only built-ins ride the gated CI smoke subset: a model
+            // registered from config is absent from the CI baseline.
+            let has_smoke = all
+                .iter()
+                .any(|s| s.family == "model_ext" && s.fs == fs && s.smoke);
+            assert_eq!(
+                has_smoke,
+                fs.is_builtin(),
+                "smoke flag wrong for {}",
+                fs.name()
+            );
         }
     }
 

@@ -19,7 +19,7 @@ use super::registry::{HotPathCase, Kind, Scenario};
 use super::report::{BenchMatrix, BenchRecord, Metric};
 use crate::basefs::{DesFabric, FileId, GlobalServerState, Request};
 use crate::dl::{DlDriver, DlParams};
-use crate::fs::{CommitFs, FsKind, WorkloadFs};
+use crate::fs::{FsKind, PolicyFs, WorkloadFs};
 use crate::interval::{GlobalIntervalTree, Range};
 use crate::scr::{ScrDriver, ScrParams};
 use crate::sim::{Cluster, Driver, Engine, NetParams, Ns, ServerParams, SimOp, UpfsParams};
@@ -492,7 +492,7 @@ fn engine_flood(nodes: usize, ppn: usize, steps: usize) -> u64 {
 /// thin registry wrapper like every other.)
 struct FineCommitDriver {
     fabric: DesFabric,
-    fs: Vec<CommitFs>,
+    fs: Vec<PolicyFs>,
     file: u64,
     plan: Vec<Vec<u64>>,
     next: Vec<usize>,
@@ -507,8 +507,8 @@ impl FineCommitDriver {
         let nranks = params.nranks();
         let node_of: Vec<usize> = (0..nranks).map(|r| r / ppn).collect();
         let fabric = DesFabric::new_phantom(node_of);
-        let mut fs: Vec<CommitFs> = (0..nranks)
-            .map(|r| CommitFs::new(r as u32, fabric.bb_of(r as u32)))
+        let mut fs: Vec<PolicyFs> = (0..nranks)
+            .map(|r| PolicyFs::new(FsKind::COMMIT, r as u32, fabric.bb_of(r as u32)))
             .collect();
         let mut fabric = fabric;
         let mut file = 0;
@@ -800,7 +800,7 @@ mod tests {
 
     #[test]
     fn synthetic_smoke_record_has_metrics_and_params() {
-        let sc = smoke("CC-R/8KiB", FsKind::Commit);
+        let sc = smoke("CC-R/8KiB", FsKind::COMMIT);
         let rec = run_scenario(&sc);
         assert_eq!(rec.id, sc.id);
         assert_eq!(rec.family, "smoke");
@@ -814,7 +814,7 @@ mod tests {
 
     #[test]
     fn run_scenario_is_deterministic() {
-        let sc = smoke("dl.weak", FsKind::Session);
+        let sc = smoke("dl.weak", FsKind::SESSION);
         let a = run_scenario(&sc);
         let b = run_scenario(&sc);
         assert_eq!(a, b);
@@ -822,7 +822,7 @@ mod tests {
 
     #[test]
     fn scr_smoke_reports_restart_bw() {
-        let sc = smoke("scr", FsKind::Session);
+        let sc = smoke("scr", FsKind::SESSION);
         let rec = run_scenario(&sc);
         assert!(rec.metric_value("bw").unwrap() > 0.0);
         assert!(rec.metric_value("restart_bw").unwrap() > 0.0);
@@ -839,9 +839,9 @@ mod tests {
             sc.repeats = 1;
             run_scenario(&sc)
         };
-        let commit = run(FsKind::Commit);
-        let session = run(FsKind::Session);
-        let mpiio = run(FsKind::Mpiio);
+        let commit = run(FsKind::COMMIT);
+        let session = run(FsKind::SESSION);
+        let mpiio = run(FsKind::MPIIO);
         let rpcs = |r: &BenchRecord| r.metric_value("rpcs").unwrap();
         assert!(
             rpcs(&session) < rpcs(&commit),
@@ -869,7 +869,7 @@ mod tests {
                 .find(|s| {
                     s.family == "ablate_snapshot"
                         && !s.smoke
-                        && s.fs == FsKind::Session
+                        && s.fs == FsKind::SESSION
                         && s.id.ends_with(rounds_frag)
                 })
                 .unwrap();

@@ -16,6 +16,13 @@
 //! size = 8K
 //! m = 10
 //! seed = 7
+//!
+//! # A consistency model defined as DATA (no Rust change): registered
+//! # into the model registry, runnable via `fs = lazy` and through the
+//! # bench matrix (`pscnf bench --config ... --models lazy`).
+//! [model.lazy]
+//! publication = phase_end
+//! acquisition = lifetime_snapshot
 //! ```
 
 use crate::fs::FsKind;
@@ -136,7 +143,7 @@ impl Default for Experiment {
             nodes: 4,
             ppn: 12,
             shards: 1,
-            fs: FsKind::Session,
+            fs: FsKind::SESSION,
             workload: TableConfig::CcR,
             access_size: 8 << 10,
             accesses_per_proc: 10,
@@ -147,8 +154,12 @@ impl Default for Experiment {
 }
 
 impl Experiment {
-    /// Overlay values from an INI file.
+    /// Overlay values from an INI file. `[model.<name>]` sections are
+    /// registered into the model registry FIRST, so `[workload] fs`
+    /// (and every later CLI flag) can name a model that exists only in
+    /// this file.
     pub fn apply_ini(&mut self, ini: &Ini) -> Result<(), String> {
+        FsKind::register_from_ini(ini)?;
         if let Some(cluster) = ini.get("cluster") {
             if let Some(v) = cluster.get("nodes") {
                 self.nodes = v.parse().map_err(|e| format!("cluster.nodes: {e}"))?;
@@ -241,7 +252,7 @@ mod tests {
         e.apply_ini(&ini).unwrap();
         assert_eq!(e.nodes, 16);
         assert_eq!(e.testbed, Testbed::Expanse);
-        assert_eq!(e.fs, FsKind::Commit);
+        assert_eq!(e.fs, FsKind::COMMIT);
         assert_eq!(e.access_size, 8 << 20);
         assert_eq!(e.accesses_per_proc, 5);
         let p = e.params();
@@ -267,6 +278,27 @@ mod tests {
         assert!(Experiment::default()
             .apply_ini(&parse_ini("[workload]\nfiles=0\n").unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn model_block_registers_and_is_usable_as_fs() {
+        let mut e = Experiment::default();
+        let ini = parse_ini(
+            "[model.cfg_lazy]\npublication = phase_end\nacquisition = lifetime_snapshot\n\
+             [workload]\nfs = cfg_lazy\n",
+        )
+        .unwrap();
+        e.apply_ini(&ini).unwrap();
+        assert_eq!(e.fs.name(), "cfg_lazy");
+        assert!(!e.fs.is_builtin());
+        // The derived formal model has the session MSC shape.
+        assert_eq!(
+            e.fs.model().mscs,
+            crate::model::SyncPolicy::session().derive_model("x").mscs
+        );
+        // A broken block is a config error, not a panic.
+        let bad = parse_ini("[model.cfg_bad]\npublication = sometimes\n").unwrap();
+        assert!(Experiment::default().apply_ini(&bad).is_err());
     }
 
     #[test]

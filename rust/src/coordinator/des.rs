@@ -247,7 +247,7 @@ mod tests {
             Config::CcR,
             8 << 10,
             &[2, 4],
-            &[FsKind::Commit, FsKind::Session],
+            &[FsKind::COMMIT, FsKind::SESSION],
             2,
             3,
             2,
@@ -263,10 +263,10 @@ mod tests {
 
     #[test]
     fn scr_and_dl_sweeps_run() {
-        let scr = sweep_scr(&[4], &[FsKind::Session], 2, 500_000, 1, Testbed::Catalyst);
+        let scr = sweep_scr(&[4], &[FsKind::SESSION], 2, 500_000, 1, Testbed::Catalyst);
         assert_eq!(scr.len(), 1);
         assert!(scr[0].2.mean() > 0.0 && scr[0].3.mean() > 0.0);
-        let dl = sweep_dl(false, &[2], &[FsKind::Commit], 2, 2, 1, Testbed::Catalyst);
+        let dl = sweep_dl(false, &[2], &[FsKind::COMMIT], 2, 2, 1, Testbed::Catalyst);
         assert!(dl[0].2.mean() > 0.0);
     }
 

@@ -416,23 +416,22 @@ mod tests {
         // attached new bytes) must revalidate to the new snapshot. The
         // live server answers a revalidation with a version compare
         // under the shard lock — no tree clone unless stale.
-        use crate::fs::SessionFs;
+        use crate::fs::{FsKind, PolicyFs, WorkloadFs};
         let mut cluster = LiveCluster::new_sharded(2, 2, 2);
         let mut fabrics = cluster.take_fabrics();
-        let mut a = SessionFs::new(0, fabrics[0].bb_of(0));
-        let mut b = SessionFs::new(1, fabrics[1].bb_of(1));
-        use crate::fs::WorkloadFs;
+        let mut a = PolicyFs::new(FsKind::SESSION, 0, fabrics[0].bb_of(0));
+        let mut b = PolicyFs::new(FsKind::SESSION, 1, fabrics[1].bb_of(1));
         let f = a.open(&mut fabrics[0], "/live-reval");
         b.open(&mut fabrics[1], "/live-reval");
 
-        a.session_open(&mut fabrics[0], f).unwrap();
-        a.session_close(&mut fabrics[0], f).unwrap(); // warm empty cache
+        a.acquire(&mut fabrics[0], f).unwrap(); // session_open
+        a.publish(&mut fabrics[0], f).unwrap(); // close: warm empty cache
 
-        SessionFs::write_at(&mut b, &mut fabrics[1], f, 0, b"live-fresh").unwrap();
-        b.session_close(&mut fabrics[1], f).unwrap();
+        b.write_at(&mut fabrics[1], f, 0, b"live-fresh").unwrap();
+        b.publish(&mut fabrics[1], f).unwrap(); // session_close
 
-        a.session_open(&mut fabrics[0], f).unwrap(); // Revalidate -> miss
-        let got = SessionFs::read_at(&mut a, &mut fabrics[0], f, Range::new(0, 10)).unwrap();
+        a.acquire(&mut fabrics[0], f).unwrap(); // Revalidate -> miss
+        let got = a.read_at(&mut fabrics[0], f, Range::new(0, 10)).unwrap();
         assert_eq!(got, b"live-fresh");
         cluster.shutdown();
     }

@@ -18,7 +18,7 @@ use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
 use crate::util::rng::Rng;
-use crate::workload::build_fs;
+use crate::workload::{build_fs_with, LayerFactory};
 
 /// Fig 6 workload parameters.
 #[derive(Debug, Clone)]
@@ -179,10 +179,19 @@ pub struct DlDriver {
 
 impl DlDriver {
     pub fn new(kind: FsKind, params: DlParams) -> Self {
+        Self::new_with_layers(
+            &|kind, id, bb| Box::new(crate::fs::PolicyFs::new(kind, id, bb)),
+            kind,
+            params,
+        )
+    }
+
+    /// [`Self::new`] with an explicit layer factory (differential pin).
+    pub fn new_with_layers(make: LayerFactory, kind: FsKind, params: DlParams) -> Self {
         let nranks = params.nranks();
         let node_of: Vec<usize> = (0..nranks).map(|r| r / params.ppn).collect();
         let mut fabric = DesFabric::new_phantom(node_of);
-        let mut fs = build_fs(kind, &fabric);
+        let mut fs = build_fs_with(make, kind, &fabric);
         let mut file = 0;
         for f in fs.iter_mut() {
             file = f.open(&mut fabric, "/dl/dataset.bin");
@@ -304,7 +313,7 @@ impl Driver for DlDriver {
                             self.remote += 1;
                         }
                         self.total_reads += 1;
-                        if p.aggregate && self.fs[rank].kind() == crate::fs::FsKind::Commit {
+                        if p.aggregate && self.fs[rank].kind() == crate::fs::FsKind::COMMIT {
                             // Aggregated path: one ownership query per
                             // owner-group (ids are owner-sorted), then
                             // direct owner fetches per sample.
@@ -427,8 +436,8 @@ mod tests {
             let p = DlParams::weak(4, 4, 2, 11);
             DlDriver::new(kind, p).run(Cluster::catalyst(4, 5))
         };
-        let commit = run(FsKind::Commit);
-        let session = run(FsKind::Session);
+        let commit = run(FsKind::COMMIT);
+        let session = run(FsKind::SESSION);
         assert!(
             session.read_bw() > 1.2 * commit.read_bw(),
             "session {} vs commit {}",
@@ -450,8 +459,8 @@ mod aggregation_tests {
         let base = DlParams::weak(8, 4, 2, 11);
         let mut agg = base.clone();
         agg.aggregate = true;
-        let plain = DlDriver::new(FsKind::Commit, base).run(Cluster::catalyst(8, 5));
-        let agged = DlDriver::new(FsKind::Commit, agg).run(Cluster::catalyst(8, 5));
+        let plain = DlDriver::new(FsKind::COMMIT, base).run(Cluster::catalyst(8, 5));
+        let agged = DlDriver::new(FsKind::COMMIT, agg).run(Cluster::catalyst(8, 5));
         assert!(
             agged.rpcs < plain.rpcs / 2,
             "aggregation must coalesce queries: {} vs {}",

@@ -1,0 +1,607 @@
+//! The pre-refactor hand-written consistency layers, **frozen as
+//! reference implementations**. Production code constructs
+//! [`super::PolicyFs`] exclusively; these four structs exist so
+//! `tests/policy_differential.rs` can prove — bit for bit: read-back
+//! bytes, `FabricCounters`, simulated time — that each canned
+//! [`crate::model::SyncPolicy`] interprets exactly the semantics the
+//! struct it replaced hard-coded. Do not grow features here: a change
+//! to consistency semantics goes into the policy (and its derived
+//! formal model), and this file only ever changes to keep the anchors
+//! compiling.
+
+use super::{
+    assemble_read, assemble_read_into, overlay_own_writes, FsKind, SnapshotCache, WorkloadFs,
+};
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SharedBb};
+use crate::interval::Range;
+use std::collections::HashSet;
+
+// ---- PosixFS -----------------------------------------------------------
+
+/// PosixFS (Table 6): every write attaches immediately, every read
+/// queries — the reference for [`crate::model::SyncPolicy::posix`].
+pub struct PosixFs {
+    core: ClientCore,
+}
+
+impl PosixFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+        }
+    }
+
+    /// POSIX `write`: bfs_write + bfs_attach of exactly the written range.
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        let n = self.core.write_at(fabric, file, offset, buf)?;
+        self.core.attach(fabric, file, offset, n as u64)?;
+        Ok(n)
+    }
+
+    /// POSIX `read`: bfs_query + bfs_read per owned subrange.
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        assemble_read(&mut self.core, fabric, file, range, &owned)
+    }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
+    }
+}
+
+impl WorkloadFs for PosixFs {
+    fn kind(&self) -> FsKind {
+        FsKind::POSIX
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, _fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.core.open(path)
+    }
+
+    fn close(&mut self, _fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.close(file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        PosixFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        PosixFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        PosixFs::read_at_into(self, fabric, file, range, out)
+    }
+
+    fn end_write_phase(&mut self, _fabric: &mut dyn Fabric, _file: FileId) -> Result<(), BfsError> {
+        Ok(()) // writes are already globally visible
+    }
+
+    fn begin_read_phase(&mut self, _fabric: &mut dyn Fabric, _file: FileId) -> Result<(), BfsError> {
+        Ok(())
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+// ---- CommitFS ----------------------------------------------------------
+
+/// CommitFS (Table 6): writes buffer locally, `commit` publishes, reads
+/// query — the reference for [`crate::model::SyncPolicy::commit`].
+pub struct CommitFs {
+    core: ClientCore,
+}
+
+impl CommitFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+        }
+    }
+
+    /// `commit`: all updates by this process to `file` since the previous
+    /// commit become globally visible (bfs_attach_file).
+    pub fn commit(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.attach_file(fabric, file).map(|_| ())
+    }
+
+    /// Fine-grained commit of a byte range (§2.3.1).
+    pub fn commit_range(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        size: u64,
+    ) -> Result<(), BfsError> {
+        self.core.attach(fabric, file, offset, size)
+    }
+
+    /// `write`: buffer locally, no server traffic.
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        self.core.write_at(fabric, file, offset, buf)
+    }
+
+    /// `read`: bfs_query (an RPC!) then bfs_read per owned subrange.
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        assemble_read(&mut self.core, fabric, file, range, &owned)
+    }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let owned = self.core.query(fabric, file, range.start, range.len())?;
+        assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
+    }
+}
+
+impl WorkloadFs for CommitFs {
+    fn kind(&self) -> FsKind {
+        FsKind::COMMIT
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, _fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.core.open(path)
+    }
+
+    fn close(&mut self, _fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.core.close(file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        CommitFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        CommitFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        CommitFs::read_at_into(self, fabric, file, range, out)
+    }
+
+    /// Write phase ends with a commit.
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.commit(fabric, file)
+    }
+
+    /// Multi-file commit: attach requests batched per metadata shard.
+    fn end_write_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        self.core.attach_files(fabric, files).map(|_| ())
+    }
+
+    /// Commit consistency needs nothing reader-side.
+    fn begin_read_phase(&mut self, _fabric: &mut dyn Fabric, _file: FileId) -> Result<(), BfsError> {
+        Ok(())
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+// ---- SessionFS ---------------------------------------------------------
+
+/// SessionFS (Table 6): close publishes, open snapshots — the reference
+/// for [`crate::model::SyncPolicy::session`].
+pub struct SessionFs {
+    core: ClientCore,
+    cache: SnapshotCache,
+    /// Files with an open session: only these consult the cache on
+    /// reads (a read without session_open must NOT see attached state).
+    active: HashSet<FileId>,
+}
+
+impl SessionFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+            cache: SnapshotCache::new(),
+            active: HashSet::new(),
+        }
+    }
+
+    /// `session_open`: one RPC — a full bfs_query_file on a cold cache,
+    /// a `Revalidate` (no map transfer on hit) on a warm one.
+    pub fn session_open(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.cache.refresh_all(&mut self.core, fabric, &[file])?;
+        self.active.insert(file);
+        Ok(())
+    }
+
+    /// `session_close`: make this process's writes visible
+    /// (bfs_attach_file) and end the session.
+    pub fn session_close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        if self.core.attach_file(fabric, file)? {
+            self.cache.invalidate(file);
+        }
+        self.active.remove(&file);
+        Ok(())
+    }
+
+    /// `write`: buffer locally.
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        self.core.write_at(fabric, file, offset, buf)
+    }
+
+    /// `read`: NO query — resolve owners from the session snapshot (plus
+    /// this process's own writes, which are always visible to itself).
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let mut out = Vec::with_capacity(range.len() as usize);
+        self.read_at_into(fabric, file, range, &mut out)?;
+        Ok(out)
+    }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let owned = if self.active.contains(&file) {
+            self.cache
+                .tree(file)
+                .map(|t| t.query(range))
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        let owned = overlay_own_writes(&mut self.core, file, range, owned);
+        assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
+    }
+}
+
+impl WorkloadFs for SessionFs {
+    fn kind(&self) -> FsKind {
+        FsKind::SESSION
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, _fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.core.open(path)
+    }
+
+    fn close(&mut self, _fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.active.remove(&file);
+        self.cache.invalidate(file);
+        self.core.close(file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        SessionFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        SessionFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        SessionFs::read_at_into(self, fabric, file, range, out)
+    }
+
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.session_close(fabric, file)
+    }
+
+    fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.session_open(fabric, file)
+    }
+
+    /// Multi-file session_close: one batched attach per metadata shard.
+    fn end_write_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        let attached = self.core.attach_files(fabric, files)?;
+        for file in attached {
+            self.cache.invalidate(file);
+        }
+        for file in files {
+            self.active.remove(file);
+        }
+        Ok(())
+    }
+
+    /// Multi-file session_open: one batched revalidate-or-query round
+    /// per metadata shard.
+    fn begin_read_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        self.cache.refresh_all(&mut self.core, fabric, files)?;
+        self.active.extend(files.iter().copied());
+        Ok(())
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+// ---- MpiioFS -----------------------------------------------------------
+
+/// MpiioFS (§2.3.3/§4.2.4): `MPI_File_sync` is flush-out AND refresh —
+/// the reference for [`crate::model::SyncPolicy::mpiio`].
+pub struct MpiioFs {
+    core: ClientCore,
+    cache: SnapshotCache,
+    /// Files between `MPI_File_open` and `MPI_File_close`.
+    active: HashSet<FileId>,
+}
+
+impl MpiioFs {
+    pub fn new(id: u32, bb: SharedBb) -> Self {
+        Self {
+            core: ClientCore::new(id, bb),
+            cache: SnapshotCache::new(),
+            active: HashSet::new(),
+        }
+    }
+
+    fn refresh_view(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.cache.refresh_all(&mut self.core, fabric, &[file])?;
+        self.active.insert(file);
+        Ok(())
+    }
+
+    /// MPI_File_open: associate the handle and refresh the view.
+    pub fn mpi_open(&mut self, fabric: &mut dyn Fabric, path: &str) -> Result<FileId, BfsError> {
+        let file = self.core.open(path);
+        self.refresh_view(fabric, file)?;
+        Ok(file)
+    }
+
+    /// MPI_File_sync: publish local writes AND refresh the view.
+    pub fn mpi_sync(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        if self.core.attach_file(fabric, file)? {
+            self.cache.invalidate(file);
+        }
+        self.refresh_view(fabric, file)
+    }
+
+    /// MPI_File_close: publish local writes and drop the handle; the BB
+    /// buffer is kept alive.
+    pub fn mpi_close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        if self.core.attach_file(fabric, file)? {
+            self.cache.invalidate(file);
+        }
+        self.active.remove(&file);
+        Ok(())
+    }
+
+    pub fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        self.core.write_at(fabric, file, offset, buf)
+    }
+
+    pub fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        let mut out = Vec::with_capacity(range.len() as usize);
+        self.read_at_into(fabric, file, range, &mut out)?;
+        Ok(out)
+    }
+
+    /// Copy-once `read` into a caller-owned buffer.
+    pub fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        let owned = if self.active.contains(&file) {
+            self.cache
+                .tree(file)
+                .map(|t| t.query(range))
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        let owned = overlay_own_writes(&mut self.core, file, range, owned);
+        assemble_read_into(&mut self.core, fabric, file, range, &owned, out)
+    }
+}
+
+impl WorkloadFs for MpiioFs {
+    fn kind(&self) -> FsKind {
+        FsKind::MPIIO
+    }
+
+    fn client_id(&self) -> u32 {
+        self.core.id
+    }
+
+    fn open(&mut self, fabric: &mut dyn Fabric, path: &str) -> FileId {
+        self.mpi_open(fabric, path).expect("mpi_open")
+    }
+
+    fn close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.mpi_close(fabric, file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        MpiioFs::write_at(self, fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        MpiioFs::read_at(self, fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        MpiioFs::read_at_into(self, fabric, file, range, out)
+    }
+
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.mpi_sync(fabric, file)
+    }
+
+    fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        self.mpi_sync(fabric, file)
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        &mut self.core
+    }
+}
+
+/// Build one legacy reference layer for `kind` — the factory the
+/// differential tests hand to the drivers' `*_with_layers`
+/// constructors. Only the paper's four models have a reference.
+pub fn build(kind: FsKind, id: u32, bb: SharedBb) -> Box<dyn WorkloadFs> {
+    if kind == FsKind::POSIX {
+        Box::new(PosixFs::new(id, bb))
+    } else if kind == FsKind::COMMIT {
+        Box::new(CommitFs::new(id, bb))
+    } else if kind == FsKind::SESSION {
+        Box::new(SessionFs::new(id, bb))
+    } else if kind == FsKind::MPIIO {
+        Box::new(MpiioFs::new(id, bb))
+    } else {
+        panic!("no legacy reference layer for model `{}`", kind.name())
+    }
+}

@@ -1,81 +1,42 @@
-//! The consistency-layer file systems of Table 6, each a thin mapping of
-//! its API onto BaseFS primitives. The **only** difference between them
-//! is the placement of `attach` and `query` — exactly the paper's
-//! methodology for isolating the consistency model:
+//! The consistency-layer file system of Table 6. Since the
+//! models-as-data refactor there is **one** executable layer — the
+//! generic [`PolicyFs`] — which interprets the declarative
+//! [`crate::model::SyncPolicy`] registered for its model: where
+//! `bfs_attach` fires (publication), where `bfs_query`/`Revalidate`
+//! fires (visibility acquisition), and the snapshot-cache
+//! scope/lifetime. The placement table below is therefore *data*, not
+//! four structs:
 //!
-//! | FS        | write                  | read                 | sync ops                    |
+//! | model     | write                  | read                 | sync ops                    |
 //! |-----------|------------------------|----------------------|-----------------------------|
-//! | PosixFS   | bfs_write + bfs_attach | bfs_query + bfs_read | —                           |
-//! | CommitFS  | bfs_write              | bfs_query + bfs_read | commit = bfs_attach_file    |
-//! | SessionFS | bfs_write              | bfs_read (cached)    | session_open = bfs_query_file, session_close = bfs_attach_file |
-//! | MpiioFS   | bfs_write              | bfs_read (cached)    | MPI_File_sync/open/close    |
+//! | posix     | bfs_write + bfs_attach | bfs_query + bfs_read | —                           |
+//! | commit    | bfs_write              | bfs_query + bfs_read | commit = bfs_attach_file    |
+//! | session   | bfs_write              | bfs_read (cached)    | session_open = bfs_query_file, session_close = bfs_attach_file |
+//! | mpiio     | bfs_write              | bfs_read (cached)    | MPI_File_sync/open/close    |
+//! | cto       | bfs_write              | bfs_read (lazy snapshot) | close/open, lifetime-scoped cache |
+//! | eventual  | bfs_write              | bfs_query + bfs_read | publication at close only   |
+//!
+//! The pre-refactor structs live on in [`legacy`] solely as reference
+//! anchors for the differential equivalence tests.
 
-mod commit;
-mod mpiio;
-mod posix;
-mod session;
+pub mod legacy;
+mod policy_fs;
 
-pub use commit::CommitFs;
-pub use mpiio::MpiioFs;
-pub use posix::PosixFs;
-pub use session::SessionFs;
+pub use legacy::{CommitFs, MpiioFs, PosixFs, SessionFs};
+pub use policy_fs::PolicyFs;
+
+/// Re-export: the model handle (and registry) lives with the formal
+/// framework, so the race detector and this layer share one source.
+pub use crate::model::FsKind;
 
 use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SnapshotSync};
 use crate::interval::{GlobalIntervalTree, OwnedInterval, Range};
 use std::collections::HashMap;
 
-/// Which consistency layer a workload runs on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum FsKind {
-    Posix,
-    Commit,
-    Session,
-    Mpiio,
-}
-
-impl FsKind {
-    /// Every consistency model, in the paper's Table 6 order. The bench
-    /// registry iterates this so no model silently drops out of the
-    /// scenario matrix.
-    pub const ALL: [FsKind; 4] = [FsKind::Posix, FsKind::Commit, FsKind::Session, FsKind::Mpiio];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            FsKind::Posix => "posix",
-            FsKind::Commit => "commit",
-            FsKind::Session => "session",
-            FsKind::Mpiio => "mpiio",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<Self, String> {
-        match s.to_ascii_lowercase().as_str() {
-            "posix" => Ok(FsKind::Posix),
-            "commit" => Ok(FsKind::Commit),
-            "session" => Ok(FsKind::Session),
-            "mpiio" | "mpi-io" => Ok(FsKind::Mpiio),
-            other => Err(format!(
-                "unknown file system `{other}` (posix|commit|session|mpiio)"
-            )),
-        }
-    }
-
-    /// Parse a model-list argument: `all`, `both` (the pair the paper
-    /// plots), or a comma-separated list of model names. One grammar
-    /// shared by `pscnf run --fs` and `pscnf bench --models`.
-    pub fn parse_list(s: &str) -> Result<Vec<FsKind>, String> {
-        match s {
-            "all" => Ok(FsKind::ALL.to_vec()),
-            "both" => Ok(vec![FsKind::Commit, FsKind::Session]),
-            _ => s.split(',').map(|x| FsKind::parse(x.trim())).collect(),
-        }
-    }
-}
-
 /// The uniform interface workload drivers program against. Phase hooks
-/// let each layer place its synchronization where its model requires:
-/// CommitFS commits at `end_write_phase`, SessionFS closes/opens its
-/// session there, PosixFS needs nothing.
+/// let the layer place its synchronization where its model's policy
+/// requires: commit models commit at `end_write_phase`, session models
+/// close/open their session there, POSIX needs nothing.
 pub trait WorkloadFs {
     fn kind(&self) -> FsKind;
     fn client_id(&self) -> u32;
@@ -322,29 +283,6 @@ fn assemble_read_inner(
 mod tests {
     use super::*;
     use crate::basefs::TestFabric;
-
-    #[test]
-    fn fskind_parse_and_name() {
-        assert_eq!(FsKind::parse("session").unwrap(), FsKind::Session);
-        assert_eq!(FsKind::parse("MPI-IO").unwrap(), FsKind::Mpiio);
-        assert!(FsKind::parse("zfs").is_err());
-        assert_eq!(FsKind::Commit.name(), "commit");
-    }
-
-    #[test]
-    fn fskind_parse_list_grammar() {
-        assert_eq!(FsKind::parse_list("all").unwrap(), FsKind::ALL.to_vec());
-        assert_eq!(
-            FsKind::parse_list("both").unwrap(),
-            vec![FsKind::Commit, FsKind::Session]
-        );
-        assert_eq!(
-            FsKind::parse_list("posix, mpiio").unwrap(),
-            vec![FsKind::Posix, FsKind::Mpiio]
-        );
-        assert!(FsKind::parse_list("zfs").is_err());
-        assert!(FsKind::parse_list("").is_err());
-    }
 
     #[test]
     fn assemble_read_mixes_owner_and_upfs() {

@@ -17,7 +17,7 @@ use pscnf::coordinator::{
     render_sweep, sweep_dl, sweep_scr, sweep_synthetic_sharded, write_results,
 };
 use pscnf::fs::FsKind;
-use pscnf::model::{litmus, ConsistencyModel};
+use pscnf::model::{litmus, model_table_markdown};
 use pscnf::runtime::{Runtime, TrainState};
 use pscnf::util::cli::ArgSpec;
 use pscnf::util::json::Json;
@@ -30,7 +30,7 @@ fn main() {
     pscnf::util::logger::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
-        Some("models") => cmd_models(),
+        Some("models") => cmd_models(&argv[1..]),
         Some("check") => cmd_check(&argv[1..]),
         Some("run") => cmd_run(&argv[1..]),
         Some("scr") => cmd_scr(&argv[1..]),
@@ -71,13 +71,33 @@ fn print_usage() {
     println!("{}", usage_text());
 }
 
-fn cmd_models() -> Result<(), String> {
-    let mut t = Table::new(vec!["Consistency model", "S", "MSC"]);
-    let mut models = ConsistencyModel::table4();
-    models.push(ConsistencyModel::commit_strict());
-    for m in &models {
+fn cmd_models(argv: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "models",
+        "print Table 4 (S and MSC) for every registered model",
+    )
+    .opt(
+        "config",
+        "PATH",
+        None,
+        "experiment file whose [model.<name>] blocks are registered first",
+    )
+    .opt("config-file", "PATH", None, "alias of --config (matches `pscnf run`)")
+    .flag("markdown", "emit the markdown table the README embeds");
+    let args = spec.parse(argv)?;
+    if let Some(path) = args.get("config").or_else(|| args.get("config-file")) {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        FsKind::register_from_ini(&parse_ini(&text)?)?;
+    }
+    if args.flag("markdown") {
+        print!("{}", model_table_markdown());
+        return Ok(());
+    }
+    let mut t = Table::new(vec!["model", "Consistency model", "S", "MSC"]);
+    for kind in FsKind::registered() {
+        let m = kind.model();
         let (s, msc) = m.describe();
-        t.row(vec![m.name.to_string(), s, msc]);
+        t.row(vec![kind.name().to_string(), m.name, s, msc]);
     }
     println!("Table 4 — properly-synchronized SCNF model definitions\n");
     print!("{}", t.render());
@@ -109,7 +129,7 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
         let mut t = Table::new(vec!["model", "races", "synchronized pairs", "verdict"]);
         for (name, races, sync) in litmus::run(l) {
             t.row(vec![
-                name.to_string(),
+                name,
                 races.to_string(),
                 sync.to_string(),
                 if races == 0 {
@@ -128,7 +148,12 @@ fn base_spec(cmd: &'static str, about: &'static str) -> ArgSpec {
     ArgSpec::new(cmd, about)
         .opt("nodes", "LIST", Some("4"), "node counts, comma separated")
         .opt("ppn", "P", Some("12"), "processes per node")
-        .opt("fs", "KIND", Some("both"), "posix|commit|session|mpiio|both|all")
+        .opt(
+            "fs",
+            "LIST",
+            Some("both"),
+            "all|paper|both or a comma list of registered model names",
+        )
         .opt("testbed", "NAME", Some("catalyst"), "catalyst|expanse|hdd|pmem")
         .opt("repeats", "R", Some("3"), "repetitions per cell")
         .opt("seed", "S", Some("7"), "base RNG seed")
@@ -156,6 +181,12 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
             "PATH",
             None,
             "INI experiment file (overridden by flags)",
+        )
+        .opt(
+            "config",
+            "PATH",
+            None,
+            "alias of --config-file (matches `pscnf bench`)",
         );
     let args = spec.parse(argv)?;
 
@@ -164,7 +195,10 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let mut m = args.usize("m")?;
     let mut ppn = args.usize("ppn")?;
     let mut testbed = Testbed::parse(args.str("testbed")?)?;
-    let mut fs_kinds = FsKind::parse_list(args.str("fs")?)?;
+    // --fs is parsed AFTER the config file below: applying the file
+    // registers its [model.<name>] blocks, and the flag must be able
+    // to name those models.
+    let mut fs_override: Option<Vec<FsKind>> = None;
     let mut nodes_list = args.usize_list("nodes")?;
     let repeats = args.usize("repeats")?;
     let mut shards = args.usize("shards")?;
@@ -174,7 +208,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     // built-in default; a file that omits a key must not disturb the
     // CLI default — notably fs, whose CLI default "both" differs from
     // the Experiment struct default).
-    if let Some(path) = args.get("config-file") {
+    if let Some(path) = args.get("config-file").or_else(|| args.get("config")) {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let ini = parse_ini(&text)?;
         let mut exp = Experiment::default();
@@ -197,7 +231,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
             testbed = exp.testbed;
         }
         if !args.explicit("fs") && in_file("workload", "fs") {
-            fs_kinds = vec![exp.fs];
+            fs_override = Some(vec![exp.fs]);
         }
         if !args.explicit("nodes") && in_file("cluster", "nodes") {
             nodes_list = vec![exp.nodes];
@@ -215,6 +249,10 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     if files == 0 {
         return Err("--files must be >= 1".to_string());
     }
+    let fs_kinds = match fs_override {
+        Some(kinds) => kinds,
+        None => FsKind::parse_list(args.str("fs")?)?,
+    };
 
     let write_phase = matches!(workload, WlConfig::CnW | WlConfig::SnW);
     let cells = sweep_synthetic_sharded(

@@ -3,8 +3,8 @@
 //! and the `pscnf check` CLI. Each litmus carries an expected verdict per
 //! model so the suite doubles as an executable specification.
 
-use super::models::ConsistencyModel;
 use super::op::{StorageOp, SyncKind};
+use super::policy::FsKind;
 use super::race;
 use super::trace::Trace;
 use crate::interval::Range;
@@ -43,8 +43,11 @@ pub fn table1_load_after_store() -> Litmus {
         expected: vec![
             ("POSIX", false),
             ("Commit", false),
+            ("Commit(strict)", false),
             ("Session", false),
             ("MPI-IO", false),
+            ("Close-to-open", false),
+            ("Eventual", false),
         ],
     }
 }
@@ -67,8 +70,11 @@ pub fn table2_flag_sync() -> Litmus {
         expected: vec![
             ("POSIX", true),
             ("Commit", false),
+            ("Commit(strict)", false),
             ("Session", false),
             ("MPI-IO", false),
+            ("Close-to-open", false),
+            ("Eventual", false),
         ],
     }
 }
@@ -95,7 +101,9 @@ pub fn table3_per_object_sync() -> Litmus {
         expected: vec![
             ("POSIX", true),
             ("Session", true),
-            ("Commit", false), // commit model has no session ops
+            ("Close-to-open", true), // same formal model as session
+            ("Commit", false),       // commit model has no session ops
+            ("Eventual", false),     // commit-on-close: no commit here
         ],
     }
 }
@@ -128,7 +136,14 @@ pub fn checkpoint_restart(nranks: u32, block: u64) -> Litmus {
         description: "N-1 checkpoint: write disjoint, commit, barrier, \
                       read neighbour's block.",
         trace: t,
-        expected: vec![("POSIX", true), ("Commit", true)],
+        expected: vec![
+            ("POSIX", true),
+            ("Commit", true),
+            // Each rank commits po-after its own write: the strict and
+            // eventual (commit-on-close) variants are satisfied too.
+            ("Commit(strict)", true),
+            ("Eventual", true),
+        ],
     }
 }
 
@@ -142,15 +157,18 @@ pub fn all() -> Vec<Litmus> {
     ]
 }
 
-/// Run a litmus against all Table 4 models (+ strict commit); returns
-/// (model name, race count, properly synchronized pairs).
-pub fn run(litmus: &Litmus) -> Vec<(&'static str, usize, usize)> {
-    let mut models = ConsistencyModel::table4();
-    models.push(ConsistencyModel::commit_strict());
-    models
-        .iter()
-        .map(|m| {
-            let rep = race::detect(&litmus.trace, m).expect("litmus traces are acyclic");
+/// Run a litmus against the formal definition of **every registered
+/// model** (the paper's four, the built-in extensions, and any model
+/// registered from config); returns (model display name, race count,
+/// properly synchronized pairs). The suite thereby doubles as the
+/// formal half of the conformance bridge: `tests/model_conformance.rs`
+/// replays these verdicts against the executable `PolicyFs` layers.
+pub fn run(litmus: &Litmus) -> Vec<(String, usize, usize)> {
+    FsKind::registered()
+        .into_iter()
+        .map(|kind| {
+            let m = kind.model();
+            let rep = race::detect(&litmus.trace, &m).expect("litmus traces are acyclic");
             (m.name, rep.races.len(), rep.synchronized_pairs)
         })
         .collect()

@@ -8,6 +8,9 @@
 //! - [`msc`] — Minimum Synchronization Constructs.
 //! - [`models`] — Table 4: POSIX, commit, session, MPI-IO (each fully
 //!   defined by `S` + MSCs).
+//! - [`policy`] — models as data: the declarative [`SyncPolicy`] the
+//!   executable layer interprets, the model registry behind
+//!   [`FsKind`], and the policy → Table-4 derivation.
 //! - [`race`] — the properly-synchronized relation and race detection.
 //! - [`litmus`] — executable litmus scenarios (Tables 1–3 analogues).
 
@@ -16,11 +19,16 @@ pub mod litmus;
 pub mod models;
 pub mod msc;
 pub mod op;
+pub mod policy;
 pub mod race;
 pub mod trace;
 
 pub use models::ConsistencyModel;
 pub use msc::{EdgeKind, Msc};
 pub use op::{Access, Event, FileId, OpId, RankId, StorageOp, SyncKind};
+pub use policy::{
+    builtin_kinds, model_table_markdown, model_table_markdown_for, Acquisition, FsKind, ModelDef,
+    Publication, SyncPolicy,
+};
 pub use race::{detect, race_free, RaceReport, StorageRace};
 pub use trace::{HappensBefore, Trace};

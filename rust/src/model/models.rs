@@ -1,16 +1,20 @@
 //! The properly-synchronized SCNF model definitions of Table 4. A model
 //! is completely specified by its set `S` of synchronization storage
 //! operations and its set of MSCs — exactly the paper's claim, made
-//! machine-readable so the race detector and the FS layers consume the
-//! *same* definition.
+//! machine-readable so the race detector and the FS layer consume the
+//! *same* definition. Since the models-as-data refactor each Table-4
+//! row is **derived** from the very [`SyncPolicy`] the executable
+//! [`crate::fs::PolicyFs`] interprets ([`SyncPolicy::derive_model`]),
+//! so the formal and executable definitions cannot drift.
 
-use super::msc::{EdgeKind, Msc};
+use super::msc::Msc;
 use super::op::SyncKind;
+use super::policy::SyncPolicy;
 
 /// A properly-synchronized SCNF consistency model: name, `S`, MSCs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConsistencyModel {
-    pub name: &'static str,
+    pub name: String,
     /// The set S of synchronization storage operations.
     pub sync_ops: Vec<SyncKind>,
     /// Any one MSC instance properly synchronizes a conflicting pair.
@@ -21,51 +25,26 @@ impl ConsistencyModel {
     /// POSIX consistency: S = {}, MSC = --hb--> (Table 4 row 1).
     /// Every write is visible to every hb-subsequent read.
     pub fn posix() -> Self {
-        Self {
-            name: "POSIX",
-            sync_ops: vec![],
-            mscs: vec![Msc::direct(EdgeKind::Hb)],
-        }
+        SyncPolicy::posix().derive_model("POSIX")
     }
 
     /// Commit consistency as in Table 4 (the relaxed variant):
     /// MSC = --hb--> commit --hb-->. Any process may commit on behalf of
     /// the writer as long as the commit is hb-ordered between X and Y.
     pub fn commit() -> Self {
-        Self {
-            name: "Commit",
-            sync_ops: vec![SyncKind::Commit],
-            mscs: vec![Msc::new(
-                vec![SyncKind::Commit],
-                vec![EdgeKind::Hb, EdgeKind::Hb],
-            )],
-        }
+        SyncPolicy::commit().derive_model("Commit")
     }
 
     /// The strict commit variant most BB systems implement (§4.2.2):
     /// MSC = --po--> commit --hb--> — the *writing* process must commit.
     pub fn commit_strict() -> Self {
-        Self {
-            name: "Commit(strict)",
-            sync_ops: vec![SyncKind::Commit],
-            mscs: vec![Msc::new(
-                vec![SyncKind::Commit],
-                vec![EdgeKind::Po, EdgeKind::Hb],
-            )],
-        }
+        SyncPolicy::commit_strict().derive_model("Commit(strict)")
     }
 
     /// Session consistency (Table 4 row 3):
     /// MSC = --po--> session_close --hb--> session_open --po-->.
     pub fn session() -> Self {
-        Self {
-            name: "Session",
-            sync_ops: vec![SyncKind::SessionClose, SyncKind::SessionOpen],
-            mscs: vec![Msc::new(
-                vec![SyncKind::SessionClose, SyncKind::SessionOpen],
-                vec![EdgeKind::Po, EdgeKind::Hb, EdgeKind::Po],
-            )],
-        }
+        SyncPolicy::session().derive_model("Session")
     }
 
     /// MPI-IO consistency, third level (§4.2.4): four MSCs
@@ -73,26 +52,7 @@ impl ConsistencyModel {
     /// s1 ∈ {MPI_File_close, MPI_File_sync}, s2 ∈ {MPI_File_sync,
     /// MPI_File_open}.
     pub fn mpiio() -> Self {
-        let s1s = [SyncKind::MpiFileClose, SyncKind::MpiFileSync];
-        let s2s = [SyncKind::MpiFileSync, SyncKind::MpiFileOpen];
-        let mut mscs = Vec::new();
-        for s1 in s1s {
-            for s2 in s2s {
-                mscs.push(Msc::new(
-                    vec![s1, s2],
-                    vec![EdgeKind::Po, EdgeKind::Hb, EdgeKind::Po],
-                ));
-            }
-        }
-        Self {
-            name: "MPI-IO",
-            sync_ops: vec![
-                SyncKind::MpiFileSync,
-                SyncKind::MpiFileClose,
-                SyncKind::MpiFileOpen,
-            ],
-            mscs,
-        }
+        SyncPolicy::mpiio().derive_model("MPI-IO")
     }
 
     /// All Table 4 models in paper order.
@@ -132,6 +92,7 @@ impl ConsistencyModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::msc::EdgeKind;
 
     #[test]
     fn posix_is_empty_s_direct_hb() {
@@ -174,8 +135,8 @@ mod tests {
 
     #[test]
     fn table4_order_and_names() {
-        let names: Vec<&str> = ConsistencyModel::table4()
-            .iter()
+        let names: Vec<String> = ConsistencyModel::table4()
+            .into_iter()
             .map(|m| m.name)
             .collect();
         assert_eq!(names, vec!["POSIX", "Commit", "Session", "MPI-IO"]);

@@ -1,0 +1,874 @@
+//! Models as data: the declarative [`SyncPolicy`] a consistency model's
+//! *executable* layer interprets, and the process-wide **model
+//! registry** that makes the model axis dynamic end to end.
+//!
+//! The paper's claim (§4) is that a properly-synchronized SCNF model is
+//! *fully specified* by its set `S` of synchronization operations and
+//! its MSCs. This module closes the loop on the executable side: a
+//! [`SyncPolicy`] states *where* the layer places `bfs_attach`
+//! (publication) and `bfs_query`/`Revalidate` (visibility acquisition),
+//! and the formal [`ConsistencyModel`] of Table 4 is **derived from the
+//! policy** ([`SyncPolicy::derive_model`]) — so the race detector and
+//! the file-system layer consume one definition by construction, and a
+//! new model is a value (a `[model.<name>]` config block), not an enum
+//! arm.
+//!
+//! [`FsKind`] — the handle every driver, bench cell and CLI flag carries
+//! — is now an index into the registry rather than a closed enum. The
+//! seven built-ins (the paper's four, `commit_strict` of §4.2.2, and
+//! the two relaxed extensions `cto` and `eventual`) are registered at
+//! first use; `[model.<name>]` sections register more at runtime
+//! ([`FsKind::register_from_ini`]).
+
+use super::models::ConsistencyModel;
+use super::msc::{EdgeKind, Msc};
+use super::op::SyncKind;
+use std::collections::BTreeMap;
+use std::sync::{OnceLock, RwLock};
+
+/// When the layer publishes (bfs_attach) this client's buffered writes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Publication {
+    /// Attach immediately after every write (POSIX: global visibility
+    /// on return).
+    EveryWrite,
+    /// Attach at the end-of-write-phase hook (`commit`,
+    /// `session_close`, `MPI_File_sync`).
+    PhaseEnd,
+    /// Attach only when the file is closed (DAOS-style eventual
+    /// publication: write phases are free, visibility comes late).
+    OnClose,
+}
+
+impl Publication {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "every_write" => Ok(Publication::EveryWrite),
+            "phase_end" => Ok(Publication::PhaseEnd),
+            "on_close" => Ok(Publication::OnClose),
+            other => Err(format!(
+                "unknown publication `{other}` (every_write|phase_end|on_close)"
+            )),
+        }
+    }
+}
+
+/// Where reads obtain the ownership map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Acquisition {
+    /// `bfs_query` per read — an RPC on every access (POSIX, commit).
+    PerRead,
+    /// Version-stamped snapshot cache, refreshed at acquisition points
+    /// (`session_open` / `MPI_File_sync`); reads are RPC-free.
+    Snapshot {
+        /// `true`: the snapshot only serves reads between
+        /// `begin_read_phase` and the next phase end (session
+        /// semantics — a read outside a session must NOT see attached
+        /// state). `false`: handle-lifetime scope — any read may use
+        /// the cached snapshot, and a read with no snapshot lazily
+        /// fetches one (close-to-open semantics).
+        session_scoped: bool,
+    },
+}
+
+impl Acquisition {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "per_read" => Ok(Acquisition::PerRead),
+            "session_snapshot" => Ok(Acquisition::Snapshot {
+                session_scoped: true,
+            }),
+            "lifetime_snapshot" => Ok(Acquisition::Snapshot {
+                session_scoped: false,
+            }),
+            other => Err(format!(
+                "unknown acquisition `{other}` (per_read|session_snapshot|lifetime_snapshot)"
+            )),
+        }
+    }
+
+    /// Does this acquisition mode read through the snapshot cache?
+    pub fn is_snapshot(&self) -> bool {
+        matches!(self, Acquisition::Snapshot { .. })
+    }
+}
+
+/// The declarative synchronization policy a [`crate::fs::PolicyFs`]
+/// interprets. One value of this struct *is* an executable consistency
+/// model; [`Self::derive_model`] maps it onto the paper's formal `S` +
+/// MSC definition (DESIGN.md §Policy-Interpretation documents the field
+/// ↔ MSC correspondence).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SyncPolicy {
+    pub publication: Publication,
+    pub acquisition: Acquisition,
+    /// The end-of-write-phase op is a *sync duality* (MPI_File_sync):
+    /// it refreshes the snapshot view right after publishing, and the
+    /// begin-read-phase op publishes before refreshing. Forces phase
+    /// hooks to run per file (no cross-file batching) because publish
+    /// and refresh interleave.
+    pub refresh_on_publish: bool,
+    /// `open` performs an acquisition (MPI_File_open refreshes).
+    pub acquire_on_open: bool,
+    /// `close` publishes and keeps the BB buffer + handle alive
+    /// (MPI_File_close: ownership stays with the server's map).
+    pub publish_on_close: bool,
+    /// Formal relaxation of publication: *any* process may perform the
+    /// publishing sync op on the writer's behalf (first MSC edge `hb`
+    /// instead of `po` — Table 4's relaxed commit vs §4.2.2's strict).
+    /// Purely formal: the executable layer always self-publishes, which
+    /// satisfies both.
+    pub relaxed_publication: bool,
+    /// The publishing sync-op kinds (`s1` candidates of the MSC).
+    pub publish_syncs: Vec<SyncKind>,
+    /// The acquiring sync-op kinds (`s2` candidates); empty for
+    /// per-read-query models whose MSC ends at the publish op.
+    pub acquire_syncs: Vec<SyncKind>,
+    /// Op recorded by trace instrumentation for `end_write_phase`.
+    pub end_write_sync: Option<SyncKind>,
+    /// Op recorded for `begin_read_phase`.
+    pub begin_read_sync: Option<SyncKind>,
+    /// Op recorded for `open`.
+    pub open_sync: Option<SyncKind>,
+    /// Op recorded for `close` (when the close publishes).
+    pub close_sync: Option<SyncKind>,
+}
+
+impl SyncPolicy {
+    /// POSIX consistency: publish every write, query every read.
+    pub fn posix() -> Self {
+        Self {
+            publication: Publication::EveryWrite,
+            acquisition: Acquisition::PerRead,
+            refresh_on_publish: false,
+            acquire_on_open: false,
+            publish_on_close: false,
+            relaxed_publication: false,
+            publish_syncs: vec![],
+            acquire_syncs: vec![],
+            end_write_sync: None,
+            begin_read_sync: None,
+            open_sync: None,
+            close_sync: None,
+        }
+    }
+
+    /// Commit consistency (Table 4, relaxed: anyone may commit).
+    pub fn commit() -> Self {
+        Self {
+            publication: Publication::PhaseEnd,
+            relaxed_publication: true,
+            publish_syncs: vec![SyncKind::Commit],
+            end_write_sync: Some(SyncKind::Commit),
+            ..Self::posix()
+        }
+    }
+
+    /// Strict commit (§4.2.2): the writing process must commit. Same
+    /// executable interpretation as [`Self::commit`] — the layer always
+    /// self-commits — but a strictly smaller formal allowed set.
+    pub fn commit_strict() -> Self {
+        Self {
+            relaxed_publication: false,
+            ..Self::commit()
+        }
+    }
+
+    /// Session consistency: publish at `session_close`, acquire a
+    /// session-scoped snapshot at `session_open`.
+    pub fn session() -> Self {
+        Self {
+            publication: Publication::PhaseEnd,
+            acquisition: Acquisition::Snapshot {
+                session_scoped: true,
+            },
+            publish_syncs: vec![SyncKind::SessionClose],
+            acquire_syncs: vec![SyncKind::SessionOpen],
+            end_write_sync: Some(SyncKind::SessionClose),
+            begin_read_sync: Some(SyncKind::SessionOpen),
+            ..Self::posix()
+        }
+    }
+
+    /// MPI-IO consistency, third level (§4.2.4): `MPI_File_sync` is
+    /// both flush-out and refresh; open refreshes, close publishes.
+    pub fn mpiio() -> Self {
+        Self {
+            publication: Publication::PhaseEnd,
+            acquisition: Acquisition::Snapshot {
+                session_scoped: true,
+            },
+            refresh_on_publish: true,
+            acquire_on_open: true,
+            publish_on_close: true,
+            publish_syncs: vec![SyncKind::MpiFileClose, SyncKind::MpiFileSync],
+            acquire_syncs: vec![SyncKind::MpiFileSync, SyncKind::MpiFileOpen],
+            end_write_sync: Some(SyncKind::MpiFileSync),
+            begin_read_sync: Some(SyncKind::MpiFileSync),
+            open_sync: Some(SyncKind::MpiFileOpen),
+            close_sync: Some(SyncKind::MpiFileClose),
+            ..Self::posix()
+        }
+    }
+
+    /// Close-to-open (NFS-style), the first relaxed extension: the same
+    /// formal model as session consistency, interpreted with
+    /// *handle-lifetime* snapshots — reads never require an open
+    /// session, a snapshotless read lazily fetches one, and warm
+    /// reopens revalidate. Cheaper than session on reopen-heavy
+    /// workloads; a read not covered by the MSC may (correctly, per the
+    /// formal def) return stale data.
+    pub fn cto() -> Self {
+        Self {
+            acquisition: Acquisition::Snapshot {
+                session_scoped: false,
+            },
+            ..Self::session()
+        }
+    }
+
+    /// Eventual publication (DAOS-style), the second relaxed extension:
+    /// nothing is published until the file is *closed* (the close acts
+    /// as the commit); readers query per read. Write phases cost zero
+    /// sync RPCs — the cheapest writer path of any model.
+    pub fn eventual() -> Self {
+        Self {
+            publication: Publication::OnClose,
+            relaxed_publication: false,
+            publish_syncs: vec![SyncKind::Commit],
+            end_write_sync: None,
+            close_sync: Some(SyncKind::Commit),
+            ..Self::commit()
+        }
+    }
+
+    /// Derive the formal Table-4 definition this policy interprets: the
+    /// set `S` and the MSC family. The mapping (DESIGN.md
+    /// §Policy-Interpretation):
+    ///
+    /// - no sync ops at all → `S = {}`, `MSC = --hb-->` (POSIX);
+    /// - publish ops only → one MSC per publish op `P`:
+    ///   `--po--> P --hb-->` (`--hb-->` first when
+    ///   `relaxed_publication`);
+    /// - acquire ops only → one MSC per acquire op `A`:
+    ///   `--hb--> A --po-->` (per-write publication, snapshot reads);
+    /// - publish + acquire ops → the cross product `P × A`:
+    ///   `--po--> P --hb--> A --po-->` (session shape; MPI-IO's sync
+    ///   duality yields its four MSCs).
+    pub fn derive_model(&self, name: impl Into<String>) -> ConsistencyModel {
+        let first = if self.relaxed_publication {
+            EdgeKind::Hb
+        } else {
+            EdgeKind::Po
+        };
+        let mscs = if self.publish_syncs.is_empty() && self.acquire_syncs.is_empty() {
+            vec![Msc::direct(EdgeKind::Hb)]
+        } else if self.publish_syncs.is_empty() {
+            // Acquire-only (publication on every write): the reader
+            // still has to acquire visibility.
+            self.acquire_syncs
+                .iter()
+                .map(|&a| Msc::new(vec![a], vec![EdgeKind::Hb, EdgeKind::Po]))
+                .collect()
+        } else if self.acquire_syncs.is_empty() {
+            self.publish_syncs
+                .iter()
+                .map(|&p| Msc::new(vec![p], vec![first, EdgeKind::Hb]))
+                .collect()
+        } else {
+            let mut v = Vec::new();
+            for &p in &self.publish_syncs {
+                for &a in &self.acquire_syncs {
+                    v.push(Msc::new(vec![p, a], vec![first, EdgeKind::Hb, EdgeKind::Po]));
+                }
+            }
+            v
+        };
+        let mut sync_ops = Vec::new();
+        for &k in self.publish_syncs.iter().chain(&self.acquire_syncs) {
+            if !sync_ops.contains(&k) {
+                sync_ops.push(k);
+            }
+        }
+        ConsistencyModel {
+            name: name.into(),
+            sync_ops,
+            mscs,
+        }
+    }
+
+    /// Parse a policy from a `[model.<name>]` config section. Only
+    /// `publication` and `acquisition` are required; sync-op labels
+    /// default to sensible kinds for the chosen shape, and every field
+    /// has an explicit key (see DESIGN.md §Policy-Interpretation for
+    /// the full grammar).
+    pub fn from_ini(map: &BTreeMap<String, String>) -> Result<Self, String> {
+        let mut p = Self::posix();
+        let parse_bool = |k: &str, v: &str| -> Result<bool, String> {
+            match v {
+                "true" | "yes" | "1" => Ok(true),
+                "false" | "no" | "0" => Ok(false),
+                other => Err(format!("{k}: `{other}` is not a bool")),
+            }
+        };
+        let parse_syncs = |v: &str| -> Result<Vec<SyncKind>, String> {
+            v.split(',')
+                .map(|s| parse_sync_kind(s.trim()))
+                .collect()
+        };
+        for (k, v) in map {
+            match k.as_str() {
+                "display" => {} // consumed by the registry, not the policy
+                "publication" => p.publication = Publication::parse(v)?,
+                "acquisition" => p.acquisition = Acquisition::parse(v)?,
+                "refresh_on_publish" => p.refresh_on_publish = parse_bool(k, v)?,
+                "acquire_on_open" => p.acquire_on_open = parse_bool(k, v)?,
+                "publish_on_close" => p.publish_on_close = parse_bool(k, v)?,
+                "relaxed_publication" => p.relaxed_publication = parse_bool(k, v)?,
+                "publish_sync" => p.publish_syncs = parse_syncs(v)?,
+                "acquire_sync" => p.acquire_syncs = parse_syncs(v)?,
+                other => return Err(format!("unknown model key `{other}`")),
+            }
+        }
+        // Default sync-op labels by shape, so a minimal block like
+        // `publication = phase_end` is already a complete model.
+        if p.publish_syncs.is_empty() && p.publication != Publication::EveryWrite {
+            p.publish_syncs = match p.acquisition {
+                Acquisition::PerRead => vec![SyncKind::Commit],
+                Acquisition::Snapshot { .. } => vec![SyncKind::SessionClose],
+            };
+        }
+        if p.acquire_syncs.is_empty() && p.acquisition.is_snapshot() {
+            p.acquire_syncs = vec![SyncKind::SessionOpen];
+        }
+        // Trace labels: the phase hooks record the primary ops.
+        if p.publication == Publication::PhaseEnd {
+            p.end_write_sync = p.publish_syncs.first().copied();
+        }
+        if p.acquisition.is_snapshot() {
+            p.begin_read_sync = p.acquire_syncs.first().copied();
+        }
+        if p.publication == Publication::OnClose || p.publish_on_close {
+            p.close_sync = p.publish_syncs.first().copied();
+        }
+        if p.acquire_on_open {
+            p.open_sync = p.acquire_syncs.last().copied();
+        }
+        Ok(p)
+    }
+}
+
+/// Parse a sync-op label from config text.
+fn parse_sync_kind(s: &str) -> Result<SyncKind, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "commit" => Ok(SyncKind::Commit),
+        "session_open" => Ok(SyncKind::SessionOpen),
+        "session_close" => Ok(SyncKind::SessionClose),
+        "mpi_file_open" => Ok(SyncKind::MpiFileOpen),
+        "mpi_file_close" => Ok(SyncKind::MpiFileClose),
+        "mpi_file_sync" => Ok(SyncKind::MpiFileSync),
+        other => match other.strip_prefix("custom:") {
+            Some(id) => id
+                .parse::<u16>()
+                .map(SyncKind::Custom)
+                .map_err(|e| format!("custom sync id `{id}`: {e}")),
+            None => Err(format!(
+                "unknown sync op `{other}` \
+                 (commit|session_open|session_close|mpi_file_open|mpi_file_close|mpi_file_sync|custom:<id>)"
+            )),
+        },
+    }
+}
+
+/// One registered consistency model: key, Table-4 display name, the
+/// executable policy, and the formal definition derived from it.
+#[derive(Debug, Clone)]
+pub struct ModelDef {
+    /// Canonical lowercase key (CLI flags, scenario ids, config).
+    pub name: &'static str,
+    /// Table-4 style display name (`pscnf models`, race reports).
+    pub display: &'static str,
+    /// Extra accepted spellings for [`FsKind::parse`].
+    pub aliases: &'static [&'static str],
+    pub policy: SyncPolicy,
+    /// `policy.derive_model(display)`, precomputed at registration.
+    pub formal: ConsistencyModel,
+}
+
+fn builtin(
+    name: &'static str,
+    display: &'static str,
+    aliases: &'static [&'static str],
+    policy: SyncPolicy,
+) -> ModelDef {
+    let formal = policy.derive_model(display);
+    ModelDef {
+        name,
+        display,
+        aliases,
+        policy,
+        formal,
+    }
+}
+
+fn registry() -> &'static RwLock<Vec<ModelDef>> {
+    static REGISTRY: OnceLock<RwLock<Vec<ModelDef>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        // Index order is load-bearing: the associated constants below
+        // are indices into this vector.
+        let defs = vec![
+            builtin("posix", "POSIX", &[], SyncPolicy::posix()),
+            builtin("commit", "Commit", &[], SyncPolicy::commit()),
+            builtin("session", "Session", &[], SyncPolicy::session()),
+            builtin("mpiio", "MPI-IO", &["mpi-io"], SyncPolicy::mpiio()),
+            builtin(
+                "commit_strict",
+                "Commit(strict)",
+                &["commit-strict"],
+                SyncPolicy::commit_strict(),
+            ),
+            builtin("cto", "Close-to-open", &["close-to-open"], SyncPolicy::cto()),
+            builtin("eventual", "Eventual", &[], SyncPolicy::eventual()),
+        ];
+        assert_eq!(
+            defs.len(),
+            FsKind::BUILTIN_COUNT as usize,
+            "keep FsKind::BUILTIN_COUNT in sync with the seeded registry"
+        );
+        RwLock::new(defs)
+    })
+}
+
+/// Handle of a registered consistency model — `Copy`, order-stable, and
+/// the key every scenario, sweep cell and CLI flag carries. The name
+/// predates the registry (it used to be a closed four-variant enum);
+/// it is kept because "which file system" is exactly what the handle
+/// still answers.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FsKind(u16);
+
+impl std::fmt::Debug for FsKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FsKind({})", self.name())
+    }
+}
+
+impl FsKind {
+    pub const POSIX: FsKind = FsKind(0);
+    pub const COMMIT: FsKind = FsKind(1);
+    pub const SESSION: FsKind = FsKind(2);
+    pub const MPIIO: FsKind = FsKind(3);
+    pub const COMMIT_STRICT: FsKind = FsKind(4);
+    pub const CTO: FsKind = FsKind(5);
+    pub const EVENTUAL: FsKind = FsKind(6);
+
+    /// The paper's four models, in Table 6 order — the set every figure
+    /// family of the bench registry iterates.
+    pub const PAPER: [FsKind; 4] = [
+        FsKind::POSIX,
+        FsKind::COMMIT,
+        FsKind::SESSION,
+        FsKind::MPIIO,
+    ];
+
+    const BUILTIN_COUNT: u16 = 7;
+
+    fn with_def<T>(self, f: impl FnOnce(&ModelDef) -> T) -> T {
+        let reg = registry().read().unwrap();
+        let def = reg
+            .get(self.0 as usize)
+            .unwrap_or_else(|| panic!("FsKind({}) is not registered", self.0));
+        f(def)
+    }
+
+    /// Canonical lowercase name (scenario ids, CLI, config).
+    pub fn name(self) -> &'static str {
+        self.with_def(|d| d.name)
+    }
+
+    /// Table-4 style display name.
+    pub fn display(self) -> &'static str {
+        self.with_def(|d| d.display)
+    }
+
+    /// The executable synchronization policy.
+    pub fn policy(self) -> SyncPolicy {
+        self.with_def(|d| d.policy.clone())
+    }
+
+    /// The formal `S` + MSC definition (what the race detector checks).
+    pub fn model(self) -> ConsistencyModel {
+        self.with_def(|d| d.formal.clone())
+    }
+
+    /// Ships with the binary (vs registered from config at runtime)?
+    /// Only built-ins may own gated CI bench cells: a TOML model is not
+    /// guaranteed to exist in the baseline run.
+    pub fn is_builtin(self) -> bool {
+        self.0 < Self::BUILTIN_COUNT
+    }
+
+    /// Every registered model, registration order (paper four first).
+    pub fn registered() -> Vec<FsKind> {
+        (0..registry().read().unwrap().len() as u16)
+            .map(FsKind)
+            .collect()
+    }
+
+    /// All valid names, for error messages and `--help`.
+    pub fn valid_names() -> Vec<&'static str> {
+        registry().read().unwrap().iter().map(|d| d.name).collect()
+    }
+
+    /// Look up one model by name or alias (ASCII case-insensitive).
+    /// THE single parse path: `parse_list`, the config loader and the
+    /// bench `--models` flag all route through here, so "unknown model"
+    /// errors always report the same full set of valid names.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let want = s.trim().to_ascii_lowercase();
+        let reg = registry().read().unwrap();
+        for (i, def) in reg.iter().enumerate() {
+            if def.name == want || def.aliases.contains(&want.as_str()) {
+                return Ok(FsKind(i as u16));
+            }
+        }
+        let valid: Vec<&str> = reg.iter().map(|d| d.name).collect();
+        Err(format!(
+            "unknown consistency model `{s}` (valid: {})",
+            valid.join("|")
+        ))
+    }
+
+    /// Parse a model-list argument: `all` (every registered model),
+    /// `paper` (the Table-6 four), `both` (the pair the paper plots),
+    /// or a comma-separated list of model names. Duplicates are
+    /// rejected. One grammar shared by `pscnf run --fs` and
+    /// `pscnf bench --models`.
+    pub fn parse_list(s: &str) -> Result<Vec<FsKind>, String> {
+        match s {
+            "all" => Ok(Self::registered()),
+            "paper" => Ok(Self::PAPER.to_vec()),
+            "both" => Ok(vec![FsKind::COMMIT, FsKind::SESSION]),
+            _ => {
+                let mut out = Vec::new();
+                for part in s.split(',') {
+                    let kind = Self::parse(part)?;
+                    if out.contains(&kind) {
+                        return Err(format!(
+                            "duplicate model `{}` in `{s}` (valid: {})",
+                            kind.name(),
+                            Self::valid_names().join("|")
+                        ));
+                    }
+                    out.push(kind);
+                }
+                if out.is_empty() {
+                    return Err("empty model list".to_string());
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Register a model under `name`. Re-registering an *identical*
+    /// definition is idempotent (returns the existing handle); a
+    /// conflicting redefinition — or shadowing a built-in alias — is an
+    /// error. Names are lowercase `[a-z0-9_-]` so they can appear in
+    /// scenario ids verbatim.
+    pub fn register(
+        name: &str,
+        display: Option<&str>,
+        policy: SyncPolicy,
+    ) -> Result<FsKind, String> {
+        let name = name.trim().to_ascii_lowercase();
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+        {
+            return Err(format!(
+                "model name `{name}` must be nonempty lowercase [a-z0-9_-]"
+            ));
+        }
+        let display = display.unwrap_or(&name).to_string();
+        let mut reg = registry().write().unwrap();
+        for (i, def) in reg.iter().enumerate() {
+            if def.name == name || def.aliases.contains(&name.as_str()) {
+                if def.policy == policy && def.display == display {
+                    return Ok(FsKind(i as u16));
+                }
+                return Err(format!(
+                    "model `{name}` is already registered with a different definition"
+                ));
+            }
+        }
+        // Names live for the process (a handful of registrations, each
+        // a few bytes): leaking keeps `name()` a cheap &'static str.
+        let name: &'static str = Box::leak(name.into_boxed_str());
+        let display: &'static str = Box::leak(display.into_boxed_str());
+        let formal = policy.derive_model(display);
+        reg.push(ModelDef {
+            name,
+            display,
+            aliases: &[],
+            policy,
+            formal,
+        });
+        Ok(FsKind(reg.len() as u16 - 1))
+    }
+
+    /// Register every `[model.<name>]` section of a parsed config file;
+    /// returns the handles in section-name order (the INI parser stores
+    /// sections in a `BTreeMap`, so file order is not preserved). This
+    /// is what makes a model defined *only* in TOML runnable through
+    /// the scenario matrix.
+    pub fn register_from_ini(
+        ini: &BTreeMap<String, BTreeMap<String, String>>,
+    ) -> Result<Vec<FsKind>, String> {
+        let mut out = Vec::new();
+        for (section, map) in ini {
+            let Some(name) = section.strip_prefix("model.") else {
+                continue;
+            };
+            let policy = SyncPolicy::from_ini(map)
+                .map_err(|e| format!("[model.{name}]: {e}"))?;
+            let display = map.get("display").map(|s| s.as_str());
+            out.push(
+                Self::register(name, display, policy)
+                    .map_err(|e| format!("[model.{name}]: {e}"))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// The Table-4 rows of every registered model as a markdown table —
+/// what `pscnf models --markdown` prints.
+pub fn model_table_markdown() -> String {
+    model_table_markdown_for(&FsKind::registered())
+}
+
+/// [`model_table_markdown`] restricted to `kinds`. The built-in subset
+/// is the single source the README's model table is generated from (a
+/// test pins the README against this string, so docs cannot drift).
+pub fn model_table_markdown_for(kinds: &[FsKind]) -> String {
+    let mut out = String::from("| model | name | S | MSC |\n|---|---|---|---|\n");
+    for &kind in kinds {
+        let m = kind.model();
+        let (s, msc) = m.describe();
+        out.push_str(&format!(
+            "| `{}` | {} | `{}` | `{}` |\n",
+            kind.name(),
+            m.name,
+            s,
+            msc.replace("  |  ", "` \\| `")
+        ));
+    }
+    out
+}
+
+/// The built-in models, registration order — the subset the README
+/// table embeds (runtime-registered models can't appear in a committed
+/// file). Derived from `BUILTIN_COUNT`, which the registry seed
+/// asserts against, so it cannot fall out of sync with the registry.
+pub fn builtin_kinds() -> Vec<FsKind> {
+    (0..FsKind::BUILTIN_COUNT).map(FsKind).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canned_policies_derive_table4() {
+        // Table 4 is executable by construction: the formal models the
+        // race detector consumes are DERIVED from the same policies the
+        // FS layer interprets, and match the paper's rows exactly.
+        let posix = SyncPolicy::posix().derive_model("POSIX");
+        assert_eq!(posix.describe().1, "--hb-->");
+        let commit = SyncPolicy::commit().derive_model("Commit");
+        assert_eq!(commit.describe().1, "--hb--> commit --hb-->");
+        let strict = SyncPolicy::commit_strict().derive_model("Commit(strict)");
+        assert_eq!(strict.describe().1, "--po--> commit --hb-->");
+        let session = SyncPolicy::session().derive_model("Session");
+        assert_eq!(
+            session.describe().1,
+            "--po--> session_close --hb--> session_open --po-->"
+        );
+        let mpiio = SyncPolicy::mpiio().derive_model("MPI-IO");
+        assert_eq!(mpiio.mscs.len(), 4, "sync duality cross product");
+        assert_eq!(mpiio.sync_ops.len(), 3);
+        for msc in &mpiio.mscs {
+            assert_eq!(msc.edges[0], EdgeKind::Po);
+            assert_eq!(msc.edges[1], EdgeKind::Hb);
+            assert_eq!(msc.edges[2], EdgeKind::Po);
+        }
+    }
+
+    #[test]
+    fn extension_models_formal_shape() {
+        // cto interprets the SAME formal model as session (relaxed
+        // snapshot lifetime is an implementation liberty, not a formal
+        // one); eventual shares strict commit's MSC with close as the
+        // committing op.
+        assert_eq!(
+            SyncPolicy::cto().derive_model("x").mscs,
+            SyncPolicy::session().derive_model("x").mscs
+        );
+        assert_eq!(
+            SyncPolicy::eventual().derive_model("x").mscs,
+            SyncPolicy::commit_strict().derive_model("x").mscs
+        );
+    }
+
+    #[test]
+    fn builtin_lookup_and_names() {
+        assert_eq!(FsKind::POSIX.name(), "posix");
+        assert_eq!(FsKind::MPIIO.display(), "MPI-IO");
+        assert_eq!(FsKind::parse("MPI-IO").unwrap(), FsKind::MPIIO);
+        assert_eq!(FsKind::parse("commit_strict").unwrap(), FsKind::COMMIT_STRICT);
+        assert_eq!(FsKind::parse("close-to-open").unwrap(), FsKind::CTO);
+        assert!(FsKind::PAPER.iter().all(|k| k.is_builtin()));
+    }
+
+    #[test]
+    fn parse_errors_list_all_valid_names() {
+        // Check against the built-ins (always registered before any
+        // parse); sibling tests may register more concurrently, so the
+        // full dynamic list can't be asserted race-free here.
+        let err = FsKind::parse("zfs").unwrap_err();
+        for name in [
+            "posix",
+            "commit",
+            "session",
+            "mpiio",
+            "commit_strict",
+            "cto",
+            "eventual",
+        ] {
+            assert!(err.contains(name), "error `{err}` misses `{name}`");
+        }
+    }
+
+    #[test]
+    fn parse_list_grammar_and_duplicates() {
+        assert_eq!(FsKind::parse_list("paper").unwrap(), FsKind::PAPER.to_vec());
+        assert_eq!(
+            FsKind::parse_list("both").unwrap(),
+            vec![FsKind::COMMIT, FsKind::SESSION]
+        );
+        assert_eq!(
+            FsKind::parse_list("posix, mpiio").unwrap(),
+            vec![FsKind::POSIX, FsKind::MPIIO]
+        );
+        let all = FsKind::parse_list("all").unwrap();
+        assert!(all.len() >= 7 && all[..4] == FsKind::PAPER);
+        assert!(FsKind::parse_list("zfs").is_err());
+        assert!(FsKind::parse_list("").is_err());
+        let dup = FsKind::parse_list("commit,session,commit").unwrap_err();
+        assert!(dup.contains("duplicate model `commit`"), "{dup}");
+        assert!(dup.contains("posix"), "duplicate error lists valid names");
+        // Aliases dedup too.
+        assert!(FsKind::parse_list("mpiio,MPI-IO").is_err());
+    }
+
+    #[test]
+    fn register_rejects_conflicts_and_is_idempotent() {
+        let policy = SyncPolicy::commit_strict();
+        let a = FsKind::register("policy_test_model", None, policy.clone()).unwrap();
+        let b = FsKind::register("policy_test_model", None, policy).unwrap();
+        assert_eq!(a, b, "identical re-registration is idempotent");
+        assert!(!a.is_builtin());
+        let err =
+            FsKind::register("policy_test_model", None, SyncPolicy::session()).unwrap_err();
+        assert!(err.contains("different definition"));
+        assert!(FsKind::register("commit", None, SyncPolicy::session()).is_err());
+        assert!(FsKind::register("mpi-io", None, SyncPolicy::session()).is_err());
+        assert!(FsKind::register("Bad Name!", None, SyncPolicy::posix()).is_err());
+        assert!(FsKind::parse("policy_test_model").is_ok());
+    }
+
+    #[test]
+    fn from_ini_minimal_and_full() {
+        let mut map = BTreeMap::new();
+        map.insert("publication".to_string(), "phase_end".to_string());
+        map.insert("acquisition".to_string(), "session_snapshot".to_string());
+        let p = SyncPolicy::from_ini(&map).unwrap();
+        assert_eq!(p.publish_syncs, vec![SyncKind::SessionClose]);
+        assert_eq!(p.acquire_syncs, vec![SyncKind::SessionOpen]);
+        assert_eq!(p.end_write_sync, Some(SyncKind::SessionClose));
+        assert_eq!(p.begin_read_sync, Some(SyncKind::SessionOpen));
+        // A minimal session block IS session consistency.
+        assert_eq!(
+            p.derive_model("x").mscs,
+            SyncPolicy::session().derive_model("x").mscs
+        );
+
+        let mut map = BTreeMap::new();
+        map.insert("publication".to_string(), "phase_end".to_string());
+        map.insert("acquisition".to_string(), "per_read".to_string());
+        map.insert("relaxed_publication".to_string(), "true".to_string());
+        map.insert("publish_sync".to_string(), "custom:7".to_string());
+        let p = SyncPolicy::from_ini(&map).unwrap();
+        assert_eq!(p.publish_syncs, vec![SyncKind::Custom(7)]);
+        assert!(p.relaxed_publication);
+
+        let mut bad = BTreeMap::new();
+        bad.insert("publicaton".to_string(), "phase_end".to_string());
+        assert!(SyncPolicy::from_ini(&bad).unwrap_err().contains("unknown model key"));
+    }
+
+    #[test]
+    fn register_from_ini_sections() {
+        let mut ini = BTreeMap::new();
+        let mut sec = BTreeMap::new();
+        sec.insert("publication".to_string(), "on_close".to_string());
+        sec.insert("acquisition".to_string(), "per_read".to_string());
+        sec.insert("publish_sync".to_string(), "commit".to_string());
+        sec.insert("display".to_string(), "IniModel".to_string());
+        ini.insert("model.ini_test_model".to_string(), sec);
+        ini.insert("cluster".to_string(), BTreeMap::new()); // ignored
+        let kinds = FsKind::register_from_ini(&ini).unwrap();
+        assert_eq!(kinds.len(), 1);
+        assert_eq!(kinds[0].name(), "ini_test_model");
+        assert_eq!(kinds[0].display(), "IniModel");
+        assert_eq!(kinds[0].policy().publication, Publication::OnClose);
+        // The registered model is immediately parseable and listed.
+        assert!(FsKind::parse("ini_test_model").is_ok());
+        assert!(FsKind::registered().contains(&kinds[0]));
+    }
+
+    #[test]
+    fn model_table_covers_every_builtin_model() {
+        let table = model_table_markdown_for(&builtin_kinds());
+        for kind in builtin_kinds() {
+            assert!(
+                table.contains(&format!("| `{}` |", kind.name())),
+                "table misses {}",
+                kind.name()
+            );
+        }
+        assert!(table.contains("--po--> session_close --hb--> session_open --po-->"));
+    }
+
+    #[test]
+    fn readme_model_table_is_generated_from_describe() {
+        // The README embeds the built-in model table between markers;
+        // it must match `model_table_markdown_for(builtins)` byte for
+        // byte, so the docs cannot drift from the code-derived Table 4.
+        let readme_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md");
+        let readme = std::fs::read_to_string(readme_path).expect("read README.md");
+        const BEGIN: &str = "<!-- BEGIN GENERATED MODEL TABLE (pscnf models --markdown) -->\n";
+        const END: &str = "<!-- END GENERATED MODEL TABLE -->";
+        let start = readme.find(BEGIN).expect("README misses table BEGIN marker") + BEGIN.len();
+        let end = readme[start..]
+            .find(END)
+            .map(|i| start + i)
+            .expect("README misses table END marker");
+        assert_eq!(
+            &readme[start..end],
+            model_table_markdown_for(&builtin_kinds()),
+            "README model table drifted — regenerate with `pscnf models --markdown`"
+        );
+    }
+}

@@ -25,7 +25,7 @@ pub struct StorageRace {
 /// Full verdict for a trace under a model.
 #[derive(Debug, Clone)]
 pub struct RaceReport {
-    pub model: &'static str,
+    pub model: String,
     pub races: Vec<StorageRace>,
     /// Conflicting pairs that were properly synchronized (for reporting).
     pub synchronized_pairs: usize,
@@ -68,7 +68,7 @@ pub fn detect(trace: &Trace, model: &ConsistencyModel) -> Result<RaceReport, Cyc
     }
 
     Ok(RaceReport {
-        model: model.name,
+        model: model.name.clone(),
         races,
         synchronized_pairs: synchronized,
     })

@@ -21,7 +21,7 @@ use crate::basefs::{DesFabric, FabricCounters, FileId};
 use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
-use crate::workload::build_fs;
+use crate::workload::{build_fs_with, LayerFactory};
 
 /// HACC-IO checkpoint layout.
 #[derive(Debug, Clone)]
@@ -173,10 +173,19 @@ pub struct ScrDriver {
 
 impl ScrDriver {
     pub fn new(kind: FsKind, params: ScrParams) -> Self {
+        Self::new_with_layers(
+            &|kind, id, bb| Box::new(crate::fs::PolicyFs::new(kind, id, bb)),
+            kind,
+            params,
+        )
+    }
+
+    /// [`Self::new`] with an explicit layer factory (differential pin).
+    pub fn new_with_layers(make: LayerFactory, kind: FsKind, params: ScrParams) -> Self {
         let nranks = params.nranks();
         let node_of: Vec<usize> = (0..nranks).map(|r| r / params.ppn).collect();
         let mut fabric = DesFabric::new_phantom(node_of);
-        let mut fs = build_fs(kind, &fabric);
+        let mut fs = build_fs_with(make, kind, &fabric);
         let compute = params.compute_ranks();
         // File-per-process: own checkpoint + the partner copy one hosts.
         let mut own_file = vec![0; nranks];
@@ -453,7 +462,7 @@ mod run_tests {
 
     #[test]
     fn scr_emulation_completes_both_models() {
-        for kind in [FsKind::Commit, FsKind::Session] {
+        for kind in [FsKind::COMMIT, FsKind::SESSION] {
             let rep = run(kind, 4);
             assert!(rep.ckpt_bw() > 0.0, "{kind:?}");
             assert!(rep.restart_bw() > 0.0, "{kind:?}");
@@ -463,8 +472,8 @@ mod run_tests {
     #[test]
     fn ckpt_bw_model_insensitive_restart_sensitive() {
         // Fig 5: checkpoint bandwidth ~equal; restart favors session.
-        let c = run(FsKind::Commit, 6);
-        let s = run(FsKind::Session, 6);
+        let c = run(FsKind::COMMIT, 6);
+        let s = run(FsKind::SESSION, 6);
         let ckpt_ratio = s.ckpt_bw() / c.ckpt_bw();
         assert!((0.85..1.15).contains(&ckpt_ratio), "ckpt ratio {ckpt_ratio}");
         assert!(
@@ -479,7 +488,7 @@ mod run_tests {
     fn restart_reads_come_from_memory() {
         // Restart bandwidth should far exceed SSD read bandwidth since
         // reads are served from memory buffers.
-        let rep = run(FsKind::Session, 4);
+        let rep = run(FsKind::SESSION, 4);
         let nodes_active = (rep.nodes - 2) as f64;
         assert!(
             rep.restart_bw() > nodes_active * 2e9,

@@ -3,17 +3,21 @@
 //!
 //! [`RecordingFs`] wraps any [`WorkloadFs`] and logs every data and
 //! synchronization storage operation into a shared [`model::Trace`],
-//! mapping each layer's API onto the framework's operation vocabulary
-//! (CommitFS `end_write_phase` → `commit`, SessionFS phases →
-//! `session_close`/`session_open`, MpiioFS phases → `MPI_File_sync`).
+//! labelling each hook with the sync-op kinds the layer's
+//! [`SyncPolicy`] declares (`end_write_sync`, `begin_read_sync`,
+//! `open_sync`, `close_sync`) — so the mapping works for every
+//! registered model, including ones defined only in config.
 //! Barriers/collectives add the so-edges. After the run, `race::detect`
 //! answers "was this execution properly synchronized under model X?" —
-//! the programmer-facing *correctness* use case of §1.
+//! the programmer-facing *correctness* use case of §1, and the
+//! executable half of the conformance bridge
+//! (`tests/model_conformance.rs`).
 
 use crate::basefs::{BfsError, ClientCore, Fabric, FileId};
 use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
 use crate::model::op::{OpId, StorageOp, SyncKind};
+use crate::model::policy::SyncPolicy;
 use crate::model::trace::Trace;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -99,15 +103,19 @@ impl SharedTrace {
 pub struct RecordingFs<T: WorkloadFs> {
     pub inner: T,
     trace: SharedTrace,
+    /// The layer's policy, cached for its trace-label fields.
+    policy: SyncPolicy,
     /// True right after a barrier: the next recorded op gets so-edges.
     after_barrier: bool,
 }
 
 impl<T: WorkloadFs> RecordingFs<T> {
     pub fn new(inner: T, trace: SharedTrace) -> Self {
+        let policy = inner.kind().policy();
         Self {
             inner,
             trace,
+            policy,
             after_barrier: false,
         }
     }
@@ -127,13 +135,10 @@ impl<T: WorkloadFs> RecordingFs<T> {
     }
 
     fn phase_sync_kind(&self, write_side: bool) -> Option<SyncKind> {
-        match (self.inner.kind(), write_side) {
-            (FsKind::Commit, true) => Some(SyncKind::Commit),
-            (FsKind::Commit, false) => None,
-            (FsKind::Session, true) => Some(SyncKind::SessionClose),
-            (FsKind::Session, false) => Some(SyncKind::SessionOpen),
-            (FsKind::Mpiio, _) => Some(SyncKind::MpiFileSync),
-            (FsKind::Posix, _) => None,
+        if write_side {
+            self.policy.end_write_sync
+        } else {
+            self.policy.begin_read_sync
         }
     }
 }
@@ -148,11 +153,21 @@ impl<T: WorkloadFs> WorkloadFs for RecordingFs<T> {
     }
 
     fn open(&mut self, fabric: &mut dyn Fabric, path: &str) -> FileId {
-        self.inner.open(fabric, path)
+        let file = self.inner.open(fabric, path);
+        if let Some(kind) = self.policy.open_sync {
+            // MPI_File_open-style acquiring opens are sync ops.
+            self.record(file, |f| StorageOp::sync(kind, f));
+        }
+        file
     }
 
     fn close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
-        self.inner.close(fabric, file)
+        self.inner.close(fabric, file)?;
+        if let Some(kind) = self.policy.close_sync {
+            // Publishing closes (MPI_File_close, eventual's commit).
+            self.record(file, |f| StorageOp::sync(kind, f));
+        }
+        Ok(())
     }
 
     fn write_at(

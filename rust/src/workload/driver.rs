@@ -13,23 +13,35 @@
 //! ```
 
 use super::spec::WorkloadParams;
-use crate::basefs::{DesFabric, FabricCounters, FileId};
-use crate::fs::{CommitFs, FsKind, MpiioFs, PosixFs, SessionFs, WorkloadFs};
+use crate::basefs::{DesFabric, FabricCounters, FileId, SharedBb};
+use crate::fs::{FsKind, PolicyFs, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
 
-/// Build one consistency-layer FS per rank over the fabric's BB stores.
+/// Per-rank layer constructor — how drivers build their FS stacks.
+/// Production code always uses the [`PolicyFs`] factory via
+/// [`build_fs`]; the differential-pin tests pass
+/// `crate::fs::legacy::build` to run the frozen reference layers
+/// through the identical driver machinery.
+pub type LayerFactory<'a> = &'a dyn Fn(FsKind, u32, SharedBb) -> Box<dyn WorkloadFs>;
+
+/// Build one policy-interpreted consistency layer per rank over the
+/// fabric's BB stores — works for ANY registered model, including ones
+/// defined only in a `[model.<name>]` config block.
 pub fn build_fs(kind: FsKind, fabric: &DesFabric) -> Vec<Box<dyn WorkloadFs>> {
+    build_fs_with(&|kind, id, bb| Box::new(PolicyFs::new(kind, id, bb)), kind, fabric)
+}
+
+/// [`build_fs`] with an explicit per-rank layer factory.
+pub fn build_fs_with(
+    make: LayerFactory,
+    kind: FsKind,
+    fabric: &DesFabric,
+) -> Vec<Box<dyn WorkloadFs>> {
     (0..fabric.nranks())
-        .map(|r| -> Box<dyn WorkloadFs> {
+        .map(|r| {
             let id = r as u32;
-            let bb = fabric.bb_of(id);
-            match kind {
-                FsKind::Posix => Box::new(PosixFs::new(id, bb)),
-                FsKind::Commit => Box::new(CommitFs::new(id, bb)),
-                FsKind::Session => Box::new(SessionFs::new(id, bb)),
-                FsKind::Mpiio => Box::new(MpiioFs::new(id, bb)),
-            }
+            make(kind, id, fabric.bb_of(id))
         })
         .collect()
 }
@@ -128,6 +140,26 @@ impl SyntheticDriver {
     }
 
     fn with_fabric(kind: FsKind, params: WorkloadParams, phantom: bool, shards: usize) -> Self {
+        Self::new_with_layers(
+            &|kind, id, bb| Box::new(PolicyFs::new(kind, id, bb)),
+            kind,
+            params,
+            phantom,
+            shards,
+        )
+    }
+
+    /// [`Self::with_fabric`] with an explicit layer factory — the entry
+    /// point of the differential pin (`tests/policy_differential.rs`),
+    /// which runs the frozen legacy layers through the very same driver
+    /// and asserts bit-for-bit equal reports.
+    pub fn new_with_layers(
+        make: LayerFactory,
+        kind: FsKind,
+        params: WorkloadParams,
+        phantom: bool,
+        shards: usize,
+    ) -> Self {
         let nranks = params.nranks();
         let node_of: Vec<usize> = (0..nranks).map(|r| r / params.p).collect();
         let fabric = if phantom {
@@ -135,7 +167,7 @@ impl SyntheticDriver {
         } else {
             DesFabric::new_sharded(node_of, shards)
         };
-        let mut fs = build_fs(kind, &fabric);
+        let mut fs = build_fs_with(make, kind, &fabric);
         let mut fabric = fabric;
         // Open the shared file(s) everywhere up front (the paper
         // measures the I/O phases, not the initial open). The single-
@@ -151,7 +183,8 @@ impl SyntheticDriver {
                 }
             }
         }
-        // Drop any costs from layer-specific opens (MpiioFs queries).
+        // Drop any costs from policy-specific opens (acquire-on-open
+        // models refresh their snapshot at open).
         for r in 0..nranks {
             while fabric.pop_cost(r as u32).is_some() {}
         }
@@ -335,7 +368,7 @@ mod tests {
 
     #[test]
     fn write_only_runs_and_reports() {
-        let rep = run(FsKind::Commit, Config::CnW, 2, 8 << 10);
+        let rep = run(FsKind::COMMIT, Config::CnW, 2, 8 << 10);
         assert!(rep.write_bw() > 0.0);
         assert_eq!(rep.read_bytes, 0);
         assert_eq!(rep.read_bw(), 0.0);
@@ -345,8 +378,8 @@ mod tests {
     #[test]
     fn session_and_commit_similar_on_writes() {
         // §6.1.1: write-only workloads perform ~the same under both.
-        let a = run(FsKind::Commit, Config::CnW, 4, 8 << 20);
-        let b = run(FsKind::Session, Config::CnW, 4, 8 << 20);
+        let a = run(FsKind::COMMIT, Config::CnW, 4, 8 << 20);
+        let b = run(FsKind::SESSION, Config::CnW, 4, 8 << 20);
         let ratio = a.write_bw() / b.write_bw();
         assert!((0.9..1.1).contains(&ratio), "ratio {ratio}");
     }
@@ -354,8 +387,8 @@ mod tests {
     #[test]
     fn cn_w_and_sn_w_similar() {
         // §6.1.1: BB buffering converts N-1 to N-N, pattern-independent.
-        let a = run(FsKind::Commit, Config::CnW, 4, 8 << 20);
-        let b = run(FsKind::Commit, Config::SnW, 4, 8 << 20);
+        let a = run(FsKind::COMMIT, Config::CnW, 4, 8 << 20);
+        let b = run(FsKind::COMMIT, Config::SnW, 4, 8 << 20);
         let ratio = a.write_bw() / b.write_bw();
         assert!((0.9..1.1).contains(&ratio), "ratio {ratio}");
     }
@@ -364,7 +397,7 @@ mod tests {
     fn large_writes_approach_peak() {
         // 8 MiB writes should reach ~n × 1 GB/s aggregate.
         let n = 4;
-        let rep = run(FsKind::Session, Config::CnW, n, 8 << 20);
+        let rep = run(FsKind::SESSION, Config::CnW, n, 8 << 20);
         let per_node = rep.write_bw() / n as f64;
         assert!(
             per_node > 0.85e9,
@@ -380,8 +413,8 @@ mod tests {
             let params = Config::CcR.params(8, 12, 8 << 10, 10, 7);
             SyntheticDriver::new(kind, params).run(Cluster::catalyst(8, 99))
         };
-        let commit = run_full(FsKind::Commit);
-        let session = run_full(FsKind::Session);
+        let commit = run_full(FsKind::COMMIT);
+        let session = run_full(FsKind::SESSION);
         assert!(
             session.read_bw() > 1.5 * commit.read_bw(),
             "session {} vs commit {}",
@@ -395,8 +428,8 @@ mod tests {
     #[test]
     fn large_reads_models_comparable() {
         // Fig 4a: at 8 MiB the consistency model impact is negligible.
-        let commit = run(FsKind::Commit, Config::CcR, 4, 8 << 20);
-        let session = run(FsKind::Session, Config::CcR, 4, 8 << 20);
+        let commit = run(FsKind::COMMIT, Config::CcR, 4, 8 << 20);
+        let session = run(FsKind::SESSION, Config::CcR, 4, 8 << 20);
         let ratio = session.read_bw() / commit.read_bw();
         assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
     }
@@ -407,7 +440,7 @@ mod tests {
         // writers' bytes (zeros written => zeros read; the visibility
         // invariants are checked inside the FS layers).
         let params = Config::CcR.params(2, 2, 4096, 2, 3);
-        let driver = SyntheticDriver::new_with_data(FsKind::Session, params);
+        let driver = SyntheticDriver::new_with_data(FsKind::SESSION, params);
         let rep = driver.run(Cluster::catalyst(2, 1));
         assert!(rep.read_bw() > 0.0);
     }
@@ -420,16 +453,16 @@ mod tests {
             let params = Config::CnW.params(4, 12, 8 << 10, 10, 7);
             SyntheticDriver::new(kind, params).run(Cluster::catalyst(4, 99))
         };
-        let posix = run_full(FsKind::Posix);
-        let commit = run_full(FsKind::Commit);
+        let posix = run_full(FsKind::POSIX);
+        let commit = run_full(FsKind::COMMIT);
         assert!(posix.rpcs > commit.rpcs * 2);
         assert!(posix.write_bw() < commit.write_bw());
     }
 
     #[test]
     fn deterministic_reports() {
-        let a = run(FsKind::Session, Config::CsR, 4, 8 << 10);
-        let b = run(FsKind::Session, Config::CsR, 4, 8 << 10);
+        let a = run(FsKind::SESSION, Config::CsR, 4, 8 << 10);
+        let b = run(FsKind::SESSION, Config::CsR, 4, 8 << 10);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.rpcs, b.rpcs);
     }
@@ -444,7 +477,7 @@ mod tests {
         // proves the new batched sync path emits the historical per-file
         // SimOps/counters, and tests/shard_plane.rs proves plane
         // responses are shard-count-independent.
-        for kind in [FsKind::Commit, FsKind::Session, FsKind::Posix] {
+        for kind in [FsKind::COMMIT, FsKind::SESSION, FsKind::POSIX] {
             let params = Config::CcR.params(4, 4, 8 << 10, 6, 7);
             let old = SyntheticDriver::new(kind, params.clone())
                 .run(Cluster::catalyst(4, 99));
@@ -471,7 +504,7 @@ mod tests {
                 UpfsParams::catalyst_lustre(),
                 99,
             );
-            SyntheticDriver::new_sharded(FsKind::Commit, params, shards)
+            SyntheticDriver::new_sharded(FsKind::COMMIT, params, shards)
                 .run(cluster)
                 .read_bw()
         };
@@ -488,7 +521,7 @@ mod tests {
         // Non-phantom CC-R over 4 files and 4 shards: the visibility
         // invariants (reader sees writer bytes) must survive striping.
         let params = Config::CcR.params(2, 2, 4096, 4, 3).with_files(4);
-        for kind in [FsKind::Session, FsKind::Commit] {
+        for kind in [FsKind::SESSION, FsKind::COMMIT] {
             let driver = SyntheticDriver::new_with_data_sharded(kind, params.clone(), 4);
             let rep = driver.run(Cluster::catalyst(2, 1));
             assert!(rep.read_bw() > 0.0, "{kind:?}");

@@ -5,5 +5,5 @@
 pub mod driver;
 pub mod spec;
 
-pub use driver::{build_fs, PhaseReport, SyntheticDriver};
+pub use driver::{build_fs, build_fs_with, LayerFactory, PhaseReport, SyntheticDriver};
 pub use spec::{Config, Pattern, WorkloadParams};

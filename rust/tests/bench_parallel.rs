@@ -42,8 +42,8 @@ fn cell_records_are_independent_of_execution_order() {
     let mut subset: Vec<Scenario> = smoke_virtual()
         .into_iter()
         .filter(|s| {
-            s.fs == FsKind::Session
-                || (s.fs == FsKind::Commit && s.id.contains("CC-R/8KiB"))
+            s.fs == FsKind::SESSION
+                || (s.fs == FsKind::COMMIT && s.id.contains("CC-R/8KiB"))
         })
         .collect();
     assert!(subset.len() >= 4);
@@ -67,7 +67,7 @@ fn cell_records_are_independent_of_execution_order() {
 fn wall_sidecar_tracks_input_order() {
     let scenarios: Vec<Scenario> = smoke_virtual()
         .into_iter()
-        .filter(|s| s.fs == FsKind::Posix)
+        .filter(|s| s.fs == FsKind::POSIX)
         .collect();
     let (_, walls) = run_matrix_timed(&scenarios, 2);
     assert_eq!(walls.len(), scenarios.len());

@@ -17,7 +17,7 @@ fn smoke_set() -> Vec<Scenario> {
 #[test]
 fn smoke_covers_every_model_pattern_and_workload() {
     let smoke = smoke_set();
-    for fs in FsKind::ALL {
+    for fs in FsKind::PAPER {
         for pat in [Pattern::Contiguous, Pattern::Strided, Pattern::Random] {
             assert!(
                 smoke.iter().any(|s| s.fs == fs && s.uses_pattern(pat)),
@@ -76,7 +76,7 @@ fn smoke_matrix_round_trips_through_json() {
     use pscnf::bench::BenchMatrix;
     // One cheap cell per model is enough to pin the end-to-end path the
     // CI perf-gate uses: run → dump → parse → byte-identical records.
-    let cells: Vec<Scenario> = FsKind::ALL
+    let cells: Vec<Scenario> = FsKind::PAPER
         .into_iter()
         .map(|fs| {
             smoke_set()

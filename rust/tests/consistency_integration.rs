@@ -5,17 +5,13 @@
 //! definition, checked end-to-end through the real BaseFS stack.
 
 use pscnf::basefs::TestFabric;
-use pscnf::fs::{CommitFs, FsKind, MpiioFs, PosixFs, SessionFs, WorkloadFs};
+use pscnf::fs::{FsKind, PolicyFs, WorkloadFs};
 use pscnf::interval::Range;
 use pscnf::testkit::{self, Gen};
 
 fn make_fs(kind: FsKind, id: u32, fabric: &TestFabric) -> Box<dyn WorkloadFs> {
-    match kind {
-        FsKind::Posix => Box::new(PosixFs::new(id, fabric.bb_of(id))),
-        FsKind::Commit => Box::new(CommitFs::new(id, fabric.bb_of(id))),
-        FsKind::Session => Box::new(SessionFs::new(id, fabric.bb_of(id))),
-        FsKind::Mpiio => Box::new(MpiioFs::new(id, fabric.bb_of(id))),
-    }
+    // The production layer: one policy interpreter for every model.
+    Box::new(PolicyFs::new(kind, id, fabric.bb_of(id)))
 }
 
 /// Two-phase properly-synchronized program: disjoint per-rank writes,
@@ -84,22 +80,78 @@ fn scnf_roundtrip(kind: FsKind, g: &mut Gen) -> Result<(), String> {
 
 #[test]
 fn scnf_guarantee_commit() {
-    testkit::check("SCNF commit", |g| scnf_roundtrip(FsKind::Commit, g));
+    testkit::check("SCNF commit", |g| scnf_roundtrip(FsKind::COMMIT, g));
 }
 
 #[test]
 fn scnf_guarantee_session() {
-    testkit::check("SCNF session", |g| scnf_roundtrip(FsKind::Session, g));
+    testkit::check("SCNF session", |g| scnf_roundtrip(FsKind::SESSION, g));
 }
 
 #[test]
 fn scnf_guarantee_posix() {
-    testkit::check("SCNF posix", |g| scnf_roundtrip(FsKind::Posix, g));
+    testkit::check("SCNF posix", |g| scnf_roundtrip(FsKind::POSIX, g));
 }
 
 #[test]
 fn scnf_guarantee_mpiio() {
-    testkit::check("SCNF mpiio", |g| scnf_roundtrip(FsKind::Mpiio, g));
+    testkit::check("SCNF mpiio", |g| scnf_roundtrip(FsKind::MPIIO, g));
+}
+
+#[test]
+fn scnf_guarantee_commit_strict() {
+    testkit::check("SCNF commit_strict", |g| {
+        scnf_roundtrip(FsKind::COMMIT_STRICT, g)
+    });
+}
+
+#[test]
+fn scnf_guarantee_cto() {
+    // Close-to-open: the two-phase program acquires at
+    // begin_read_phase, which is properly synchronized under its
+    // session-shaped formal model.
+    testkit::check("SCNF cto", |g| scnf_roundtrip(FsKind::CTO, g));
+}
+
+/// Eventual publication: the two-phase pattern alone is NOT properly
+/// synchronized (end_write_phase publishes nothing) — but closing the
+/// file is, and after the close every reader sees the SC outcome.
+#[test]
+fn eventual_publishes_at_close_scnf() {
+    testkit::check("SCNF eventual (close)", |g| {
+        const FILE_SIZE: u64 = 1024;
+        let nranks = g.usize(2, 3);
+        let mut fabric = TestFabric::new(nranks + 1);
+        let mut writers: Vec<Box<dyn WorkloadFs>> = (0..nranks)
+            .map(|r| make_fs(FsKind::EVENTUAL, r as u32, &fabric))
+            .collect();
+        let mut reader = make_fs(FsKind::EVENTUAL, nranks as u32, &fabric);
+        let mut file = 0;
+        for f in writers.iter_mut() {
+            file = f.open(&mut fabric, "/scnf/eventual.dat");
+        }
+        reader.open(&mut fabric, "/scnf/eventual.dat");
+        let slice = FILE_SIZE / nranks as u64;
+        let mut oracle = vec![0u8; FILE_SIZE as usize];
+        for (r, f) in writers.iter_mut().enumerate() {
+            let base = r as u64 * slice;
+            let len = g.u64(1, slice);
+            let fill = (r + 1) as u8;
+            f.write_at(&mut fabric, file, base, &vec![fill; len as usize])
+                .map_err(|e| format!("write: {e}"))?;
+            for b in &mut oracle[base as usize..(base + len) as usize] {
+                *b = fill;
+            }
+            // end_write_phase is a no-op; the CLOSE publishes.
+            f.end_write_phase(&mut fabric, file)
+                .map_err(|e| format!("end_write_phase: {e}"))?;
+            f.close(&mut fabric, file).map_err(|e| format!("close: {e}"))?;
+        }
+        let got = reader
+            .read_at(&mut fabric, file, Range::new(0, FILE_SIZE))
+            .map_err(|e| format!("read: {e}"))?;
+        testkit::ensure(got == oracle, "post-close read diverged from SC oracle")
+    });
 }
 
 /// Ownership takeover: when two ranks write the same range in different
@@ -107,18 +159,18 @@ fn scnf_guarantee_mpiio() {
 #[test]
 fn later_phase_overwrites_earlier() {
     let mut fabric = TestFabric::new(3);
-    let mut a = CommitFs::new(0, fabric.bb_of(0));
-    let mut b = CommitFs::new(1, fabric.bb_of(1));
-    let mut r = CommitFs::new(2, fabric.bb_of(2));
+    let mut a = PolicyFs::new(FsKind::COMMIT, 0, fabric.bb_of(0));
+    let mut b = PolicyFs::new(FsKind::COMMIT, 1, fabric.bb_of(1));
+    let mut r = PolicyFs::new(FsKind::COMMIT, 2, fabric.bb_of(2));
     let f = a.open(&mut fabric, "/tko");
     b.open(&mut fabric, "/tko");
     r.open(&mut fabric, "/tko");
 
     a.write_at(&mut fabric, f, 0, &[1u8; 100]).unwrap();
-    a.commit(&mut fabric, f).unwrap();
+    a.publish(&mut fabric, f).unwrap();
     // Phase 2 (ordered after phase 1): b overwrites the middle.
     b.write_at(&mut fabric, f, 25, &[2u8; 50]).unwrap();
-    b.commit(&mut fabric, f).unwrap();
+    b.publish(&mut fabric, f).unwrap();
 
     let got = r.read_at(&mut fabric, f, Range::new(0, 100)).unwrap();
     assert_eq!(&got[..25], &[1u8; 25][..]);
@@ -131,13 +183,13 @@ fn later_phase_overwrites_earlier() {
 #[test]
 fn flush_detach_upfs_fallback() {
     let mut fabric = TestFabric::new(2);
-    let mut w = CommitFs::new(0, fabric.bb_of(0));
-    let mut r = CommitFs::new(1, fabric.bb_of(1));
+    let mut w = PolicyFs::new(FsKind::COMMIT, 0, fabric.bb_of(0));
+    let mut r = PolicyFs::new(FsKind::COMMIT, 1, fabric.bb_of(1));
     let f = w.open(&mut fabric, "/persist");
     r.open(&mut fabric, "/persist");
 
     w.write_at(&mut fabric, f, 0, b"durable-data").unwrap();
-    w.commit(&mut fabric, f).unwrap();
+    w.publish(&mut fabric, f).unwrap();
     w.core().flush_file(&mut fabric, f).unwrap();
     w.core().detach_file(&mut fabric, f).unwrap();
 
@@ -150,17 +202,17 @@ fn flush_detach_upfs_fallback() {
 #[test]
 fn session_snapshot_isolation() {
     let mut fabric = TestFabric::new(2);
-    let mut w = SessionFs::new(0, fabric.bb_of(0));
-    let mut r = SessionFs::new(1, fabric.bb_of(1));
+    let mut w = PolicyFs::new(FsKind::SESSION, 0, fabric.bb_of(0));
+    let mut r = PolicyFs::new(FsKind::SESSION, 1, fabric.bb_of(1));
     let f = w.open(&mut fabric, "/iso");
     r.open(&mut fabric, "/iso");
 
     w.write_at(&mut fabric, f, 0, &[9u8; 8]).unwrap();
-    r.session_open(&mut fabric, f).unwrap(); // before close!
-    w.session_close(&mut fabric, f).unwrap();
+    r.acquire(&mut fabric, f).unwrap(); // session_open before the close!
+    w.publish(&mut fabric, f).unwrap(); // session_close
     let stale = r.read_at(&mut fabric, f, Range::new(0, 8)).unwrap();
     assert_eq!(stale, vec![0u8; 8], "stale session stays stale");
-    r.session_open(&mut fabric, f).unwrap();
+    r.acquire(&mut fabric, f).unwrap();
     let fresh = r.read_at(&mut fabric, f, Range::new(0, 8)).unwrap();
     assert_eq!(fresh, vec![9u8; 8]);
 }
@@ -173,7 +225,7 @@ fn des_full_run_determinism() {
     use pscnf::workload::{Config, SyntheticDriver};
     let run = || {
         let params = Config::CsR.params(4, 4, 8 << 10, 5, 77);
-        SyntheticDriver::new(FsKind::Session, params).run(Cluster::catalyst(4, 77))
+        SyntheticDriver::new(FsKind::SESSION, params).run(Cluster::catalyst(4, 77))
     };
     let (a, b) = (run(), run());
     assert_eq!(a.makespan, b.makespan);

@@ -3,7 +3,7 @@
 //! byte-exact, plus failure injection.
 
 use pscnf::coordinator::LiveCluster;
-use pscnf::fs::{CommitFs, FsKind, SessionFs, WorkloadFs};
+use pscnf::fs::{FsKind, PolicyFs, WorkloadFs};
 use pscnf::interval::Range;
 use std::sync::{Arc, Barrier};
 
@@ -24,12 +24,8 @@ fn live_ccr(kind: FsKind, nranks: usize, blocks_per_writer: u64, block: u64) {
     for (rank, mut fabric) in fabrics.into_iter().enumerate() {
         let barrier = barrier.clone();
         handles.push(std::thread::spawn(move || {
-            let mut fs: Box<dyn WorkloadFs> = match kind {
-                FsKind::Session => {
-                    Box::new(SessionFs::new(rank as u32, fabric.bb_of(rank as u32)))
-                }
-                _ => Box::new(CommitFs::new(rank as u32, fabric.bb_of(rank as u32))),
-            };
+            let mut fs: Box<dyn WorkloadFs> =
+                Box::new(PolicyFs::new(kind, rank as u32, fabric.bb_of(rank as u32)));
             let file = fs.open(&mut fabric, "/live/ccr.dat");
             if rank < writers {
                 for b in 0..blocks_per_writer {
@@ -65,12 +61,12 @@ fn live_ccr(kind: FsKind, nranks: usize, blocks_per_writer: u64, block: u64) {
 
 #[test]
 fn live_ccr_session_byte_exact() {
-    live_ccr(FsKind::Session, 8, 6, 4096);
+    live_ccr(FsKind::SESSION, 8, 6, 4096);
 }
 
 #[test]
 fn live_ccr_commit_byte_exact() {
-    live_ccr(FsKind::Commit, 8, 6, 4096);
+    live_ccr(FsKind::COMMIT, 8, 6, 4096);
 }
 
 /// Strided reads (CS-R): every reader touches every writer's data.
@@ -88,7 +84,7 @@ fn live_csr_session_byte_exact() {
     for (rank, mut fabric) in fabrics.into_iter().enumerate() {
         let barrier = barrier.clone();
         handles.push(std::thread::spawn(move || {
-            let mut fs = SessionFs::new(rank as u32, fabric.bb_of(rank as u32));
+            let mut fs = PolicyFs::new(FsKind::SESSION, rank as u32, fabric.bb_of(rank as u32));
             let file = WorkloadFs::open(&mut fs, &mut fabric, "/live/csr.dat");
             if rank < writers {
                 for b in 0..M {
@@ -96,11 +92,11 @@ fn live_csr_session_byte_exact() {
                     let data = vec![fill_byte(rank, b); BLOCK as usize];
                     fs.write_at(&mut fabric, file, off, &data).unwrap();
                 }
-                fs.session_close(&mut fabric, file).unwrap();
+                fs.publish(&mut fabric, file).unwrap(); // session_close
                 barrier.wait();
             } else {
                 barrier.wait();
-                fs.session_open(&mut fabric, file).unwrap();
+                fs.acquire(&mut fabric, file).unwrap(); // session_open
                 let j = (rank - writers) as u64;
                 let total_blocks = writers as u64 * M;
                 let mut i = j;
@@ -134,13 +130,13 @@ fn live_detach_race_is_clean() {
     let mut reader_fabric = fabrics.pop().unwrap();
     let mut writer_fabric = fabrics.pop().unwrap();
 
-    let mut w = CommitFs::new(0, writer_fabric.bb_of(0));
+    let mut w = PolicyFs::new(FsKind::COMMIT, 0, writer_fabric.bb_of(0));
     let file = WorkloadFs::open(&mut w, &mut writer_fabric, "/live/detach.dat");
     w.write_at(&mut writer_fabric, file, 0, &[7u8; 65536]).unwrap();
-    w.commit(&mut writer_fabric, file).unwrap();
+    w.publish(&mut writer_fabric, file).unwrap(); // commit
 
     let reader = std::thread::spawn(move || {
-        let mut r = CommitFs::new(1, reader_fabric.bb_of(1));
+        let mut r = PolicyFs::new(FsKind::COMMIT, 1, reader_fabric.bb_of(1));
         let file = WorkloadFs::open(&mut r, &mut reader_fabric, "/live/detach.dat");
         let mut ok = 0;
         let mut not_owned = 0;

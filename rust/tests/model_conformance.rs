@@ -1,0 +1,232 @@
+//! Conformance bridge: for **every registered model** — the paper's
+//! four, the built-in extensions (`commit_strict`, `cto`, `eventual`),
+//! and a model defined purely as config data — the *executable*
+//! `PolicyFs` layer's observable outcomes must fall within the *formal*
+//! model's allowed set:
+//!
+//! - a recorded execution that the race detector certifies race-free
+//!   under the model's own Table-4 definition must return the unique
+//!   sequentially-consistent outcome (readers see exactly the writers'
+//!   bytes);
+//! - a racy execution constrains nothing (any outcome is allowed), so
+//!   the detector must flag it — which it does for e.g. `eventual`'s
+//!   unsynchronized two-phase pattern.
+//!
+//! Plus the litmus suite replayed against every registered model, with
+//! the weakest-model property (race-free under ANY registered model ⇒
+//! race-free under POSIX) as a cross-model invariant.
+
+use pscnf::basefs::TestFabric;
+use pscnf::fs::{FsKind, PolicyFs, WorkloadFs};
+use pscnf::interval::Range;
+use pscnf::model::{litmus, race, SyncPolicy};
+use pscnf::trace::{RecordingFs, SharedTrace};
+
+/// Run the paper's two-phase pattern (write → end_write_phase →
+/// barrier → begin_read_phase → read) on `kind`'s executable layer,
+/// recording the formal trace. Returns (race-free under kind's own
+/// model?, bytes the reader saw).
+fn two_phase_recorded(kind: FsKind) -> (bool, Vec<u8>) {
+    let payload = [0xABu8; 64];
+    let mut fabric = TestFabric::new(2);
+    let trace = SharedTrace::new();
+    let mut w = RecordingFs::new(PolicyFs::new(kind, 0, fabric.bb_of(0)), trace.clone());
+    let mut r = RecordingFs::new(PolicyFs::new(kind, 1, fabric.bb_of(1)), trace.clone());
+    let f = w.open(&mut fabric, "/conf/two_phase.dat");
+    r.open(&mut fabric, "/conf/two_phase.dat");
+
+    w.write_at(&mut fabric, f, 0, &payload).unwrap();
+    w.end_write_phase(&mut fabric, f).unwrap();
+    trace.barrier(&[0, 1]);
+    r.passed_barrier();
+    r.begin_read_phase(&mut fabric, f).unwrap();
+    let got = r.read_at(&mut fabric, f, Range::new(0, 64)).unwrap();
+
+    let t = trace.finish();
+    let rf = race::race_free(&t, &kind.model()).expect("acyclic");
+    (rf, got)
+}
+
+/// THE bridge invariant, for every registered model (including any
+/// registered by sibling tests in this binary): if the recorded
+/// execution is race-free under the model's own formal definition, the
+/// reader must have seen the unique SC outcome.
+#[test]
+fn race_free_two_phase_implies_sc_outcome_for_every_registered_model() {
+    for kind in FsKind::registered() {
+        let (race_free, got) = two_phase_recorded(kind);
+        if race_free {
+            assert_eq!(
+                got,
+                vec![0xABu8; 64],
+                "model `{}`: formally race-free execution returned a non-SC outcome",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// The built-ins land on the expected side of the race verdict: every
+/// phase-synchronizing model certifies the two-phase pattern;
+/// `eventual` (publication at close only) must flag it as racy — and
+/// its reader indeed saw nothing, which the formal model allows.
+#[test]
+fn two_phase_verdicts_match_builtin_semantics() {
+    for kind in [
+        FsKind::POSIX,
+        FsKind::COMMIT,
+        FsKind::COMMIT_STRICT,
+        FsKind::SESSION,
+        FsKind::MPIIO,
+        FsKind::CTO,
+    ] {
+        let (race_free, got) = two_phase_recorded(kind);
+        assert!(race_free, "{} should certify the pattern", kind.name());
+        assert_eq!(got, vec![0xABu8; 64], "{}", kind.name());
+    }
+    let (race_free, got) = two_phase_recorded(FsKind::EVENTUAL);
+    assert!(!race_free, "eventual publishes nothing at phase end");
+    assert_eq!(got, vec![0u8; 64], "nothing visible before the close");
+}
+
+/// `eventual` becomes properly synchronized when the writer CLOSES the
+/// file (the close is the commit, and RecordingFs records it as such).
+#[test]
+fn eventual_close_certifies_and_publishes() {
+    let kind = FsKind::EVENTUAL;
+    let mut fabric = TestFabric::new(2);
+    let trace = SharedTrace::new();
+    let mut w = RecordingFs::new(PolicyFs::new(kind, 0, fabric.bb_of(0)), trace.clone());
+    let mut r = RecordingFs::new(PolicyFs::new(kind, 1, fabric.bb_of(1)), trace.clone());
+    let f = w.open(&mut fabric, "/conf/eventual.dat");
+    r.open(&mut fabric, "/conf/eventual.dat");
+    w.write_at(&mut fabric, f, 0, &[0x5Au8; 32]).unwrap();
+    w.close(&mut fabric, f).unwrap();
+    trace.barrier(&[0, 1]);
+    r.passed_barrier();
+    let got = r.read_at(&mut fabric, f, Range::new(0, 32)).unwrap();
+    let t = trace.finish();
+    assert!(race::race_free(&t, &kind.model()).unwrap());
+    assert_eq!(got, vec![0x5Au8; 32]);
+}
+
+/// MPI-IO's open/close are formal sync ops too: a run synchronized
+/// purely by close → barrier → open is race-free under MPI-IO (one of
+/// the four MSCs) and readable — pinning the open/close recording.
+#[test]
+fn mpiio_close_open_msc_certifies() {
+    let kind = FsKind::MPIIO;
+    let mut fabric = TestFabric::new(2);
+    let trace = SharedTrace::new();
+    let mut w = RecordingFs::new(PolicyFs::new(kind, 0, fabric.bb_of(0)), trace.clone());
+    let f = w.open(&mut fabric, "/conf/mpiio.dat");
+    w.write_at(&mut fabric, f, 0, &[7u8; 16]).unwrap();
+    w.close(&mut fabric, f).unwrap();
+    trace.barrier(&[0]);
+    // Reader constructed AFTER the close: its MPI_File_open lands
+    // post-barrier.
+    let mut r = RecordingFs::new(PolicyFs::new(kind, 1, fabric.bb_of(1)), trace.clone());
+    r.passed_barrier();
+    let rf = r.open(&mut fabric, "/conf/mpiio.dat");
+    let got = r.read_at(&mut fabric, rf, Range::new(0, 16)).unwrap();
+    let t = trace.finish();
+    assert!(race::race_free(&t, &kind.model()).unwrap());
+    assert_eq!(got, vec![7u8; 16]);
+}
+
+/// An unsynchronized conflicting pair races under EVERY registered
+/// model — no policy can talk its way out of a real race.
+#[test]
+fn unsynchronized_conflict_races_under_every_registered_model() {
+    let mut fabric = TestFabric::new(2);
+    let trace = SharedTrace::new();
+    let kind = FsKind::POSIX; // layer irrelevant: no syncs, no barrier
+    let mut w = RecordingFs::new(PolicyFs::new(kind, 0, fabric.bb_of(0)), trace.clone());
+    let mut r = RecordingFs::new(PolicyFs::new(kind, 1, fabric.bb_of(1)), trace.clone());
+    let f = w.open(&mut fabric, "/conf/racy.dat");
+    r.open(&mut fabric, "/conf/racy.dat");
+    w.write_at(&mut fabric, f, 0, &[1u8; 8]).unwrap();
+    let _ = r.read_at(&mut fabric, f, Range::new(0, 8)).unwrap();
+    let t = trace.finish();
+    for kind in FsKind::registered() {
+        assert!(
+            !race::race_free(&t, &kind.model()).unwrap(),
+            "model `{}` failed to flag an unsynchronized conflict",
+            kind.name()
+        );
+    }
+}
+
+/// Litmus suite × every registered model, plus the weakest-model
+/// property: any model's MSC edges all imply hb, so race-freedom under
+/// ANY registered model implies race-freedom under POSIX's direct-hb
+/// definition.
+#[test]
+fn litmus_suite_covers_every_registered_model_with_posix_weakest() {
+    for l in litmus::all() {
+        let posix_rf = race::race_free(&l.trace, &FsKind::POSIX.model()).unwrap();
+        // litmus::run emits one row per registered model (snapshot at
+        // call time — sibling tests may register more concurrently).
+        let results = litmus::run(&l);
+        assert!(results.len() >= 7, "rows for every built-in at least");
+        for (name, races, _) in &results {
+            if *races == 0 {
+                assert!(
+                    posix_rf,
+                    "litmus `{}`: race-free under {name} but racy under POSIX",
+                    l.name
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance path end to end: a model that exists ONLY as config
+/// data is registered, appears in the scenario registry's `model_ext`
+/// family, runs through the bench runner, and conforms to its derived
+/// formal definition like any built-in.
+#[test]
+fn config_only_model_runs_the_scenario_matrix_and_conforms() {
+    let ini = pscnf::config::parse_ini(
+        "[model.conf_lazy]\n\
+         display = ConfLazy\n\
+         publication = phase_end\n\
+         acquisition = lifetime_snapshot\n",
+    )
+    .unwrap();
+    let kinds = FsKind::register_from_ini(&ini).unwrap();
+    assert_eq!(kinds.len(), 1);
+    let kind = kinds[0];
+    assert!(!kind.is_builtin());
+    // Formal def derived from the policy: session-shaped MSC.
+    assert_eq!(
+        kind.model().mscs,
+        SyncPolicy::session().derive_model("x").mscs
+    );
+
+    // The registry now carries model_ext cells for it — ungated
+    // (non-smoke), because the CI baseline can't contain them.
+    let cells: Vec<_> = pscnf::bench::registry()
+        .into_iter()
+        .filter(|s| s.family == "model_ext" && s.fs == kind)
+        .collect();
+    assert!(!cells.is_empty(), "no model_ext cells for conf_lazy");
+    assert!(cells.iter().all(|s| !s.smoke));
+
+    // Run its smallest read cell through the real bench runner.
+    let mut cell = cells
+        .iter()
+        .find(|s| s.id.contains("CC-R.s/8KiB"))
+        .expect("small CC-R cell")
+        .clone();
+    cell.repeats = 1;
+    let rec = pscnf::bench::run_scenario(&cell);
+    let bw = rec.metric_value("bw").unwrap();
+    assert!(bw.is_finite() && bw > 0.0, "conf_lazy cell bw {bw}");
+    assert_eq!(rec.params["fs"].as_str(), Some("conf_lazy"));
+
+    // And the executable layer conforms to the derived formal model.
+    let (race_free, got) = two_phase_recorded(kind);
+    assert!(race_free, "conf_lazy two-phase should certify");
+    assert_eq!(got, vec![0xABu8; 64]);
+}

@@ -1,0 +1,230 @@
+//! Differential pin: each canned policy interpreted by `PolicyFs` is
+//! **bit-for-bit equivalent** to the frozen legacy layer it replaced —
+//! read-back bytes, owner maps, `FabricCounters`, and simulated time —
+//! across the synthetic, SCR and DL drivers plus a randomized
+//! functional op-script. This is the safety net under the
+//! models-as-data refactor: if the interpreter ever diverges from the
+//! hand-written Table-6 semantics, one of these tests names the model
+//! and the first diverging observable.
+
+use pscnf::basefs::TestFabric;
+use pscnf::dl::{DlDriver, DlParams};
+use pscnf::fs::{legacy, FsKind, PolicyFs, WorkloadFs};
+use pscnf::interval::Range;
+use pscnf::scr::{ScrDriver, ScrParams};
+use pscnf::sim::Cluster;
+use pscnf::testkit::{self, Gen};
+use pscnf::workload::{Config, SyntheticDriver};
+
+/// The production factory (what drivers use by default).
+fn policy_factory() -> impl Fn(FsKind, u32, pscnf::basefs::SharedBb) -> Box<dyn WorkloadFs> {
+    |kind, id, bb| Box::new(PolicyFs::new(kind, id, bb)) as Box<dyn WorkloadFs>
+}
+
+#[test]
+fn synthetic_driver_reports_identical_for_every_canned_policy() {
+    for kind in FsKind::PAPER {
+        for (config, phantom) in [
+            (Config::CnW, true),
+            (Config::SnW, true),
+            (Config::CcR, true),
+            (Config::CsR, true),
+            (Config::CcR, false), // non-phantom: real bytes through BaseFS
+        ] {
+            for shards in [1usize, 4] {
+                let params = config.params(2, 2, 4 << 10, 3, 7).with_files(2);
+                let pf = policy_factory();
+                let new = SyntheticDriver::new_with_layers(
+                    &pf,
+                    kind,
+                    params.clone(),
+                    phantom,
+                    shards,
+                )
+                .run(Cluster::catalyst(2, 99));
+                let old = SyntheticDriver::new_with_layers(
+                    &legacy::build,
+                    kind,
+                    params,
+                    phantom,
+                    shards,
+                )
+                .run(Cluster::catalyst(2, 99));
+                let tag = format!("{kind:?}/{config:?}/phantom={phantom}/shards={shards}");
+                assert_eq!(new.fs, old.fs, "{tag}");
+                assert_eq!(new.write_bytes, old.write_bytes, "{tag}");
+                assert_eq!(new.read_bytes, old.read_bytes, "{tag}");
+                assert_eq!(new.write_end, old.write_end, "{tag} write_end");
+                assert_eq!(new.read_start, old.read_start, "{tag} read_start");
+                assert_eq!(new.read_end, old.read_end, "{tag} read_end");
+                assert_eq!(new.makespan, old.makespan, "{tag} makespan");
+                assert_eq!(new.counters, old.counters, "{tag} counters");
+                assert_eq!(new.sim_ops, old.sim_ops, "{tag} sim_ops");
+            }
+        }
+    }
+}
+
+#[test]
+fn scr_driver_reports_identical_for_every_canned_policy() {
+    for kind in FsKind::PAPER {
+        let mut params = ScrParams::with_nodes(3, 2);
+        params.particles = 120_000;
+        let pf = policy_factory();
+        let new = ScrDriver::new_with_layers(&pf, kind, params.clone())
+            .run(Cluster::catalyst(3, 5));
+        let old = ScrDriver::new_with_layers(&legacy::build, kind, params)
+            .run(Cluster::catalyst(3, 5));
+        assert_eq!(new.ckpt_bytes, old.ckpt_bytes, "{kind:?}");
+        assert_eq!(new.ckpt_end, old.ckpt_end, "{kind:?} ckpt_end");
+        assert_eq!(new.restart_bytes, old.restart_bytes, "{kind:?}");
+        assert_eq!(new.restart_start, old.restart_start, "{kind:?} restart_start");
+        assert_eq!(new.restart_end, old.restart_end, "{kind:?} restart_end");
+        assert_eq!(new.counters, old.counters, "{kind:?} counters");
+        assert_eq!(new.sim_ops, old.sim_ops, "{kind:?} sim_ops");
+    }
+}
+
+#[test]
+fn dl_driver_reports_identical_for_every_canned_policy() {
+    for kind in FsKind::PAPER {
+        let params = DlParams::weak(2, 2, 2, 11);
+        let pf = policy_factory();
+        let new = DlDriver::new_with_layers(&pf, kind, params.clone())
+            .run(Cluster::catalyst(2, 3));
+        let old = DlDriver::new_with_layers(&legacy::build, kind, params)
+            .run(Cluster::catalyst(2, 3));
+        assert_eq!(new.read_bytes_per_epoch, old.read_bytes_per_epoch, "{kind:?}");
+        assert_eq!(new.epoch_time, old.epoch_time, "{kind:?} epoch_time");
+        assert_eq!(new.remote_fraction, old.remote_fraction, "{kind:?}");
+        assert_eq!(new.counters, old.counters, "{kind:?} counters");
+        assert_eq!(new.sim_ops, old.sim_ops, "{kind:?} sim_ops");
+    }
+}
+
+/// One random op-script, applied in lockstep to a PolicyFs stack and a
+/// legacy stack on separate (identical) fabrics. Every read's bytes,
+/// every op's error/ok shape, and the final counters must agree; at the
+/// end, the owner map visible to a fresh third client must agree too.
+fn functional_lockstep(kind: FsKind, g: &mut Gen) -> Result<(), String> {
+    const EXTENT: u64 = 2048;
+    let nclients = 2;
+    let mut fab_a = TestFabric::new(nclients + 1);
+    let mut fab_b = TestFabric::new(nclients + 1);
+    let mut new_fs: Vec<Box<dyn WorkloadFs>> = (0..nclients)
+        .map(|i| {
+            Box::new(PolicyFs::new(kind, i as u32, fab_a.bb_of(i as u32))) as Box<dyn WorkloadFs>
+        })
+        .collect();
+    let mut old_fs: Vec<Box<dyn WorkloadFs>> = (0..nclients)
+        .map(|i| legacy::build(kind, i as u32, fab_b.bb_of(i as u32)))
+        .collect();
+    let mut file = 0;
+    for f in new_fs.iter_mut() {
+        file = f.open(&mut fab_a, "/diff/script.dat");
+    }
+    for f in old_fs.iter_mut() {
+        f.open(&mut fab_b, "/diff/script.dat");
+    }
+
+    for step in 0..g.usize(4, 24) {
+        let who = g.usize(0, nclients - 1);
+        let op = g.usize(0, 4);
+        match op {
+            0 => {
+                let off = g.u64(0, EXTENT - 1);
+                let len = g.u64(1, (EXTENT - off).min(120));
+                let fill = (step % 251) as u8;
+                let data = vec![fill; len as usize];
+                let a = new_fs[who].write_at(&mut fab_a, file, off, &data);
+                let b = old_fs[who].write_at(&mut fab_b, file, off, &data);
+                testkit::ensure(
+                    format!("{a:?}") == format!("{b:?}"),
+                    format!("{kind:?} step {step}: write_at {a:?} vs {b:?}"),
+                )?;
+            }
+            1 => {
+                let off = g.u64(0, EXTENT - 1);
+                let len = g.u64(1, (EXTENT - off).min(200));
+                let a = new_fs[who].read_at(&mut fab_a, file, Range::at(off, len));
+                let b = old_fs[who].read_at(&mut fab_b, file, Range::at(off, len));
+                testkit::ensure(
+                    format!("{a:?}") == format!("{b:?}"),
+                    format!("{kind:?} step {step}: read_at [{off},+{len}) diverged"),
+                )?;
+            }
+            2 => {
+                let a = new_fs[who].end_write_phase(&mut fab_a, file);
+                let b = old_fs[who].end_write_phase(&mut fab_b, file);
+                testkit::ensure(
+                    format!("{a:?}") == format!("{b:?}"),
+                    format!("{kind:?} step {step}: end_write_phase diverged"),
+                )?;
+            }
+            3 => {
+                let a = new_fs[who].begin_read_phase(&mut fab_a, file);
+                let b = old_fs[who].begin_read_phase(&mut fab_b, file);
+                testkit::ensure(
+                    format!("{a:?}") == format!("{b:?}"),
+                    format!("{kind:?} step {step}: begin_read_phase diverged"),
+                )?;
+            }
+            _ => {
+                // Batched phase hooks (the sharded-attach path).
+                let a = new_fs[who].end_write_phase_all(&mut fab_a, &[file]);
+                let b = old_fs[who].end_write_phase_all(&mut fab_b, &[file]);
+                testkit::ensure(
+                    format!("{a:?}") == format!("{b:?}"),
+                    format!("{kind:?} step {step}: end_write_phase_all diverged"),
+                )?;
+            }
+        }
+        testkit::ensure(
+            fab_a.inner.counters == fab_b.inner.counters,
+            format!(
+                "{kind:?} step {step} (op {op}): counters diverged\n new: {:?}\n old: {:?}",
+                fab_a.inner.counters, fab_b.inner.counters
+            ),
+        )?;
+    }
+
+    // Final owner maps, as seen by an uninvolved observer client.
+    let mut obs_a = PolicyFs::new(FsKind::COMMIT, nclients as u32, fab_a.bb_of(nclients as u32));
+    let mut obs_b = PolicyFs::new(FsKind::COMMIT, nclients as u32, fab_b.bb_of(nclients as u32));
+    obs_a.open(&mut fab_a, "/diff/script.dat");
+    obs_b.open(&mut fab_b, "/diff/script.dat");
+    let map_a = obs_a
+        .core()
+        .query(&mut fab_a, file, 0, EXTENT)
+        .map_err(|e| format!("observer query: {e}"))?;
+    let map_b = obs_b
+        .core()
+        .query(&mut fab_b, file, 0, EXTENT)
+        .map_err(|e| format!("observer query: {e}"))?;
+    testkit::ensure(
+        map_a == map_b,
+        format!("{kind:?}: final owner maps diverged\n new: {map_a:?}\n old: {map_b:?}"),
+    )
+}
+
+#[test]
+fn functional_lockstep_posix() {
+    testkit::check("lockstep posix", |g| functional_lockstep(FsKind::POSIX, g));
+}
+
+#[test]
+fn functional_lockstep_commit() {
+    testkit::check("lockstep commit", |g| functional_lockstep(FsKind::COMMIT, g));
+}
+
+#[test]
+fn functional_lockstep_session() {
+    testkit::check("lockstep session", |g| {
+        functional_lockstep(FsKind::SESSION, g)
+    });
+}
+
+#[test]
+fn functional_lockstep_mpiio() {
+    testkit::check("lockstep mpiio", |g| functional_lockstep(FsKind::MPIIO, g));
+}
