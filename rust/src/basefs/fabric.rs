@@ -12,7 +12,7 @@ use super::proto::{ClientId, FileId, Request, Response};
 use super::server::MetadataPlane;
 use super::store::{new_shared_bb, SharedBb, UpfsStore};
 use crate::interval::Range;
-use crate::sim::SimOp;
+use crate::sim::{NodeMap, SimOp};
 use std::collections::VecDeque;
 
 /// Cumulative traffic counters (per fabric; reporting).
@@ -64,8 +64,9 @@ pub struct DesFabric {
     pub server: MetadataPlane,
     pub bbs: Vec<SharedBb>,
     pub upfs: UpfsStore,
-    /// rank -> node (for pricing remote fetches).
-    node_of: Vec<usize>,
+    /// rank -> node (for pricing remote fetches). Uniform layouts are
+    /// pure arithmetic — no per-rank vector at any rank count.
+    node_of: NodeMap,
     /// Per-client pending virtual-time costs, drained by the driver.
     costs: Vec<VecDeque<SimOp>>,
     /// Reused per-shard scratch for [`Fabric::rpc_batch`] pricing (the
@@ -82,27 +83,39 @@ pub struct DesFabric {
 
 impl DesFabric {
     pub fn new(node_of: Vec<usize>) -> Self {
-        Self::with_phantom(node_of, false, 1)
+        Self::with_phantom(NodeMap::Explicit(node_of), false, 1)
     }
 
     /// Benchmark-scale fabric: lengths/ownership only, no payload bytes.
     pub fn new_phantom(node_of: Vec<usize>) -> Self {
-        Self::with_phantom(node_of, true, 1)
+        Self::with_phantom(NodeMap::Explicit(node_of), true, 1)
     }
 
     /// Phantom fabric over a sharded metadata plane; `shards == 1` is
     /// bit-for-bit the unsharded fabric.
     pub fn new_phantom_sharded(node_of: Vec<usize>, shards: usize) -> Self {
-        Self::with_phantom(node_of, true, shards)
+        Self::with_phantom(NodeMap::Explicit(node_of), true, shards)
     }
 
     /// Byte-exact fabric over a sharded metadata plane.
     pub fn new_sharded(node_of: Vec<usize>, shards: usize) -> Self {
-        Self::with_phantom(node_of, false, shards)
+        Self::with_phantom(NodeMap::Explicit(node_of), false, shards)
     }
 
-    fn with_phantom(node_of: Vec<usize>, phantom: bool, shards: usize) -> Self {
-        let n = node_of.len();
+    /// Phantom sharded fabric over a uniform rank→node layout (`ppn`
+    /// ranks per node) — identical pricing to the explicit-vec
+    /// constructors without materializing the per-rank mapping.
+    pub fn new_phantom_uniform(ppn: usize, nranks: usize, shards: usize) -> Self {
+        Self::with_phantom(NodeMap::uniform(ppn, nranks), true, shards)
+    }
+
+    /// Byte-exact sharded fabric over a uniform rank→node layout.
+    pub fn new_uniform(ppn: usize, nranks: usize, shards: usize) -> Self {
+        Self::with_phantom(NodeMap::uniform(ppn, nranks), false, shards)
+    }
+
+    fn with_phantom(node_of: NodeMap, phantom: bool, shards: usize) -> Self {
+        let n = node_of.nranks();
         Self {
             server: MetadataPlane::new(shards),
             bbs: new_shared_bb(n, phantom),
@@ -121,7 +134,7 @@ impl DesFabric {
     }
 
     pub fn nranks(&self) -> usize {
-        self.node_of.len()
+        self.node_of.nranks()
     }
 
     pub fn bb_of(&self, client: ClientId) -> SharedBb {
@@ -247,8 +260,8 @@ impl Fabric for DesFabric {
             fb.read_owned_into(range, out)
                 .map_err(|_| BfsError::NotOwned(range))?;
         }
-        let owner_node = self.node_of[owner as usize];
-        let client_node = self.node_of[client as usize];
+        let owner_node = self.node_of.node_of(owner as usize);
+        let client_node = self.node_of.node_of(client as usize);
         self.counters.fetch_bytes += range.len();
         if owner_node == client_node {
             self.counters.local_fetches += 1;

@@ -11,7 +11,8 @@
 //! ```text
 //! pscnf bench --filter smoke --jobs 4 --json # run the CI subset, write BENCH_matrix.json
 //! pscnf bench --filter fig4 --models commit,session --scales 32,64,128 --jobs 8
-//! pscnf bench --list --filter ablate         # show matching scenario ids
+//! pscnf bench --list --filter 'ablate*'      # show matching scenario ids (trailing-* glob)
+//! pscnf bench --filter scale_gate --engine-threads 4  # windowed parallel event loop
 //! pscnf bench --compare baseline.json --gate 15   # nonzero exit on regression
 //! ```
 //!
@@ -39,6 +40,32 @@ use crate::util::units::fmt_bandwidth;
 /// Where `--json` writes the matrix (and where `--compare` reads the
 /// current run from by default).
 pub const DEFAULT_OUT: &str = "target/results/BENCH_matrix.json";
+
+/// Does `--filter FILTER` select scenario `sc`? Matching is EXACT, not
+/// substring: the empty filter selects everything, `smoke` selects the
+/// gated CI subset (the `smoke` flag — which every `smoke`-family cell
+/// sets), a family name selects that family, a trailing-`*` glob
+/// (`fig4/*`, `ablate*`) prefix-matches scenario ids, and anything else
+/// must equal one full scenario id. Substring matching used to make
+/// filters collide — any id merely containing the filter text rode
+/// along — which is why `scale_gate` historically had to be NAMED to
+/// avoid the `smoke` substring; the collision is now structurally
+/// impossible (pinned by `filter_matches_exactly_not_by_substring`).
+pub fn scenario_matches(filter: &str, sc: &Scenario) -> bool {
+    if filter.is_empty() {
+        return true;
+    }
+    if filter == "smoke" {
+        return sc.smoke;
+    }
+    if sc.family == filter {
+        return true;
+    }
+    if let Some(prefix) = filter.strip_suffix('*') {
+        return sc.id.starts_with(prefix);
+    }
+    sc.id == filter
+}
 
 /// Sidecar path for the per-cell harness wall times: `<out>.wall.json`
 /// with a trailing `.json` folded (`BENCH_matrix.json` →
@@ -124,7 +151,8 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         "filter",
         "STR",
         Some(""),
-        "substring filter on scenario id/family (`smoke` = CI subset; empty = all)",
+        "scenario selector: empty = all, `smoke` = CI subset, a family name, a full \
+         scenario id, or a trailing-`*` glob like `fig4/*` (exact matching, never substring)",
     )
     .opt(
         "models",
@@ -156,6 +184,13 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         "N",
         Some("1"),
         "parallel scenario workers; the matrix is byte-identical to --jobs 1",
+    )
+    .opt(
+        "engine-threads",
+        "N",
+        Some("0"),
+        "run every cell's event loop on N windowed sub-engines (0 = keep each cell's \
+         registry setting); records are byte-identical for any value",
     )
     .flag("json", "write the matrix to --out after running")
     .opt("out", "PATH", Some(DEFAULT_OUT), "output path for --json")
@@ -219,12 +254,7 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
     let scales = args.usize_list("scales")?;
     let mut scenarios: Vec<Scenario> = registry()
         .into_iter()
-        .filter(|s| {
-            filter.is_empty()
-                || s.family == filter
-                || s.id.contains(filter)
-                || (filter == "smoke" && s.smoke)
-        })
+        .filter(|s| scenario_matches(filter, s))
         .filter(|s| models.contains(&s.fs))
         .filter(|s| scales.is_empty() || scales.contains(&s.nodes))
         .collect();
@@ -245,6 +275,12 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
     if repeats > 0 {
         for s in scenarios.iter_mut() {
             s.repeats = repeats;
+        }
+    }
+    let engine_threads = args.usize("engine-threads")?;
+    if engine_threads > 0 {
+        for s in scenarios.iter_mut() {
+            s.engine_threads = engine_threads;
         }
     }
     let jobs = args.usize("jobs")?;
@@ -273,6 +309,36 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn filter_matches_exactly_not_by_substring() {
+        let all = registry();
+        // `smoke` selects exactly the flagged subset — and never the
+        // scale_gate family, the historical substring collision.
+        let smoke: Vec<_> = all.iter().filter(|s| scenario_matches("smoke", s)).collect();
+        assert!(!smoke.is_empty());
+        assert!(smoke.iter().all(|s| s.smoke));
+        assert!(!smoke.iter().any(|s| s.family == "scale_gate"));
+        // A family name selects that family and only it.
+        assert!(all.iter().any(|s| scenario_matches("scale_gate", s)));
+        assert!(all
+            .iter()
+            .filter(|s| scenario_matches("fig4", s))
+            .all(|s| s.family == "fig4"));
+        // A trailing-`*` glob prefix-matches scenario ids.
+        let glob: Vec<_> = all
+            .iter()
+            .filter(|s| scenario_matches("fig4/CC-R*", s))
+            .collect();
+        assert!(!glob.is_empty());
+        assert!(glob.iter().all(|s| s.id.starts_with("fig4/CC-R")));
+        // A full id selects exactly one cell; a bare substring of many
+        // ids selects nothing; the empty filter selects everything.
+        let one = &all[0].id;
+        assert_eq!(all.iter().filter(|s| scenario_matches(one, s)).count(), 1);
+        assert!(!all.iter().any(|s| scenario_matches("CC-R", s)));
+        assert!(all.iter().all(|s| scenario_matches("", s)));
+    }
 
     #[test]
     fn render_handles_missing_metrics() {

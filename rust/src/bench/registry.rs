@@ -68,6 +68,11 @@ pub enum HotPathCase {
     /// One fig4 small-read commit cell end to end, in engine events per
     /// wall second — the engine-throughput metric the CI gate watches.
     Fig4Cell,
+    /// The same event-loop flood as `EngineLoop`, but on the windowed
+    /// parallel loop (`engine_threads` sub-engines). Gated alongside
+    /// `fig4cell`, so a throughput regression of the parallel path
+    /// trips CI even though its results are byte-identical to serial.
+    EngineParallel,
 }
 
 impl HotPathCase {
@@ -78,6 +83,7 @@ impl HotPathCase {
             HotPathCase::ServerHandle => "server.handle",
             HotPathCase::EngineLoop => "engine.loop",
             HotPathCase::Fig4Cell => "fig4cell",
+            HotPathCase::EngineParallel => "engine.parallel",
         }
     }
 }
@@ -103,6 +109,16 @@ pub struct Scenario {
     /// keeps the testbed preset.
     pub workers: Option<usize>,
     pub dispatch: Dispatch,
+    /// Sub-engine count for the windowed parallel event loop (1 =
+    /// serial). Any value produces a byte-identical record; the knob
+    /// only changes wall time, so the large-scale rows bake in >1 and
+    /// `--engine-threads` can override every cell safely.
+    pub engine_threads: usize,
+    /// Stream the workload (lazy FS layers, on-demand offset plans):
+    /// peak memory O(active ranks) instead of O(total ranks). Off for
+    /// the figure families so their construction order — and therefore
+    /// their records — stay exactly as the paper runs were taken.
+    pub lazy: bool,
     /// Member of the quick CI subset (`--filter smoke`).
     pub smoke: bool,
     pub kind: Kind,
@@ -146,6 +162,8 @@ fn base(family: &'static str, fs: FsKind, nodes: usize, ppn: usize, kind: Kind) 
         repeats: 5,
         workers: None,
         dispatch: Dispatch::RoundRobin,
+        engine_threads: 1,
+        lazy: false,
         smoke: false,
         kind,
     }
@@ -294,12 +312,48 @@ pub fn registry() -> Vec<Scenario> {
         }
     }
 
-    // scale_gate — one large-scale cell (768 ranks of small commit
-    // reads) run by CI as its own wall-clock-budgeted step, so a scale
-    // regression of the simulator fails loudly without putting a
-    // long-running cell inside the gated smoke subset. (Named so no
-    // "smoke" substring lands in its id: `--filter smoke` matches by
-    // substring and must not pick this up.)
+    // scale_dl, continued — the 10^4/10^5/10^6-RANK rows (ppn=4, so
+    // 2.5k/25k/250k nodes). These run the streaming workload path
+    // (`lazy`: FS layers built at first touch and dropped at Done,
+    // offset plans generated from (seed, rank) on demand) on the
+    // windowed parallel loop, so peak memory tracks ACTIVE ranks and
+    // wall time divides across sub-engines while the record stays
+    // byte-identical to a serial eager run. work=1 (32 samples per
+    // rank-epoch) keeps the million-rank cell inside the CI
+    // large-scale wall budget; commit-only above 10^4 ranks for the
+    // same reason.
+    for (nodes, models) in [
+        (2_500usize, &FsKind::PAPER[..]),
+        (25_000, &[FsKind::COMMIT][..]),
+        (250_000, &[FsKind::COMMIT][..]),
+    ] {
+        for &fs in models {
+            let mut sc = base(
+                "scale_dl",
+                fs,
+                nodes,
+                4,
+                Kind::Dl {
+                    strong: false,
+                    work: 1,
+                    aggregate: false,
+                },
+            );
+            sc.repeats = 1;
+            sc.lazy = true;
+            sc.engine_threads = 4;
+            v.push(with_id(sc, "dl.weak.xl", None, &format!("n{nodes}")));
+        }
+    }
+
+    // scale_gate — large-scale cells run by CI as their own wall-clock-
+    // budgeted steps, so a scale regression of the simulator fails
+    // loudly without putting a long-running cell inside the gated smoke
+    // subset (`--filter smoke` selects by the smoke FLAG, never by
+    // substring, so these can't ride along by accident). The n64 cell
+    // is the historical 768-rank one; the n25000 cell is a 10^5-rank
+    // streaming cell that CI runs with `--engine-threads 4` to exercise
+    // the CLI override on the parallel loop.
     {
         let mut sc = base(
             "scale_gate",
@@ -314,6 +368,22 @@ pub fn registry() -> Vec<Scenario> {
         );
         sc.repeats = 1;
         v.push(with_id(sc, "CC-R", Some(8 << 10), "n64"));
+
+        let mut sc = base(
+            "scale_gate",
+            FsKind::COMMIT,
+            25_000,
+            4,
+            Kind::Synthetic {
+                config: Config::CcR,
+                access: 8 << 10,
+                read_pattern: None,
+            },
+        );
+        sc.m = 2;
+        sc.repeats = 1;
+        sc.lazy = true;
+        v.push(with_id(sc, "CC-R", Some(8 << 10), "n25000"));
     }
 
     // perf_hotpath — wall-clock microbenches of the simulator itself
@@ -326,10 +396,14 @@ pub fn registry() -> Vec<Scenario> {
         (HotPathCase::ServerHandle, 1, 1, false),
         (HotPathCase::EngineLoop, 16, 12, false),
         (HotPathCase::Fig4Cell, 16, 12, true),
+        (HotPathCase::EngineParallel, 16, 12, true),
     ] {
         let mut sc = base("perf_hotpath", FsKind::COMMIT, nodes, ppn, Kind::HotPath(case));
         sc.repeats = 3;
         sc.smoke = smoke;
+        if case == HotPathCase::EngineParallel {
+            sc.engine_threads = 4;
+        }
         v.push(with_id(sc, case.name(), None, &format!("n{nodes}")));
     }
 
@@ -664,6 +738,34 @@ mod tests {
                 fs.name()
             );
         }
+    }
+
+    #[test]
+    fn large_scale_rows_stream_and_parallelize() {
+        let all = registry();
+        for (frag, ranks) in [("n2500", 10_000), ("n25000", 100_000), ("n250000", 1_000_000)] {
+            let sc = all
+                .iter()
+                .find(|s| s.family == "scale_dl" && s.id.ends_with(frag))
+                .unwrap_or_else(|| panic!("missing scale_dl row {frag}"));
+            assert_eq!(sc.nodes * sc.ppn, ranks, "{frag} rank count");
+            assert!(sc.lazy, "{frag} must stream");
+            assert!(sc.engine_threads > 1, "{frag} must run the parallel loop");
+            assert!(!sc.smoke, "{frag} must stay out of the gated smoke subset");
+            assert_eq!(sc.repeats, 1);
+        }
+        let gate = all
+            .iter()
+            .find(|s| s.family == "scale_gate" && s.id.ends_with("n25000"))
+            .expect("missing 10^5-rank scale_gate cell");
+        assert_eq!(gate.nodes * gate.ppn, 100_000);
+        assert!(gate.lazy && !gate.smoke);
+        let par = all
+            .iter()
+            .find(|s| matches!(s.kind, Kind::HotPath(HotPathCase::EngineParallel)))
+            .expect("missing engine.parallel hot-path cell");
+        assert!(par.smoke, "engine.parallel must ride the perf gate");
+        assert_eq!(par.engine_threads, 4);
     }
 
     #[test]

@@ -183,8 +183,12 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
                 params.read_pattern = Some(*over);
             }
             let write_phase = matches!(config, Config::CnW | Config::SnW);
-            let report = SyntheticDriver::new_sharded(sc.fs, params, sc.shards)
-                .run(cluster(sc, seed ^ 0xBEEF));
+            let driver = if sc.lazy {
+                SyntheticDriver::new_lazy(sc.fs, params, sc.shards)
+            } else {
+                SyntheticDriver::new_sharded(sc.fs, params, sc.shards)
+            };
+            let report = driver.run_with_threads(cluster(sc, seed ^ 0xBEEF), sc.engine_threads);
             fold.bw.push(if write_phase {
                 report.write_bw()
             } else {
@@ -199,7 +203,12 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
         Kind::Scr { particles } => {
             let mut p = ScrParams::with_nodes(sc.nodes, sc.ppn);
             p.particles = *particles;
-            let report = ScrDriver::new(sc.fs, p).run(cluster(sc, seed));
+            let driver = if sc.lazy {
+                ScrDriver::new_lazy(sc.fs, p)
+            } else {
+                ScrDriver::new(sc.fs, p)
+            };
+            let report = driver.run_with_threads(cluster(sc, seed), sc.engine_threads);
             fold.bw.push(report.ckpt_bw());
             fold.restart_bw.push(report.restart_bw());
             fold.lat_s.push(report.restart_end.as_secs_f64());
@@ -219,7 +228,12 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
                 DlParams::weak(sc.nodes, sc.ppn, *work, seed)
             };
             p.aggregate = *aggregate;
-            let report = DlDriver::new(sc.fs, p).run(cluster(sc, seed));
+            let driver = if sc.lazy {
+                DlDriver::new_lazy(sc.fs, p)
+            } else {
+                DlDriver::new(sc.fs, p)
+            };
+            let report = driver.run_with_threads(cluster(sc, seed), sc.engine_threads);
             fold.bw.push(report.read_bw());
             fold.lat_s.push(report.epoch_time.as_secs_f64());
             fold.rpcs.push(report.counters.rpcs as f64);
@@ -229,9 +243,11 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
         }
         Kind::FineCommit { access } => {
             let mut driver = FineCommitDriver::new(sc.nodes, sc.ppn, *access, sc.m, seed);
-            let node_of: Vec<usize> = (0..sc.nodes * sc.ppn).map(|r| r / sc.ppn).collect();
-            let mut engine = Engine::new(cluster(sc, seed ^ 0xBEEF), node_of);
-            let stats = engine.run(&mut driver).expect("fine-commit deadlock");
+            let mut engine =
+                Engine::uniform_with(cluster(sc, seed ^ 0xBEEF), sc.ppn, sc.nodes * sc.ppn);
+            let stats = engine
+                .run_threaded(&mut driver, sc.engine_threads)
+                .expect("fine-commit deadlock");
             let total = (sc.nodes * sc.ppn * sc.m) as u64 * *access;
             fold.bw.push(total as f64 / driver.done_at.as_secs_f64());
             fold.lat_s.push(driver.done_at.as_secs_f64());
@@ -244,9 +260,11 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
         Kind::Snapshot { access, rounds } => {
             let mut driver =
                 SnapshotDriver::new(sc.fs, sc.nodes, sc.ppn, *access, sc.m, *rounds, seed);
-            let node_of: Vec<usize> = (0..sc.nodes * sc.ppn).map(|r| r / sc.ppn).collect();
-            let mut engine = Engine::new(cluster(sc, seed ^ 0xBEEF), node_of);
-            let stats = engine.run(&mut driver).expect("snapshot ablation deadlock");
+            let mut engine =
+                Engine::uniform_with(cluster(sc, seed ^ 0xBEEF), sc.ppn, sc.nodes * sc.ppn);
+            let stats = engine
+                .run_threaded(&mut driver, sc.engine_threads)
+                .expect("snapshot ablation deadlock");
             fold.bw.push(driver.read_bw());
             fold.lat_s.push(driver.read_end.as_secs_f64());
             fold.rpcs.push(driver.fabric.counters.rpcs as f64);
@@ -390,8 +408,16 @@ fn run_hotpath(sc: &Scenario, case: HotPathCase) -> BenchRecord {
             rec.metric("ns_per_op", Metric::lower(ns));
         }
         HotPathCase::EngineLoop => {
+            let eps = best_events_per_sec(sc.repeats, || engine_flood(sc.nodes, sc.ppn, 200, 1));
+            rec.metric("events_per_sec", Metric::higher(eps));
+        }
+        HotPathCase::EngineParallel => {
+            // Same flood, windowed parallel loop: gates the throughput
+            // of the partitioned path (its RESULTS are pinned byte-
+            // identical elsewhere; this cell watches its wall speed).
+            let threads = sc.engine_threads.max(2);
             let eps = best_events_per_sec(sc.repeats, || {
-                engine_flood(sc.nodes, sc.ppn, 200)
+                engine_flood(sc.nodes, sc.ppn, 200, threads)
             });
             rec.metric("events_per_sec", Metric::higher(eps));
         }
@@ -440,8 +466,9 @@ fn best_events_per_sec(repeats: usize, mut f: impl FnMut() -> u64) -> f64 {
 /// Pure event-loop flood: `steps` scripted ops per rank mixing compute,
 /// SSD I/O, RPCs, message passing, and barriers — no functional FS
 /// state, so the measurement isolates the heap + indexed-mailbox +
-/// device-pricing loop itself. Returns the events executed.
-fn engine_flood(nodes: usize, ppn: usize, steps: usize) -> u64 {
+/// device-pricing loop itself. Runs on `threads` sub-engines
+/// (`1` = the serial loop). Returns the events executed.
+fn engine_flood(nodes: usize, ppn: usize, steps: usize, threads: usize) -> u64 {
     let n = nodes * ppn;
     assert!(n >= 2 && n % 2 == 0, "engine flood needs an even rank count");
     let mut engine = Engine::uniform(Cluster::catalyst(nodes, 7), ppn);
@@ -481,7 +508,7 @@ fn engine_flood(nodes: usize, ppn: usize, steps: usize) -> u64 {
         }
     };
     engine
-        .run(&mut driver)
+        .run_threaded(&mut driver, threads)
         .expect("engine flood deadlock")
         .ops_executed
 }
@@ -818,6 +845,25 @@ mod tests {
         let a = run_scenario(&sc);
         let b = run_scenario(&sc);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lazy_threaded_records_are_byte_identical() {
+        // The perf knobs must never show up in the matrix: a streamed
+        // run on 8 sub-engines produces the exact record of the eager
+        // serial run, for every workload kind the scale families use.
+        for (frag, fs) in [
+            ("CC-R/8KiB", FsKind::COMMIT),
+            ("dl.weak", FsKind::SESSION),
+            ("scr", FsKind::COMMIT),
+        ] {
+            let mut sc = smoke(frag, fs);
+            sc.repeats = 1;
+            let eager_serial = run_scenario(&sc);
+            sc.lazy = true;
+            sc.engine_threads = 8;
+            assert_eq!(run_scenario(&sc), eager_serial, "{frag} diverged");
+        }
     }
 
     #[test]

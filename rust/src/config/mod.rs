@@ -9,6 +9,7 @@
 //! nodes = 16
 //! ppn = 12
 //! testbed = catalyst   # catalyst | expanse | hdd | pmem
+//! engine_threads = 4   # windowed parallel event loop; results identical to 1
 //!
 //! [workload]
 //! config = CC-R
@@ -133,6 +134,11 @@ pub struct Experiment {
     pub accesses_per_proc: usize,
     /// Shared files the dataset is striped over (`[workload] files`).
     pub files: usize,
+    /// Windowed parallel event-loop width (`[cluster] engine_threads`);
+    /// 1 = the serial loop. Any value yields byte-identical results —
+    /// the knob only trades wall time, so it lives next to the cluster
+    /// shape rather than the workload.
+    pub engine_threads: usize,
     pub seed: u64,
 }
 
@@ -148,6 +154,7 @@ impl Default for Experiment {
             access_size: 8 << 10,
             accesses_per_proc: 10,
             files: 1,
+            engine_threads: 1,
             seed: 7,
         }
     }
@@ -174,6 +181,14 @@ impl Experiment {
                 self.shards = v.parse().map_err(|e| format!("cluster.shards: {e}"))?;
                 if self.shards == 0 {
                     return Err("cluster.shards must be >= 1".to_string());
+                }
+            }
+            if let Some(v) = cluster.get("engine_threads") {
+                self.engine_threads = v
+                    .parse()
+                    .map_err(|e| format!("cluster.engine_threads: {e}"))?;
+                if self.engine_threads == 0 {
+                    return Err("cluster.engine_threads must be >= 1".to_string());
                 }
             }
         }
@@ -265,18 +280,24 @@ mod tests {
         let mut e = Experiment::default();
         assert_eq!(e.shards, 1);
         assert_eq!(e.files, 1);
-        let ini = parse_ini("[cluster]\nshards=8\n[workload]\nfiles=16\n").unwrap();
+        assert_eq!(e.engine_threads, 1);
+        let ini =
+            parse_ini("[cluster]\nshards=8\nengine_threads=4\n[workload]\nfiles=16\n").unwrap();
         e.apply_ini(&ini).unwrap();
         assert_eq!(e.shards, 8);
         assert_eq!(e.files, 16);
+        assert_eq!(e.engine_threads, 4);
         assert_eq!(e.params().files, 16);
         assert_eq!(e.cluster().server.shard_count(), 8);
-        // Zero is rejected for both.
+        // Zero is rejected for all three.
         assert!(Experiment::default()
             .apply_ini(&parse_ini("[cluster]\nshards=0\n").unwrap())
             .is_err());
         assert!(Experiment::default()
             .apply_ini(&parse_ini("[workload]\nfiles=0\n").unwrap())
+            .is_err());
+        assert!(Experiment::default()
+            .apply_ini(&parse_ini("[cluster]\nengine_threads=0\n").unwrap())
             .is_err());
     }
 

@@ -49,10 +49,12 @@ impl SweepCell {
     }
 }
 
-/// Run one synthetic experiment once.
+/// Run one synthetic experiment once. Honors `[cluster] engine_threads`
+/// — the windowed parallel loop is byte-identical to the serial one, so
+/// the report is the same for any width.
 pub fn run_synthetic(exp: &Experiment) -> PhaseReport {
     let driver = SyntheticDriver::new_sharded(exp.fs, exp.params(), exp.shards);
-    driver.run(exp.cluster())
+    driver.run_with_threads(exp.cluster(), exp.engine_threads)
 }
 
 /// Sweep node counts × fs kinds for one Table 8 config and access size —
@@ -71,13 +73,14 @@ pub fn sweep_synthetic(
     write_phase: bool,
 ) -> Vec<SweepCell> {
     sweep_synthetic_sharded(
-        config, access, nodes_list, fs_kinds, ppn, m, repeats, testbed, write_phase, 1, 1,
+        config, access, nodes_list, fs_kinds, ppn, m, repeats, testbed, write_phase, 1, 1, 1,
     )
 }
 
 /// [`sweep_synthetic`] against an N-shard metadata plane with the
 /// dataset striped over `files` shared files; `shards == files == 1`
-/// is exactly the unsharded sweep.
+/// is exactly the unsharded sweep. `engine_threads > 1` runs the
+/// windowed parallel loop (cells are byte-identical to 1).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_synthetic_sharded(
     config: Config,
@@ -91,6 +94,7 @@ pub fn sweep_synthetic_sharded(
     write_phase: bool,
     shards: usize,
     files: usize,
+    engine_threads: usize,
 ) -> Vec<SweepCell> {
     let mut cells = Vec::new();
     for &fs in fs_kinds {
@@ -101,7 +105,10 @@ pub fn sweep_synthetic_sharded(
                 let seed = 1000 + rep as u64;
                 let params = config.params(nodes, ppn, access, m, seed).with_files(files);
                 let driver = SyntheticDriver::new_sharded(fs, params, shards);
-                let report = driver.run(testbed.cluster_sharded(nodes, seed ^ 0xBEEF, shards));
+                let report = driver.run_with_threads(
+                    testbed.cluster_sharded(nodes, seed ^ 0xBEEF, shards),
+                    engine_threads,
+                );
                 bw.push(if write_phase {
                     report.write_bw()
                 } else {
@@ -280,5 +287,13 @@ mod tests {
         };
         let rep = run_synthetic(&exp);
         assert!(rep.read_bw() > 0.0);
+        // engine_threads changes only wall time, never the report.
+        let threaded = Experiment {
+            engine_threads: 4,
+            ..exp
+        };
+        let rep4 = run_synthetic(&threaded);
+        assert_eq!(rep4.makespan, rep.makespan);
+        assert_eq!(rep4.rpcs, rep.rpcs);
     }
 }

@@ -18,7 +18,7 @@ use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
 use crate::util::rng::Rng;
-use crate::workload::{build_fs_with, LayerFactory};
+use crate::workload::{build_fs_with, LayerFactory, LazyMake};
 
 /// Fig 6 workload parameters.
 #[derive(Debug, Clone)]
@@ -163,10 +163,23 @@ enum Stage {
 
 pub struct DlDriver {
     fabric: DesFabric,
-    fs: Vec<Box<dyn WorkloadFs>>,
+    /// Per-rank layers: every slot filled at construction in eager
+    /// mode; built at first fs touch and dropped at `Done` in lazy mode.
+    fs: Vec<Option<Box<dyn WorkloadFs>>>,
+    lazy_make: Option<LazyMake>,
+    kind: FsKind,
     params: DlParams,
     file: FileId,
-    assignment: Vec<Vec<Vec<usize>>>, // [epoch][rank] -> sample ids
+    /// Shuffled sample ids for the epoch currently in flight — the
+    /// epoch barriers guarantee only one epoch is ever live, so this
+    /// single O(dataset) cache replaces PR 4's materialized
+    /// `[epoch][rank][sample]` assignment (O(epochs * dataset) words).
+    /// Rank `r`'s slice is `epoch_ids[r*per .. (r+1)*per]`.
+    epoch_ids: Vec<usize>,
+    epoch_cached: Option<usize>,
+    /// Aggregate mode only: each rank's owner-sorted copy of its slice
+    /// (empty vecs otherwise), refilled at every epoch open.
+    order: Vec<Vec<usize>>,
     stage: Vec<Stage>,
     payload: Vec<u8>,
     /// Reusable sample-read destination (alloc-free read hot loop).
@@ -179,35 +192,53 @@ pub struct DlDriver {
 
 impl DlDriver {
     pub fn new(kind: FsKind, params: DlParams) -> Self {
-        Self::new_with_layers(
-            &|kind, id, bb| Box::new(crate::fs::PolicyFs::new(kind, id, bb)),
-            kind,
-            params,
-        )
+        Self::new_with_layers(&crate::workload::policy_layer, kind, params)
     }
 
     /// [`Self::new`] with an explicit layer factory (differential pin).
     pub fn new_with_layers(make: LayerFactory, kind: FsKind, params: DlParams) -> Self {
         let nranks = params.nranks();
-        let node_of: Vec<usize> = (0..nranks).map(|r| r / params.ppn).collect();
-        let mut fabric = DesFabric::new_phantom(node_of);
-        let mut fs = build_fs_with(make, kind, &fabric);
-        let mut file = 0;
-        for f in fs.iter_mut() {
-            file = f.open(&mut fabric, "/dl/dataset.bin");
+        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
+        let fs = build_fs_with(make, kind, &fabric);
+        let mut this = Self::assemble(kind, params, fabric, None);
+        for (r, mut f) in fs.into_iter().enumerate() {
+            this.file = f.open(&mut this.fabric, "/dl/dataset.bin");
+            this.fs[r] = Some(f);
         }
         for r in 0..nranks {
-            while fabric.pop_cost(r as u32).is_some() {}
+            while this.fabric.pop_cost(r as u32).is_some() {}
         }
-        let assignment: Vec<Vec<Vec<usize>>> = (0..params.epochs)
-            .map(|e| params.epoch_assignment(e))
-            .collect();
+        this
+    }
+
+    /// Lazy-layer variant for the 10^4–10^6-rank scale rows: layers are
+    /// built at each rank's first fs touch (open costs drained, like
+    /// the eager path) and dropped at `Done`. Opt-in — acquire-on-open
+    /// models see opens mid-run, so the figure cells stay eager.
+    pub fn new_lazy(kind: FsKind, params: DlParams) -> Self {
+        let nranks = params.nranks();
+        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
+        let lazy = Some(crate::workload::policy_layer as LazyMake);
+        Self::assemble(kind, params, fabric, lazy)
+    }
+
+    fn assemble(
+        kind: FsKind,
+        params: DlParams,
+        fabric: DesFabric,
+        lazy_make: Option<LazyMake>,
+    ) -> Self {
+        let nranks = params.nranks();
         let payload = vec![0u8; params.sample_bytes as usize];
         Self {
             fabric,
-            fs,
-            file,
-            assignment,
+            fs: (0..nranks).map(|_| None).collect(),
+            lazy_make,
+            kind,
+            file: 0,
+            epoch_ids: Vec::new(),
+            epoch_cached: None,
+            order: vec![Vec::new(); nranks],
             stage: vec![Stage::Preload(0); nranks],
             payload,
             read_buf: Vec::new(),
@@ -219,12 +250,67 @@ impl DlDriver {
         }
     }
 
-    pub fn run(mut self, cluster: Cluster) -> DlReport {
-        let node_of: Vec<usize> = (0..self.params.nranks())
-            .map(|r| r / self.params.ppn)
-            .collect();
-        let mut engine = Engine::new(cluster, node_of);
-        let stats = engine.run(&mut self).expect("DL emulation deadlock");
+    /// Effective samples per rank per epoch (the shuffle is sliced
+    /// evenly, capped by the dataset size).
+    fn per(&self) -> usize {
+        self.params
+            .samples_per_rank_epoch
+            .min(self.params.dataset_samples / self.params.nranks())
+    }
+
+    /// (Re)compute the epoch shuffle if `epoch` is not the cached one.
+    /// Must produce exactly [`DlParams::epoch_assignment`]'s shuffle —
+    /// pinned by `streaming_assignment_matches_materialized`.
+    fn ensure_epoch(&mut self, epoch: usize) {
+        if self.epoch_cached == Some(epoch) {
+            return;
+        }
+        self.epoch_ids.clear();
+        self.epoch_ids.extend(0..self.params.dataset_samples);
+        let mut rng = Rng::seed_from_u64(self.params.seed ^ (epoch as u64).wrapping_mul(0x9E37));
+        rng.shuffle(&mut self.epoch_ids);
+        self.epoch_cached = Some(epoch);
+    }
+
+    /// Aggregate mode: refill rank's owner-sorted slice copy from the
+    /// cached epoch shuffle (same staggered sort as `epoch_assignment`).
+    fn fill_order(&mut self, rank: usize) {
+        let per = self.per();
+        let mut slot = std::mem::take(&mut self.order[rank]);
+        slot.clear();
+        slot.extend_from_slice(&self.epoch_ids[rank * per..(rank + 1) * per]);
+        let n = self.params.nranks();
+        let p = &self.params;
+        slot.sort_by_key(|&id| {
+            let o = p.owner_of(id);
+            ((o + n - rank) % n, id)
+        });
+        self.order[rank] = slot;
+    }
+
+    /// Lazy mode: build `rank`'s layer on first touch (no-op in eager).
+    fn ensure_fs(&mut self, rank: usize) {
+        if self.fs[rank].is_some() {
+            return;
+        }
+        let make = self.lazy_make.expect("eager fs slot vanished");
+        let mut f = make(self.kind, rank as u32, self.fabric.bb_of(rank as u32));
+        self.file = f.open(&mut self.fabric, "/dl/dataset.bin");
+        while self.fabric.pop_cost(rank as u32).is_some() {}
+        self.fs[rank] = Some(f);
+    }
+
+    pub fn run(self, cluster: Cluster) -> DlReport {
+        self.run_with_threads(cluster, 1)
+    }
+
+    /// [`Self::run`] on the windowed parallel event loop (`threads <= 1`
+    /// is exactly the serial loop; any P is byte-identical to it).
+    pub fn run_with_threads(mut self, cluster: Cluster, threads: usize) -> DlReport {
+        let mut engine = Engine::uniform_with(cluster, self.params.ppn, self.params.nranks());
+        let stats = engine
+            .run_threaded(&mut self, threads)
+            .expect("DL emulation deadlock");
         let p = &self.params;
         let per_epoch: u64 =
             p.samples_per_rank_epoch as u64 * p.nranks() as u64 * p.sample_bytes;
@@ -233,7 +319,7 @@ impl DlDriver {
             .sum::<u64>()
             / p.epochs as u64);
         DlReport {
-            fs: self.fs[0].kind().name(),
+            fs: self.kind.name(),
             nodes: p.nodes,
             read_bytes_per_epoch: per_epoch,
             epoch_time: mean_epoch,
@@ -257,10 +343,13 @@ impl Driver for DlDriver {
                 Stage::Preload(i) => {
                     // Write the contiguous shard sample-by-sample.
                     if i < p.shard_samples() {
+                        self.ensure_fs(rank);
                         let sample = rank * p.shard_samples() + i;
                         let off = p.sample_offset(sample);
                         let payload = std::mem::take(&mut self.payload);
                         self.fs[rank]
+                            .as_mut()
+                            .expect("preload layer missing")
                             .write_at(&mut self.fabric, self.file, off, &payload)
                             .expect("preload write");
                         self.payload = payload;
@@ -274,7 +363,10 @@ impl Driver for DlDriver {
                     }
                 }
                 Stage::PublishShard => {
+                    self.ensure_fs(rank);
                     self.fs[rank]
+                        .as_mut()
+                        .expect("preload layer missing")
                         .end_write_phase(&mut self.fabric, self.file)
                         .expect("publish shard");
                     self.stage[rank] = Stage::PreloadBarrier;
@@ -293,8 +385,18 @@ impl Driver for DlDriver {
                         self.stage[rank] = Stage::Finish;
                         continue;
                     }
+                    // The epoch barriers guarantee only one epoch is in
+                    // flight, so the first rank to open it refreshes the
+                    // shared shuffle cache for everyone.
+                    self.ensure_epoch(epoch);
+                    if p.aggregate {
+                        self.fill_order(rank);
+                    }
+                    self.ensure_fs(rank);
                     self.epoch_start[epoch] = self.epoch_start[epoch].min(now);
                     self.fs[rank]
+                        .as_mut()
+                        .expect("epoch layer missing")
                         .begin_read_phase(&mut self.fabric, self.file)
                         .expect("epoch open");
                     self.stage[rank] = Stage::EpochRead { epoch, i: 0 };
@@ -304,8 +406,13 @@ impl Driver for DlDriver {
                     }
                 }
                 Stage::EpochRead { epoch, i } => {
-                    let ids = &self.assignment[epoch][rank];
-                    if i < ids.len() {
+                    let per = self.per();
+                    if i < per {
+                        let ids: &[usize] = if p.aggregate {
+                            &self.order[rank]
+                        } else {
+                            &self.epoch_ids[rank * per..(rank + 1) * per]
+                        };
                         let sample = ids[i];
                         let off = p.sample_offset(sample);
                         let owner = p.owner_of(sample);
@@ -313,7 +420,7 @@ impl Driver for DlDriver {
                             self.remote += 1;
                         }
                         self.total_reads += 1;
-                        if p.aggregate && self.fs[rank].kind() == crate::fs::FsKind::COMMIT {
+                        if p.aggregate && self.kind == crate::fs::FsKind::COMMIT {
                             // Aggregated path: one ownership query per
                             // owner-group (ids are owner-sorted), then
                             // direct owner fetches per sample.
@@ -330,12 +437,16 @@ impl Driver for DlDriver {
                                         + p.sample_bytes,
                                 );
                                 self.fs[rank]
+                                    .as_mut()
+                                    .expect("epoch layer missing")
                                     .core()
                                     .query(&mut self.fabric, self.file, span.start, span.len())
                                     .expect("group query");
                             }
                             self.read_buf.clear();
                             self.fs[rank]
+                                .as_mut()
+                                .expect("epoch layer missing")
                                 .core()
                                 .read_at_into(
                                     &mut self.fabric,
@@ -348,6 +459,8 @@ impl Driver for DlDriver {
                         } else {
                             self.read_buf.clear();
                             self.fs[rank]
+                                .as_mut()
+                                .expect("epoch layer missing")
                                 .read_at_into(
                                     &mut self.fabric,
                                     self.file,
@@ -372,6 +485,11 @@ impl Driver for DlDriver {
                     return;
                 }
                 Stage::Finish => {
+                    if self.lazy_make.is_some() {
+                        // Lazy mode: release this rank's layer state.
+                        self.fs[rank] = None;
+                    }
+                    self.order[rank] = Vec::new();
                     self.stage[rank] = Stage::Finished;
                     out.push(SimOp::Done);
                     return;
@@ -427,6 +545,50 @@ mod tests {
         assert_eq!(p.owner_of(shard - 1), 0);
         assert_eq!(p.owner_of(shard), 1);
         assert_eq!(p.owner_of(p.dataset_samples - 1), p.nranks() - 1);
+    }
+
+    #[test]
+    fn streaming_assignment_matches_materialized() {
+        // The driver's cached single-epoch shuffle (and aggregate-mode
+        // owner sort) must reproduce `epoch_assignment` exactly.
+        for aggregate in [false, true] {
+            let mut p = DlParams::weak(2, 2, 2, 7);
+            p.aggregate = aggregate;
+            p.epochs = 2;
+            let mut d = DlDriver::new(FsKind::COMMIT, p.clone());
+            for e in 0..p.epochs {
+                let want = p.epoch_assignment(e);
+                d.ensure_epoch(e);
+                let per = d.per();
+                for r in 0..p.nranks() {
+                    if aggregate {
+                        d.fill_order(r);
+                        assert_eq!(d.order[r], want[r], "agg epoch {e} rank {r}");
+                    } else {
+                        assert_eq!(
+                            &d.epoch_ids[r * per..(r + 1) * per],
+                            &want[r][..],
+                            "epoch {e} rank {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_and_threaded_match_eager_serial() {
+        let p = DlParams::weak(4, 2, 2, 11);
+        let base = DlDriver::new(FsKind::COMMIT, p.clone()).run(Cluster::catalyst(4, 5));
+        let lazy = DlDriver::new_lazy(FsKind::COMMIT, p.clone()).run(Cluster::catalyst(4, 5));
+        let par =
+            DlDriver::new(FsKind::COMMIT, p).run_with_threads(Cluster::catalyst(4, 5), 4);
+        for (name, rep) in [("lazy", &lazy), ("threaded", &par)] {
+            assert_eq!(base.counters, rep.counters, "{name}");
+            assert_eq!(base.sim_ops, rep.sim_ops, "{name}");
+            assert_eq!(base.epoch_time, rep.epoch_time, "{name}");
+            assert_eq!(base.remote_fraction, rep.remote_fraction, "{name}");
+        }
     }
 
     #[test]

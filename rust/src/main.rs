@@ -177,6 +177,12 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
             "shared files the dataset is striped over",
         )
         .opt(
+            "engine-threads",
+            "N",
+            Some("1"),
+            "windowed parallel event-loop width (results are byte-identical for any value)",
+        )
+        .opt(
             "config-file",
             "PATH",
             None,
@@ -203,6 +209,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let repeats = args.usize("repeats")?;
     let mut shards = args.usize("shards")?;
     let mut files = args.usize("files")?;
+    let mut engine_threads = args.usize("engine-threads")?;
     // Config-file values apply wherever the flag was not given on the
     // command line AND the file actually sets the key (CLI > file >
     // built-in default; a file that omits a key must not disturb the
@@ -242,12 +249,18 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         if !args.explicit("files") && in_file("workload", "files") {
             files = exp.files;
         }
+        if !args.explicit("engine-threads") && in_file("cluster", "engine_threads") {
+            engine_threads = exp.engine_threads;
+        }
     }
     if shards == 0 {
         return Err("--shards must be >= 1".to_string());
     }
     if files == 0 {
         return Err("--files must be >= 1".to_string());
+    }
+    if engine_threads == 0 {
+        return Err("--engine-threads must be >= 1".to_string());
     }
     let fs_kinds = match fs_override {
         Some(kinds) => kinds,
@@ -257,7 +270,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let write_phase = matches!(workload, WlConfig::CnW | WlConfig::SnW);
     let cells = sweep_synthetic_sharded(
         workload, size, &nodes_list, &fs_kinds, ppn, m, repeats, testbed, write_phase, shards,
-        files,
+        files, engine_threads,
     );
     let title = format!(
         "{} access={} ppn={} m={} testbed={} shards={} files={} ({} bandwidth)",

@@ -21,7 +21,7 @@ use crate::basefs::{DesFabric, FabricCounters, FileId};
 use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
-use crate::workload::{build_fs_with, LayerFactory};
+use crate::workload::{build_fs_with, LayerFactory, LazyMake};
 
 /// HACC-IO checkpoint layout.
 #[derive(Debug, Clone)]
@@ -158,7 +158,12 @@ const TAG_SPARE: u64 = 2;
 
 pub struct ScrDriver {
     fabric: DesFabric,
-    fs: Vec<Box<dyn WorkloadFs>>,
+    /// Per-rank layers: every slot filled at construction in eager
+    /// mode; built at first fs touch and dropped at `Done` in lazy mode
+    /// (spare ranks never touch the fs, so they never allocate one).
+    fs: Vec<Option<Box<dyn WorkloadFs>>>,
+    lazy_make: Option<LazyMake>,
+    kind: FsKind,
     params: ScrParams,
     own_file: Vec<FileId>,
     partner_file: Vec<FileId>,
@@ -173,34 +178,45 @@ pub struct ScrDriver {
 
 impl ScrDriver {
     pub fn new(kind: FsKind, params: ScrParams) -> Self {
-        Self::new_with_layers(
-            &|kind, id, bb| Box::new(crate::fs::PolicyFs::new(kind, id, bb)),
-            kind,
-            params,
-        )
+        Self::new_with_layers(&crate::workload::policy_layer, kind, params)
     }
 
     /// [`Self::new`] with an explicit layer factory (differential pin).
     pub fn new_with_layers(make: LayerFactory, kind: FsKind, params: ScrParams) -> Self {
         let nranks = params.nranks();
-        let node_of: Vec<usize> = (0..nranks).map(|r| r / params.ppn).collect();
-        let mut fabric = DesFabric::new_phantom(node_of);
-        let mut fs = build_fs_with(make, kind, &fabric);
-        let compute = params.compute_ranks();
+        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
+        let fs = build_fs_with(make, kind, &fabric);
+        let mut this = Self::assemble(kind, params, fabric, None);
         // File-per-process: own checkpoint + the partner copy one hosts.
-        let mut own_file = vec![0; nranks];
-        let mut partner_file = vec![0; nranks];
-        for r in 0..nranks {
-            own_file[r] = fs[r].open(&mut fabric, &format!("/scr/ckpt.{r}"));
-            if r < compute {
-                // This rank HOSTS the copy of the rank whose partner it is.
-                let src = (r + compute - params.ppn) % compute;
-                partner_file[r] = fs[r].open(&mut fabric, &format!("/scr/ckpt.{src}.partner"));
-            }
+        for (r, mut f) in fs.into_iter().enumerate() {
+            this.open_rank_files(f.as_mut(), r);
+            this.fs[r] = Some(f);
         }
         for r in 0..nranks {
-            while fabric.pop_cost(r as u32).is_some() {}
+            while this.fabric.pop_cost(r as u32).is_some() {}
         }
+        this
+    }
+
+    /// Lazy-layer variant for large-scale rows: layers are built at
+    /// each rank's first fs touch (open costs drained, matching the
+    /// eager path) and dropped at `Done`. Opt-in — acquire-on-open
+    /// models see opens mid-run, so the figure cells stay eager.
+    pub fn new_lazy(kind: FsKind, params: ScrParams) -> Self {
+        let nranks = params.nranks();
+        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
+        let lazy = Some(crate::workload::policy_layer as LazyMake);
+        Self::assemble(kind, params, fabric, lazy)
+    }
+
+    fn assemble(
+        kind: FsKind,
+        params: ScrParams,
+        fabric: DesFabric,
+        lazy_make: Option<LazyMake>,
+    ) -> Self {
+        let nranks = params.nranks();
+        let compute = params.compute_ranks();
         let payload = vec![0u8; params.array_bytes() as usize];
         let stage = (0..nranks)
             .map(|r| {
@@ -213,9 +229,11 @@ impl ScrDriver {
             .collect();
         Self {
             fabric,
-            fs,
-            own_file,
-            partner_file,
+            fs: (0..nranks).map(|_| None).collect(),
+            lazy_make,
+            kind,
+            own_file: vec![0; nranks],
+            partner_file: vec![0; nranks],
             stage,
             payload,
             read_buf: Vec::new(),
@@ -226,17 +244,45 @@ impl ScrDriver {
         }
     }
 
-    pub fn run(mut self, cluster: Cluster) -> ScrReport {
-        let node_of: Vec<usize> = (0..self.params.nranks())
-            .map(|r| r / self.params.ppn)
-            .collect();
-        let mut engine = Engine::new(cluster, node_of);
-        let stats = engine.run(&mut self).expect("SCR emulation deadlock");
+    /// Open rank `r`'s checkpoint files on layer `f`, recording the ids.
+    fn open_rank_files(&mut self, f: &mut dyn WorkloadFs, r: usize) {
+        let compute = self.params.compute_ranks();
+        self.own_file[r] = f.open(&mut self.fabric, &format!("/scr/ckpt.{r}"));
+        if r < compute {
+            // This rank HOSTS the copy of the rank whose partner it is.
+            let src = (r + compute - self.params.ppn) % compute;
+            self.partner_file[r] = f.open(&mut self.fabric, &format!("/scr/ckpt.{src}.partner"));
+        }
+    }
+
+    /// Lazy mode: build `rank`'s layer on first touch (no-op in eager).
+    fn ensure_fs(&mut self, rank: usize) {
+        if self.fs[rank].is_some() {
+            return;
+        }
+        let make = self.lazy_make.expect("eager fs slot vanished");
+        let mut f = make(self.kind, rank as u32, self.fabric.bb_of(rank as u32));
+        self.open_rank_files(f.as_mut(), rank);
+        while self.fabric.pop_cost(rank as u32).is_some() {}
+        self.fs[rank] = Some(f);
+    }
+
+    pub fn run(self, cluster: Cluster) -> ScrReport {
+        self.run_with_threads(cluster, 1)
+    }
+
+    /// [`Self::run`] on the windowed parallel event loop (`threads <= 1`
+    /// is exactly the serial loop; any P is byte-identical to it).
+    pub fn run_with_threads(mut self, cluster: Cluster, threads: usize) -> ScrReport {
+        let mut engine = Engine::uniform_with(cluster, self.params.ppn, self.params.nranks());
+        let stats = engine
+            .run_threaded(&mut self, threads)
+            .expect("SCR emulation deadlock");
         let p = &self.params;
         // Survivors: compute ranks not on the failed node (node 0 fails).
         let survivors = (p.compute_ranks() - p.ppn) as u64;
         ScrReport {
-            fs: self.fs[0].kind().name(),
+            fs: self.kind.name(),
             nodes: p.nodes,
             ckpt_bytes: 2 * p.ckpt_bytes() * p.compute_ranks() as u64,
             ckpt_end: self.ckpt_end,
@@ -277,9 +323,12 @@ impl Driver for ScrDriver {
             match self.stage[rank] {
                 Stage::WriteOwn(a) => {
                     if a < p.arrays {
+                        self.ensure_fs(rank);
                         let off = a as u64 * p.array_bytes();
                         let payload = std::mem::take(&mut self.payload);
                         self.fs[rank]
+                            .as_mut()
+                            .expect("compute layer missing")
                             .write_at(&mut self.fabric, self.own_file[rank], off, &payload)
                             .expect("ckpt write");
                         self.payload = payload;
@@ -314,6 +363,8 @@ impl Driver for ScrDriver {
                         let off = a as u64 * p.array_bytes();
                         let payload = std::mem::take(&mut self.payload);
                         self.fs[rank]
+                            .as_mut()
+                            .expect("compute layer missing")
                             .write_at(&mut self.fabric, self.partner_file[rank], off, &payload)
                             .expect("partner write");
                         self.payload = payload;
@@ -331,6 +382,8 @@ impl Driver for ScrDriver {
                     // batched sync (per-shard RPC vectors).
                     let files = [self.own_file[rank], self.partner_file[rank]];
                     self.fs[rank]
+                        .as_mut()
+                        .expect("compute layer missing")
                         .end_write_phase_all(&mut self.fabric, &files)
                         .expect("publish ckpt files");
                     self.stage[rank] = Stage::BarrierThenRestart;
@@ -357,7 +410,10 @@ impl Driver for ScrDriver {
                         // Failed node: dead, executes nothing.
                         self.stage[rank] = Stage::Finish;
                     } else {
+                        self.ensure_fs(rank);
                         self.fs[rank]
+                            .as_mut()
+                            .expect("survivor layer missing")
                             .begin_read_phase(&mut self.fabric, self.own_file[rank])
                             .expect("restart session");
                         self.restart_start = self.restart_start.min(now);
@@ -373,6 +429,8 @@ impl Driver for ScrDriver {
                         let off = a as u64 * p.array_bytes();
                         self.read_buf.clear();
                         self.fs[rank]
+                            .as_mut()
+                            .expect("survivor layer missing")
                             .read_at_into(
                                 &mut self.fabric,
                                 self.own_file[rank],
@@ -420,6 +478,10 @@ impl Driver for ScrDriver {
                     return;
                 }
                 Stage::Finish => {
+                    if self.lazy_make.is_some() {
+                        // Lazy mode: release this rank's layer state.
+                        self.fs[rank] = None;
+                    }
                     self.stage[rank] = Stage::Finished;
                     out.push(SimOp::Done);
                     return;
@@ -482,6 +544,25 @@ mod run_tests {
             s.restart_bw(),
             c.restart_bw()
         );
+    }
+
+    #[test]
+    fn lazy_and_threaded_match_eager_serial() {
+        let mk = || {
+            let mut p = ScrParams::with_nodes(4, 4);
+            p.particles = 1_000_000;
+            p
+        };
+        let base = ScrDriver::new(FsKind::SESSION, mk()).run(Cluster::catalyst(4, 3));
+        let lazy = ScrDriver::new_lazy(FsKind::SESSION, mk()).run(Cluster::catalyst(4, 3));
+        let par =
+            ScrDriver::new(FsKind::SESSION, mk()).run_with_threads(Cluster::catalyst(4, 3), 4);
+        for (name, rep) in [("lazy", &lazy), ("threaded", &par)] {
+            assert_eq!(base.counters, rep.counters, "{name}");
+            assert_eq!(base.sim_ops, rep.sim_ops, "{name}");
+            assert_eq!(base.ckpt_end, rep.ckpt_end, "{name}");
+            assert_eq!(base.restart_end, rep.restart_end, "{name}");
+        }
     }
 
     #[test]

@@ -32,14 +32,30 @@
 //! - **Scratch reuse.** The batch vec and the barrier arrival list are
 //!   reused across iterations; barrier release tracks the running max
 //!   arrival instead of re-scanning arrivals.
+//!
+//! ## Parallel windowed loop (DESIGN.md §Perf)
+//!
+//! [`Engine::run_threaded`] partitions ranks by their static node
+//! routing into P shard heaps, each owned by a worker thread, and
+//! advances virtual time in conservative windows
+//! `[min_head, min_head + lookahead)` where the lookahead is the
+//! minimum cross-rank interaction latency (`NetParams::latency`).
+//! Workers absorb the heap maintenance (integrating staged entries,
+//! draining due ones); the coordinator commits every due event
+//! **serially in exact (time, sequence) order** — the same total order
+//! the serial loop pops — so device pricing, driver invocation order,
+//! and therefore every output bit are identical for any P. See the
+//! safety argument on [`Engine::run_threaded`].
 
 use super::devices::{
     NetParams, NicDevice, ServerDevice, ServerParams, SsdDevice, SsdParams, UpfsDevice,
     UpfsParams,
 };
 use super::time::Ns;
+use crate::util::stats::{Samples, Summary};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::mpsc;
 
 /// Wire size of a synchronization RPC request/response — interval lists
 /// are tiny compared to data transfers.
@@ -150,12 +166,46 @@ impl<F: FnMut(usize, Ns) -> SimOp> Driver for F {
     }
 }
 
+/// Per-rank finish vectors are retained exactly up to this rank count;
+/// beyond it [`RunStats::finish`] is empty and callers read the
+/// streaming [`RunStats::finish_summary`] instead. Keeps million-rank
+/// reports from holding (and sorting) a 10^6-entry vec while every
+/// existing small-n caller keeps exact per-rank access.
+pub const FINISH_RETAIN: usize = 65_536;
+
 /// Engine outcome: per-rank finish times and the makespan.
-#[derive(Debug, Clone)]
+///
+/// `finish_summary` (nanoseconds as f64) is always populated;
+/// `finish` is empty when the run had more than [`FINISH_RETAIN`]
+/// ranks.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunStats {
     pub finish: Vec<Ns>,
+    pub finish_summary: Summary,
     pub makespan: Ns,
     pub ops_executed: u64,
+}
+
+impl RunStats {
+    fn from_finish(finish: Vec<Ns>, ops_executed: u64) -> Self {
+        let makespan = finish.iter().copied().max().unwrap_or(Ns::ZERO);
+        let mut samples = Samples::new();
+        for &t in &finish {
+            samples.push(t.0 as f64);
+        }
+        let finish_summary = samples.summary();
+        let finish = if finish.len() <= FINISH_RETAIN {
+            finish
+        } else {
+            Vec::new()
+        };
+        Self {
+            finish,
+            finish_summary,
+            makespan,
+            ops_executed,
+        }
+    }
 }
 
 /// Deadlock or driver error.
@@ -187,6 +237,52 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// Compact rank→node mapping. Uniform layouts (`ppn` ranks per node,
+/// rank r on node r / ppn) are pure arithmetic — engine construction
+/// costs O(1) memory at any rank count — while irregular layouts keep
+/// the explicit-vec fallback.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeMap {
+    /// Rank r lives on node r / ppn; `nranks` ranks total.
+    Uniform { ppn: usize, nranks: usize },
+    /// Arbitrary rank→node vector (irregular layouts).
+    Explicit(Vec<usize>),
+}
+
+impl NodeMap {
+    pub fn uniform(ppn: usize, nranks: usize) -> Self {
+        assert!(ppn > 0, "ppn must be positive");
+        assert!(nranks > 0, "need at least one rank");
+        NodeMap::Uniform { ppn, nranks }
+    }
+
+    pub fn nranks(&self) -> usize {
+        match self {
+            NodeMap::Uniform { nranks, .. } => *nranks,
+            NodeMap::Explicit(v) => v.len(),
+        }
+    }
+
+    #[inline]
+    pub fn node_of(&self, rank: usize) -> usize {
+        match self {
+            NodeMap::Uniform { ppn, nranks } => {
+                debug_assert!(rank < *nranks, "rank {rank} out of range");
+                rank / ppn
+            }
+            NodeMap::Explicit(v) => v[rank],
+        }
+    }
+
+    /// Largest node index any rank maps to (for validation).
+    pub fn max_node(&self) -> usize {
+        match self {
+            NodeMap::Uniform { ppn, nranks } => (nranks - 1) / ppn,
+            NodeMap::Explicit(v) => v.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum RankState {
     Running,
@@ -195,232 +291,65 @@ enum RankState {
     Finished,
 }
 
-/// The engine. `node_of[rank]` maps ranks to nodes.
-pub struct Engine {
-    pub cluster: Cluster,
-    node_of: Vec<usize>,
+/// The mutable per-run loop state shared by the serial and parallel
+/// commit paths. Everything except the event heap itself lives here:
+/// the heap (and its sequence counter) stays with whichever loop owns
+/// the pop order.
+struct LoopCore {
+    state: Vec<RankState>,
+    finish: Vec<Ns>,
+    live: usize,
+    ops: u64,
+    /// Barrier bookkeeping: arrived ranks + running max arrival time.
+    barrier_ranks: Vec<usize>,
+    barrier_max: Ns,
+    /// Indexed mailboxes (module docs): undelivered (from, tag,
+    /// arrival) triples per receiver, scanned in arrival order, and
+    /// the at-most-one (from, tag, parked_at) wait slot per rank.
+    mail: Vec<Vec<(usize, u64, Ns)>>,
+    recv_parked: Vec<Option<(usize, u64, Ns)>>,
+    /// Reused scratch for each rank-step's op batch.
+    batch: Vec<SimOp>,
 }
 
-impl Engine {
-    pub fn new(cluster: Cluster, node_of: Vec<usize>) -> Self {
-        assert!(!node_of.is_empty(), "need at least one rank");
-        let nodes = cluster.nodes();
-        assert!(
-            node_of.iter().all(|&n| n < nodes),
-            "rank mapped to nonexistent node"
-        );
-        Self { cluster, node_of }
-    }
-
-    /// Uniform mapping: `ppn` ranks per node, rank r on node r / ppn.
-    pub fn uniform(cluster: Cluster, ppn: usize) -> Self {
-        let nodes = cluster.nodes();
-        let node_of = (0..nodes * ppn).map(|r| r / ppn).collect();
-        Self::new(cluster, node_of)
-    }
-
-    pub fn nranks(&self) -> usize {
-        self.node_of.len()
-    }
-
-    pub fn node_of(&self, rank: usize) -> usize {
-        self.node_of[rank]
+impl LoopCore {
+    fn new(n: usize) -> Self {
+        Self {
+            state: vec![RankState::Running; n],
+            finish: vec![Ns::ZERO; n],
+            live: n,
+            ops: 0,
+            barrier_ranks: Vec::with_capacity(n.min(FINISH_RETAIN)),
+            barrier_max: Ns::ZERO,
+            mail: vec![Vec::new(); n],
+            recv_parked: vec![None; n],
+            batch: Vec::with_capacity(8),
+        }
     }
 
     /// Release a completed barrier: every arrived rank resumes at the
     /// max arrival time plus a log2(n)-scaled collective cost.
-    fn release_barrier(
-        arrived: &mut Vec<usize>,
-        max_arrival: &mut Ns,
-        state: &mut [RankState],
-        heap: &mut BinaryHeap<Reverse<(Ns, u64, usize)>>,
-        seq: &mut u64,
-        live: usize,
-        latency: Ns,
-    ) {
-        let fan = (live.max(2) as f64).log2().ceil() as u64;
-        let release = *max_arrival + Ns(latency.0 * fan);
+    fn release_barrier(&mut self, latency: Ns, push: &mut dyn FnMut(Ns, usize)) {
+        let fan = (self.live.max(2) as f64).log2().ceil() as u64;
+        let release = self.barrier_max + Ns(latency.0 * fan);
+        let mut arrived = std::mem::take(&mut self.barrier_ranks);
         for r in arrived.drain(..) {
-            state[r] = RankState::Running;
-            heap.push(Reverse((release, *seq, r)));
-            *seq += 1;
+            self.state[r] = RankState::Running;
+            push(release, r);
         }
-        *max_arrival = Ns::ZERO;
+        self.barrier_ranks = arrived; // keep the capacity
+        self.barrier_max = Ns::ZERO;
     }
 
-    /// Run `driver` to completion on all ranks; returns timing stats.
-    pub fn run(&mut self, driver: &mut dyn Driver) -> Result<RunStats, SimError> {
-        let n = self.node_of.len();
-        let mut heap: BinaryHeap<Reverse<(Ns, u64, usize)>> = BinaryHeap::with_capacity(n + 1);
-        let mut seq: u64 = 0;
-        for rank in 0..n {
-            heap.push(Reverse((Ns::ZERO, seq, rank)));
-            seq += 1;
-        }
-        let mut state = vec![RankState::Running; n];
-        let mut finish = vec![Ns::ZERO; n];
-        let mut live = n;
-        let mut ops: u64 = 0;
-
-        // Barrier bookkeeping: arrived ranks + running max arrival time.
-        let mut barrier_ranks: Vec<usize> = Vec::with_capacity(n);
-        let mut barrier_max = Ns::ZERO;
-        // Indexed mailboxes (module docs): undelivered (from, tag,
-        // arrival) triples per receiver, scanned in arrival order, and
-        // the at-most-one (from, tag, parked_at) wait slot per rank.
-        let mut mail: Vec<Vec<(usize, u64, Ns)>> = vec![Vec::new(); n];
-        let mut recv_parked: Vec<Option<(usize, u64, Ns)>> = vec![None; n];
-        // Reused scratch for each rank-step's op batch.
-        let mut batch: Vec<SimOp> = Vec::with_capacity(8);
-
-        while let Some(Reverse((now, _, rank))) = heap.pop() {
-            debug_assert_eq!(state[rank], RankState::Running);
-            batch.clear();
-            driver.next_ops(rank, now, &mut batch);
-            // Hard assert: an empty batch would otherwise reschedule the
-            // rank at the same instant forever.
-            assert!(!batch.is_empty(), "empty op batch for rank {rank}");
-            ops += batch.len() as u64;
-            let node = self.node_of[rank];
-            let mut t = now;
-            // Set false by ops that park or finish the rank.
-            let mut reschedule = true;
-            let last = batch.len() - 1;
-            for (k, &op) in batch.iter().enumerate() {
-                match op {
-                    SimOp::Compute(d) => t += d,
-                    SimOp::SsdWrite { bytes } => t = self.cluster.ssds[node].write(t, bytes),
-                    SimOp::SsdRead { bytes } => t = self.cluster.ssds[node].read(t, bytes),
-                    SimOp::MemRead { bytes } => t += SsdDevice::memread_time(bytes),
-                    SimOp::Rpc { intervals, shard } => {
-                        // request: client tx + latency; server; response:
-                        // latency.
-                        let sent = self.cluster.nics[node].send(t, RPC_BYTES);
-                        let replied = self.cluster.server.serve_rpc(sent, shard, intervals);
-                        t = replied + self.cluster.net.latency;
-                    }
-                    SimOp::RemoteFetch {
-                        owner_node,
-                        bytes,
-                        from_ssd,
-                    } => {
-                        t = if owner_node == node {
-                            // Local: straight from the owner buffer/SSD.
-                            if from_ssd {
-                                self.cluster.ssds[node].read(t, bytes)
-                            } else {
-                                t + SsdDevice::memread_time(bytes)
-                            }
-                        } else {
-                            // RDMA read: request latency, owner-side data
-                            // production, wire transfer, receive absorb.
-                            let req_at = t
-                                + self.cluster.net.latency
-                                + self.cluster.nics[owner_node].rdma_overhead();
-                            let data_ready = if from_ssd {
-                                self.cluster.ssds[owner_node].read(req_at, bytes)
-                            } else {
-                                req_at + SsdDevice::memread_time(bytes)
-                            };
-                            let on_wire = self.cluster.nics[owner_node].send(data_ready, bytes);
-                            self.cluster.nics[node].recv(on_wire, bytes)
-                        };
-                    }
-                    SimOp::UpfsWrite { bytes } => {
-                        let sent = self.cluster.nics[node].send(t, bytes);
-                        t = self.cluster.upfs.write(sent, bytes);
-                    }
-                    SimOp::UpfsRead { bytes } => {
-                        let replied = self.cluster.upfs.read(t + self.cluster.net.latency, bytes);
-                        t = self.cluster.nics[node].recv(replied, bytes);
-                    }
-                    SimOp::Barrier => {
-                        assert!(k == last, "Barrier must end a rank-step batch");
-                        state[rank] = RankState::AtBarrier;
-                        barrier_ranks.push(rank);
-                        barrier_max = barrier_max.max(t);
-                        reschedule = false;
-                        if barrier_ranks.len() == live {
-                            Self::release_barrier(
-                                &mut barrier_ranks,
-                                &mut barrier_max,
-                                &mut state,
-                                &mut heap,
-                                &mut seq,
-                                live,
-                                self.cluster.net.latency,
-                            );
-                        }
-                    }
-                    SimOp::Send { to, tag, bytes } => {
-                        let on_wire = self.cluster.nics[node].send(t, bytes);
-                        let to_node = self.node_of[to];
-                        let arrived = if to_node == node {
-                            on_wire
-                        } else {
-                            self.cluster.nics[to_node].recv(on_wire, bytes)
-                        };
-                        // Wake the parked receiver or store in the mailbox.
-                        match recv_parked[to] {
-                            Some((from, wtag, parked_at)) if from == rank && wtag == tag => {
-                                recv_parked[to] = None;
-                                state[to] = RankState::Running;
-                                heap.push(Reverse((arrived.max(parked_at), seq, to)));
-                                seq += 1;
-                            }
-                            _ => mail[to].push((rank, tag, arrived)),
-                        }
-                        // Sender resumes once the payload is on the wire.
-                        t = on_wire;
-                    }
-                    SimOp::Recv { from, tag } => {
-                        assert!(k == last, "Recv must end a rank-step batch");
-                        // First matching message in arrival order.
-                        let pos = mail[rank]
-                            .iter()
-                            .position(|&(f, g, _)| f == from && g == tag);
-                        if let Some(pos) = pos {
-                            let (_, _, arrived) = mail[rank].remove(pos);
-                            t = arrived.max(t);
-                        } else {
-                            state[rank] = RankState::InRecv;
-                            recv_parked[rank] = Some((from, tag, t));
-                            reschedule = false;
-                        }
-                    }
-                    SimOp::Done => {
-                        assert!(k == last, "Done must end a rank-step batch");
-                        state[rank] = RankState::Finished;
-                        finish[rank] = t;
-                        live -= 1;
-                        reschedule = false;
-                        // A barrier may now be releasable.
-                        if live > 0 && !barrier_ranks.is_empty() && barrier_ranks.len() == live {
-                            Self::release_barrier(
-                                &mut barrier_ranks,
-                                &mut barrier_max,
-                                &mut state,
-                                &mut heap,
-                                &mut seq,
-                                live,
-                                self.cluster.net.latency,
-                            );
-                        }
-                    }
-                }
-            }
-            if reschedule {
-                heap.push(Reverse((t, seq, rank)));
-                seq += 1;
-            }
-        }
-
-        // Anything still parked is deadlocked.
-        let barrier = state
+    /// Deadlock check + stats, consuming the core.
+    fn finish_stats(self) -> Result<RunStats, SimError> {
+        let barrier = self
+            .state
             .iter()
             .filter(|s| matches!(s, RankState::AtBarrier))
             .count();
-        let recv = state
+        let recv = self
+            .state
             .iter()
             .filter(|s| matches!(s, RankState::InRecv))
             .count();
@@ -431,13 +360,398 @@ impl Engine {
                 recv,
             });
         }
+        Ok(RunStats::from_finish(self.finish, self.ops))
+    }
+}
 
-        let makespan = finish.iter().copied().max().unwrap_or(Ns::ZERO);
-        Ok(RunStats {
-            finish,
-            makespan,
-            ops_executed: ops,
-        })
+/// Execute one popped heap event: ask the driver for rank's next step,
+/// price it against the shared devices, and hand every resulting
+/// (time, rank) reschedule/wake to `push`. Both the serial loop and
+/// the parallel commit phase funnel through here, so the pricing logic
+/// exists exactly once.
+fn step_rank(
+    cluster: &mut Cluster,
+    map: &NodeMap,
+    driver: &mut dyn Driver,
+    core: &mut LoopCore,
+    rank: usize,
+    now: Ns,
+    push: &mut dyn FnMut(Ns, usize),
+) {
+    debug_assert_eq!(core.state[rank], RankState::Running);
+    let mut batch = std::mem::take(&mut core.batch);
+    batch.clear();
+    driver.next_ops(rank, now, &mut batch);
+    // Hard assert: an empty batch would otherwise reschedule the
+    // rank at the same instant forever.
+    assert!(!batch.is_empty(), "empty op batch for rank {rank}");
+    core.ops += batch.len() as u64;
+    let node = map.node_of(rank);
+    let mut t = now;
+    // Set false by ops that park or finish the rank.
+    let mut reschedule = true;
+    let last = batch.len() - 1;
+    for (k, &op) in batch.iter().enumerate() {
+        match op {
+            SimOp::Compute(d) => t += d,
+            SimOp::SsdWrite { bytes } => t = cluster.ssds[node].write(t, bytes),
+            SimOp::SsdRead { bytes } => t = cluster.ssds[node].read(t, bytes),
+            SimOp::MemRead { bytes } => t += SsdDevice::memread_time(bytes),
+            SimOp::Rpc { intervals, shard } => {
+                // request: client tx + latency; server; response:
+                // latency.
+                let sent = cluster.nics[node].send(t, RPC_BYTES);
+                let replied = cluster.server.serve_rpc(sent, shard, intervals);
+                t = replied + cluster.net.latency;
+            }
+            SimOp::RemoteFetch {
+                owner_node,
+                bytes,
+                from_ssd,
+            } => {
+                t = if owner_node == node {
+                    // Local: straight from the owner buffer/SSD.
+                    if from_ssd {
+                        cluster.ssds[node].read(t, bytes)
+                    } else {
+                        t + SsdDevice::memread_time(bytes)
+                    }
+                } else {
+                    // RDMA read: request latency, owner-side data
+                    // production, wire transfer, receive absorb.
+                    let req_at =
+                        t + cluster.net.latency + cluster.nics[owner_node].rdma_overhead();
+                    let data_ready = if from_ssd {
+                        cluster.ssds[owner_node].read(req_at, bytes)
+                    } else {
+                        req_at + SsdDevice::memread_time(bytes)
+                    };
+                    let on_wire = cluster.nics[owner_node].send(data_ready, bytes);
+                    cluster.nics[node].recv(on_wire, bytes)
+                };
+            }
+            SimOp::UpfsWrite { bytes } => {
+                let sent = cluster.nics[node].send(t, bytes);
+                t = cluster.upfs.write(sent, bytes);
+            }
+            SimOp::UpfsRead { bytes } => {
+                let replied = cluster.upfs.read(t + cluster.net.latency, bytes);
+                t = cluster.nics[node].recv(replied, bytes);
+            }
+            SimOp::Barrier => {
+                assert!(k == last, "Barrier must end a rank-step batch");
+                core.state[rank] = RankState::AtBarrier;
+                core.barrier_ranks.push(rank);
+                core.barrier_max = core.barrier_max.max(t);
+                reschedule = false;
+                if core.barrier_ranks.len() == core.live {
+                    core.release_barrier(cluster.net.latency, push);
+                }
+            }
+            SimOp::Send { to, tag, bytes } => {
+                let on_wire = cluster.nics[node].send(t, bytes);
+                let to_node = map.node_of(to);
+                let arrived = if to_node == node {
+                    on_wire
+                } else {
+                    cluster.nics[to_node].recv(on_wire, bytes)
+                };
+                // Wake the parked receiver or store in the mailbox.
+                match core.recv_parked[to] {
+                    Some((from, wtag, parked_at)) if from == rank && wtag == tag => {
+                        core.recv_parked[to] = None;
+                        core.state[to] = RankState::Running;
+                        push(arrived.max(parked_at), to);
+                    }
+                    _ => core.mail[to].push((rank, tag, arrived)),
+                }
+                // Sender resumes once the payload is on the wire.
+                t = on_wire;
+            }
+            SimOp::Recv { from, tag } => {
+                assert!(k == last, "Recv must end a rank-step batch");
+                // First matching message in arrival order.
+                let pos = core.mail[rank]
+                    .iter()
+                    .position(|&(f, g, _)| f == from && g == tag);
+                if let Some(pos) = pos {
+                    let (_, _, arrived) = core.mail[rank].remove(pos);
+                    t = arrived.max(t);
+                } else {
+                    core.state[rank] = RankState::InRecv;
+                    core.recv_parked[rank] = Some((from, tag, t));
+                    reschedule = false;
+                }
+            }
+            SimOp::Done => {
+                assert!(k == last, "Done must end a rank-step batch");
+                core.state[rank] = RankState::Finished;
+                core.finish[rank] = t;
+                core.live -= 1;
+                reschedule = false;
+                // A barrier may now be releasable.
+                if core.live > 0
+                    && !core.barrier_ranks.is_empty()
+                    && core.barrier_ranks.len() == core.live
+                {
+                    core.release_barrier(cluster.net.latency, push);
+                }
+            }
+        }
+    }
+    if reschedule {
+        push(t, rank);
+    }
+    core.batch = batch;
+}
+
+/// Heap entry: (time, global sequence, rank). The sequence is assigned
+/// at push time in commit order, so (time, seq) totally orders events
+/// exactly as the serial loop pops them.
+type Entry = (Ns, u64, usize);
+
+/// Coordinator → shard-worker commands. `Step`/`Drain` carry reusable
+/// buffers that the worker hands back in its reply — steady state
+/// allocates nothing.
+enum ToWorker {
+    /// Integrate newly staged entries into the shard heap, reply
+    /// `Head` with the heap's new minimum time (and the emptied buf).
+    Step(Vec<Entry>),
+    /// Pop every entry strictly before the window end into the buf
+    /// (ascending (time, seq) order), reply `Due`.
+    Drain(Ns, Vec<Entry>),
+    Exit,
+}
+
+/// Shard-worker → coordinator replies.
+enum FromWorker {
+    Head(Option<Ns>, Vec<Entry>),
+    Due(Vec<Entry>),
+}
+
+/// A shard worker owns one partition's event heap. It never touches
+/// driver or device state — it only absorbs heap maintenance so the
+/// coordinator's serial commit phase stays short.
+fn shard_worker(rx: mpsc::Receiver<ToWorker>, tx: mpsc::Sender<FromWorker>) {
+    let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::new();
+    while let Ok(msg) = rx.recv() {
+        let sent = match msg {
+            ToWorker::Step(mut buf) => {
+                for e in buf.drain(..) {
+                    heap.push(Reverse(e));
+                }
+                let head = heap.peek().map(|&Reverse((t, _, _))| t);
+                tx.send(FromWorker::Head(head, buf)).is_ok()
+            }
+            ToWorker::Drain(end, mut buf) => {
+                while heap.peek().is_some_and(|&Reverse((t, _, _))| t < end) {
+                    let Reverse(e) = heap.pop().expect("peeked entry vanished");
+                    buf.push(e);
+                }
+                tx.send(FromWorker::Due(buf)).is_ok()
+            }
+            ToWorker::Exit => false,
+        };
+        if !sent {
+            return;
+        }
+    }
+}
+
+/// The engine. [`NodeMap`] maps ranks to nodes.
+pub struct Engine {
+    pub cluster: Cluster,
+    node_of: NodeMap,
+}
+
+impl Engine {
+    pub fn new(cluster: Cluster, node_of: Vec<usize>) -> Self {
+        assert!(!node_of.is_empty(), "need at least one rank");
+        Self::with_map(cluster, NodeMap::Explicit(node_of))
+    }
+
+    /// Any rank→node mapping, validated against the cluster.
+    pub fn with_map(cluster: Cluster, map: NodeMap) -> Self {
+        assert!(map.nranks() > 0, "need at least one rank");
+        assert!(
+            map.max_node() < cluster.nodes(),
+            "rank mapped to nonexistent node"
+        );
+        Self {
+            cluster,
+            node_of: map,
+        }
+    }
+
+    /// Uniform mapping: `ppn` ranks per node, rank r on node r / ppn.
+    pub fn uniform(cluster: Cluster, ppn: usize) -> Self {
+        let nranks = cluster.nodes() * ppn;
+        Self::with_map(cluster, NodeMap::uniform(ppn, nranks))
+    }
+
+    /// Uniform mapping with an explicit rank count (the last node may
+    /// be partially filled). O(1) memory at any rank count.
+    pub fn uniform_with(cluster: Cluster, ppn: usize, nranks: usize) -> Self {
+        Self::with_map(cluster, NodeMap::uniform(ppn, nranks))
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.node_of.nranks()
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of.node_of(rank)
+    }
+
+    /// Run `driver` to completion on all ranks; returns timing stats.
+    pub fn run(&mut self, driver: &mut dyn Driver) -> Result<RunStats, SimError> {
+        let n = self.node_of.nranks();
+        let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(n + 1);
+        let mut seq: u64 = 0;
+        for rank in 0..n {
+            heap.push(Reverse((Ns::ZERO, seq, rank)));
+            seq += 1;
+        }
+        let mut core = LoopCore::new(n);
+        let (cluster, map) = (&mut self.cluster, &self.node_of);
+        while let Some(Reverse((now, _, rank))) = heap.pop() {
+            let mut push = |t: Ns, r: usize| {
+                heap.push(Reverse((t, seq, r)));
+                seq += 1;
+            };
+            step_rank(cluster, map, driver, &mut core, rank, now, &mut push);
+        }
+        core.finish_stats()
+    }
+
+    /// Run `driver` on a deterministic windowed parallel event loop;
+    /// output is byte-identical to [`Engine::run`] for any `threads`.
+    ///
+    /// Partitioning is static: node `d` belongs to partition
+    /// `d * P / nodes` (contiguous node blocks), a rank to its node's
+    /// partition. Each partition's pending events live in a shard heap
+    /// owned by a worker thread. Per window the coordinator (1) ships
+    /// each worker its newly staged entries and reads back the heaps'
+    /// min times, (2) sets `window_end = global_min + lookahead`,
+    /// (3) has each worker drain its entries due before `window_end`,
+    /// and (4) commits the union serially in (time, seq) order.
+    ///
+    /// **Why results are byte-identical.** Events are keyed
+    /// (time, seq) with seq assigned at push time during the serial
+    /// commit — the identical assignment order the serial loop uses.
+    /// Every committed event has t < window_end; every deferred event
+    /// has t ≥ window_end; and pricing/scheduling never moves a rank
+    /// backward in time, so an event generated during the commit either
+    /// falls inside the window (inserted into the commit heap, which
+    /// totally orders it against the other due events) or is staged for
+    /// a later window. The commit sequence is therefore exactly the
+    /// serial pop sequence, for ANY positive lookahead; the lookahead
+    /// only controls how many events amortize one synchronization
+    /// round. Driver calls and device mutations (including the SSD
+    /// jitter RNG) happen in that one order, on one thread.
+    pub fn run_threaded(
+        &mut self,
+        driver: &mut dyn Driver,
+        threads: usize,
+    ) -> Result<RunStats, SimError> {
+        let nodes = self.cluster.nodes();
+        let parts = threads.max(1).min(nodes);
+        if parts <= 1 {
+            return self.run(driver);
+        }
+        // Conservative lookahead: the minimum cross-rank interaction
+        // latency. Any positive value is safe (see above); the network
+        // latency is the natural window width because no cross-rank
+        // effect lands sooner than one latency after its cause.
+        let lookahead = self.cluster.net.latency;
+        assert!(lookahead.0 > 0, "parallel loop needs a positive lookahead");
+        let n = self.node_of.nranks();
+        let part_of = |node: usize| node * parts / nodes;
+
+        let (cluster, map) = (&mut self.cluster, &self.node_of);
+        let mut core = LoopCore::new(n);
+        let mut seq: u64 = 0;
+
+        std::thread::scope(|s| {
+            let mut to_workers = Vec::with_capacity(parts);
+            let mut from_workers = Vec::with_capacity(parts);
+            for _ in 0..parts {
+                let (tx_cmd, rx_cmd) = mpsc::channel::<ToWorker>();
+                let (tx_res, rx_res) = mpsc::channel::<FromWorker>();
+                s.spawn(move || shard_worker(rx_cmd, tx_res));
+                to_workers.push(tx_cmd);
+                from_workers.push(rx_res);
+            }
+
+            // Seed through the first Step so the shard heaps see the
+            // initial entries with the same (t, seq) keys the serial
+            // loop assigns.
+            let mut staged: Vec<Vec<Entry>> = vec![Vec::new(); parts];
+            for rank in 0..n {
+                staged[part_of(map.node_of(rank))].push((Ns::ZERO, seq, rank));
+                seq += 1;
+            }
+            let mut commit: BinaryHeap<Reverse<Entry>> = BinaryHeap::new();
+            let mut spare: Vec<Vec<Entry>> = vec![Vec::new(); parts];
+
+            loop {
+                for (w, tx) in to_workers.iter().enumerate() {
+                    let buf = std::mem::take(&mut staged[w]);
+                    tx.send(ToWorker::Step(buf)).expect("engine worker died");
+                }
+                let mut min_head: Option<Ns> = None;
+                for (w, rx) in from_workers.iter().enumerate() {
+                    match rx.recv().expect("engine worker died") {
+                        FromWorker::Head(head, buf) => {
+                            staged[w] = buf;
+                            if let Some(t) = head {
+                                min_head = Some(min_head.map_or(t, |m: Ns| m.min(t)));
+                            }
+                        }
+                        FromWorker::Due(_) => unreachable!("worker protocol violation"),
+                    }
+                }
+                let Some(min_t) = min_head else {
+                    // All heaps empty and nothing staged: done.
+                    for tx in &to_workers {
+                        let _ = tx.send(ToWorker::Exit);
+                    }
+                    break;
+                };
+                let window_end = min_t + lookahead;
+                for (w, tx) in to_workers.iter().enumerate() {
+                    let buf = std::mem::take(&mut spare[w]);
+                    tx.send(ToWorker::Drain(window_end, buf))
+                        .expect("engine worker died");
+                }
+                for (w, rx) in from_workers.iter().enumerate() {
+                    match rx.recv().expect("engine worker died") {
+                        FromWorker::Due(mut buf) => {
+                            for e in buf.drain(..) {
+                                commit.push(Reverse(e));
+                            }
+                            spare[w] = buf;
+                        }
+                        FromWorker::Head(..) => unreachable!("worker protocol violation"),
+                    }
+                }
+                // Commit the window serially in exact (t, seq) order —
+                // the serial loop's pop order.
+                while let Some(Reverse((now, _, rank))) = commit.pop() {
+                    let mut push = |t: Ns, r: usize| {
+                        if t < window_end {
+                            commit.push(Reverse((t, seq, r)));
+                        } else {
+                            staged[part_of(map.node_of(r))].push((t, seq, r));
+                        }
+                        seq += 1;
+                    };
+                    step_rank(cluster, map, driver, &mut core, rank, now, &mut push);
+                }
+            }
+        });
+
+        core.finish_stats()
     }
 }
 
@@ -790,5 +1104,106 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.finish, b.finish);
         assert_eq!(a.ops_executed, b.ops_executed);
+    }
+
+    /// A mixed cross-rank script (SSD contention, RPC floods, barriers,
+    /// send/recv chains, remote fetches) for the parallel-vs-serial pins.
+    fn mixed_scripts(nodes: usize, ppn: usize) -> Vec<Vec<SimOp>> {
+        let n = nodes * ppn;
+        (0..n)
+            .map(|r| {
+                let mut s = vec![
+                    SimOp::Compute(Ns(10 * (r as u64 % 7 + 1))),
+                    SimOp::SsdWrite { bytes: (64 + r as u64) << 10 },
+                    SimOp::Rpc { intervals: 1 + r % 3, shard: r % 2 },
+                    SimOp::Barrier,
+                    SimOp::SsdRead { bytes: 8 << 10 },
+                    SimOp::RemoteFetch {
+                        owner_node: (r / ppn + 1) % nodes,
+                        bytes: 32 << 10,
+                        from_ssd: true,
+                    },
+                ];
+                // A send/recv ring overlays cross-partition wakes.
+                s.push(SimOp::Send {
+                    to: (r + 1) % n,
+                    tag: 3,
+                    bytes: 4 << 10,
+                });
+                s.push(SimOp::Recv {
+                    from: (r + n - 1) % n,
+                    tag: 3,
+                });
+                s.push(SimOp::UpfsWrite { bytes: 128 << 10 });
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_loop_is_byte_identical_to_serial() {
+        let scripts = mixed_scripts(4, 4);
+        let serial = engine(4, 4)
+            .run(&mut ScriptDriver::new(scripts.clone()))
+            .unwrap();
+        for p in [1usize, 2, 3, 4, 8] {
+            let par = engine(4, 4)
+                .run_threaded(&mut ScriptDriver::new(scripts.clone()), p)
+                .unwrap();
+            assert_eq!(par, serial, "P={p} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn parallel_loop_reports_deadlock_like_serial() {
+        let scripts = vec![vec![], vec![SimOp::Recv { from: 0, tag: 9 }]];
+        let mut e = engine(2, 1);
+        match e.run_threaded(&mut ScriptDriver::new(scripts), 2) {
+            Err(SimError::Deadlock { recv: 1, .. }) => {}
+            other => panic!("expected recv deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn uniform_node_map_is_arithmetic() {
+        let m = NodeMap::uniform(4, 13);
+        assert_eq!(m.nranks(), 13);
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(11), 2);
+        assert_eq!(m.node_of(12), 3);
+        assert_eq!(m.max_node(), 3);
+        assert_eq!(NodeMap::Explicit(vec![0, 2, 1]).max_node(), 2);
+        // uniform_with allows a partially-filled last node.
+        let e = Engine::uniform_with(Cluster::catalyst(4, 1), 4, 13);
+        assert_eq!(e.nranks(), 13);
+        assert_eq!(e.node_of(12), 3);
+    }
+
+    #[test]
+    fn finish_summary_matches_finish_vec() {
+        let mut e = engine(1, 2);
+        let mut d = ScriptDriver::new(vec![
+            vec![SimOp::Compute(Ns(100))],
+            vec![SimOp::Compute(Ns(300))],
+        ]);
+        let stats = e.run(&mut d).unwrap();
+        let s = stats.finish_summary;
+        assert_eq!(s.n, 2);
+        assert_eq!(s.min, 100.0);
+        assert_eq!(s.max, 300.0);
+        assert_eq!(s.mean, 200.0);
+    }
+
+    #[test]
+    fn huge_rank_counts_drop_the_finish_vec_but_keep_the_summary() {
+        // One node, FINISH_RETAIN+1 compute-only ranks: the exact
+        // per-rank vec is dropped, the streaming summary survives.
+        let n = FINISH_RETAIN + 1;
+        let mut e = Engine::uniform_with(Cluster::catalyst(1, 1), n, n);
+        let mut d = |_r: usize, _now: Ns| SimOp::Done;
+        let stats = e.run(&mut d).unwrap();
+        assert!(stats.finish.is_empty());
+        assert_eq!(stats.finish_summary.n, n);
+        assert_eq!(stats.makespan, Ns::ZERO);
     }
 }

@@ -13,6 +13,6 @@ pub use devices::{
     NetParams, NicDevice, ServerDevice, ServerParams, SsdDevice, SsdParams, UpfsDevice,
     UpfsParams,
 };
-pub use engine::{Cluster, Driver, Engine, RunStats, SimError, SimOp};
+pub use engine::{Cluster, Driver, Engine, NodeMap, RunStats, SimError, SimOp, FINISH_RETAIN};
 pub use resource::{Dispatch, FifoResource, MultiServer};
 pub use time::{transfer_time, Ns};

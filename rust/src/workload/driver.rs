@@ -12,11 +12,12 @@
 //! readers: begin_read_phase (session_open) → read × m_r → done ◄─┘
 //! ```
 
-use super::spec::WorkloadParams;
+use super::spec::{WorkloadParams, WriteShuffle};
 use crate::basefs::{DesFabric, FabricCounters, FileId, SharedBb};
 use crate::fs::{FsKind, PolicyFs, WorkloadFs};
 use crate::interval::Range;
 use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
+use crate::util::rng::Rng;
 
 /// Per-rank layer constructor — how drivers build their FS stacks.
 /// Production code always uses the [`PolicyFs`] factory via
@@ -25,11 +26,20 @@ use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
 /// through the identical driver machinery.
 pub type LayerFactory<'a> = &'a dyn Fn(FsKind, u32, SharedBb) -> Box<dyn WorkloadFs>;
 
+/// `'static` layer constructor for lazy mode (slots are built mid-run,
+/// so the factory cannot borrow).
+pub type LazyMake = fn(FsKind, u32, SharedBb) -> Box<dyn WorkloadFs>;
+
+/// The default production layer: one policy-interpreted [`PolicyFs`].
+pub fn policy_layer(kind: FsKind, id: u32, bb: SharedBb) -> Box<dyn WorkloadFs> {
+    Box::new(PolicyFs::new(kind, id, bb))
+}
+
 /// Build one policy-interpreted consistency layer per rank over the
 /// fabric's BB stores — works for ANY registered model, including ones
 /// defined only in a `[model.<name>]` config block.
 pub fn build_fs(kind: FsKind, fabric: &DesFabric) -> Vec<Box<dyn WorkloadFs>> {
-    build_fs_with(&|kind, id, bb| Box::new(PolicyFs::new(kind, id, bb)), kind, fabric)
+    build_fs_with(&policy_layer, kind, fabric)
 }
 
 /// [`build_fs`] with an explicit per-rank layer factory.
@@ -98,14 +108,27 @@ impl PhaseReport {
 /// The driver itself. One instance per run.
 pub struct SyntheticDriver {
     pub fabric: DesFabric,
-    fs: Vec<Box<dyn WorkloadFs>>,
+    /// Per-rank consistency layers. Eager mode (the historical, byte-
+    /// compatible path) fills every slot at construction; lazy mode
+    /// builds a slot at the rank's first fs touch and drops it at
+    /// `Done`, so peak layer state tracks live ranks, not total ranks.
+    fs: Vec<Option<Box<dyn WorkloadFs>>>,
+    /// `Some(factory)` switches on lazy mode.
+    lazy_make: Option<LazyMake>,
+    kind: FsKind,
     params: WorkloadParams,
     /// The shared files the dataset is striped over (len = params.files;
     /// one entry — the paper's N-to-1 layout — unless striping is on).
+    /// Lazy mode fills this at the first rank's wake-up.
     files: Vec<FileId>,
     stage: Vec<Stage>,
-    write_plan: Vec<Vec<u64>>,
-    read_plan: Vec<Vec<u64>>,
+    /// Streaming plan state: offsets are generated on demand from
+    /// `(seed, rank, i)` instead of the per-rank offset vectors PR 4
+    /// materialized (O(nranks * m) words). The shared write shuffle is
+    /// empty unless the write pattern is Random; `read_rng` holds one
+    /// small generator per reader.
+    shuffle: WriteShuffle,
+    read_rng: Vec<Rng>,
     /// Reusable payload buffer (phantom fabric ignores content).
     payload: Vec<u8>,
     /// Reusable read destination — with `read_at_into` the read hot
@@ -140,13 +163,22 @@ impl SyntheticDriver {
     }
 
     fn with_fabric(kind: FsKind, params: WorkloadParams, phantom: bool, shards: usize) -> Self {
-        Self::new_with_layers(
-            &|kind, id, bb| Box::new(PolicyFs::new(kind, id, bb)),
-            kind,
-            params,
-            phantom,
-            shards,
-        )
+        Self::new_with_layers(&policy_layer, kind, params, phantom, shards)
+    }
+
+    /// Lazy-layer variant for the 10^5–10^6-rank scale rows: no layer,
+    /// plan, or file-open work happens at construction. Each rank's
+    /// layer is built (and its dataset opens drained, matching the
+    /// eager constructor) at the rank's first fs touch, and dropped the
+    /// moment the rank reports `Done`, so peak layer state is bounded
+    /// by the ranks actually live. Acquire-on-open models see opens at
+    /// first touch rather than before the write phase, so this mode is
+    /// opt-in and every legacy figure cell stays eager.
+    pub fn new_lazy(kind: FsKind, params: WorkloadParams, shards: usize) -> Self {
+        let nranks = params.nranks();
+        let fabric = DesFabric::new_phantom_uniform(params.p, nranks, shards);
+        let fs = (0..nranks).map(|_| None).collect();
+        Self::assemble(kind, params, fabric, fs, Vec::new(), Some(policy_layer as LazyMake))
     }
 
     /// [`Self::with_fabric`] with an explicit layer factory — the entry
@@ -161,20 +193,21 @@ impl SyntheticDriver {
         shards: usize,
     ) -> Self {
         let nranks = params.nranks();
-        let node_of: Vec<usize> = (0..nranks).map(|r| r / params.p).collect();
-        let fabric = if phantom {
-            DesFabric::new_phantom_sharded(node_of, shards)
+        let mut fabric = if phantom {
+            DesFabric::new_phantom_uniform(params.p, nranks, shards)
         } else {
-            DesFabric::new_sharded(node_of, shards)
+            DesFabric::new_uniform(params.p, nranks, shards)
         };
-        let mut fs = build_fs_with(make, kind, &fabric);
-        let mut fabric = fabric;
+        let mut fs: Vec<Option<Box<dyn WorkloadFs>>> = build_fs_with(make, kind, &fabric)
+            .into_iter()
+            .map(Some)
+            .collect();
         // Open the shared file(s) everywhere up front (the paper
         // measures the I/O phases, not the initial open). The single-
         // file path keeps its historical name so byte-exact runs stay
         // comparable across versions.
         let mut files = vec![0 as FileId; params.files.max(1)];
-        for f in fs.iter_mut() {
+        for f in fs.iter_mut().flatten() {
             if params.files <= 1 {
                 files[0] = f.open(&mut fabric, "/shared/nto1.dat");
             } else {
@@ -188,28 +221,30 @@ impl SyntheticDriver {
         for r in 0..nranks {
             while fabric.pop_cost(r as u32).is_some() {}
         }
-        let write_plan: Vec<Vec<u64>> = (0..nranks)
-            .map(|r| {
-                if params.is_writer(r) {
-                    params.write_offsets(r)
-                } else {
-                    Vec::new()
-                }
-            })
-            .collect();
-        let read_plan: Vec<Vec<u64>> = (0..nranks)
-            .map(|r| {
-                if !params.is_writer(r) && params.read_pattern.is_some() {
-                    params.read_offsets(r - params.n_writers())
-                } else {
-                    Vec::new()
-                }
-            })
-            .collect();
+        Self::assemble(kind, params, fabric, fs, files, None)
+    }
+
+    fn assemble(
+        kind: FsKind,
+        params: WorkloadParams,
+        fabric: DesFabric,
+        fs: Vec<Option<Box<dyn WorkloadFs>>>,
+        files: Vec<FileId>,
+        lazy_make: Option<LazyMake>,
+    ) -> Self {
+        let nranks = params.nranks();
+        let shuffle = params.write_shuffle();
+        let read_rng = if params.read_pattern.is_some() {
+            (0..params.n_readers()).map(|r| params.read_rng(r)).collect()
+        } else {
+            Vec::new()
+        };
         let payload = vec![0u8; params.s as usize];
         Self {
             fabric,
             fs,
+            lazy_make,
+            kind,
             files,
             stage: (0..nranks)
                 .map(|r| {
@@ -220,8 +255,8 @@ impl SyntheticDriver {
                     }
                 })
                 .collect(),
-            write_plan,
-            read_plan,
+            shuffle,
+            read_rng,
             payload,
             read_buf: Vec::new(),
             params,
@@ -231,15 +266,56 @@ impl SyntheticDriver {
         }
     }
 
+    /// Does `rank` execute a read phase?
+    fn has_reads(&self, rank: usize) -> bool {
+        !self.params.is_writer(rank) && self.params.read_pattern.is_some() && self.params.m_r > 0
+    }
+
+    /// Lazy mode: build `rank`'s layer on first touch. The layer opens
+    /// the shared dataset files (creating them if this is the first
+    /// rank to wake) and its open-time costs are discarded, matching
+    /// the eager constructor's post-open drain. Eager slots are always
+    /// occupied, so this is a no-op there.
+    fn ensure_fs(&mut self, rank: usize) {
+        if self.fs[rank].is_some() {
+            return;
+        }
+        let make = self.lazy_make.expect("eager fs slot vanished");
+        let mut f = make(self.kind, rank as u32, self.fabric.bb_of(rank as u32));
+        if self.files.is_empty() {
+            if self.params.files <= 1 {
+                self.files.push(f.open(&mut self.fabric, "/shared/nto1.dat"));
+            } else {
+                for i in 0..self.params.files {
+                    let id = f.open(&mut self.fabric, &format!("/shared/nto1.{i}.dat"));
+                    self.files.push(id);
+                }
+            }
+        } else if self.params.files <= 1 {
+            f.open(&mut self.fabric, "/shared/nto1.dat");
+        } else {
+            for i in 0..self.params.files {
+                f.open(&mut self.fabric, &format!("/shared/nto1.{i}.dat"));
+            }
+        }
+        while self.fabric.pop_cost(rank as u32).is_some() {}
+        self.fs[rank] = Some(f);
+    }
+
     /// Run to completion on a cluster and produce the report.
-    pub fn run(mut self, cluster: Cluster) -> PhaseReport {
-        let node_of: Vec<usize> = (0..self.params.nranks())
-            .map(|r| r / self.params.p)
-            .collect();
-        let mut engine = Engine::new(cluster, node_of);
-        let stats = engine.run(&mut self).expect("synthetic workload deadlock");
+    pub fn run(self, cluster: Cluster) -> PhaseReport {
+        self.run_with_threads(cluster, 1)
+    }
+
+    /// [`Self::run`] on the windowed parallel event loop (`threads <= 1`
+    /// is exactly the serial loop; any P is byte-identical to it).
+    pub fn run_with_threads(mut self, cluster: Cluster, threads: usize) -> PhaseReport {
+        let mut engine = Engine::uniform_with(cluster, self.params.p, self.params.nranks());
+        let stats = engine
+            .run_threaded(&mut self, threads)
+            .expect("synthetic workload deadlock");
         PhaseReport {
-            fs: kind_name(&self.fs),
+            fs: self.kind.name(),
             write_bytes: self.params.total_write_bytes(),
             read_bytes: self.params.total_read_bytes(),
             write_end: self.write_done_max,
@@ -257,10 +333,6 @@ impl SyntheticDriver {
     }
 }
 
-fn kind_name(fs: &[Box<dyn WorkloadFs>]) -> &'static str {
-    fs.first().map(|f| f.kind().name()).unwrap_or("?")
-}
-
 impl Driver for SyntheticDriver {
     /// One functional step per call; its fabric costs are drained
     /// straight into `out` as one batch (one heap event per step).
@@ -268,9 +340,13 @@ impl Driver for SyntheticDriver {
         loop {
             match self.stage[rank] {
                 Stage::Write(i) => {
-                    if i < self.write_plan[rank].len() {
-                        let (fidx, off) = self.params.locate(self.write_plan[rank][i]);
+                    if i < self.params.m_w {
+                        self.ensure_fs(rank);
+                        let off = self.params.write_offset_at(&self.shuffle, rank, i);
+                        let (fidx, off) = self.params.locate(off);
                         self.fs[rank]
+                            .as_mut()
+                            .expect("writer layer missing")
                             .write_at(&mut self.fabric, self.files[fidx], off, &self.payload)
                             .expect("write failed");
                         self.stage[rank] = Stage::Write(i + 1);
@@ -286,8 +362,11 @@ impl Driver for SyntheticDriver {
                     // Batched across files: one sync RPC per metadata
                     // shard touched (files-with-no-writes are skipped by
                     // the layer).
+                    self.ensure_fs(rank);
                     let files = self.files.clone();
                     self.fs[rank]
+                        .as_mut()
+                        .expect("writer layer missing")
                         .end_write_phase_all(&mut self.fabric, &files)
                         .expect("end_write_phase failed");
                     self.stage[rank] = Stage::Barrier;
@@ -304,11 +383,14 @@ impl Driver for SyntheticDriver {
                 Stage::BeginRead => {
                     // Barrier released: the write phase is globally over.
                     self.write_done_max = self.write_done_max.max(now);
-                    if self.read_plan[rank].is_empty() {
+                    if !self.has_reads(rank) {
                         self.stage[rank] = Stage::Finish;
                     } else {
+                        self.ensure_fs(rank);
                         let files = self.files.clone();
                         self.fs[rank]
+                            .as_mut()
+                            .expect("reader layer missing")
                             .begin_read_phase_all(&mut self.fabric, &files)
                             .expect("begin_read_phase failed");
                         self.read_start_min = self.read_start_min.min(now);
@@ -320,10 +402,14 @@ impl Driver for SyntheticDriver {
                     }
                 }
                 Stage::Read(i) => {
-                    if i < self.read_plan[rank].len() {
-                        let (fidx, off) = self.params.locate(self.read_plan[rank][i]);
+                    if i < self.params.m_r {
+                        let ridx = rank - self.params.n_writers();
+                        let off = self.params.read_offset_at(ridx, i, &mut self.read_rng[ridx]);
+                        let (fidx, off) = self.params.locate(off);
                         self.read_buf.clear();
                         self.fs[rank]
+                            .as_mut()
+                            .expect("reader layer missing")
                             .read_at_into(
                                 &mut self.fabric,
                                 self.files[fidx],
@@ -342,8 +428,13 @@ impl Driver for SyntheticDriver {
                     }
                 }
                 Stage::Finish => {
-                    if !self.read_plan[rank].is_empty() {
+                    if self.has_reads(rank) {
                         self.read_end_max = self.read_end_max.max(now);
+                    }
+                    if self.lazy_make.is_some() {
+                        // Lazy mode: release this rank's layer state the
+                        // moment it leaves the simulation.
+                        self.fs[rank] = None;
                     }
                     self.stage[rank] = Stage::Finished;
                     out.push(SimOp::Done);
@@ -514,6 +605,39 @@ mod tests {
             eight > 1.2 * one,
             "8 shards {eight} should beat 1 shard {one} on per-read queries"
         );
+    }
+
+    #[test]
+    fn lazy_layers_match_eager_reports() {
+        // Lazy mode defers layer construction and dataset opens to each
+        // rank's first touch; for the paper models (whose visibility is
+        // carried by sync/session boundaries, not open-time state) the
+        // priced run must be indistinguishable from the eager path.
+        for kind in [FsKind::COMMIT, FsKind::SESSION] {
+            let params = Config::CcR.params(4, 2, 8 << 10, 4, 7);
+            let eager = SyntheticDriver::new(kind, params.clone()).run(Cluster::catalyst(4, 99));
+            let lazy =
+                SyntheticDriver::new_lazy(kind, params, 1).run(Cluster::catalyst(4, 99));
+            assert_eq!(eager.makespan, lazy.makespan, "{kind:?}");
+            assert_eq!(eager.counters, lazy.counters, "{kind:?}");
+            assert_eq!(eager.sim_ops, lazy.sim_ops, "{kind:?}");
+            assert_eq!(eager.write_end, lazy.write_end, "{kind:?}");
+            assert_eq!(eager.read_end, lazy.read_end, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn threaded_run_matches_serial_report() {
+        for threads in [2, 8] {
+            let params = Config::CcR.params(4, 2, 8 << 10, 4, 7);
+            let serial = SyntheticDriver::new(FsKind::COMMIT, params.clone())
+                .run(Cluster::catalyst(4, 99));
+            let par = SyntheticDriver::new(FsKind::COMMIT, params)
+                .run_with_threads(Cluster::catalyst(4, 99), threads);
+            assert_eq!(serial.makespan, par.makespan, "threads={threads}");
+            assert_eq!(serial.counters, par.counters, "threads={threads}");
+            assert_eq!(serial.sim_ops, par.sim_ops, "threads={threads}");
+        }
     }
 
     #[test]

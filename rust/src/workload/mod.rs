@@ -5,5 +5,7 @@
 pub mod driver;
 pub mod spec;
 
-pub use driver::{build_fs, build_fs_with, LayerFactory, PhaseReport, SyntheticDriver};
-pub use spec::{Config, Pattern, WorkloadParams};
+pub use driver::{
+    build_fs, build_fs_with, policy_layer, LayerFactory, LazyMake, PhaseReport, SyntheticDriver,
+};
+pub use spec::{Config, Pattern, WorkloadParams, WriteShuffle};

@@ -154,19 +154,84 @@ impl WorkloadParams {
                 .map(|i| ((i * nr + r as u64) % extent_blocks) * self.s)
                 .collect(),
             Pattern::Random => {
-                let mut rng = Rng::seed_from_u64(
-                    self.seed ^ 0x5eed_0000_0000_0000 ^ (r as u64),
-                );
+                let mut rng = Rng::seed_from_u64(self.seed ^ READ_SALT ^ (r as u64));
                 (0..m)
                     .map(|_| rng.gen_range_u64(extent_blocks) * self.s)
                     .collect()
             }
         }
     }
+
+    /// Shared state for streaming write-offset generation. Only
+    /// `Pattern::Random` carries real state — the global disjoint block
+    /// permutation, computed once and shared by every writer. The other
+    /// patterns are pure arithmetic and the shuffle is empty, so a run
+    /// over 10^6 contiguous/strided writers allocates nothing here.
+    pub fn write_shuffle(&self) -> WriteShuffle {
+        match self.write_pattern {
+            Pattern::Random => {
+                let blocks = self.n_writers() as u64 * self.m_w as u64;
+                let mut ids: Vec<u64> = (0..blocks).collect();
+                let mut rng = Rng::seed_from_u64(self.seed ^ WRITE_SHUFFLE_SALT);
+                rng.shuffle(&mut ids);
+                WriteShuffle(Some(ids))
+            }
+            _ => WriteShuffle(None),
+        }
+    }
+
+    /// The `i`-th offset written by writer `w` — streaming counterpart
+    /// of `write_offsets`, equal element-for-element for the same
+    /// parameters (pinned by `streaming_write_offsets_match_materialized`).
+    pub fn write_offset_at(&self, shuffle: &WriteShuffle, w: usize, i: usize) -> u64 {
+        debug_assert!(w < self.n_writers());
+        debug_assert!(i < self.m_w);
+        let nw = self.n_writers() as u64;
+        let (w, i, m) = (w as u64, i as u64, self.m_w as u64);
+        match self.write_pattern {
+            Pattern::Contiguous => (w * m + i) * self.s,
+            Pattern::Strided => (i * nw + w) * self.s,
+            Pattern::Random => {
+                let ids = shuffle.0.as_ref().expect("random writes need write_shuffle()");
+                ids[(w * m + i) as usize] * self.s
+            }
+        }
+    }
+
+    /// Per-reader RNG for streaming `Pattern::Random` reads. Pass it to
+    /// `read_offset_at` with `i` advancing sequentially from 0; the
+    /// non-random patterns never draw from it.
+    pub fn read_rng(&self, r: usize) -> Rng {
+        Rng::seed_from_u64(self.seed ^ READ_SALT ^ (r as u64))
+    }
+
+    /// The `i`-th offset read by reader `r` — streaming counterpart of
+    /// `read_offsets`. For `Pattern::Random` the rng must come from
+    /// `read_rng(r)` and calls must advance `i` sequentially from 0.
+    pub fn read_offset_at(&self, r: usize, i: usize, rng: &mut Rng) -> u64 {
+        debug_assert!(r < self.n_readers());
+        debug_assert!(i < self.m_r);
+        let nr = self.n_readers() as u64;
+        let (r, i, m) = (r as u64, i as u64, self.m_r as u64);
+        let extent_blocks = (self.file_extent() / self.s).max(1);
+        match self.read_pattern.expect("read phase not configured") {
+            Pattern::Contiguous => ((r * m + i) % extent_blocks) * self.s,
+            Pattern::Strided => ((i * nr + r) % extent_blocks) * self.s,
+            Pattern::Random => rng.gen_range_u64(extent_blocks) * self.s,
+        }
+    }
 }
+
+/// Opaque shared state for `write_offset_at` — see
+/// [`WorkloadParams::write_shuffle`]. Empty for non-random patterns.
+#[derive(Debug, Clone)]
+pub struct WriteShuffle(Option<Vec<u64>>);
 
 /// Salt separating the write-shuffle RNG stream from read streams.
 const WRITE_SHUFFLE_SALT: u64 = 0x77ab_cdef_1234_5678;
+
+/// Salt separating per-reader random-read RNG streams.
+const READ_SALT: u64 = 0x5eed_0000_0000_0000;
 
 /// Table 8: the four named configurations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -331,6 +396,44 @@ mod tests {
         let (f, local) = p.locate(4 * p.s + 100);
         assert_eq!(f, (4 % 3) as usize);
         assert_eq!(local, (4 / 3) * p.s + 100);
+    }
+
+    #[test]
+    fn streaming_write_offsets_match_materialized() {
+        for pat in [Pattern::Contiguous, Pattern::Strided, Pattern::Random] {
+            let mut p = params(Config::SnW);
+            p.write_pattern = pat;
+            let shuffle = p.write_shuffle();
+            for w in 0..p.n_writers() {
+                let streamed: Vec<u64> = (0..p.m_w)
+                    .map(|i| p.write_offset_at(&shuffle, w, i))
+                    .collect();
+                assert_eq!(streamed, p.write_offsets(w), "{} w{w}", pat.name());
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_read_offsets_match_materialized() {
+        for pat in [Pattern::Contiguous, Pattern::Strided, Pattern::Random] {
+            let mut p = params(Config::CcR);
+            p.read_pattern = Some(pat);
+            for r in 0..p.n_readers() {
+                let mut rng = p.read_rng(r);
+                let streamed: Vec<u64> = (0..p.m_r)
+                    .map(|i| p.read_offset_at(r, i, &mut rng))
+                    .collect();
+                assert_eq!(streamed, p.read_offsets(r), "{} r{r}", pat.name());
+            }
+        }
+    }
+
+    #[test]
+    fn non_random_write_shuffle_is_stateless() {
+        let p = params(Config::CnW);
+        // Contiguous/strided shuffles carry no allocation; the random
+        // shuffle is one global permutation shared by every writer.
+        assert!(p.write_shuffle().0.is_none());
     }
 
     #[test]

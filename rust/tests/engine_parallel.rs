@@ -1,0 +1,286 @@
+//! Parallel event-loop equivalence (tier-1 for the windowed engine):
+//! for every registered consistency model and every Table-8 config, the
+//! partitioned loop at P ∈ {2, 8} must reproduce the serial loop's
+//! reports BYTE-IDENTICALLY — virtual times, full fabric counters, DES
+//! op counts, and (via a data-mode read-back driver) the actual bytes
+//! readers observe. Also pins the streaming plan generators against
+//! their materialized counterparts, since the lazy/streamed large-scale
+//! path depends on them agreeing exactly.
+
+use pscnf::basefs::DesFabric;
+use pscnf::dl::{DlDriver, DlParams};
+use pscnf::fs::{FsKind, WorkloadFs};
+use pscnf::interval::Range;
+use pscnf::scr::{ScrDriver, ScrParams};
+use pscnf::sim::{Cluster, Driver, Engine, Ns, SimOp};
+use pscnf::workload::{build_fs, Config, Pattern, SyntheticDriver};
+
+const CONFIGS: [Config; 4] = [Config::CnW, Config::SnW, Config::CcR, Config::CsR];
+
+#[test]
+fn synthetic_reports_identical_for_p_1_2_8_all_models() {
+    for fs in FsKind::registered() {
+        for config in CONFIGS {
+            let params = |seed| config.params(2, 2, 8 << 10, 3, seed);
+            let base = SyntheticDriver::new(fs, params(7)).run(Cluster::catalyst(2, 9));
+            for threads in [2usize, 8] {
+                let got = SyntheticDriver::new(fs, params(7))
+                    .run_with_threads(Cluster::catalyst(2, 9), threads);
+                let tag = format!("{}/{} P={threads}", fs.name(), config.name());
+                assert_eq!(got.makespan, base.makespan, "{tag} makespan");
+                assert_eq!(got.write_end, base.write_end, "{tag} write_end");
+                assert_eq!(got.read_start, base.read_start, "{tag} read_start");
+                assert_eq!(got.read_end, base.read_end, "{tag} read_end");
+                assert_eq!(got.counters, base.counters, "{tag} counters");
+                assert_eq!(got.rpcs, base.rpcs, "{tag} rpcs");
+                assert_eq!(got.sim_ops, base.sim_ops, "{tag} sim_ops");
+            }
+        }
+    }
+}
+
+#[test]
+fn scr_and_dl_reports_identical_for_p_1_2_8() {
+    for fs in [FsKind::COMMIT, FsKind::SESSION] {
+        let scr = |threads: usize| {
+            let mut p = ScrParams::with_nodes(3, 2);
+            p.particles = 240_000;
+            ScrDriver::new(fs, p).run_with_threads(Cluster::catalyst(3, 5), threads)
+        };
+        let base = scr(1);
+        for threads in [2usize, 8] {
+            let got = scr(threads);
+            assert_eq!(got.ckpt_end, base.ckpt_end, "scr {} P={threads}", fs.name());
+            assert_eq!(got.restart_start, base.restart_start);
+            assert_eq!(got.restart_end, base.restart_end);
+            assert_eq!(got.counters, base.counters);
+            assert_eq!(got.sim_ops, base.sim_ops);
+        }
+
+        let dl = |threads: usize| {
+            let mut p = DlParams::weak(2, 2, 2, 7);
+            p.aggregate = true;
+            DlDriver::new(fs, p).run_with_threads(Cluster::catalyst(2, 5), threads)
+        };
+        let base = dl(1);
+        for threads in [2usize, 8] {
+            let got = dl(threads);
+            assert_eq!(got.epoch_time, base.epoch_time, "dl {} P={threads}", fs.name());
+            assert_eq!(got.counters, base.counters);
+            assert_eq!(got.sim_ops, base.sim_ops);
+            assert_eq!(got.remote_fraction, base.remote_fraction);
+        }
+    }
+}
+
+#[test]
+fn streamed_lazy_run_matches_eager_serial() {
+    // The O(active-rank) path (lazy layers + on-demand plans) must not
+    // perturb a single metric. Commit and session are the models the
+    // large-scale families run (acquire-on-open models stay eager).
+    for fs in [FsKind::COMMIT, FsKind::SESSION] {
+        for config in CONFIGS {
+            let params = |seed| config.params(2, 2, 8 << 10, 4, seed);
+            let base = SyntheticDriver::new_sharded(fs, params(11), 1).run(Cluster::catalyst(2, 3));
+            let lazy = SyntheticDriver::new_lazy(fs, params(11), 1)
+                .run_with_threads(Cluster::catalyst(2, 3), 8);
+            let tag = format!("{}/{}", fs.name(), config.name());
+            assert_eq!(lazy.makespan, base.makespan, "{tag} makespan");
+            assert_eq!(lazy.write_end, base.write_end, "{tag} write_end");
+            assert_eq!(lazy.read_end, base.read_end, "{tag} read_end");
+            assert_eq!(lazy.counters, base.counters, "{tag} counters");
+            assert_eq!(lazy.sim_ops, base.sim_ops, "{tag} sim_ops");
+        }
+    }
+}
+
+/// Data-mode (non-phantom) driver that records every byte its readers
+/// get back, so the parallel loop's equivalence is checked on DATA, not
+/// just on timings: writers fill disjoint blocks with distinct fill
+/// bytes, readers read all blocks after the barrier.
+struct ReadBack {
+    fabric: DesFabric,
+    fs: Vec<Box<dyn WorkloadFs>>,
+    file: u64,
+    step: Vec<usize>,
+    m: usize,
+    size: u64,
+    n_writers: usize,
+    collected: Vec<Vec<u8>>,
+    buf: Vec<u8>,
+}
+
+impl ReadBack {
+    const NODES: usize = 2;
+    const PPN: usize = 2;
+
+    fn new(kind: FsKind, m: usize) -> Self {
+        let nranks = Self::NODES * Self::PPN;
+        let fabric = DesFabric::new_uniform(Self::PPN, nranks, 1);
+        let mut fs = build_fs(kind, &fabric);
+        let mut fabric = fabric;
+        let mut file = 0;
+        for f in fs.iter_mut() {
+            file = f.open(&mut fabric, "/test/readback.dat");
+        }
+        for r in 0..nranks {
+            while fabric.pop_cost(r as u32).is_some() {}
+        }
+        Self {
+            fabric,
+            fs,
+            file,
+            step: vec![0; nranks],
+            m,
+            size: 1 << 10,
+            n_writers: nranks / 2,
+            collected: vec![Vec::new(); nranks],
+            buf: Vec::new(),
+        }
+    }
+
+    fn fill_byte(&self, block: usize) -> u8 {
+        ((block / self.m) * 16 + block % self.m + 1) as u8
+    }
+
+    fn blocks(&self) -> usize {
+        self.n_writers * self.m
+    }
+}
+
+impl Driver for ReadBack {
+    fn next_ops(&mut self, rank: usize, _now: Ns, out: &mut Vec<SimOp>) {
+        loop {
+            let step = self.step[rank];
+            self.step[rank] = step + 1;
+            if rank < self.n_writers {
+                // Writer: m writes, publish, barrier, done.
+                if step < self.m {
+                    let block = rank * self.m + step;
+                    let payload = vec![self.fill_byte(block); self.size as usize];
+                    self.fs[rank]
+                        .write_at(&mut self.fabric, self.file, block as u64 * self.size, &payload)
+                        .expect("read-back write");
+                } else if step == self.m {
+                    self.fs[rank]
+                        .end_write_phase(&mut self.fabric, self.file)
+                        .expect("read-back publish");
+                } else if step == self.m + 1 {
+                    out.push(SimOp::Barrier);
+                    return;
+                } else {
+                    out.push(SimOp::Done);
+                    return;
+                }
+            } else {
+                // Reader: barrier, acquire, read every block, done.
+                if step == 0 {
+                    out.push(SimOp::Barrier);
+                    return;
+                } else if step == 1 {
+                    self.fs[rank]
+                        .begin_read_phase(&mut self.fabric, self.file)
+                        .expect("read-back acquire");
+                } else if step - 2 < self.blocks() {
+                    let ridx = rank - self.n_writers;
+                    let block = (ridx + step - 2) % self.blocks();
+                    self.buf.clear();
+                    self.fs[rank]
+                        .read_at_into(
+                            &mut self.fabric,
+                            self.file,
+                            Range::at(block as u64 * self.size, self.size),
+                            &mut self.buf,
+                        )
+                        .expect("read-back read");
+                    self.collected[rank].extend_from_slice(&self.buf);
+                } else {
+                    out.push(SimOp::Done);
+                    return;
+                }
+            }
+            self.fabric.drain_costs_into(rank as u32, out);
+            if !out.is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+fn run_readback(kind: FsKind, threads: usize) -> (Vec<Vec<u8>>, u64) {
+    let mut d = ReadBack::new(kind, 3);
+    let nranks = ReadBack::NODES * ReadBack::PPN;
+    let mut engine = Engine::uniform_with(
+        Cluster::catalyst(ReadBack::NODES, 17),
+        ReadBack::PPN,
+        nranks,
+    );
+    let stats = engine.run_threaded(&mut d, threads).expect("read-back deadlock");
+    (d.collected, stats.ops_executed)
+}
+
+#[test]
+fn read_back_bytes_identical_across_thread_counts() {
+    for kind in [FsKind::COMMIT, FsKind::SESSION] {
+        let (base, base_ops) = run_readback(kind, 1);
+        // The serial run itself must observe the writers' fill bytes.
+        let probe = ReadBack::new(kind, 3);
+        for rank in probe.n_writers..ReadBack::NODES * ReadBack::PPN {
+            let got = &base[rank];
+            assert_eq!(got.len(), probe.blocks() * probe.size as usize);
+            let ridx = rank - probe.n_writers;
+            for i in 0..probe.blocks() {
+                let block = (ridx + i) % probe.blocks();
+                let chunk = &got[i * probe.size as usize..(i + 1) * probe.size as usize];
+                assert!(
+                    chunk.iter().all(|&b| b == probe.fill_byte(block)),
+                    "{} rank {rank} block {block} corrupted",
+                    kind.name()
+                );
+            }
+        }
+        for threads in [2usize, 8] {
+            let (got, got_ops) = run_readback(kind, threads);
+            assert_eq!(got, base, "{} P={threads} read-back bytes", kind.name());
+            assert_eq!(got_ops, base_ops, "{} P={threads} ops", kind.name());
+        }
+    }
+}
+
+#[test]
+fn streaming_plans_match_materialized_plans() {
+    for config in CONFIGS {
+        for read_override in [None, Some(Pattern::Random)] {
+            let mut p = config.params(4, 3, 8 << 10, 5, 13);
+            if let (Some(over), Some(_)) = (read_override, p.read_pattern) {
+                p.read_pattern = Some(over);
+            }
+            let shuffle = p.write_shuffle();
+            for w in 0..p.n_writers() {
+                let plan = p.write_offsets(w);
+                for (i, &off) in plan.iter().enumerate() {
+                    assert_eq!(
+                        p.write_offset_at(&shuffle, w, i),
+                        off,
+                        "{} writer {w} op {i}",
+                        config.name()
+                    );
+                }
+            }
+            if p.read_pattern.is_some() {
+                for r in 0..p.n_readers() {
+                    let plan = p.read_offsets(r);
+                    let mut rng = p.read_rng(r);
+                    for (i, &off) in plan.iter().enumerate() {
+                        assert_eq!(
+                            p.read_offset_at(r, i, &mut rng),
+                            off,
+                            "{} reader {r} op {i} ({read_override:?})",
+                            config.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
