@@ -1,0 +1,21 @@
+//! Crash-recovery pricing — what a metadata-plane outage costs each
+//! consistency model. Every registered model × shard count runs one
+//! CC-R cell twice: once healthy (the baseline probe), once with a
+//! whole-plane kill/restart whose window ends at the write barrier's
+//! release, so lease fencing and — for replay-to-SC models — attachment
+//! replay are priced right before the readers unblock. The headline
+//! metric is `recovery_s`, the virtual makespan the outage added.
+//!
+//! Expected shape: replay-to-SC models (posix/commit/session/mpiio/
+//! commit_strict) pay fences plus replayed intervals and recover the
+//! exact SC outcome; eventual/cto pay fences only — their obligation is
+//! permitted-stale, so there is nothing to replay (the conformance side
+//! of this split is proved in tests/fault_conformance.rs).
+//!
+//! Thin wrapper over the `fault_matrix` family of the bench registry
+//! (scale tags `s<shards>`). `--json` additionally writes
+//! `target/results/BENCH_fault_matrix.json`.
+
+fn main() {
+    pscnf::bench::family_main("fault_matrix");
+}

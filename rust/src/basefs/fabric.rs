@@ -8,12 +8,19 @@
 //! the order a FIFO server would process (DESIGN.md §5).
 
 use super::client::{BfsError, Fabric};
-use super::proto::{ClientId, FileId, Request, Response};
+use super::proto::{shard_of, ClientId, FileId, Request, Response};
 use super::server::MetadataPlane;
 use super::store::{new_shared_bb, SharedBb, UpfsStore};
 use crate::interval::Range;
-use crate::sim::{NodeMap, SimOp};
+use crate::sim::{FaultAction, FaultEvent, FaultTarget, NodeMap, Ns, SimOp};
+use crate::util::hash::FxHashMap;
 use std::collections::VecDeque;
+
+/// Bounded-backoff quantum priced per retry when a client's RPC finds
+/// its metadata shard down, or its lease fenced by a shard restart.
+/// One deterministic quantum per event — the "bounded" part of "retry
+/// with bounded backoff" (DESIGN.md §Faults).
+pub const RETRY_BACKOFF_NS: Ns = 100_000;
 
 /// Cumulative traffic counters (per fabric; reporting).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -33,6 +40,16 @@ pub struct FabricCounters {
     pub upfs_write_bytes: u64,
     pub bb_write_bytes: u64,
     pub bb_read_bytes: u64,
+    /// RPC attempts rejected by lease fencing (stale shard epoch).
+    /// Each one also prices a backoff plus a lease re-acquisition
+    /// round trip (both counted in `rpcs`).
+    pub fenced_rpcs: u64,
+    /// Interval-tree entries re-attached by replay-to-SC shard
+    /// recovery (subset of `rpc_intervals`).
+    pub replayed_intervals: u64,
+    /// RPCs that found their shard down and priced a bounded-backoff
+    /// retry before being queued for the reconnect.
+    pub downtime_retries: u64,
 }
 
 impl FabricCounters {
@@ -59,6 +76,20 @@ impl FabricCounters {
     }
 }
 
+/// Lease table + recovery mode for fault-injected runs. Boxed behind
+/// an `Option` so healthy runs pay one null check per RPC and zero
+/// bytes of per-client state.
+struct FaultState {
+    /// Replay-to-SC recovery (true) vs permitted-stale (false):
+    /// whether a shard restart re-attaches every surviving client
+    /// interval (see `model::RecoveryObligation`).
+    replay: bool,
+    /// (client, shard) → epoch of the lease the client last held.
+    /// Absent = the client has never contacted the shard; its first
+    /// RPC acquires a lease at the current epoch for free.
+    leases: FxHashMap<(ClientId, usize), u64>,
+}
+
 /// The DES fabric.
 pub struct DesFabric {
     pub server: MetadataPlane,
@@ -78,6 +109,9 @@ pub struct DesFabric {
     /// of SSD reads (SCR's restart path reads checkpoints still resident
     /// in the in-memory buffer, §6.2).
     pub mem_reads: bool,
+    /// Fault-aware mode ([`Self::enable_faults`]); `None` = healthy
+    /// fabric, bit-for-bit today's behavior.
+    faults: Option<Box<FaultState>>,
     pub counters: FabricCounters,
 }
 
@@ -129,6 +163,7 @@ impl DesFabric {
             shard_units: Vec::new(),
             shard_touched: Vec::new(),
             mem_reads: false,
+            faults: None,
             counters: FabricCounters::default(),
         }
     }
@@ -161,6 +196,165 @@ impl DesFabric {
     fn push_cost(&mut self, client: ClientId, op: SimOp) {
         self.costs[client as usize].push_back(op);
     }
+
+    /// Switch the fabric into fault-aware mode: clients hold
+    /// epoch-stamped leases per shard, RPCs carrying a stale epoch are
+    /// fenced by the plane, and — when `replay` — a shard restart
+    /// eagerly re-attaches every surviving client interval (the
+    /// replay-to-SC obligation). With no fault ever applied, a
+    /// fault-aware run prices bit-for-bit like a healthy one: lease
+    /// acquisition piggybacks on each client's first RPC to a shard.
+    pub fn enable_faults(&mut self, replay: bool) {
+        self.faults = Some(Box::new(FaultState {
+            replay,
+            leases: FxHashMap::default(),
+        }));
+    }
+
+    /// Whether [`Self::enable_faults`] was called.
+    pub fn faults_enabled(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// Apply one scheduled fault to the functional state and queue its
+    /// recovery costs. Drivers call this from [`crate::sim::Driver::on_fault`],
+    /// which the engine invokes at the serialized commit point — so the
+    /// perturbation lands identically for any engine thread count.
+    pub fn apply_fault(&mut self, ev: &FaultEvent) {
+        match (ev.target, ev.action) {
+            (FaultTarget::Shard(s), FaultAction::Kill) => self.server.kill_shard(s),
+            (FaultTarget::Shard(s), FaultAction::Restart) => {
+                self.server.restart_shard(s);
+                self.recover_shard(s);
+            }
+            (FaultTarget::Client(c), FaultAction::Kill) => self.kill_client(c as ClientId),
+            // Clients stay dead for state purposes: a restarted client
+            // process resumes with a cold (empty) buffer cache, which
+            // the kill already models.
+            (FaultTarget::Client(_), FaultAction::Restart) => {}
+        }
+    }
+
+    /// Crash `client`: its burst buffer vanishes and the plane drops
+    /// its ownership (modeled as instantaneous lease expiry — a crash
+    /// prices nothing; the survivors' next queries simply stop seeing
+    /// the dead client's intervals).
+    fn kill_client(&mut self, client: ClientId) {
+        let files: Vec<FileId> = {
+            let mut bb = self.bbs[client as usize].write().unwrap();
+            let mut files: Vec<FileId> = bb.files.keys().copied().collect();
+            files.sort_unstable();
+            bb.files.clear();
+            files
+        };
+        for file in files {
+            let _ = self.server.handle(Request::DetachFile { file, client });
+        }
+        if let Some(st) = self.faults.as_mut() {
+            st.leases.retain(|&(c, _), _| c != client);
+        }
+    }
+
+    /// Eager recovery after a shard restart. For every client holding a
+    /// now-stale lease on `shard`, in rank order: price the fenced
+    /// probe, a bounded backoff, and the lease re-acquisition round
+    /// trip; then — under the replay-to-SC obligation — re-issue one
+    /// `Attach` per surviving file the client had published to the
+    /// wiped shard. Eagerness matters: writers never re-contact the
+    /// plane after publishing, so fence-at-next-RPC alone would leave
+    /// readers staring at holes forever.
+    fn recover_shard(&mut self, shard: usize) {
+        let Some(mut st) = self.faults.take() else {
+            return;
+        };
+        let epoch = self.server.shard_epoch(shard);
+        let shards = self.server.shard_count();
+        for client in 0..self.nranks() as ClientId {
+            let Some(lease) = st.leases.get_mut(&(client, shard)) else {
+                continue;
+            };
+            if *lease == epoch {
+                continue;
+            }
+            *lease = epoch;
+            self.counters.fenced_rpcs += 1;
+            self.counters.rpcs += 2;
+            self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
+            self.push_cost(client, SimOp::Compute(RETRY_BACKOFF_NS));
+            self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
+            if !st.replay {
+                continue;
+            }
+            let mut reqs: Vec<Request> = Vec::new();
+            {
+                let bb = self.bbs[client as usize].read().unwrap();
+                let mut files: Vec<FileId> = bb
+                    .files
+                    .keys()
+                    .copied()
+                    .filter(|&f| shard_of(f, shards) == shard)
+                    .collect();
+                files.sort_unstable();
+                for f in files {
+                    let ranges = bb.files[&f].attached_ranges();
+                    if !ranges.is_empty() {
+                        reqs.push(Request::Attach {
+                            file: f,
+                            client,
+                            ranges,
+                        });
+                    }
+                }
+            }
+            for req in reqs {
+                if let Request::Attach { ranges, .. } = &req {
+                    self.counters.replayed_intervals += ranges.len() as u64;
+                }
+                // Priced like any attach — `self.faults` is taken out,
+                // so this recurses into the healthy fast path (the
+                // lease is current again by construction).
+                let _ = self.rpc(client, req);
+            }
+        }
+        self.faults = Some(st);
+    }
+
+    /// Bring `client`'s lease on `shard` current, pricing downtime
+    /// backoff and (if the lease went stale between restarts — the
+    /// lazy complement of [`Self::recover_shard`]) the fence/reacquire
+    /// sequence. After this returns the client's next request to the
+    /// shard carries the current epoch.
+    fn sync_lease(&mut self, client: ClientId, shard: usize) -> u64 {
+        let Some(mut st) = self.faults.take() else {
+            return 0;
+        };
+        if self.server.shard_down(shard) {
+            // Queued-at-reconnect downtime: the request keeps being
+            // retried with bounded backoff until the shard returns;
+            // functionally it lands on the post-restart (wiped) state.
+            self.counters.downtime_retries += 1;
+            self.push_cost(client, SimOp::Compute(RETRY_BACKOFF_NS));
+        }
+        let epoch = self.server.shard_epoch(shard);
+        match st.leases.entry((client, shard)) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                if *e.get() != epoch {
+                    self.counters.fenced_rpcs += 1;
+                    self.counters.rpcs += 2;
+                    self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
+                    self.push_cost(client, SimOp::Compute(RETRY_BACKOFF_NS));
+                    self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
+                    *e.get_mut() = epoch;
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                // First contact: the lease rides the request itself.
+                v.insert(epoch);
+            }
+        }
+        self.faults = Some(st);
+        epoch
+    }
 }
 
 impl Fabric for DesFabric {
@@ -168,7 +362,20 @@ impl Fabric for DesFabric {
         let shard = self.server.shard_index(req.file());
         let req_units = req.interval_units();
         let is_revalidate = matches!(req, Request::Revalidate { .. });
-        let resp = self.server.handle(req);
+        let resp = if self.faults.is_some() {
+            // Fault-aware path: settle the lease (pricing any fence /
+            // downtime retries), then issue with the current epoch so
+            // the plane's fence check stays on the wire.
+            let epoch = self.sync_lease(client, shard);
+            let resp = self.server.handle_leased(epoch, req);
+            debug_assert!(
+                !matches!(resp, Response::Fenced { .. }),
+                "sync_lease must leave the lease current"
+            );
+            resp
+        } else {
+            self.server.handle(req)
+        };
         // A revalidation that hits prices at ZERO intervals (version
         // compare only); a miss upgrades to the snapshot it ships.
         let units = req_units.max(resp.interval_units());
@@ -191,6 +398,20 @@ impl Fabric for DesFabric {
     /// is handled inline); only the *pricing* is coalesced.
     fn rpc_batch(&mut self, client: ClientId, reqs: Vec<Request>) -> Vec<Response> {
         let shards = self.server.shard_count();
+        let leased = self.faults.is_some();
+        if leased {
+            // Settle every involved shard's lease up front (one fence
+            // round per shard per batch, like a real reconnect), so the
+            // coalesced pricing below is untouched by fault mode.
+            let mut synced = vec![false; shards];
+            for req in &reqs {
+                let s = self.server.shard_index(req.file());
+                if !synced[s] {
+                    synced[s] = true;
+                    self.sync_lease(client, s);
+                }
+            }
+        }
         // Persistent scratch: commit-heavy phases call this per rank per
         // phase, so the per-shard accumulators must not reallocate.
         let mut units_of = std::mem::take(&mut self.shard_units);
@@ -204,7 +425,12 @@ impl Fabric for DesFabric {
             let shard = self.server.shard_index(req.file());
             let req_units = req.interval_units();
             let is_revalidate = matches!(req, Request::Revalidate { .. });
-            let resp = self.server.handle(req);
+            let resp = if leased {
+                self.server
+                    .handle_leased(self.server.shard_epoch(shard), req)
+            } else {
+                self.server.handle(req)
+            };
             units_of[shard] += req_units.max(resp.interval_units());
             touched[shard] = true;
             self.counters.count_revalidate(is_revalidate, &resp);
@@ -703,5 +929,134 @@ mod tests {
         c.attach_file(&mut f, fid).unwrap(); // no new writes
         assert!(f.pop_cost(0).is_none(), "second attach must be a no-op");
         assert_eq!(f.counters.rpcs, 1);
+    }
+
+    fn fault(at: u64, target: FaultTarget, action: FaultAction) -> FaultEvent {
+        FaultEvent { at: Ns(at), target, action }
+    }
+
+    #[test]
+    fn shard_restart_replays_attachments_and_prices_recovery() {
+        let mut f = DesFabric::new(vec![0, 0]);
+        f.enable_faults(true); // replay-to-SC obligation
+        let mut w = ClientCore::new(0, f.bb_of(0));
+        let fid = w.open("/rec");
+        w.write(&mut f, fid, b"ABCDEFGH").unwrap();
+        w.attach_file(&mut f, fid).unwrap();
+        assert_eq!(f.server.total_intervals(), 1);
+        f.apply_fault(&fault(0, FaultTarget::Shard(0), FaultAction::Kill));
+        assert_eq!(f.server.total_intervals(), 0, "kill wipes the shard");
+        f.apply_fault(&fault(1, FaultTarget::Shard(0), FaultAction::Restart));
+        // Eager recovery re-attached the writer's surviving interval
+        // and priced the fence + backoff + re-acquire sequence.
+        assert_eq!(f.server.total_intervals(), 1);
+        assert_eq!(f.counters.fenced_rpcs, 1);
+        assert_eq!(f.counters.replayed_intervals, 1);
+        // A reader arriving after recovery sees the full SC outcome.
+        let mut r = ClientCore::new(1, f.bb_of(1));
+        r.open("/rec");
+        let ivs = r.query(&mut f, fid, 0, 8).unwrap();
+        assert_eq!(ivs.len(), 1);
+        assert_eq!(ivs[0].owner, 0);
+        let got = r.read_at(&mut f, fid, Range::new(0, 8), Some(0)).unwrap();
+        assert_eq!(got, b"ABCDEFGH");
+    }
+
+    #[test]
+    fn permitted_stale_restart_drops_ownership() {
+        let mut f = DesFabric::new(vec![0, 0]);
+        f.enable_faults(false); // permitted-stale obligation: no replay
+        let mut w = ClientCore::new(0, f.bb_of(0));
+        let fid = w.open("/stale");
+        w.write(&mut f, fid, b"ABCDEFGH").unwrap();
+        w.attach_file(&mut f, fid).unwrap();
+        f.apply_fault(&fault(0, FaultTarget::Shard(0), FaultAction::Kill));
+        f.apply_fault(&fault(1, FaultTarget::Shard(0), FaultAction::Restart));
+        // Lease still re-acquired, but nothing replayed: the ownership
+        // map stays empty and readers legally observe stale (UPFS) data.
+        assert_eq!(f.counters.fenced_rpcs, 1);
+        assert_eq!(f.counters.replayed_intervals, 0);
+        assert_eq!(f.server.total_intervals(), 0);
+        let mut r = ClientCore::new(1, f.bb_of(1));
+        r.open("/stale");
+        assert!(r.query(&mut f, fid, 0, 8).unwrap().is_empty());
+        let got = r.read_at(&mut f, fid, Range::new(0, 8), None).unwrap();
+        assert_eq!(got, vec![0u8; 8]);
+    }
+
+    #[test]
+    fn down_shard_prices_bounded_backoff() {
+        let mut f = DesFabric::new(vec![0]);
+        f.enable_faults(true);
+        let mut c = ClientCore::new(0, f.bb_of(0));
+        let fid = c.open("/down");
+        c.write(&mut f, fid, b"zz").unwrap();
+        c.attach_file(&mut f, fid).unwrap();
+        while f.pop_cost(0).is_some() {}
+        f.apply_fault(&fault(0, FaultTarget::Shard(0), FaultAction::Kill));
+        // Query during the outage: queued at reconnect — it lands on
+        // the wiped map (empty) and prices one bounded-backoff retry
+        // ahead of the round trip.
+        assert!(c.query(&mut f, fid, 0, 2).unwrap().is_empty());
+        assert_eq!(f.counters.downtime_retries, 1);
+        assert_eq!(f.pop_cost(0), Some(SimOp::Compute(RETRY_BACKOFF_NS)));
+        assert!(matches!(f.pop_cost(0), Some(SimOp::Rpc { .. })));
+        assert_eq!(f.pop_cost(0), None);
+    }
+
+    #[test]
+    fn client_kill_withdraws_ownership_for_free() {
+        let mut f = DesFabric::new(vec![0, 0]);
+        f.enable_faults(true);
+        let mut w = ClientCore::new(0, f.bb_of(0));
+        let fid = w.open("/ck");
+        w.write(&mut f, fid, b"doomed!!").unwrap();
+        w.attach_file(&mut f, fid).unwrap();
+        while f.pop_cost(0).is_some() {}
+        assert_eq!(f.server.total_intervals(), 1);
+        f.apply_fault(&fault(0, FaultTarget::Client(0), FaultAction::Kill));
+        // Ownership withdrawn, buffer gone, nothing priced (a crash
+        // does not send RPCs).
+        assert_eq!(f.server.total_intervals(), 0);
+        assert_eq!(f.pending_costs(0), 0);
+        assert_eq!(f.bb_of(0).read().unwrap().buffered_bytes(), 0);
+        let mut r = ClientCore::new(1, f.bb_of(1));
+        r.open("/ck");
+        assert!(r.query(&mut f, fid, 0, 8).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_mode_without_faults_is_pricing_neutral() {
+        // enable_faults alone must not perturb a single op or counter —
+        // the fault_matrix baseline depends on it.
+        let run = |fault_aware: bool| {
+            let mut f = DesFabric::new_sharded(vec![0, 0], 4);
+            if fault_aware {
+                f.enable_faults(true);
+            }
+            let mut w = ClientCore::new(0, f.bb_of(0));
+            let mut r = ClientCore::new(1, f.bb_of(1));
+            let mut fids = Vec::new();
+            for i in 0..6 {
+                let path = format!("/neutral/{i}");
+                let fid = w.open(&path);
+                w.write(&mut f, fid, &vec![3u8; 64]).unwrap();
+                r.open(&path);
+                fids.push(fid);
+            }
+            w.attach_files(&mut f, &fids).unwrap();
+            let maps = r.query_files(&mut f, &fids).unwrap();
+            for (fid, ivs) in fids.iter().zip(&maps) {
+                let _ = r.read_at(&mut f, *fid, ivs[0].range, Some(ivs[0].owner));
+            }
+            let mut ops = Vec::new();
+            for c in [0u32, 1] {
+                while let Some(op) = f.pop_cost(c) {
+                    ops.push((c, op));
+                }
+            }
+            (ops, f.counters)
+        };
+        assert_eq!(run(true), run(false));
     }
 }

@@ -31,11 +31,71 @@ struct FileEntry {
 pub struct GlobalServerState {
     files: FxHashMap<FileId, FileEntry>,
     requests_handled: u64,
+    /// Lease epoch: bumped on every [`GlobalServerState::restart`].
+    /// Clients stamp RPCs with the epoch of their lease; a mismatch is
+    /// fenced ([`Response::Fenced`]) so nothing executes against a
+    /// pre-restart view of this shard.
+    epoch: u64,
+    /// Crashed and not yet restarted. Functional request handling keeps
+    /// working (the fabric models downtime as queued-at-reconnect and
+    /// prices the retries); the flag exists so transports can see — and
+    /// price — the outage.
+    down: bool,
+    /// New files created after a restart start their snapshot versions
+    /// here (`epoch << 32`), so a replayed post-restart version can
+    /// never collide with a version cached before the crash — a reader
+    /// revalidating across the outage always sees a miss, never a
+    /// false `Current`.
+    version_floor: u64,
 }
 
 impl GlobalServerState {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Crash this shard: the in-memory interval state is gone. The
+    /// epoch does not change until [`GlobalServerState::restart`] — a
+    /// kill with no restart leaves leases valid against an empty map.
+    pub fn kill(&mut self) {
+        self.files.clear();
+        self.down = true;
+    }
+
+    /// Restart after a kill: bump the lease epoch (fencing every lease
+    /// granted before the crash) and move the version floor so replayed
+    /// state never reuses a pre-crash snapshot version.
+    pub fn restart(&mut self) {
+        self.down = false;
+        self.epoch += 1;
+        self.version_floor = self.epoch << 32;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down
+    }
+
+    fn entry(&mut self, file: FileId) -> &mut FileEntry {
+        let floor = self.version_floor;
+        self.files.entry(file).or_insert_with(|| FileEntry {
+            version: floor,
+            ..FileEntry::default()
+        })
+    }
+
+    /// Handle one RPC stamped with the caller's lease epoch: a stale
+    /// epoch is fenced — counted but not executed — and the caller must
+    /// re-acquire its lease before retrying.
+    pub fn handle_leased(&mut self, lease_epoch: u64, req: Request) -> Response {
+        if lease_epoch != self.epoch {
+            self.requests_handled += 1;
+            return Response::Fenced { epoch: self.epoch };
+        }
+        self.handle(req)
     }
 
     /// Handle one RPC.
@@ -47,7 +107,7 @@ impl GlobalServerState {
                 client,
                 ranges,
             } => {
-                let entry = self.files.entry(file).or_default();
+                let entry = self.entry(file);
                 entry.version += 1;
                 for range in ranges {
                     entry.attached_eof = entry.attached_eof.max(range.end);
@@ -123,7 +183,7 @@ impl GlobalServerState {
                 }
             }
             Request::FlushNotify { file, len } => {
-                let entry = self.files.entry(file).or_default();
+                let entry = self.entry(file);
                 entry.flushed_eof = entry.flushed_eof.max(len);
                 Response::Ok
             }
@@ -196,6 +256,34 @@ impl MetadataPlane {
     pub fn handle(&mut self, req: Request) -> Response {
         let s = self.shard_index(req.file());
         self.shards[s].handle(req)
+    }
+
+    /// Handle one RPC on the owning shard, fenced against the caller's
+    /// lease epoch for that shard (see [`GlobalServerState::handle_leased`]).
+    pub fn handle_leased(&mut self, lease_epoch: u64, req: Request) -> Response {
+        let s = self.shard_index(req.file());
+        self.shards[s].handle_leased(lease_epoch, req)
+    }
+
+    /// Crash shard `idx` (its interval state is wiped).
+    pub fn kill_shard(&mut self, idx: usize) {
+        self.shards[idx].kill();
+    }
+
+    /// Restart shard `idx`, fencing every lease granted before the
+    /// crash.
+    pub fn restart_shard(&mut self, idx: usize) {
+        self.shards[idx].restart();
+    }
+
+    /// Current lease epoch of shard `idx`.
+    pub fn shard_epoch(&self, idx: usize) -> u64 {
+        self.shards[idx].epoch()
+    }
+
+    /// Is shard `idx` between a kill and its restart?
+    pub fn shard_down(&self, idx: usize) -> bool {
+        self.shards[idx].is_down()
     }
 
     /// Borrow one shard's state (engines that hold per-shard locks, and
@@ -474,6 +562,78 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn kill_wipes_restart_fences_and_floors_versions() {
+        let mut s = GlobalServerState::new();
+        s.handle(Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(0, 10)],
+        });
+        assert_eq!(s.version_of(1), 1);
+        assert_eq!(s.epoch(), 0);
+        s.kill();
+        assert!(s.is_down());
+        assert_eq!(s.intervals_of(1), 0, "crash loses the interval state");
+        // Kill alone does not fence: the epoch moves at restart.
+        assert_eq!(s.epoch(), 0);
+        s.restart();
+        assert!(!s.is_down());
+        assert_eq!(s.epoch(), 1);
+        // A stale lease is fenced; nothing executes.
+        let att = Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(0, 10)],
+        };
+        assert_eq!(
+            s.handle_leased(0, att.clone()),
+            Response::Fenced { epoch: 1 }
+        );
+        assert_eq!(s.intervals_of(1), 0);
+        // A fresh lease executes, and the replayed version lands above
+        // every version cached before the crash — a revalidation across
+        // the outage can never hit.
+        assert_eq!(s.handle_leased(1, att), Response::Ok);
+        assert_eq!(s.intervals_of(1), 1);
+        assert_eq!(s.version_of(1), (1u64 << 32) + 1);
+    }
+
+    #[test]
+    fn plane_failover_is_per_shard() {
+        let mut plane = MetadataPlane::new(2);
+        let on_0 = (0..)
+            .map(|i| crate::basefs::proto::file_id(&format!("/f/{i}")))
+            .find(|&f| plane.shard_index(f) == 0)
+            .unwrap();
+        let on_1 = (0..)
+            .map(|i| crate::basefs::proto::file_id(&format!("/g/{i}")))
+            .find(|&f| plane.shard_index(f) == 1)
+            .unwrap();
+        for file in [on_0, on_1] {
+            plane.handle(Request::Attach {
+                file,
+                client: 1,
+                ranges: vec![Range::new(0, 8)],
+            });
+        }
+        plane.kill_shard(0);
+        plane.restart_shard(0);
+        assert_eq!(plane.shard_epoch(0), 1);
+        assert_eq!(plane.shard_epoch(1), 0);
+        assert_eq!(plane.intervals_of(on_0), 0, "killed shard wiped");
+        assert_eq!(plane.intervals_of(on_1), 1, "other shard untouched");
+        // Routing of the fence check follows the file's shard.
+        assert_eq!(
+            plane.handle_leased(0, Request::QueryFile { file: on_0 }),
+            Response::Fenced { epoch: 1 }
+        );
+        assert!(matches!(
+            plane.handle_leased(0, Request::QueryFile { file: on_1 }),
+            Response::Snapshot { .. }
+        ));
     }
 
     #[test]

@@ -174,6 +174,27 @@ impl FileBuf {
     pub fn mark_all_attached(&mut self) -> Vec<LocalInterval> {
         self.tree.mark_all_attached()
     }
+
+    /// Every range this client has attached, ascending and coalesced —
+    /// the set a reconnecting client replays to a restarted metadata
+    /// shard (its local tree, not the wiped server, is the durable
+    /// record of what it owned).
+    pub fn attached_ranges(&self) -> Vec<Range> {
+        let mut out: Vec<Range> = Vec::new();
+        self.tree.for_each_in(Range::new(0, u64::MAX), |seg| {
+            if !seg.attached {
+                return;
+            }
+            if let Some(last) = out.last_mut() {
+                if last.end == seg.file.start {
+                    last.end = seg.file.end;
+                    return;
+                }
+            }
+            out.push(seg.file);
+        });
+        out
+    }
 }
 
 /// Errors from byte stores.

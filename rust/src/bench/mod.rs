@@ -13,6 +13,8 @@
 //! pscnf bench --filter fig4 --models commit,session --scales 32,64,128 --jobs 8
 //! pscnf bench --list --filter 'ablate*'      # show matching scenario ids (trailing-* glob)
 //! pscnf bench --filter scale_gate --engine-threads 4  # windowed parallel event loop
+//! pscnf bench --filter fault_matrix --json   # price crash recovery per model × shards
+//! pscnf bench --filter smoke --faults 'kill shard 0 at 2ms; restart shard 0 at 4ms'
 //! pscnf bench --compare baseline.json --gate 15   # nonzero exit on regression
 //! ```
 //!
@@ -30,6 +32,7 @@ pub use registry::{registry, HotPathCase, Kind, Scenario};
 pub use report::{BenchMatrix, BenchRecord, Metric, SCHEMA_VERSION};
 pub use runner::{run_matrix, run_matrix_timed, run_scenario, run_scenario_timed};
 
+use crate::config::RunArgs;
 use crate::coordinator::{maybe_write_bench_json, write_results};
 use crate::fs::FsKind;
 use crate::util::cli::ArgSpec;
@@ -185,13 +188,6 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         Some("1"),
         "parallel scenario workers; the matrix is byte-identical to --jobs 1",
     )
-    .opt(
-        "engine-threads",
-        "N",
-        Some("0"),
-        "run every cell's event loop on N windowed sub-engines (0 = keep each cell's \
-         registry setting); records are byte-identical for any value",
-    )
     .flag("json", "write the matrix to --out after running")
     .opt("out", "PATH", Some(DEFAULT_OUT), "output path for --json")
     .flag("list", "list matching scenario ids without running them")
@@ -213,6 +209,12 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         Some("10"),
         "max tolerated per-metric regression percent for --compare",
     );
+    // The shared run-shape block (`--shards`, `--files`,
+    // `--engine-threads`, `--faults`) comes from the same [`RunArgs`]
+    // `pscnf run` uses: one flag set, one parse, one validation — the
+    // historical `--engine-threads 0` sentinel (and its drifted error
+    // text) is gone.
+    let spec = RunArgs::add_to_spec(spec);
     let args = spec.parse(argv)?;
 
     // Register config-defined models FIRST: the registry() call below
@@ -277,10 +279,27 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
             s.repeats = repeats;
         }
     }
-    let engine_threads = args.usize("engine-threads")?;
-    if engine_threads > 0 {
+    // `None` (flag not given) keeps each cell's registry setting;
+    // `Some` overrides every selected cell.
+    let run_args = RunArgs::from_parsed(&args)?;
+    if let Some(threads) = run_args.engine_threads {
         for s in scenarios.iter_mut() {
-            s.engine_threads = engine_threads;
+            s.engine_threads = threads;
+        }
+    }
+    if let Some(shards) = run_args.shards {
+        for s in scenarios.iter_mut() {
+            s.shards = shards;
+        }
+    }
+    if let Some(files) = run_args.files {
+        for s in scenarios.iter_mut() {
+            s.files = files;
+        }
+    }
+    if let Some(plan) = &run_args.faults {
+        for s in scenarios.iter_mut() {
+            s.faults = plan.clone();
         }
     }
     let jobs = args.usize("jobs")?;

@@ -12,7 +12,7 @@
 
 use crate::config::Testbed;
 use crate::fs::FsKind;
-use crate::sim::Dispatch;
+use crate::sim::{Dispatch, FaultPlan, Ns};
 use crate::util::units::fmt_bytes;
 use crate::workload::{Config, Pattern};
 
@@ -45,6 +45,21 @@ pub enum Kind {
     /// models' hit-rate climbs with `rounds` while commit/posix keep
     /// paying per-read queries.
     Snapshot { access: u64, rounds: usize },
+    /// Crash-recovery pricing (`fault_matrix`): run the synthetic cell
+    /// healthy once to learn its write-barrier time, then rerun it with
+    /// a whole-plane shard outage whose window ends exactly at that
+    /// barrier — the kill wipes the fully-published metadata plane and
+    /// the restart fences every lease (replaying attachments for
+    /// replay-to-SC models) right before the readers unblock. The
+    /// record's `recovery_s` is the makespan the outage added over the
+    /// healthy run of the same seed.
+    FaultMatrix {
+        config: Config,
+        access: u64,
+        /// Kill-to-restart gap; the window is placed so the restart
+        /// lands on the write barrier's release time.
+        downtime: Ns,
+    },
     /// Wall-clock hot-path microbench (`perf_hotpath`): measures the
     /// simulator itself (engine events/s, tree/server ns/op), not
     /// simulated bandwidth. The ONLY nondeterministic cells in the
@@ -121,6 +136,11 @@ pub struct Scenario {
     pub lazy: bool,
     /// Member of the quick CI subset (`--filter smoke`).
     pub smoke: bool,
+    /// Static fault schedule applied to the cell's DES run (empty =
+    /// healthy). `--faults` overrides it on every selected cell;
+    /// `FaultMatrix` cells ignore it and derive their outage window
+    /// from a healthy probe instead.
+    pub faults: FaultPlan,
     pub kind: Kind,
 }
 
@@ -165,6 +185,7 @@ fn base(family: &'static str, fs: FsKind, nodes: usize, ppn: usize, kind: Kind) 
         engine_threads: 1,
         lazy: false,
         smoke: false,
+        faults: FaultPlan::new(),
         kind,
     }
 }
@@ -600,6 +621,33 @@ pub fn registry() -> Vec<Scenario> {
         }
     }
 
+    // fault_matrix — recovery-time pricing: every registered model
+    // (built-ins and config-defined alike) × shard count runs one CC-R
+    // cell with a whole-plane outage ending at the write barrier. The
+    // commit/session × s{1,4} cells ride the gated CI smoke subset, so
+    // a regression in lease-fencing or replay cost trips the perf gate;
+    // config-defined models never smoke (absent from the CI baseline).
+    for fs in FsKind::registered() {
+        for shards in [1usize, 4] {
+            let mut sc = base(
+                "fault_matrix",
+                fs,
+                2,
+                2,
+                Kind::FaultMatrix {
+                    config: Config::CcR,
+                    access: 8 << 10,
+                    downtime: Ns(500_000),
+                },
+            );
+            sc.m = 4;
+            sc.shards = shards;
+            sc.repeats = 2;
+            sc.smoke = fs == FsKind::COMMIT || fs == FsKind::SESSION;
+            v.push(with_id(sc, "CC-R.outage", Some(8 << 10), &format!("s{shards}")));
+        }
+    }
+
     // smoke — the CI perf-gate subset: tiny scales, every model ×
     // Table-8 config (+ a random-read variant), plus one SCR and one DL
     // cell per model so every workload driver is exercised.
@@ -766,6 +814,35 @@ mod tests {
             .expect("missing engine.parallel hot-path cell");
         assert!(par.smoke, "engine.parallel must ride the perf gate");
         assert_eq!(par.engine_threads, 4);
+    }
+
+    #[test]
+    fn fault_matrix_covers_every_model_and_smokes_four_cells() {
+        let kinds = FsKind::registered();
+        let all = registry();
+        for fs in kinds {
+            for shards in [1usize, 4] {
+                assert!(
+                    all.iter().any(|s| s.family == "fault_matrix"
+                        && s.fs == fs
+                        && s.shards == shards
+                        && matches!(s.kind, Kind::FaultMatrix { .. })),
+                    "fault_matrix misses {} × s{shards}",
+                    fs.name()
+                );
+            }
+        }
+        // Exactly the commit/session × s{1,4} cells ride the perf gate.
+        let smoke: Vec<_> = all
+            .iter()
+            .filter(|s| s.family == "fault_matrix" && s.smoke)
+            .collect();
+        assert_eq!(smoke.len(), 4, "want 4 gated fault_matrix cells");
+        for fs in [FsKind::COMMIT, FsKind::SESSION] {
+            for shards in [1usize, 4] {
+                assert!(smoke.iter().any(|s| s.fs == fs && s.shards == shards));
+            }
+        }
     }
 
     #[test]

@@ -18,11 +18,15 @@
 use super::registry::{HotPathCase, Kind, Scenario};
 use super::report::{BenchMatrix, BenchRecord, Metric};
 use crate::basefs::{DesFabric, FileId, GlobalServerState, Request};
+use crate::config::RunConfig;
 use crate::dl::{DlDriver, DlParams};
 use crate::fs::{FsKind, PolicyFs, WorkloadFs};
 use crate::interval::{GlobalIntervalTree, Range};
 use crate::scr::{ScrDriver, ScrParams};
-use crate::sim::{Cluster, Driver, Engine, NetParams, Ns, ServerParams, SimOp, UpfsParams};
+use crate::sim::{
+    Cluster, Driver, Engine, FaultAction, FaultEvent, FaultPlan, FaultTarget, NetParams, Ns,
+    ServerParams, SimOp, UpfsParams,
+};
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 use crate::workload::{build_fs, Config, SyntheticDriver};
@@ -62,6 +66,17 @@ fn cluster(sc: &Scenario, seed: u64) -> Cluster {
     }
 }
 
+/// The [`RunConfig`] a scenario's knobs imply — the same builder the
+/// CLI (`pscnf run`) consumes, so a bench cell and a CLI run with equal
+/// knobs can never shape a driver differently.
+fn run_cfg(sc: &Scenario) -> RunConfig {
+    RunConfig::new()
+        .shards(sc.shards)
+        .lazy(sc.lazy)
+        .engine_threads(sc.engine_threads)
+        .faults(sc.faults.clone())
+}
+
 /// Per-repeat observations folded into the record. Counters are folded
 /// as samples too (seed-sensitive scenarios vary per repeat; recording
 /// only the last repeat would make the gated value depend on
@@ -77,6 +92,13 @@ struct Fold {
     /// Snapshot-revalidation hit rate (0.0 for models/workloads that
     /// never revalidate) — gated so a warm-reopen regression trips CI.
     reval_rate: Samples,
+    /// `fault_matrix` only: virtual seconds of makespan the outage added
+    /// over the healthy run of the same seed, plus the recovery-protocol
+    /// counters (all deterministic, so all gateable).
+    recovery_s: Samples,
+    fenced_rpcs: Samples,
+    replayed_intervals: Samples,
+    downtime_retries: Samples,
 }
 
 /// Run a scenario to completion and produce its matrix record.
@@ -151,11 +173,33 @@ fn run_virtual(sc: &Scenario) -> BenchRecord {
                 .param("rounds", *rounds)
                 .param("m", sc.m);
         }
+        Kind::FaultMatrix {
+            config,
+            access,
+            downtime,
+        } => {
+            rec.param("workload", format!("{}.outage", config.name()))
+                .param("access_bytes", *access)
+                .param("downtime_ns", downtime.0)
+                .param("m", sc.m);
+        }
         Kind::HotPath(_) => unreachable!("hot-path cells run in run_hotpath"),
     }
     rec.metric("bw", Metric::higher(fold.bw.mean()));
     if !fold.restart_bw.is_empty() {
         rec.metric("restart_bw", Metric::higher(fold.restart_bw.mean()));
+    }
+    if !fold.recovery_s.is_empty() {
+        rec.metric("recovery_s", Metric::lower(fold.recovery_s.mean()))
+            .metric("fenced_rpcs", Metric::lower(fold.fenced_rpcs.mean()))
+            .metric(
+                "replayed_intervals",
+                Metric::lower(fold.replayed_intervals.mean()),
+            )
+            .metric(
+                "downtime_retries",
+                Metric::lower(fold.downtime_retries.mean()),
+            );
     }
     rec.metric("lat_p50_s", Metric::lower(fold.lat_s.percentile(50.0)))
         .metric("lat_p95_s", Metric::lower(fold.lat_s.percentile(95.0)))
@@ -183,12 +227,9 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
                 params.read_pattern = Some(*over);
             }
             let write_phase = matches!(config, Config::CnW | Config::SnW);
-            let driver = if sc.lazy {
-                SyntheticDriver::new_lazy(sc.fs, params, sc.shards)
-            } else {
-                SyntheticDriver::new_sharded(sc.fs, params, sc.shards)
-            };
-            let report = driver.run_with_threads(cluster(sc, seed ^ 0xBEEF), sc.engine_threads);
+            let cfg = run_cfg(sc);
+            let driver = SyntheticDriver::with_config(sc.fs, params, &cfg);
+            let report = driver.run_cfg(cluster(sc, seed ^ 0xBEEF), &cfg);
             fold.bw.push(if write_phase {
                 report.write_bw()
             } else {
@@ -203,12 +244,8 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
         Kind::Scr { particles } => {
             let mut p = ScrParams::with_nodes(sc.nodes, sc.ppn);
             p.particles = *particles;
-            let driver = if sc.lazy {
-                ScrDriver::new_lazy(sc.fs, p)
-            } else {
-                ScrDriver::new(sc.fs, p)
-            };
-            let report = driver.run_with_threads(cluster(sc, seed), sc.engine_threads);
+            let cfg = run_cfg(sc);
+            let report = ScrDriver::with_config(sc.fs, p, &cfg).run_cfg(cluster(sc, seed), &cfg);
             fold.bw.push(report.ckpt_bw());
             fold.restart_bw.push(report.restart_bw());
             fold.lat_s.push(report.restart_end.as_secs_f64());
@@ -228,12 +265,8 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
                 DlParams::weak(sc.nodes, sc.ppn, *work, seed)
             };
             p.aggregate = *aggregate;
-            let driver = if sc.lazy {
-                DlDriver::new_lazy(sc.fs, p)
-            } else {
-                DlDriver::new(sc.fs, p)
-            };
-            let report = driver.run_with_threads(cluster(sc, seed), sc.engine_threads);
+            let cfg = run_cfg(sc);
+            let report = DlDriver::with_config(sc.fs, p, &cfg).run_cfg(cluster(sc, seed), &cfg);
             fold.bw.push(report.read_bw());
             fold.lat_s.push(report.epoch_time.as_secs_f64());
             fold.rpcs.push(report.counters.rpcs as f64);
@@ -272,6 +305,64 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.sim_ops.push(stats.ops_executed as f64);
             fold.reval_rate
                 .push(driver.fabric.counters.revalidate_hit_rate());
+        }
+        Kind::FaultMatrix {
+            config,
+            access,
+            downtime,
+        } => {
+            // Not `run_cfg(sc)`: a `--faults` override must not leak
+            // into the healthy probe this cell measures against.
+            let cfg = RunConfig::new()
+                .shards(sc.shards)
+                .lazy(sc.lazy)
+                .engine_threads(sc.engine_threads);
+            let probe = |cfg: &RunConfig| {
+                let params = config
+                    .params(sc.nodes, sc.ppn, *access, sc.m, seed)
+                    .with_files(sc.files);
+                SyntheticDriver::with_config(sc.fs, params, cfg)
+                    .run_cfg(cluster(sc, seed ^ 0xBEEF), cfg)
+            };
+            let healthy = probe(&cfg);
+            // Whole-plane outage whose window ends exactly at the write
+            // barrier's release: the kill wipes the fully-published
+            // plane, the restart fences every lease (and replays the
+            // surviving attachments for replay-to-SC models) before the
+            // first reader unblocks, and the priced recovery tail is
+            // exactly what the outage adds to the makespan.
+            let restart_at = healthy.write_end;
+            let kill_at = Ns(restart_at.0.saturating_sub(downtime.0).max(1));
+            let mut plan = FaultPlan::new();
+            for shard in 0..sc.shards {
+                plan.push(FaultEvent {
+                    at: kill_at,
+                    target: FaultTarget::Shard(shard),
+                    action: FaultAction::Kill,
+                });
+                plan.push(FaultEvent {
+                    at: restart_at,
+                    target: FaultTarget::Shard(shard),
+                    action: FaultAction::Restart,
+                });
+            }
+            let faulted = probe(&cfg.clone().faults(plan));
+            fold.bw.push(faulted.read_bw());
+            fold.lat_s.push(faulted.makespan.as_secs_f64());
+            fold.recovery_s.push(
+                Ns(faulted.makespan.0.saturating_sub(healthy.makespan.0)).as_secs_f64(),
+            );
+            fold.fenced_rpcs.push(faulted.counters.fenced_rpcs as f64);
+            fold.replayed_intervals
+                .push(faulted.counters.replayed_intervals as f64);
+            fold.downtime_retries
+                .push(faulted.counters.downtime_retries as f64);
+            fold.rpcs.push(faulted.counters.rpcs as f64);
+            fold.rpc_intervals
+                .push(faulted.counters.rpc_intervals as f64);
+            fold.sim_ops.push(faulted.sim_ops as f64);
+            fold.reval_rate
+                .push(faulted.counters.revalidate_hit_rate());
         }
         Kind::HotPath(_) => unreachable!("hot-path cells run in run_hotpath"),
     }
@@ -934,6 +1025,44 @@ mod tests {
             "16 rounds should be hit-dominated"
         );
         assert!(r16.metric_value("bw").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fault_matrix_smoke_prices_recovery() {
+        let sc = smoke("fault_matrix", FsKind::COMMIT);
+        let rec = run_scenario(&sc);
+        assert_eq!(rec.params["workload"].as_str(), Some("CC-R.outage"));
+        assert!(rec.metric_value("bw").unwrap() > 0.0);
+        // The outage really struck: leases were fenced and — commit is a
+        // replay-to-SC model — the wiped attachments were replayed.
+        assert!(rec.metric_value("fenced_rpcs").unwrap() > 0.0);
+        assert!(rec.metric_value("replayed_intervals").unwrap() > 0.0);
+        assert!(rec.metric_value("recovery_s").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn fault_matrix_record_is_engine_thread_invariant() {
+        // Acceptance: the fault_matrix metrics land in the matrix
+        // byte-identical for any engine-thread count (jobs invariance is
+        // pinned for the whole matrix in tests/bench_parallel.rs).
+        let mut sc = smoke("fault_matrix", FsKind::SESSION);
+        sc.repeats = 1;
+        let serial = run_scenario(&sc);
+        sc.engine_threads = 4;
+        assert_eq!(run_scenario(&sc), serial);
+    }
+
+    #[test]
+    fn static_fault_plan_perturbs_a_synthetic_cell() {
+        // `--faults` threading: killing a writer mid-write-phase wipes
+        // its buffered intervals, so the readers of a plain synthetic
+        // cell see different ownership — the record must change.
+        let mut sc = smoke("CC-R/8KiB", FsKind::COMMIT);
+        sc.repeats = 1;
+        let healthy = run_scenario(&sc);
+        sc.faults = FaultPlan::client_kill(0, Ns(1_000));
+        let faulted = run_scenario(&sc);
+        assert_ne!(healthy, faulted);
     }
 
     #[test]

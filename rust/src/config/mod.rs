@@ -27,10 +27,23 @@
 //! ```
 
 use crate::fs::FsKind;
-use crate::sim::{Cluster, NetParams, ServerParams, SsdParams, UpfsParams};
+use crate::sim::{Cluster, FaultPlan, NetParams, ServerParams, SsdParams, UpfsParams};
+use crate::util::cli::{ArgSpec, ParsedArgs};
 use crate::util::units::parse_bytes;
 use crate::workload::Config as TableConfig;
 use std::collections::BTreeMap;
+
+/// The single `>= 1` validator for run-shape knobs. Both spellings of
+/// every knob — the CLI flag (`--engine-threads 0`) and the INI key
+/// (`[cluster] engine_threads = 0`) — route through here, so they
+/// report the *same* error text (they used to drift).
+pub fn require_at_least_one(key: &str, v: usize) -> Result<usize, String> {
+    if v == 0 {
+        Err(format!("{key} must be >= 1"))
+    } else {
+        Ok(v)
+    }
+}
 
 /// Parsed INI-ish file: section -> key -> value.
 pub type Ini = BTreeMap<String, BTreeMap<String, String>>;
@@ -139,6 +152,9 @@ pub struct Experiment {
     /// the knob only trades wall time, so it lives next to the cluster
     /// shape rather than the workload.
     pub engine_threads: usize,
+    /// Deterministic fault schedule (`[faults]` section or `--faults`);
+    /// empty = healthy run.
+    pub faults: FaultPlan,
     pub seed: u64,
 }
 
@@ -155,6 +171,7 @@ impl Default for Experiment {
             accesses_per_proc: 10,
             files: 1,
             engine_threads: 1,
+            faults: FaultPlan::new(),
             seed: 7,
         }
     }
@@ -178,18 +195,17 @@ impl Experiment {
                 self.testbed = Testbed::parse(v)?;
             }
             if let Some(v) = cluster.get("shards") {
-                self.shards = v.parse().map_err(|e| format!("cluster.shards: {e}"))?;
-                if self.shards == 0 {
-                    return Err("cluster.shards must be >= 1".to_string());
-                }
+                self.shards = require_at_least_one(
+                    "shards",
+                    v.parse().map_err(|e| format!("cluster.shards: {e}"))?,
+                )?;
             }
             if let Some(v) = cluster.get("engine_threads") {
-                self.engine_threads = v
-                    .parse()
-                    .map_err(|e| format!("cluster.engine_threads: {e}"))?;
-                if self.engine_threads == 0 {
-                    return Err("cluster.engine_threads must be >= 1".to_string());
-                }
+                self.engine_threads = require_at_least_one(
+                    "engine_threads",
+                    v.parse()
+                        .map_err(|e| format!("cluster.engine_threads: {e}"))?,
+                )?;
             }
         }
         if let Some(w) = ini.get("workload") {
@@ -209,11 +225,14 @@ impl Experiment {
                 self.seed = v.parse().map_err(|e| format!("workload.seed: {e}"))?;
             }
             if let Some(v) = w.get("files") {
-                self.files = v.parse().map_err(|e| format!("workload.files: {e}"))?;
-                if self.files == 0 {
-                    return Err("workload.files must be >= 1".to_string());
-                }
+                self.files = require_at_least_one(
+                    "files",
+                    v.parse().map_err(|e| format!("workload.files: {e}"))?,
+                )?;
             }
+        }
+        if let Some(section) = ini.get("faults") {
+            self.faults = FaultPlan::from_ini(section)?;
         }
         Ok(())
     }
@@ -233,6 +252,179 @@ impl Experiment {
     pub fn cluster(&self) -> Cluster {
         self.testbed
             .cluster_sharded(self.nodes, self.seed ^ 0xC1A5, self.shards)
+    }
+
+    /// The driver-facing [`RunConfig`] this experiment implies.
+    pub fn run_config(&self) -> RunConfig {
+        RunConfig::new()
+            .shards(self.shards)
+            .engine_threads(self.engine_threads)
+            .faults(self.faults.clone())
+    }
+}
+
+/// The one way to shape a driver run — replaces the historical
+/// constructor sprawl (`new` / `new_with_data` / `new_sharded` /
+/// `new_lazy` / `run_with_threads`, duplicated across the synthetic,
+/// SCR, DL and bench drivers) with a single builder consumed by each
+/// driver's `with_config` constructor and `run_cfg` entry point. The
+/// default value reproduces `Driver::new(...).run(...)` exactly.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Metadata-plane shards (1 = the paper's single global server).
+    pub shards: usize,
+    /// Build per-rank FS layers on first touch instead of up front
+    /// (streams million-rank states; implies a phantom fabric).
+    pub lazy: bool,
+    /// Track lengths/ownership only, no payload bytes (benchmark
+    /// scale). `false` = byte-exact stores.
+    pub phantom: bool,
+    /// Windowed parallel event-loop width; 1 = the serial loop.
+    /// Results are byte-identical for any value.
+    pub engine_threads: usize,
+    /// Deterministic fault schedule; empty = healthy run. A non-empty
+    /// plan switches the fabric fault-aware, with the recovery mode
+    /// derived from the model's [`crate::model::RecoveryObligation`].
+    pub faults: FaultPlan,
+    /// Override the FS-layer factory (differential tests stack extra
+    /// layers); `None` = the policy-interpreted default layer.
+    pub layers: Option<crate::workload::LazyMake>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            lazy: false,
+            phantom: true,
+            engine_threads: 1,
+            faults: FaultPlan::new(),
+            layers: None,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn lazy(mut self, lazy: bool) -> Self {
+        self.lazy = lazy;
+        self
+    }
+
+    pub fn phantom(mut self, phantom: bool) -> Self {
+        self.phantom = phantom;
+        self
+    }
+
+    pub fn engine_threads(mut self, threads: usize) -> Self {
+        self.engine_threads = threads;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn layers(mut self, make: crate::workload::LazyMake) -> Self {
+        self.layers = Some(make);
+        self
+    }
+}
+
+/// The run-shape argument block shared by `pscnf run` and `pscnf
+/// bench`: one set of flag names, one parse, and the same validation
+/// (via [`require_at_least_one`]) as the INI keys, so the CLI and
+/// config-file spellings of a knob cannot report different errors.
+/// `None` = the flag was not given (callers fall back to the config
+/// file, then the registry/built-in default).
+#[derive(Debug, Clone, Default)]
+pub struct RunArgs {
+    pub shards: Option<usize>,
+    pub files: Option<usize>,
+    pub engine_threads: Option<usize>,
+    pub faults: Option<FaultPlan>,
+}
+
+impl RunArgs {
+    /// Attach the shared flags to a subcommand spec. Empty-string
+    /// defaults mean "not given" so provenance layering works without
+    /// sentinel values like the historical `--engine-threads 0`.
+    pub fn add_to_spec(spec: ArgSpec) -> ArgSpec {
+        spec.opt(
+            "shards",
+            "N",
+            Some(""),
+            "metadata-plane shards; 1 = the paper's single server (empty = config/registry value)",
+        )
+        .opt(
+            "files",
+            "N",
+            Some(""),
+            "shared files the dataset is striped over (empty = config/registry value)",
+        )
+        .opt(
+            "engine-threads",
+            "N",
+            Some(""),
+            "windowed parallel event-loop width; results are byte-identical for any value \
+             (empty = config/registry value)",
+        )
+        .opt(
+            "faults",
+            "PLAN",
+            Some(""),
+            "fault plan, e.g. `kill shard 0 at 2ms; restart shard 0 at 4ms` \
+             (empty = config value / healthy)",
+        )
+    }
+
+    /// Extract the shared block from parsed CLI args.
+    pub fn from_parsed(args: &ParsedArgs) -> Result<Self, String> {
+        let knob = |flag: &str, key: &str| -> Result<Option<usize>, String> {
+            match args.str(flag)? {
+                "" => Ok(None),
+                s => {
+                    let v: usize = s.parse().map_err(|e| format!("--{flag}: {e}"))?;
+                    require_at_least_one(key, v).map(Some)
+                }
+            }
+        };
+        let faults = match args.str("faults")? {
+            "" => None,
+            spec => Some(FaultPlan::parse_spec(spec).map_err(|e| format!("--faults: {e}"))?),
+        };
+        Ok(Self {
+            shards: knob("shards", "shards")?,
+            files: knob("files", "files")?,
+            engine_threads: knob("engine-threads", "engine_threads")?,
+            faults,
+        })
+    }
+
+    /// Overlay onto an [`Experiment`] (CLI wins over whatever the
+    /// experiment already holds — file value or built-in default).
+    pub fn apply_to(&self, exp: &mut Experiment) {
+        if let Some(v) = self.shards {
+            exp.shards = v;
+        }
+        if let Some(v) = self.files {
+            exp.files = v;
+        }
+        if let Some(v) = self.engine_threads {
+            exp.engine_threads = v;
+        }
+        if let Some(p) = &self.faults {
+            exp.faults = p.clone();
+        }
     }
 }
 
@@ -320,6 +512,66 @@ mod tests {
         // A broken block is a config error, not a panic.
         let bad = parse_ini("[model.cfg_bad]\npublication = sometimes\n").unwrap();
         assert!(Experiment::default().apply_ini(&bad).is_err());
+    }
+
+    #[test]
+    fn faults_section_and_run_config() {
+        let mut e = Experiment::default();
+        assert!(e.faults.is_empty());
+        let ini = parse_ini(
+            "[faults]\nplan = kill shard 0 at 2ms; restart shard 0 at 4ms\n",
+        )
+        .unwrap();
+        e.apply_ini(&ini).unwrap();
+        assert_eq!(e.faults.len(), 2);
+        let cfg = e.run_config();
+        assert_eq!(cfg.shards, e.shards);
+        assert_eq!(cfg.engine_threads, e.engine_threads);
+        assert_eq!(cfg.faults, e.faults);
+        // Default RunConfig reproduces the historical defaults.
+        let d = RunConfig::default();
+        assert_eq!((d.shards, d.lazy, d.phantom, d.engine_threads), (1, false, true, 1));
+        assert!(d.faults.is_empty() && d.layers.is_none());
+    }
+
+    #[test]
+    fn run_args_share_validation_text_with_ini() {
+        let spec = RunArgs::add_to_spec(ArgSpec::new("t", "t"));
+        let argv = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        // Not given → None everywhere.
+        let none = RunArgs::from_parsed(&spec.parse(&argv(&[])).unwrap()).unwrap();
+        assert!(none.shards.is_none() && none.files.is_none());
+        assert!(none.engine_threads.is_none() && none.faults.is_none());
+        // Given → parsed, validated, and applied over the experiment.
+        let some = RunArgs::from_parsed(
+            &spec
+                .parse(&argv(&[
+                    "--shards=4",
+                    "--engine-threads=2",
+                    "--faults",
+                    "kill shard 1 at 1ms; restart shard 1 at 2ms",
+                ]))
+                .unwrap(),
+        )
+        .unwrap();
+        let mut e = Experiment::default();
+        some.apply_to(&mut e);
+        assert_eq!((e.shards, e.engine_threads, e.files), (4, 2, 1));
+        assert_eq!(e.faults.len(), 2);
+        // THE drift fix: the CLI zero and the INI zero now report the
+        // identical canonical message.
+        let cli_err = RunArgs::from_parsed(&spec.parse(&argv(&["--engine-threads=0"])).unwrap())
+            .unwrap_err();
+        let ini_err = Experiment::default()
+            .apply_ini(&parse_ini("[cluster]\nengine_threads=0\n").unwrap())
+            .unwrap_err();
+        assert_eq!(cli_err, ini_err);
+        assert_eq!(cli_err, "engine_threads must be >= 1");
+        // A malformed fault plan is a flag error, not a panic.
+        assert!(
+            RunArgs::from_parsed(&spec.parse(&argv(&["--faults", "explode node 3"])).unwrap())
+                .is_err()
+        );
     }
 
     #[test]

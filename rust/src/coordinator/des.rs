@@ -2,7 +2,7 @@
 //! call. Each wraps a driver, runs it on the configured cluster, and
 //! returns structured rows (plus JSON for `target/results/`).
 
-use crate::config::{Experiment, Testbed};
+use crate::config::{Experiment, RunConfig, Testbed};
 use crate::dl::{DlDriver, DlParams, DlReport};
 use crate::fs::FsKind;
 use crate::scr::{ScrDriver, ScrParams, ScrReport};
@@ -50,11 +50,12 @@ impl SweepCell {
 }
 
 /// Run one synthetic experiment once. Honors `[cluster] engine_threads`
-/// — the windowed parallel loop is byte-identical to the serial one, so
-/// the report is the same for any width.
+/// (the windowed parallel loop is byte-identical to the serial one, so
+/// the report is the same for any width) and the experiment's
+/// `[faults]` plan.
 pub fn run_synthetic(exp: &Experiment) -> PhaseReport {
-    let driver = SyntheticDriver::new_sharded(exp.fs, exp.params(), exp.shards);
-    driver.run_with_threads(exp.cluster(), exp.engine_threads)
+    let cfg = exp.run_config();
+    SyntheticDriver::with_config(exp.fs, exp.params(), &cfg).run_cfg(exp.cluster(), &cfg)
 }
 
 /// Sweep node counts × fs kinds for one Table 8 config and access size —
@@ -96,6 +97,29 @@ pub fn sweep_synthetic_sharded(
     files: usize,
     engine_threads: usize,
 ) -> Vec<SweepCell> {
+    let cfg = RunConfig::new().shards(shards).engine_threads(engine_threads);
+    sweep_synthetic_cfg(
+        config, access, nodes_list, fs_kinds, ppn, m, repeats, testbed, write_phase, files, &cfg,
+    )
+}
+
+/// [`sweep_synthetic_sharded`] with the run knobs (shards, engine
+/// threads, fault plan) carried by one [`RunConfig`] — the form `pscnf
+/// run` drives, so a `[faults]` block faults every cell of a sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_synthetic_cfg(
+    config: Config,
+    access: u64,
+    nodes_list: &[usize],
+    fs_kinds: &[FsKind],
+    ppn: usize,
+    m: usize,
+    repeats: usize,
+    testbed: Testbed,
+    write_phase: bool,
+    files: usize,
+    cfg: &RunConfig,
+) -> Vec<SweepCell> {
     let mut cells = Vec::new();
     for &fs in fs_kinds {
         for &nodes in nodes_list {
@@ -104,10 +128,10 @@ pub fn sweep_synthetic_sharded(
             for rep in 0..repeats {
                 let seed = 1000 + rep as u64;
                 let params = config.params(nodes, ppn, access, m, seed).with_files(files);
-                let driver = SyntheticDriver::new_sharded(fs, params, shards);
-                let report = driver.run_with_threads(
-                    testbed.cluster_sharded(nodes, seed ^ 0xBEEF, shards),
-                    engine_threads,
+                let driver = SyntheticDriver::with_config(fs, params, cfg);
+                let report = driver.run_cfg(
+                    testbed.cluster_sharded(nodes, seed ^ 0xBEEF, cfg.shards),
+                    cfg,
                 );
                 bw.push(if write_phase {
                     report.write_bw()
@@ -121,7 +145,7 @@ pub fn sweep_synthetic_sharded(
                 config,
                 nodes,
                 access,
-                shards,
+                shards: cfg.shards,
                 files,
                 bw,
                 rpcs,

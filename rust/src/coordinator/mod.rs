@@ -11,6 +11,6 @@ pub mod live;
 
 pub use des::{
     maybe_write_bench_json, render_sweep, run_synthetic, sweep_dl, sweep_scr, sweep_synthetic,
-    sweep_synthetic_sharded, write_results, SweepCell, DEFAULT_REPEATS,
+    sweep_synthetic_cfg, sweep_synthetic_sharded, write_results, SweepCell, DEFAULT_REPEATS,
 };
 pub use live::{LiveCluster, LiveFabric, LiveServer};

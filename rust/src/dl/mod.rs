@@ -14,9 +14,10 @@
 //! scaling (32 samples per process per iteration).
 
 use crate::basefs::{DesFabric, FileId};
+use crate::config::RunConfig;
 use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
-use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
+use crate::sim::{Cluster, Driver, Engine, FaultEvent, Ns, SimOp};
 use crate::util::rng::Rng;
 use crate::workload::{build_fs_with, LayerFactory, LazyMake};
 
@@ -191,14 +192,33 @@ pub struct DlDriver {
 }
 
 impl DlDriver {
+    /// The unified constructor ([`RunConfig`] spelling of `new` /
+    /// `new_lazy`). DL is always phantom (`cfg.phantom` is ignored);
+    /// `shards`, `lazy`, and `layers` are honoured.
+    pub fn with_config(kind: FsKind, params: DlParams, cfg: &RunConfig) -> Self {
+        let make = cfg.layers.unwrap_or(crate::workload::policy_layer as LazyMake);
+        if cfg.lazy {
+            let nranks = params.nranks();
+            let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, cfg.shards);
+            Self::assemble(kind, params, fabric, Some(make))
+        } else {
+            Self::eager(&make, kind, params, cfg.shards)
+        }
+    }
+
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new(kind: FsKind, params: DlParams) -> Self {
-        Self::new_with_layers(&crate::workload::policy_layer, kind, params)
+        Self::with_config(kind, params, &RunConfig::new())
     }
 
     /// [`Self::new`] with an explicit layer factory (differential pin).
     pub fn new_with_layers(make: LayerFactory, kind: FsKind, params: DlParams) -> Self {
+        Self::eager(make, kind, params, 1)
+    }
+
+    fn eager(make: LayerFactory, kind: FsKind, params: DlParams, shards: usize) -> Self {
         let nranks = params.nranks();
-        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
+        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, shards);
         let fs = build_fs_with(make, kind, &fabric);
         let mut this = Self::assemble(kind, params, fabric, None);
         for (r, mut f) in fs.into_iter().enumerate() {
@@ -215,11 +235,9 @@ impl DlDriver {
     /// built at each rank's first fs touch (open costs drained, like
     /// the eager path) and dropped at `Done`. Opt-in — acquire-on-open
     /// models see opens mid-run, so the figure cells stay eager.
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new_lazy(kind: FsKind, params: DlParams) -> Self {
-        let nranks = params.nranks();
-        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
-        let lazy = Some(crate::workload::policy_layer as LazyMake);
-        Self::assemble(kind, params, fabric, lazy)
+        Self::with_config(kind, params, &RunConfig::new().lazy(true))
     }
 
     fn assemble(
@@ -301,15 +319,26 @@ impl DlDriver {
     }
 
     pub fn run(self, cluster: Cluster) -> DlReport {
-        self.run_with_threads(cluster, 1)
+        self.run_cfg(cluster, &RunConfig::new())
     }
 
     /// [`Self::run`] on the windowed parallel event loop (`threads <= 1`
     /// is exactly the serial loop; any P is byte-identical to it).
-    pub fn run_with_threads(mut self, cluster: Cluster, threads: usize) -> DlReport {
+    pub fn run_with_threads(self, cluster: Cluster, threads: usize) -> DlReport {
+        self.run_cfg(cluster, &RunConfig::new().engine_threads(threads))
+    }
+
+    /// The unified runner: honours `cfg.engine_threads` and schedules
+    /// `cfg.faults` into the engine (enabling the fabric's fault layer
+    /// with the model's recovery obligation iff the plan is non-empty).
+    pub fn run_cfg(mut self, cluster: Cluster, cfg: &RunConfig) -> DlReport {
+        if !cfg.faults.is_empty() && !self.fabric.faults_enabled() {
+            self.fabric
+                .enable_faults(self.kind.recovery_obligation().replays());
+        }
         let mut engine = Engine::uniform_with(cluster, self.params.ppn, self.params.nranks());
         let stats = engine
-            .run_threaded(&mut self, threads)
+            .run_threaded_with_plan(&mut self, cfg.engine_threads, &cfg.faults)
             .expect("DL emulation deadlock");
         let p = &self.params;
         let per_epoch: u64 =
@@ -336,6 +365,11 @@ impl DlDriver {
 }
 
 impl Driver for DlDriver {
+    /// Scheduled fault delivery at the serialized commit point.
+    fn on_fault(&mut self, ev: &FaultEvent) {
+        self.fabric.apply_fault(ev);
+    }
+
     fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
         let p = self.params.clone();
         loop {
@@ -491,6 +525,9 @@ impl Driver for DlDriver {
                     }
                     self.order[rank] = Vec::new();
                     self.stage[rank] = Stage::Finished;
+                    // Price any recovery costs queued while blocked
+                    // (empty on healthy runs).
+                    self.fabric.drain_costs_into(rank as u32, out);
                     out.push(SimOp::Done);
                     return;
                 }
@@ -589,6 +626,25 @@ mod tests {
             assert_eq!(base.epoch_time, rep.epoch_time, "{name}");
             assert_eq!(base.remote_fraction, rep.remote_fraction, "{name}");
         }
+    }
+
+    #[test]
+    fn run_config_matches_legacy_paths() {
+        let p = DlParams::weak(4, 2, 2, 11);
+        let old = DlDriver::new(FsKind::COMMIT, p.clone()).run(Cluster::catalyst(4, 5));
+        let cfg = RunConfig::new();
+        let new = DlDriver::with_config(FsKind::COMMIT, p.clone(), &cfg)
+            .run_cfg(Cluster::catalyst(4, 5), &cfg);
+        assert_eq!(old.counters, new.counters);
+        assert_eq!(old.sim_ops, new.sim_ops);
+        assert_eq!(old.epoch_time, new.epoch_time);
+
+        let old = DlDriver::new_lazy(FsKind::SESSION, p.clone()).run(Cluster::catalyst(4, 5));
+        let cfg = RunConfig::new().lazy(true);
+        let new = DlDriver::with_config(FsKind::SESSION, p, &cfg)
+            .run_cfg(Cluster::catalyst(4, 5), &cfg);
+        assert_eq!(old.counters, new.counters);
+        assert_eq!(old.sim_ops, new.sim_ops);
     }
 
     #[test]

@@ -56,6 +56,13 @@ impl PolicyFs {
         &self.policy
     }
 
+    /// What this layer owes readers after a metadata-shard outage —
+    /// the fabric's recovery mode is derived from this (replay vs
+    /// permitted-stale; see `model::RecoveryObligation`).
+    pub fn recovery_obligation(&self) -> crate::model::RecoveryObligation {
+        self.policy.recovery_obligation()
+    }
+
     fn session_scoped(&self) -> bool {
         matches!(
             self.policy.acquisition,

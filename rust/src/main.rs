@@ -12,10 +12,8 @@
 //! pscnf info                           # platform + artifact status
 //! ```
 
-use pscnf::config::{parse_ini, Experiment, Testbed};
-use pscnf::coordinator::{
-    render_sweep, sweep_dl, sweep_scr, sweep_synthetic_sharded, write_results,
-};
+use pscnf::config::{parse_ini, Experiment, RunArgs, Testbed};
+use pscnf::coordinator::{render_sweep, sweep_dl, sweep_scr, sweep_synthetic_cfg, write_results};
 use pscnf::fs::FsKind;
 use pscnf::model::{litmus, model_table_markdown};
 use pscnf::runtime::{Runtime, TrainState};
@@ -160,41 +158,28 @@ fn base_spec(cmd: &'static str, about: &'static str) -> ArgSpec {
 }
 
 fn cmd_run(argv: &[String]) -> Result<(), String> {
-    let spec = base_spec("run", "synthetic N-to-1 workload on the DES cluster")
-        .opt("workload", "CFG", Some("CC-R"), "CN-W|SN-W|CC-R|CS-R")
-        .opt("size", "BYTES", Some("8K"), "access size (e.g. 8K, 8M)")
-        .opt("m", "N", Some("10"), "accesses per process")
-        .opt(
-            "shards",
-            "N",
-            Some("1"),
-            "metadata-plane shards (1 = the paper's single server)",
-        )
-        .opt(
-            "files",
-            "N",
-            Some("1"),
-            "shared files the dataset is striped over",
-        )
-        .opt(
-            "engine-threads",
-            "N",
-            Some("1"),
-            "windowed parallel event-loop width (results are byte-identical for any value)",
-        )
-        .opt(
-            "config-file",
-            "PATH",
-            None,
-            "INI experiment file (overridden by flags)",
-        )
-        .opt(
-            "config",
-            "PATH",
-            None,
-            "alias of --config-file (matches `pscnf bench`)",
-        );
+    let spec = RunArgs::add_to_spec(
+        base_spec("run", "synthetic N-to-1 workload on the DES cluster")
+            .opt("workload", "CFG", Some("CC-R"), "CN-W|SN-W|CC-R|CS-R")
+            .opt("size", "BYTES", Some("8K"), "access size (e.g. 8K, 8M)")
+            .opt("m", "N", Some("10"), "accesses per process")
+            .opt(
+                "config-file",
+                "PATH",
+                None,
+                "INI experiment file (overridden by flags)",
+            )
+            .opt(
+                "config",
+                "PATH",
+                None,
+                "alias of --config-file (matches `pscnf bench`)",
+            ),
+    );
     let args = spec.parse(argv)?;
+    // The run knobs shared with `pscnf bench`: one arg struct, one
+    // validator, identical error text on both entry points.
+    let run_args = RunArgs::from_parsed(&args)?;
 
     let mut workload = WlConfig::parse(args.str("workload")?)?;
     let mut size = args.bytes("size")?;
@@ -207,18 +192,14 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let mut fs_override: Option<Vec<FsKind>> = None;
     let mut nodes_list = args.usize_list("nodes")?;
     let repeats = args.usize("repeats")?;
-    let mut shards = args.usize("shards")?;
-    let mut files = args.usize("files")?;
-    let mut engine_threads = args.usize("engine-threads")?;
-    // Config-file values apply wherever the flag was not given on the
-    // command line AND the file actually sets the key (CLI > file >
-    // built-in default; a file that omits a key must not disturb the
-    // CLI default — notably fs, whose CLI default "both" differs from
-    // the Experiment struct default).
+    // Provenance layering for the shared run knobs: CLI > file >
+    // built-in default. `exp` starts at the built-in defaults, the
+    // config file overlays whatever keys it sets (validated with the
+    // same messages the CLI uses), and explicit flags win last.
+    let mut exp = Experiment::default();
     if let Some(path) = args.get("config-file").or_else(|| args.get("config")) {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let ini = parse_ini(&text)?;
-        let mut exp = Experiment::default();
         exp.apply_ini(&ini)?;
         let in_file =
             |sec: &str, key: &str| ini.get(sec).is_some_and(|s| s.contains_key(key));
@@ -243,44 +224,34 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         if !args.explicit("nodes") && in_file("cluster", "nodes") {
             nodes_list = vec![exp.nodes];
         }
-        if !args.explicit("shards") && in_file("cluster", "shards") {
-            shards = exp.shards;
-        }
-        if !args.explicit("files") && in_file("workload", "files") {
-            files = exp.files;
-        }
-        if !args.explicit("engine-threads") && in_file("cluster", "engine_threads") {
-            engine_threads = exp.engine_threads;
-        }
     }
-    if shards == 0 {
-        return Err("--shards must be >= 1".to_string());
-    }
-    if files == 0 {
-        return Err("--files must be >= 1".to_string());
-    }
-    if engine_threads == 0 {
-        return Err("--engine-threads must be >= 1".to_string());
-    }
+    run_args.apply_to(&mut exp);
+    let files = exp.files;
+    let run_cfg = exp.run_config();
     let fs_kinds = match fs_override {
         Some(kinds) => kinds,
         None => FsKind::parse_list(args.str("fs")?)?,
     };
 
     let write_phase = matches!(workload, WlConfig::CnW | WlConfig::SnW);
-    let cells = sweep_synthetic_sharded(
-        workload, size, &nodes_list, &fs_kinds, ppn, m, repeats, testbed, write_phase, shards,
-        files, engine_threads,
+    let cells = sweep_synthetic_cfg(
+        workload, size, &nodes_list, &fs_kinds, ppn, m, repeats, testbed, write_phase, files,
+        &run_cfg,
     );
     let title = format!(
-        "{} access={} ppn={} m={} testbed={} shards={} files={} ({} bandwidth)",
+        "{} access={} ppn={} m={} testbed={} shards={} files={}{} ({} bandwidth)",
         workload.name(),
         fmt_bytes(size),
         ppn,
         m,
         testbed.name(),
-        shards,
+        run_cfg.shards,
         files,
+        if run_cfg.faults.is_empty() {
+            String::new()
+        } else {
+            format!(" faults={}", run_cfg.faults.len())
+        },
         if write_phase { "write" } else { "read" },
     );
     println!("{}", render_sweep(&title, &cells));

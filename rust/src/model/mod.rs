@@ -28,7 +28,7 @@ pub use msc::{EdgeKind, Msc};
 pub use op::{Access, Event, FileId, OpId, RankId, StorageOp, SyncKind};
 pub use policy::{
     builtin_kinds, model_table_markdown, model_table_markdown_for, Acquisition, FsKind, ModelDef,
-    Publication, SyncPolicy,
+    Publication, RecoveryObligation, SyncPolicy,
 };
 pub use race::{detect, race_free, RaceReport, StorageRace};
 pub use trace::{HappensBefore, Trace};

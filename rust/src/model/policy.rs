@@ -93,6 +93,37 @@ impl Acquisition {
     }
 }
 
+/// What a model owes its readers after a metadata-shard crash/restart
+/// wipes the shard's ownership map (DESIGN.md §Faults).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryObligation {
+    /// The model's sync discipline promises that a reader who follows
+    /// an MSC sees the published bytes — so recovery must replay every
+    /// surviving client's attachments until the plane re-converges to
+    /// the unique sequentially-consistent outcome.
+    ReplayToSc,
+    /// The model already licenses stale reads outside its MSCs
+    /// (eventual publication, close-to-open snapshots), so a
+    /// post-restart reader observing pre-crash (UPFS) state is a
+    /// *correct* outcome — recovery re-leases but replays nothing.
+    PermittedStale,
+}
+
+impl RecoveryObligation {
+    /// Canonical lowercase label (bench records, conformance report).
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryObligation::ReplayToSc => "replay_to_sc",
+            RecoveryObligation::PermittedStale => "permitted_stale",
+        }
+    }
+
+    /// Does this obligation demand attachment replay on shard restart?
+    pub fn replays(self) -> bool {
+        matches!(self, RecoveryObligation::ReplayToSc)
+    }
+}
+
 /// The declarative synchronization policy a [`crate::fs::PolicyFs`]
 /// interprets. One value of this struct *is* an executable consistency
 /// model; [`Self::derive_model`] maps it onto the paper's formal `S` +
@@ -239,6 +270,29 @@ impl SyncPolicy {
             end_write_sync: None,
             close_sync: Some(SyncKind::Commit),
             ..Self::commit()
+        }
+    }
+
+    /// The crash-recovery obligation this policy implies — derived, not
+    /// declared, so TOML-defined models get the right obligation with
+    /// no extra key. A model permits stale post-recovery reads exactly
+    /// when its healthy semantics already license stale reads:
+    /// publication deferred to close (`eventual`), or handle-lifetime
+    /// snapshots that serve reads outside any session (`cto`). Every
+    /// other shape promises MSC-covered readers the published bytes, so
+    /// recovery must replay to the sequentially-consistent outcome.
+    pub fn recovery_obligation(&self) -> RecoveryObligation {
+        let stale_ok = self.publication == Publication::OnClose
+            || matches!(
+                self.acquisition,
+                Acquisition::Snapshot {
+                    session_scoped: false
+                }
+            );
+        if stale_ok {
+            RecoveryObligation::PermittedStale
+        } else {
+            RecoveryObligation::ReplayToSc
         }
     }
 
@@ -501,6 +555,12 @@ impl FsKind {
         self.with_def(|d| d.formal.clone())
     }
 
+    /// The crash-recovery obligation the model's policy implies (see
+    /// [`SyncPolicy::recovery_obligation`]).
+    pub fn recovery_obligation(self) -> RecoveryObligation {
+        self.with_def(|d| d.policy.recovery_obligation())
+    }
+
     /// Ships with the binary (vs registered from config at runtime)?
     /// Only built-ins may own gated CI bench cells: a TOML model is not
     /// guaranteed to exist in the baseline run.
@@ -719,6 +779,37 @@ mod tests {
             SyncPolicy::eventual().derive_model("x").mscs,
             SyncPolicy::commit_strict().derive_model("x").mscs
         );
+    }
+
+    #[test]
+    fn recovery_obligations_of_the_builtins() {
+        // Strict-visibility models replay to SC; the two relaxed
+        // extensions legally serve stale post-recovery reads.
+        for kind in [
+            FsKind::POSIX,
+            FsKind::COMMIT,
+            FsKind::SESSION,
+            FsKind::MPIIO,
+            FsKind::COMMIT_STRICT,
+        ] {
+            assert_eq!(
+                kind.recovery_obligation(),
+                RecoveryObligation::ReplayToSc,
+                "{}",
+                kind.name()
+            );
+            assert!(kind.recovery_obligation().replays());
+        }
+        for kind in [FsKind::CTO, FsKind::EVENTUAL] {
+            assert_eq!(
+                kind.recovery_obligation(),
+                RecoveryObligation::PermittedStale,
+                "{}",
+                kind.name()
+            );
+        }
+        assert_eq!(RecoveryObligation::ReplayToSc.name(), "replay_to_sc");
+        assert_eq!(RecoveryObligation::PermittedStale.name(), "permitted_stale");
     }
 
     #[test]

@@ -18,9 +18,10 @@
 //!   transfer, exactly as in the paper.
 
 use crate::basefs::{DesFabric, FabricCounters, FileId};
+use crate::config::RunConfig;
 use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
-use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
+use crate::sim::{Cluster, Driver, Engine, FaultEvent, Ns, SimOp};
 use crate::workload::{build_fs_with, LayerFactory, LazyMake};
 
 /// HACC-IO checkpoint layout.
@@ -177,14 +178,33 @@ pub struct ScrDriver {
 }
 
 impl ScrDriver {
+    /// The unified constructor ([`RunConfig`] spelling of `new` /
+    /// `new_lazy`). SCR is always phantom (`cfg.phantom` is ignored);
+    /// `shards`, `lazy`, and `layers` are honoured.
+    pub fn with_config(kind: FsKind, params: ScrParams, cfg: &RunConfig) -> Self {
+        let make = cfg.layers.unwrap_or(crate::workload::policy_layer as LazyMake);
+        if cfg.lazy {
+            let nranks = params.nranks();
+            let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, cfg.shards);
+            Self::assemble(kind, params, fabric, Some(make))
+        } else {
+            Self::eager(&make, kind, params, cfg.shards)
+        }
+    }
+
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new(kind: FsKind, params: ScrParams) -> Self {
-        Self::new_with_layers(&crate::workload::policy_layer, kind, params)
+        Self::with_config(kind, params, &RunConfig::new())
     }
 
     /// [`Self::new`] with an explicit layer factory (differential pin).
     pub fn new_with_layers(make: LayerFactory, kind: FsKind, params: ScrParams) -> Self {
+        Self::eager(make, kind, params, 1)
+    }
+
+    fn eager(make: LayerFactory, kind: FsKind, params: ScrParams, shards: usize) -> Self {
         let nranks = params.nranks();
-        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
+        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, shards);
         let fs = build_fs_with(make, kind, &fabric);
         let mut this = Self::assemble(kind, params, fabric, None);
         // File-per-process: own checkpoint + the partner copy one hosts.
@@ -202,11 +222,9 @@ impl ScrDriver {
     /// each rank's first fs touch (open costs drained, matching the
     /// eager path) and dropped at `Done`. Opt-in — acquire-on-open
     /// models see opens mid-run, so the figure cells stay eager.
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new_lazy(kind: FsKind, params: ScrParams) -> Self {
-        let nranks = params.nranks();
-        let fabric = DesFabric::new_phantom_uniform(params.ppn, nranks, 1);
-        let lazy = Some(crate::workload::policy_layer as LazyMake);
-        Self::assemble(kind, params, fabric, lazy)
+        Self::with_config(kind, params, &RunConfig::new().lazy(true))
     }
 
     fn assemble(
@@ -268,15 +286,26 @@ impl ScrDriver {
     }
 
     pub fn run(self, cluster: Cluster) -> ScrReport {
-        self.run_with_threads(cluster, 1)
+        self.run_cfg(cluster, &RunConfig::new())
     }
 
     /// [`Self::run`] on the windowed parallel event loop (`threads <= 1`
     /// is exactly the serial loop; any P is byte-identical to it).
-    pub fn run_with_threads(mut self, cluster: Cluster, threads: usize) -> ScrReport {
+    pub fn run_with_threads(self, cluster: Cluster, threads: usize) -> ScrReport {
+        self.run_cfg(cluster, &RunConfig::new().engine_threads(threads))
+    }
+
+    /// The unified runner: honours `cfg.engine_threads` and schedules
+    /// `cfg.faults` into the engine (enabling the fabric's fault layer
+    /// with the model's recovery obligation iff the plan is non-empty).
+    pub fn run_cfg(mut self, cluster: Cluster, cfg: &RunConfig) -> ScrReport {
+        if !cfg.faults.is_empty() && !self.fabric.faults_enabled() {
+            self.fabric
+                .enable_faults(self.kind.recovery_obligation().replays());
+        }
         let mut engine = Engine::uniform_with(cluster, self.params.ppn, self.params.nranks());
         let stats = engine
-            .run_threaded(&mut self, threads)
+            .run_threaded_with_plan(&mut self, cfg.engine_threads, &cfg.faults)
             .expect("SCR emulation deadlock");
         let p = &self.params;
         // Survivors: compute ranks not on the failed node (node 0 fails).
@@ -317,6 +346,11 @@ impl ScrDriver {
 }
 
 impl Driver for ScrDriver {
+    /// Scheduled fault delivery at the serialized commit point.
+    fn on_fault(&mut self, ev: &FaultEvent) {
+        self.fabric.apply_fault(ev);
+    }
+
     fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
         let p = self.params.clone();
         loop {
@@ -483,6 +517,9 @@ impl Driver for ScrDriver {
                         self.fs[rank] = None;
                     }
                     self.stage[rank] = Stage::Finished;
+                    // Price any recovery costs queued while blocked
+                    // (empty on healthy runs).
+                    self.fabric.drain_costs_into(rank as u32, out);
                     out.push(SimOp::Done);
                     return;
                 }
@@ -563,6 +600,29 @@ mod run_tests {
             assert_eq!(base.ckpt_end, rep.ckpt_end, "{name}");
             assert_eq!(base.restart_end, rep.restart_end, "{name}");
         }
+    }
+
+    #[test]
+    fn run_config_matches_legacy_paths() {
+        let mk = || {
+            let mut p = ScrParams::with_nodes(4, 4);
+            p.particles = 1_000_000;
+            p
+        };
+        let old = ScrDriver::new(FsKind::COMMIT, mk()).run(Cluster::catalyst(4, 3));
+        let cfg = RunConfig::new();
+        let new = ScrDriver::with_config(FsKind::COMMIT, mk(), &cfg)
+            .run_cfg(Cluster::catalyst(4, 3), &cfg);
+        assert_eq!(old.counters, new.counters);
+        assert_eq!(old.sim_ops, new.sim_ops);
+        assert_eq!(old.restart_end, new.restart_end);
+
+        let old = ScrDriver::new_lazy(FsKind::SESSION, mk()).run(Cluster::catalyst(4, 3));
+        let cfg = RunConfig::new().lazy(true);
+        let new = ScrDriver::with_config(FsKind::SESSION, mk(), &cfg)
+            .run_cfg(Cluster::catalyst(4, 3), &cfg);
+        assert_eq!(old.counters, new.counters);
+        assert_eq!(old.sim_ops, new.sim_ops);
     }
 
     #[test]

@@ -51,6 +51,7 @@ use super::devices::{
     NetParams, NicDevice, ServerDevice, ServerParams, SsdDevice, SsdParams, UpfsDevice,
     UpfsParams,
 };
+use super::faults::{FaultEvent, FaultPlan};
 use super::time::Ns;
 use crate::util::stats::{Samples, Summary};
 use std::cmp::Reverse;
@@ -157,6 +158,14 @@ pub trait Driver {
     /// be the last op pushed (`Send` may appear mid-batch: the sender
     /// resumes once the payload is on the wire).
     fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>);
+
+    /// A scheduled fault struck (see [`FaultPlan`]): mutate functional
+    /// state (kill/restart a shard, crash a client) and queue any
+    /// recovery costs. Called at the serialized commit point right
+    /// before the first event committed at `t >= ev.at`, so the
+    /// perturbation lands at the same place in the total event order
+    /// for any engine thread count. Default: ignore faults.
+    fn on_fault(&mut self, _ev: &FaultEvent) {}
 }
 
 /// Closures supply one op per step (the pre-batching behavior).
@@ -605,6 +614,19 @@ impl Engine {
 
     /// Run `driver` to completion on all ranks; returns timing stats.
     pub fn run(&mut self, driver: &mut dyn Driver) -> Result<RunStats, SimError> {
+        self.run_with_plan(driver, &FaultPlan::default())
+    }
+
+    /// [`Engine::run`] under a fault schedule: each [`FaultEvent`] is
+    /// delivered to [`Driver::on_fault`] right before the first heap
+    /// event popped at `t >= at`. Events scheduled after the last rank
+    /// event never fire (the run is over). The empty plan is exactly
+    /// [`Engine::run`].
+    pub fn run_with_plan(
+        &mut self,
+        driver: &mut dyn Driver,
+        plan: &FaultPlan,
+    ) -> Result<RunStats, SimError> {
         let n = self.node_of.nranks();
         let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(n + 1);
         let mut seq: u64 = 0;
@@ -613,8 +635,14 @@ impl Engine {
             seq += 1;
         }
         let mut core = LoopCore::new(n);
+        let faults = plan.events();
+        let mut fidx = 0;
         let (cluster, map) = (&mut self.cluster, &self.node_of);
         while let Some(Reverse((now, _, rank))) = heap.pop() {
+            while fidx < faults.len() && faults[fidx].at <= now {
+                driver.on_fault(&faults[fidx]);
+                fidx += 1;
+            }
             let mut push = |t: Ns, r: usize| {
                 heap.push(Reverse((t, seq, r)));
                 seq += 1;
@@ -654,10 +682,23 @@ impl Engine {
         driver: &mut dyn Driver,
         threads: usize,
     ) -> Result<RunStats, SimError> {
+        self.run_threaded_with_plan(driver, threads, &FaultPlan::default())
+    }
+
+    /// [`Engine::run_threaded`] under a fault schedule. Faults are
+    /// applied inside the serialized commit loop — the same (time, seq)
+    /// order the serial loop pops — so a faulted run is byte-identical
+    /// across thread counts exactly like a healthy one.
+    pub fn run_threaded_with_plan(
+        &mut self,
+        driver: &mut dyn Driver,
+        threads: usize,
+        plan: &FaultPlan,
+    ) -> Result<RunStats, SimError> {
         let nodes = self.cluster.nodes();
         let parts = threads.max(1).min(nodes);
         if parts <= 1 {
-            return self.run(driver);
+            return self.run_with_plan(driver, plan);
         }
         // Conservative lookahead: the minimum cross-rank interaction
         // latency. Any positive value is safe (see above); the network
@@ -671,6 +712,8 @@ impl Engine {
         let (cluster, map) = (&mut self.cluster, &self.node_of);
         let mut core = LoopCore::new(n);
         let mut seq: u64 = 0;
+        let faults = plan.events();
+        let mut fidx = 0;
 
         std::thread::scope(|s| {
             let mut to_workers = Vec::with_capacity(parts);
@@ -738,6 +781,10 @@ impl Engine {
                 // Commit the window serially in exact (t, seq) order —
                 // the serial loop's pop order.
                 while let Some(Reverse((now, _, rank))) = commit.pop() {
+                    while fidx < faults.len() && faults[fidx].at <= now {
+                        driver.on_fault(&faults[fidx]);
+                        fidx += 1;
+                    }
                     let mut push = |t: Ns, r: usize| {
                         if t < window_end {
                             commit.push(Reverse((t, seq, r)));

@@ -1,0 +1,338 @@
+//! Deterministic fault plans for the DES.
+//!
+//! A [`FaultPlan`] is a time-sorted list of kill/restart events for
+//! metadata shards and clients. The engine applies every event whose
+//! virtual time has been reached right before committing the next rank
+//! event, **at the single serialized commit point both loops share**
+//! (see `engine.rs`), so a plan perturbs the run identically for any
+//! engine thread count: fault injection is as deterministic as the
+//! event loop itself.
+//!
+//! Plans come from three places:
+//!
+//! - programmatic builders ([`FaultPlan::shard_outage`] and friends),
+//!   used by the bench runner to schedule an outage relative to a
+//!   baseline run's phase times;
+//! - the spec grammar ([`FaultPlan::parse_spec`]) used by the `--faults`
+//!   CLI flag: `kill shard 0 at 2ms; restart shard 0 at 4ms`;
+//! - the `[faults]` config section ([`FaultPlan::from_ini`]), which
+//!   accepts either an explicit `plan = <spec>` or a seeded generator
+//!   (`seed`/`outages`/`shards`/`first_kill`/`period`/`downtime`) that
+//!   derives a reproducible outage schedule from the seed.
+
+use super::time::Ns;
+use std::collections::BTreeMap;
+
+/// What a fault event acts on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// A metadata-plane shard (index into the plane).
+    Shard(usize),
+    /// A client rank.
+    Client(usize),
+}
+
+/// What happens to the target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Crash: a shard loses its in-memory interval state; a client
+    /// loses its burst buffer and its server-side attachments.
+    Kill,
+    /// Come back up. A restarted shard fences every outstanding lease
+    /// (its epoch bumps); clients reconnect and — for models whose
+    /// policy obliges it — replay their attachments.
+    Restart,
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Virtual time the fault strikes. It is applied before the first
+    /// engine event committed at `t >= at`.
+    pub at: Ns,
+    pub target: FaultTarget,
+    pub action: FaultAction,
+}
+
+/// A deterministic, time-sorted fault schedule. The empty plan is the
+/// fault-free run (and prices identically to not having a plan at all).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Events in application order (ascending `at`; ties keep
+    /// insertion order).
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Insert an event, keeping the schedule time-sorted.
+    pub fn push(&mut self, ev: FaultEvent) {
+        self.events.push(ev);
+        self.events.sort_by_key(|e| e.at);
+    }
+
+    /// Kill shard `shard` at `kill_at` and restart it at `restart_at`.
+    pub fn shard_outage(shard: usize, kill_at: Ns, restart_at: Ns) -> Self {
+        assert!(kill_at < restart_at, "restart must follow the kill");
+        let mut plan = Self::new();
+        plan.push(FaultEvent {
+            at: kill_at,
+            target: FaultTarget::Shard(shard),
+            action: FaultAction::Kill,
+        });
+        plan.push(FaultEvent {
+            at: restart_at,
+            target: FaultTarget::Shard(shard),
+            action: FaultAction::Restart,
+        });
+        plan
+    }
+
+    /// Kill client `client` at `at` (clients stay down: a crashed
+    /// rank's buffered state is gone, so there is nothing to restart).
+    pub fn client_kill(client: usize, at: Ns) -> Self {
+        let mut plan = Self::new();
+        plan.push(FaultEvent {
+            at,
+            target: FaultTarget::Client(client),
+            action: FaultAction::Kill,
+        });
+        plan
+    }
+
+    /// Parse the spec grammar: semicolon-separated events, each
+    /// `<kill|restart> <shard|client> <index> at <time>` where `<time>`
+    /// takes an `ns`/`us`/`ms`/`s` suffix (bare integers are ns).
+    ///
+    /// Example: `kill shard 0 at 2ms; restart shard 0 at 4ms`.
+    pub fn parse_spec(spec: &str) -> Result<Self, String> {
+        let mut plan = Self::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = part.split_whitespace().collect();
+            if toks.len() != 5 || toks[3] != "at" {
+                return Err(format!(
+                    "bad fault event '{part}' (want '<kill|restart> <shard|client> <idx> at <time>')"
+                ));
+            }
+            let action = match toks[0] {
+                "kill" => FaultAction::Kill,
+                "restart" => FaultAction::Restart,
+                other => return Err(format!("unknown fault action '{other}'")),
+            };
+            let idx: usize = toks[2]
+                .parse()
+                .map_err(|_| format!("bad fault target index '{}'", toks[2]))?;
+            let target = match toks[1] {
+                "shard" => FaultTarget::Shard(idx),
+                "client" => FaultTarget::Client(idx),
+                other => return Err(format!("unknown fault target '{other}'")),
+            };
+            let at = parse_ns(toks[4])?;
+            plan.push(FaultEvent { at, target, action });
+        }
+        Ok(plan)
+    }
+
+    /// Parse a `[faults]` config section. Either an explicit
+    /// `plan = <spec>` (the [`FaultPlan::parse_spec`] grammar), or a
+    /// seeded outage generator:
+    ///
+    /// ```ini
+    /// [faults]
+    /// seed = 7          # shard choice per outage (default 1)
+    /// outages = 2       # kill/restart pairs (default 1)
+    /// shards = 4        # shard pool to draw targets from (default 1)
+    /// first_kill = 2ms  # first kill time (default 1ms)
+    /// period = 3ms      # spacing between kills (default 2ms)
+    /// downtime = 500us  # kill-to-restart gap (default 500us)
+    /// ```
+    ///
+    /// The generated schedule is a pure function of the keys, so the
+    /// same section reproduces the same faults on every run.
+    pub fn from_ini(section: &BTreeMap<String, String>) -> Result<Self, String> {
+        if let Some(spec) = section.get("plan") {
+            for key in section.keys() {
+                if key != "plan" {
+                    return Err(format!(
+                        "faults.plan is exclusive with the seeded keys (got faults.{key})"
+                    ));
+                }
+            }
+            return Self::parse_spec(spec);
+        }
+        let mut seed: u64 = 1;
+        let mut outages: usize = 1;
+        let mut shards: usize = 1;
+        let mut first_kill = Ns(1_000_000);
+        let mut period = Ns(2_000_000);
+        let mut downtime = Ns(500_000);
+        for (key, value) in section {
+            match key.as_str() {
+                "seed" => {
+                    seed = value
+                        .parse()
+                        .map_err(|_| format!("bad faults.seed '{value}'"))?
+                }
+                "outages" => {
+                    outages = value
+                        .parse()
+                        .map_err(|_| format!("bad faults.outages '{value}'"))?
+                }
+                "shards" => {
+                    shards = value
+                        .parse()
+                        .map_err(|_| format!("bad faults.shards '{value}'"))?;
+                    if shards == 0 {
+                        return Err("faults.shards must be >= 1".into());
+                    }
+                }
+                "first_kill" => first_kill = parse_ns(value)?,
+                "period" => period = parse_ns(value)?,
+                "downtime" => downtime = parse_ns(value)?,
+                other => return Err(format!("unknown faults key '{other}'")),
+            }
+        }
+        if downtime.0 == 0 || downtime >= period {
+            return Err("faults.downtime must be positive and shorter than faults.period".into());
+        }
+        let mut plan = Self::new();
+        for k in 0..outages {
+            let shard = (mix(seed.wrapping_add(k as u64)) % shards as u64) as usize;
+            let kill_at = first_kill + Ns(period.0 * k as u64);
+            plan.push(FaultEvent {
+                at: kill_at,
+                target: FaultTarget::Shard(shard),
+                action: FaultAction::Kill,
+            });
+            plan.push(FaultEvent {
+                at: kill_at + downtime,
+                target: FaultTarget::Shard(shard),
+                action: FaultAction::Restart,
+            });
+        }
+        Ok(plan)
+    }
+}
+
+/// splitmix64 finalizer: the seeded generator's shard choice.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Parse a duration with an `ns`/`us`/`ms`/`s` suffix; a bare number
+/// is nanoseconds. Fractions are allowed (`2.5ms`).
+pub fn parse_ns(s: &str) -> Result<Ns, String> {
+    let s = s.trim();
+    let (num, scale) = if let Some(v) = s.strip_suffix("ns") {
+        (v, 1.0)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e3)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e6)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1e9)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad duration '{s}'"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("bad duration '{s}'"));
+    }
+    Ok(Ns((v * scale) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ns_suffixes() {
+        assert_eq!(parse_ns("10").unwrap(), Ns(10));
+        assert_eq!(parse_ns("10ns").unwrap(), Ns(10));
+        assert_eq!(parse_ns("3us").unwrap(), Ns(3_000));
+        assert_eq!(parse_ns("2.5ms").unwrap(), Ns(2_500_000));
+        assert_eq!(parse_ns("1s").unwrap(), Ns(1_000_000_000));
+        assert!(parse_ns("fast").is_err());
+        assert!(parse_ns("-1ms").is_err());
+    }
+
+    #[test]
+    fn spec_round_trips_sorted() {
+        let plan =
+            FaultPlan::parse_spec("restart shard 0 at 4ms; kill shard 0 at 2ms").unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.events()[0].at, Ns(2_000_000));
+        assert_eq!(plan.events()[0].action, FaultAction::Kill);
+        assert_eq!(plan.events()[1].action, FaultAction::Restart);
+        assert_eq!(
+            plan,
+            FaultPlan::shard_outage(0, Ns(2_000_000), Ns(4_000_000))
+        );
+        assert!(FaultPlan::parse_spec("kill shard 0").is_err());
+        assert!(FaultPlan::parse_spec("pause shard 0 at 1ms").is_err());
+        assert!(FaultPlan::parse_spec("kill disk 0 at 1ms").is_err());
+    }
+
+    #[test]
+    fn client_events_parse() {
+        let plan = FaultPlan::parse_spec("kill client 3 at 1ms").unwrap();
+        assert_eq!(plan.events()[0].target, FaultTarget::Client(3));
+        assert_eq!(plan, FaultPlan::client_kill(3, Ns(1_000_000)));
+    }
+
+    #[test]
+    fn seeded_section_is_reproducible() {
+        let mut sec = BTreeMap::new();
+        sec.insert("seed".to_string(), "7".to_string());
+        sec.insert("outages".to_string(), "3".to_string());
+        sec.insert("shards".to_string(), "4".to_string());
+        let a = FaultPlan::from_ini(&sec).unwrap();
+        let b = FaultPlan::from_ini(&sec).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        // Kills strictly precede their restarts and stay time-sorted.
+        for w in a.events().windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(a
+            .events()
+            .iter()
+            .all(|e| matches!(e.target, FaultTarget::Shard(s) if s < 4)));
+    }
+
+    #[test]
+    fn section_rejects_mixed_and_unknown_keys() {
+        let mut sec = BTreeMap::new();
+        sec.insert("plan".to_string(), "kill shard 0 at 1ms".to_string());
+        sec.insert("seed".to_string(), "7".to_string());
+        assert!(FaultPlan::from_ini(&sec).is_err());
+        let mut sec = BTreeMap::new();
+        sec.insert("kaboom".to_string(), "yes".to_string());
+        assert!(FaultPlan::from_ini(&sec).is_err());
+    }
+}

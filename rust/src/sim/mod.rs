@@ -6,6 +6,7 @@
 
 pub mod devices;
 pub mod engine;
+pub mod faults;
 pub mod resource;
 pub mod time;
 
@@ -14,5 +15,6 @@ pub use devices::{
     UpfsParams,
 };
 pub use engine::{Cluster, Driver, Engine, NodeMap, RunStats, SimError, SimOp, FINISH_RETAIN};
+pub use faults::{FaultAction, FaultEvent, FaultPlan, FaultTarget};
 pub use resource::{Dispatch, FifoResource, MultiServer};
 pub use time::{transfer_time, Ns};

@@ -14,9 +14,10 @@
 
 use super::spec::{WorkloadParams, WriteShuffle};
 use crate::basefs::{DesFabric, FabricCounters, FileId, SharedBb};
+use crate::config::RunConfig;
 use crate::fs::{FsKind, PolicyFs, WorkloadFs};
 use crate::interval::Range;
-use crate::sim::{Cluster, Driver, Engine, Ns, SimOp};
+use crate::sim::{Cluster, Driver, Engine, FaultEvent, Ns, SimOp};
 use crate::util::rng::Rng;
 
 /// Per-rank layer constructor — how drivers build their FS stacks.
@@ -141,29 +142,47 @@ pub struct SyntheticDriver {
 }
 
 impl SyntheticDriver {
+    /// The unified constructor: one [`RunConfig`] in place of the
+    /// historical `new` / `new_with_data` / `new_sharded` /
+    /// `new_with_data_sharded` / `new_lazy` sprawl. The default config
+    /// is exactly [`Self::new`]; every legacy constructor is now a thin
+    /// shim over this path, pinned byte-for-bit by
+    /// `run_config_matches_legacy_paths`.
+    pub fn with_config(kind: FsKind, params: WorkloadParams, cfg: &RunConfig) -> Self {
+        let make = cfg.layers.unwrap_or(policy_layer as LazyMake);
+        if cfg.lazy {
+            let nranks = params.nranks();
+            let fabric = DesFabric::new_phantom_uniform(params.p, nranks, cfg.shards);
+            let fs = (0..nranks).map(|_| None).collect();
+            Self::assemble(kind, params, fabric, fs, Vec::new(), Some(make))
+        } else {
+            Self::new_with_layers(&make, kind, params, cfg.phantom, cfg.shards)
+        }
+    }
+
     /// Set up a run on `kind` with benchmark-scale (phantom) storage.
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new(kind: FsKind, params: WorkloadParams) -> Self {
-        Self::with_fabric(kind, params, true, 1)
+        Self::with_config(kind, params, &RunConfig::new())
     }
 
     /// Non-phantom variant for byte-exact integration tests.
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new_with_data(kind: FsKind, params: WorkloadParams) -> Self {
-        Self::with_fabric(kind, params, false, 1)
+        Self::with_config(kind, params, &RunConfig::new().phantom(false))
     }
 
     /// Phantom run against an N-shard metadata plane. `shards == 1`
     /// reproduces [`Self::new`] exactly (the refactor's anchor).
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new_sharded(kind: FsKind, params: WorkloadParams, shards: usize) -> Self {
-        Self::with_fabric(kind, params, true, shards)
+        Self::with_config(kind, params, &RunConfig::new().shards(shards))
     }
 
     /// Byte-exact run against an N-shard metadata plane.
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new_with_data_sharded(kind: FsKind, params: WorkloadParams, shards: usize) -> Self {
-        Self::with_fabric(kind, params, false, shards)
-    }
-
-    fn with_fabric(kind: FsKind, params: WorkloadParams, phantom: bool, shards: usize) -> Self {
-        Self::new_with_layers(&policy_layer, kind, params, phantom, shards)
+        Self::with_config(kind, params, &RunConfig::new().phantom(false).shards(shards))
     }
 
     /// Lazy-layer variant for the 10^5–10^6-rank scale rows: no layer,
@@ -174,11 +193,9 @@ impl SyntheticDriver {
     /// by the ranks actually live. Acquire-on-open models see opens at
     /// first touch rather than before the write phase, so this mode is
     /// opt-in and every legacy figure cell stays eager.
+    /// Shim over [`Self::with_config`] — prefer that for new call sites.
     pub fn new_lazy(kind: FsKind, params: WorkloadParams, shards: usize) -> Self {
-        let nranks = params.nranks();
-        let fabric = DesFabric::new_phantom_uniform(params.p, nranks, shards);
-        let fs = (0..nranks).map(|_| None).collect();
-        Self::assemble(kind, params, fabric, fs, Vec::new(), Some(policy_layer as LazyMake))
+        Self::with_config(kind, params, &RunConfig::new().lazy(true).shards(shards))
     }
 
     /// [`Self::with_fabric`] with an explicit layer factory — the entry
@@ -304,15 +321,30 @@ impl SyntheticDriver {
 
     /// Run to completion on a cluster and produce the report.
     pub fn run(self, cluster: Cluster) -> PhaseReport {
-        self.run_with_threads(cluster, 1)
+        self.run_cfg(cluster, &RunConfig::new())
     }
 
     /// [`Self::run`] on the windowed parallel event loop (`threads <= 1`
     /// is exactly the serial loop; any P is byte-identical to it).
-    pub fn run_with_threads(mut self, cluster: Cluster, threads: usize) -> PhaseReport {
+    pub fn run_with_threads(self, cluster: Cluster, threads: usize) -> PhaseReport {
+        self.run_cfg(cluster, &RunConfig::new().engine_threads(threads))
+    }
+
+    /// The unified runner: honours `cfg.engine_threads` and schedules
+    /// `cfg.faults` into the engine's serialized commit loop. A
+    /// non-empty plan switches the fabric into fault-aware mode with
+    /// the model's own recovery obligation (replay-to-SC models replay
+    /// surviving attachments at shard restart; permitted-stale models
+    /// only fence leases); the empty plan stays on the exact historical
+    /// pricing path.
+    pub fn run_cfg(mut self, cluster: Cluster, cfg: &RunConfig) -> PhaseReport {
+        if !cfg.faults.is_empty() && !self.fabric.faults_enabled() {
+            self.fabric
+                .enable_faults(self.kind.recovery_obligation().replays());
+        }
         let mut engine = Engine::uniform_with(cluster, self.params.p, self.params.nranks());
         let stats = engine
-            .run_threaded(&mut self, threads)
+            .run_threaded_with_plan(&mut self, cfg.engine_threads, &cfg.faults)
             .expect("synthetic workload deadlock");
         PhaseReport {
             fs: self.kind.name(),
@@ -334,6 +366,14 @@ impl SyntheticDriver {
 }
 
 impl Driver for SyntheticDriver {
+    /// Scheduled fault delivery: the engine calls this at the
+    /// serialized commit point (identical order for any thread count),
+    /// and the fabric applies the kill/restart — lease fencing, state
+    /// wipe, and the model's recovery replay.
+    fn on_fault(&mut self, ev: &FaultEvent) {
+        self.fabric.apply_fault(ev);
+    }
+
     /// One functional step per call; its fabric costs are drained
     /// straight into `out` as one batch (one heap event per step).
     fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
@@ -437,6 +477,11 @@ impl Driver for SyntheticDriver {
                         self.fs[rank] = None;
                     }
                     self.stage[rank] = Stage::Finished;
+                    // Recovery costs queued while this rank was blocked
+                    // (shard-restart fencing targets writers that never
+                    // speak again) must be priced, not dropped. Healthy
+                    // runs always reach here with an empty queue.
+                    self.fabric.drain_costs_into(rank as u32, out);
                     out.push(SimOp::Done);
                     return;
                 }
@@ -650,5 +695,86 @@ mod tests {
             let rep = driver.run(Cluster::catalyst(2, 1));
             assert!(rep.read_bw() > 0.0, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn run_config_matches_legacy_paths() {
+        // The constructor-sprawl collapse: every legacy constructor is
+        // a shim over `with_config`, and the explicit RunConfig spelling
+        // must be byte-for-bit the legacy call it replaces.
+        let params = Config::CcR.params(4, 2, 8 << 10, 4, 7);
+
+        let old = SyntheticDriver::new(FsKind::COMMIT, params.clone()).run(Cluster::catalyst(4, 99));
+        let cfg = RunConfig::new();
+        let new = SyntheticDriver::with_config(FsKind::COMMIT, params.clone(), &cfg)
+            .run_cfg(Cluster::catalyst(4, 99), &cfg);
+        assert_eq!(old.makespan, new.makespan);
+        assert_eq!(old.counters, new.counters);
+        assert_eq!(old.sim_ops, new.sim_ops);
+
+        let old = SyntheticDriver::new_lazy(FsKind::SESSION, params.clone(), 2)
+            .run(Cluster::catalyst(4, 99));
+        let cfg = RunConfig::new().lazy(true).shards(2);
+        let new = SyntheticDriver::with_config(FsKind::SESSION, params.clone(), &cfg)
+            .run_cfg(Cluster::catalyst(4, 99), &cfg);
+        assert_eq!(old.makespan, new.makespan);
+        assert_eq!(old.counters, new.counters);
+
+        let params2 = Config::CcR.params(2, 2, 4096, 2, 3);
+        let old = SyntheticDriver::new_with_data_sharded(FsKind::COMMIT, params2.clone(), 2)
+            .run_with_threads(Cluster::catalyst(2, 1), 4);
+        let cfg = RunConfig::new().phantom(false).shards(2).engine_threads(4);
+        let new = SyntheticDriver::with_config(FsKind::COMMIT, params2, &cfg)
+            .run_cfg(Cluster::catalyst(2, 1), &cfg);
+        assert_eq!(old.makespan, new.makespan);
+        assert_eq!(old.counters, new.counters);
+    }
+
+    #[test]
+    fn shard_outage_prices_recovery_and_preserves_read_back() {
+        use crate::sim::FaultPlan;
+        // Probe the healthy run for the barrier-release time, then kill
+        // the lone shard 1 ns before release and restart it exactly at
+        // release. Recovery (lease fencing + attachment replay) runs
+        // before any reader acquires, so the replay-to-SC session model
+        // still hands readers the writers' bytes; the fencing/replay
+        // RPCs are priced into the writers' tails.
+        let params = Config::CcR.params(2, 2, 4096, 2, 3);
+        let base = SyntheticDriver::new_with_data(FsKind::SESSION, params.clone())
+            .run(Cluster::catalyst(2, 1));
+        assert!(base.write_end > Ns(1));
+        let plan = FaultPlan::shard_outage(0, base.write_end - Ns(1), base.write_end);
+        let cfg = RunConfig::new().phantom(false).faults(plan);
+        let faulted = SyntheticDriver::with_config(FsKind::SESSION, params, &cfg)
+            .run_cfg(Cluster::catalyst(2, 1), &cfg);
+        assert!(faulted.read_bw() > 0.0);
+        assert!(
+            faulted.counters.fenced_rpcs > 0,
+            "writers must re-acquire fenced leases: {:?}",
+            faulted.counters
+        );
+        assert!(faulted.counters.replayed_intervals > 0);
+        assert!(faulted.makespan >= base.makespan);
+    }
+
+    #[test]
+    fn faulted_runs_are_thread_count_invariant() {
+        use crate::sim::FaultPlan;
+        // Faults fire at the serialized commit point, so a faulted run
+        // must stay byte-identical across engine thread counts.
+        let params = Config::CcR.params(4, 2, 8 << 10, 4, 7);
+        let base = SyntheticDriver::new(FsKind::COMMIT, params.clone()).run(Cluster::catalyst(4, 99));
+        let plan = FaultPlan::shard_outage(0, base.write_end - Ns(1), base.write_end);
+        let run_p = |threads: usize| {
+            let cfg = RunConfig::new().faults(plan.clone()).engine_threads(threads);
+            SyntheticDriver::with_config(FsKind::COMMIT, params.clone(), &cfg)
+                .run_cfg(Cluster::catalyst(4, 99), &cfg)
+        };
+        let serial = run_p(1);
+        let par = run_p(4);
+        assert_eq!(serial.makespan, par.makespan);
+        assert_eq!(serial.counters, par.counters);
+        assert_eq!(serial.sim_ops, par.sim_ops);
+        assert!(serial.counters.fenced_rpcs > 0, "{:?}", serial.counters);
     }
 }

@@ -12,7 +12,7 @@ use pscnf::dl::{DlDriver, DlParams};
 use pscnf::fs::{FsKind, WorkloadFs};
 use pscnf::interval::Range;
 use pscnf::scr::{ScrDriver, ScrParams};
-use pscnf::sim::{Cluster, Driver, Engine, Ns, SimOp};
+use pscnf::sim::{Cluster, Driver, Engine, FaultEvent, FaultPlan, Ns, SimOp};
 use pscnf::workload::{build_fs, Config, Pattern, SyntheticDriver};
 
 const CONFIGS: [Config; 4] = [Config::CnW, Config::SnW, Config::CcR, Config::CsR];
@@ -108,6 +108,9 @@ struct ReadBack {
     n_writers: usize,
     collected: Vec<Vec<u8>>,
     buf: Vec<u8>,
+    /// Virtual time the write barrier released (the healthy probe uses
+    /// it to place a fault window that ends exactly at the release).
+    release: Ns,
 }
 
 impl ReadBack {
@@ -136,7 +139,16 @@ impl ReadBack {
             n_writers: nranks / 2,
             collected: vec![Vec::new(); nranks],
             buf: Vec::new(),
+            release: Ns::ZERO,
         }
+    }
+
+    /// Switch the fabric fault-aware (`replay` = the model's
+    /// replay-to-SC obligation) so a scheduled shard outage fences
+    /// leases and recovers state instead of being a silent wipe.
+    fn with_faults(mut self, replay: bool) -> Self {
+        self.fabric.enable_faults(replay);
+        self
     }
 
     fn fill_byte(&self, block: usize) -> u8 {
@@ -149,7 +161,11 @@ impl ReadBack {
 }
 
 impl Driver for ReadBack {
-    fn next_ops(&mut self, rank: usize, _now: Ns, out: &mut Vec<SimOp>) {
+    fn on_fault(&mut self, ev: &FaultEvent) {
+        self.fabric.apply_fault(ev);
+    }
+
+    fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
         loop {
             let step = self.step[rank];
             self.step[rank] = step + 1;
@@ -169,6 +185,9 @@ impl Driver for ReadBack {
                     out.push(SimOp::Barrier);
                     return;
                 } else {
+                    // Recovery costs queued while this rank was blocked
+                    // at the barrier must be priced, not dropped.
+                    self.fabric.drain_costs_into(rank as u32, out);
                     out.push(SimOp::Done);
                     return;
                 }
@@ -178,6 +197,7 @@ impl Driver for ReadBack {
                     out.push(SimOp::Barrier);
                     return;
                 } else if step == 1 {
+                    self.release = self.release.max(now);
                     self.fs[rank]
                         .begin_read_phase(&mut self.fabric, self.file)
                         .expect("read-back acquire");
@@ -195,6 +215,7 @@ impl Driver for ReadBack {
                         .expect("read-back read");
                     self.collected[rank].extend_from_slice(&self.buf);
                 } else {
+                    self.fabric.drain_costs_into(rank as u32, out);
                     out.push(SimOp::Done);
                     return;
                 }
@@ -208,15 +229,35 @@ impl Driver for ReadBack {
 }
 
 fn run_readback(kind: FsKind, threads: usize) -> (Vec<Vec<u8>>, u64) {
+    let (d, ops) = run_readback_plan(kind, threads, &FaultPlan::new(), false);
+    (d.collected, ops)
+}
+
+/// Run the read-back driver under a fault plan; `fault_aware` switches
+/// the fabric into lease mode with the model's own recovery obligation.
+/// Returns the whole driver so callers can inspect the post-run owner
+/// map and counters, not just the collected bytes.
+fn run_readback_plan(
+    kind: FsKind,
+    threads: usize,
+    plan: &FaultPlan,
+    fault_aware: bool,
+) -> (ReadBack, u64) {
     let mut d = ReadBack::new(kind, 3);
+    if fault_aware {
+        d = d.with_faults(kind.recovery_obligation().replays());
+    }
     let nranks = ReadBack::NODES * ReadBack::PPN;
     let mut engine = Engine::uniform_with(
         Cluster::catalyst(ReadBack::NODES, 17),
         ReadBack::PPN,
         nranks,
     );
-    let stats = engine.run_threaded(&mut d, threads).expect("read-back deadlock");
-    (d.collected, stats.ops_executed)
+    let stats = engine
+        .run_threaded_with_plan(&mut d, threads, plan)
+        .expect("read-back deadlock");
+    let ops = stats.ops_executed;
+    (d, ops)
 }
 
 #[test]
@@ -243,6 +284,64 @@ fn read_back_bytes_identical_across_thread_counts() {
             let (got, got_ops) = run_readback(kind, threads);
             assert_eq!(got, base, "{} P={threads} read-back bytes", kind.name());
             assert_eq!(got_ops, base_ops, "{} P={threads} ops", kind.name());
+        }
+    }
+}
+
+#[test]
+fn faulted_runs_identical_for_p_1_4_with_same_owner_map() {
+    // Same seed + same FaultPlan ⇒ byte-identical read-back bytes, DES
+    // op counts, fabric counters AND post-recovery owner maps for any
+    // engine thread count: faults apply at the serialized commit point
+    // both loops share. The outage window ends at the write barrier's
+    // release, so for replay-to-SC models the readers still observe the
+    // unique SC outcome and the recovered map matches the healthy one.
+    for kind in [FsKind::COMMIT, FsKind::SESSION] {
+        let (probe, _) = run_readback_plan(kind, 1, &FaultPlan::new(), false);
+        let release = probe.release;
+        assert!(release > Ns::ZERO, "{} never released", kind.name());
+        let plan = FaultPlan::shard_outage(0, release - Ns(1), release);
+        let (base, base_ops) = run_readback_plan(kind, 1, &plan, true);
+        for rank in base.n_writers..ReadBack::NODES * ReadBack::PPN {
+            let got = &base.collected[rank];
+            assert_eq!(got.len(), base.blocks() * base.size as usize);
+            let ridx = rank - base.n_writers;
+            for i in 0..base.blocks() {
+                let block = (ridx + i) % base.blocks();
+                let chunk = &got[i * base.size as usize..(i + 1) * base.size as usize];
+                assert!(
+                    chunk.iter().all(|&b| b == base.fill_byte(block)),
+                    "{} rank {rank} block {block} lost to the outage",
+                    kind.name()
+                );
+            }
+        }
+        // The wipe really happened (fences + replay were priced) and the
+        // replayed map re-converged to the healthy one.
+        assert!(base.fabric.counters.fenced_rpcs > 0, "{}", kind.name());
+        assert!(base.fabric.counters.replayed_intervals > 0, "{}", kind.name());
+        assert_eq!(
+            base.fabric.server.total_intervals(),
+            probe.fabric.server.total_intervals(),
+            "{} owner map diverged from healthy",
+            kind.name()
+        );
+        for threads in [4usize] {
+            let (got, got_ops) = run_readback_plan(kind, threads, &plan, true);
+            let tag = format!("{} P={threads}", kind.name());
+            assert_eq!(got.collected, base.collected, "{tag} bytes");
+            assert_eq!(got_ops, base_ops, "{tag} ops");
+            assert_eq!(got.fabric.counters, base.fabric.counters, "{tag} counters");
+            assert_eq!(
+                got.fabric.server.total_intervals(),
+                base.fabric.server.total_intervals(),
+                "{tag} owner-map size"
+            );
+            assert_eq!(
+                got.fabric.server.intervals_of(got.file),
+                base.fabric.server.intervals_of(base.file),
+                "{tag} owner map"
+            );
         }
     }
 }

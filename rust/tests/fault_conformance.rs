@@ -1,0 +1,312 @@
+//! Crash-recovery conformance (tier-1 for the fault layer): after a
+//! whole-plane metadata outage whose window ends exactly at the write
+//! barrier's release, every registered model — built-ins AND models
+//! that exist only as `[model.<name>]` config blocks — must honor its
+//! derived [`RecoveryObligation`]:
+//!
+//! - `replay_to_sc`: the restarted plane replays surviving clients'
+//!   attachments, so readers still observe the unique sequentially-
+//!   consistent outcome (the writers' exact fill bytes) and the
+//!   recovered owner map equals the healthy run's.
+//! - `permitted_stale`: nothing is replayed (`replayed_intervals == 0`);
+//!   a reader may observe pre-crash UPFS state (zeros) or published
+//!   bytes, but never a torn block — and that is a PASS, not a failure.
+
+use std::collections::BTreeMap;
+
+use pscnf::basefs::DesFabric;
+use pscnf::fs::{FsKind, WorkloadFs};
+use pscnf::interval::Range;
+use pscnf::model::RecoveryObligation;
+use pscnf::sim::{Cluster, Driver, Engine, FaultAction, FaultEvent, FaultPlan, FaultTarget, Ns, SimOp};
+use pscnf::workload::build_fs;
+
+/// Register two config-only models so the conformance sweep exercises a
+/// model the binary has never heard of on both sides of the obligation
+/// split: `conf_repl` is a session-shaped replay-to-SC model,
+/// `conf_stale` an eventual-shaped permitted-stale one. Idempotent, so
+/// every test in this binary may call it.
+fn register_config_models() -> (FsKind, FsKind) {
+    let mut ini = BTreeMap::new();
+    let mut repl = BTreeMap::new();
+    repl.insert("publication".to_string(), "phase_end".to_string());
+    repl.insert("acquisition".to_string(), "session_snapshot".to_string());
+    ini.insert("model.conf_repl".to_string(), repl);
+    let mut stale = BTreeMap::new();
+    stale.insert("publication".to_string(), "on_close".to_string());
+    stale.insert("acquisition".to_string(), "per_read".to_string());
+    ini.insert("model.conf_stale".to_string(), stale);
+    let kinds = FsKind::register_from_ini(&ini).expect("register config models");
+    assert_eq!(kinds.len(), 2);
+    (kinds[0], kinds[1])
+}
+
+/// Write/barrier/read workload in data mode (non-phantom): writers fill
+/// disjoint blocks with distinct bytes, readers read every block after
+/// the barrier, and every byte that comes back is recorded.
+struct Recovery {
+    fabric: DesFabric,
+    fs: Vec<Box<dyn WorkloadFs>>,
+    file: u64,
+    step: Vec<usize>,
+    m: usize,
+    size: u64,
+    n_writers: usize,
+    collected: Vec<Vec<u8>>,
+    buf: Vec<u8>,
+    /// Virtual time the write barrier released; the healthy probe uses
+    /// it to end the outage window exactly at the release.
+    release: Ns,
+}
+
+impl Recovery {
+    const NODES: usize = 2;
+    const PPN: usize = 2;
+
+    fn new(kind: FsKind, shards: usize) -> Self {
+        let nranks = Self::NODES * Self::PPN;
+        let fabric = DesFabric::new_uniform(Self::PPN, nranks, shards);
+        let mut fs = build_fs(kind, &fabric);
+        let mut fabric = fabric;
+        let mut file = 0;
+        for f in fs.iter_mut() {
+            file = f.open(&mut fabric, "/test/recovery.dat");
+        }
+        for r in 0..nranks {
+            while fabric.pop_cost(r as u32).is_some() {}
+        }
+        Self {
+            fabric,
+            fs,
+            file,
+            step: vec![0; nranks],
+            m: 3,
+            size: 1 << 10,
+            n_writers: nranks / 2,
+            collected: vec![Vec::new(); nranks],
+            buf: Vec::new(),
+            release: Ns::ZERO,
+        }
+    }
+
+    fn fill_byte(&self, block: usize) -> u8 {
+        ((block / self.m) * 16 + block % self.m + 1) as u8
+    }
+
+    fn blocks(&self) -> usize {
+        self.n_writers * self.m
+    }
+}
+
+impl Driver for Recovery {
+    fn on_fault(&mut self, ev: &FaultEvent) {
+        self.fabric.apply_fault(ev);
+    }
+
+    fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
+        loop {
+            let step = self.step[rank];
+            self.step[rank] = step + 1;
+            if rank < self.n_writers {
+                // Writer: m writes, publish, barrier, done.
+                if step < self.m {
+                    let block = rank * self.m + step;
+                    let payload = vec![self.fill_byte(block); self.size as usize];
+                    self.fs[rank]
+                        .write_at(&mut self.fabric, self.file, block as u64 * self.size, &payload)
+                        .expect("recovery write");
+                } else if step == self.m {
+                    self.fs[rank]
+                        .end_write_phase(&mut self.fabric, self.file)
+                        .expect("recovery publish");
+                } else if step == self.m + 1 {
+                    out.push(SimOp::Barrier);
+                    return;
+                } else {
+                    // Fence/backoff costs queued while this rank was
+                    // blocked at the barrier must be priced, not lost.
+                    self.fabric.drain_costs_into(rank as u32, out);
+                    out.push(SimOp::Done);
+                    return;
+                }
+            } else {
+                // Reader: barrier, acquire, read every block, done.
+                if step == 0 {
+                    out.push(SimOp::Barrier);
+                    return;
+                } else if step == 1 {
+                    self.release = self.release.max(now);
+                    self.fs[rank]
+                        .begin_read_phase(&mut self.fabric, self.file)
+                        .expect("recovery acquire");
+                } else if step - 2 < self.blocks() {
+                    let ridx = rank - self.n_writers;
+                    let block = (ridx + step - 2) % self.blocks();
+                    self.buf.clear();
+                    self.fs[rank]
+                        .read_at_into(
+                            &mut self.fabric,
+                            self.file,
+                            Range::at(block as u64 * self.size, self.size),
+                            &mut self.buf,
+                        )
+                        .expect("recovery read");
+                    self.collected[rank].extend_from_slice(&self.buf);
+                } else {
+                    self.fabric.drain_costs_into(rank as u32, out);
+                    out.push(SimOp::Done);
+                    return;
+                }
+            }
+            self.fabric.drain_costs_into(rank as u32, out);
+            if !out.is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+fn run_recovery(kind: FsKind, shards: usize, plan: &FaultPlan, fault_aware: bool) -> Recovery {
+    let mut d = Recovery::new(kind, shards);
+    if fault_aware {
+        d.fabric.enable_faults(kind.recovery_obligation().replays());
+    }
+    let nranks = Recovery::NODES * Recovery::PPN;
+    let mut engine =
+        Engine::uniform_with(Cluster::catalyst(Recovery::NODES, 17), Recovery::PPN, nranks);
+    engine
+        .run_threaded_with_plan(&mut d, 1, plan)
+        .expect("recovery deadlock");
+    d
+}
+
+/// Whole-plane outage ending at `release`: kill every shard one tick
+/// before the barrier releases, restart every shard on the release.
+fn outage(shards: usize, release: Ns) -> FaultPlan {
+    let kill_at = Ns(release.0.saturating_sub(1).max(1));
+    let mut plan = FaultPlan::new();
+    for shard in 0..shards {
+        plan.push(FaultEvent {
+            at: kill_at,
+            target: FaultTarget::Shard(shard),
+            action: FaultAction::Kill,
+        });
+        plan.push(FaultEvent {
+            at: release,
+            target: FaultTarget::Shard(shard),
+            action: FaultAction::Restart,
+        });
+    }
+    plan
+}
+
+/// Run `kind` through the outage and assert its recovery obligation.
+fn assert_conforms(kind: FsKind, shards: usize) {
+    let tag = format!("{} s{shards}", kind.name());
+    let healthy = run_recovery(kind, shards, &FaultPlan::new(), false);
+    assert!(healthy.release > Ns::ZERO, "{tag} never released");
+    let plan = outage(shards, healthy.release);
+    let faulted = run_recovery(kind, shards, &plan, true);
+    let obligation = kind.recovery_obligation();
+
+    for rank in faulted.n_writers..Recovery::NODES * Recovery::PPN {
+        let got = &faulted.collected[rank];
+        assert_eq!(got.len(), faulted.blocks() * faulted.size as usize, "{tag} rank {rank}");
+        let ridx = rank - faulted.n_writers;
+        for i in 0..faulted.blocks() {
+            let block = (ridx + i) % faulted.blocks();
+            let fill = faulted.fill_byte(block);
+            let chunk = &got[i * faulted.size as usize..(i + 1) * faulted.size as usize];
+            match obligation {
+                RecoveryObligation::ReplayToSc => assert!(
+                    chunk.iter().all(|&b| b == fill),
+                    "{tag} rank {rank} block {block}: replay-to-SC reader lost published bytes"
+                ),
+                RecoveryObligation::PermittedStale => assert!(
+                    chunk.iter().all(|&b| b == fill || b == 0),
+                    "{tag} rank {rank} block {block}: stale reads may be old or published, never torn"
+                ),
+            }
+        }
+    }
+
+    match obligation {
+        RecoveryObligation::ReplayToSc => {
+            // The wipe really happened (leases were fenced), recovery
+            // replayed attachments, and the plane re-converged to the
+            // healthy owner map.
+            assert!(faulted.fabric.counters.fenced_rpcs > 0, "{tag} fenced nothing");
+            assert!(faulted.fabric.counters.replayed_intervals > 0, "{tag} replayed nothing");
+            assert_eq!(
+                faulted.fabric.server.total_intervals(),
+                healthy.fabric.server.total_intervals(),
+                "{tag} recovered owner map diverged from healthy"
+            );
+            assert_eq!(
+                faulted.fabric.server.intervals_of(faulted.file),
+                healthy.fabric.server.intervals_of(healthy.file),
+                "{tag} recovered file map diverged from healthy"
+            );
+        }
+        RecoveryObligation::PermittedStale => {
+            assert_eq!(
+                faulted.fabric.counters.replayed_intervals, 0,
+                "{tag} permitted-stale model must not replay"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_registered_model_honors_its_recovery_obligation() {
+    let (conf_repl, conf_stale) = register_config_models();
+    // Snapshot AFTER registering so the sweep provably covers the
+    // config-only models alongside the seven built-ins.
+    let kinds = FsKind::registered();
+    assert!(kinds.contains(&conf_repl) && kinds.contains(&conf_stale));
+    for kind in kinds {
+        assert_conforms(kind, 1);
+    }
+}
+
+#[test]
+fn replay_models_reconverge_across_shard_counts() {
+    // Multi-shard planes recover too: the outage kills and restarts
+    // every shard, and replay must route each attachment back to the
+    // shard that owns it.
+    for kind in [FsKind::COMMIT, FsKind::SESSION, FsKind::MPIIO] {
+        assert_conforms(kind, 4);
+    }
+}
+
+#[test]
+fn obligation_split_matches_the_model_semantics() {
+    // The relaxed extensions — and only they, among the built-ins — are
+    // permitted-stale; config models derive their obligation from the
+    // same policy rule with no extra key.
+    let (conf_repl, conf_stale) = register_config_models();
+    for kind in [FsKind::CTO, FsKind::EVENTUAL, conf_stale] {
+        assert_eq!(
+            kind.recovery_obligation(),
+            RecoveryObligation::PermittedStale,
+            "{}",
+            kind.name()
+        );
+        assert!(!kind.recovery_obligation().replays());
+    }
+    for kind in [
+        FsKind::POSIX,
+        FsKind::COMMIT,
+        FsKind::SESSION,
+        FsKind::MPIIO,
+        FsKind::COMMIT_STRICT,
+        conf_repl,
+    ] {
+        assert_eq!(
+            kind.recovery_obligation(),
+            RecoveryObligation::ReplayToSc,
+            "{}",
+            kind.name()
+        );
+    }
+}
