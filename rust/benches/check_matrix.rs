@@ -1,0 +1,18 @@
+//! Race-detector throughput pricing — what `pscnf check` costs per
+//! operation checked. Each cell records its synthetic two-phase CC-R
+//! formal trace once (deterministic in the repeat-0 seed) and then
+//! times the frontier detector (`model::check::detect_indexed`) over
+//! it, happens-before and interval index rebuilt inside the timed
+//! region — exactly the per-model cost of `pscnf check <trace>`. The
+//! headline metric is `ops_checked_per_sec` (wall clock, best of
+//! repeats, like `perf_hotpath`); the race verdict rides the record's
+//! params so a baseline diff also catches a detector that gets faster
+//! by getting wrong.
+//!
+//! Thin wrapper over the `check_matrix` family of the bench registry
+//! (small gated cells at n2, larger ungated ones at n8). `--json`
+//! additionally writes `target/results/BENCH_check_matrix.json`.
+
+fn main() {
+    pscnf::bench::family_main("check_matrix");
+}

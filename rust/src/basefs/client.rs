@@ -186,7 +186,7 @@ impl ClientCore {
     /// flushed as in POSIX).
     pub fn close(&mut self, file: FileId) -> Result<(), BfsError> {
         self.open.remove(&file).ok_or(BfsError::NotOpen(file))?;
-        self.bb.write().unwrap().discard(file);
+        self.bb.write().expect("burst-buffer lock poisoned").discard(file);
         Ok(())
     }
 
@@ -215,7 +215,7 @@ impl ClientCore {
         // Reject offsets whose end would wrap BEFORE touching the
         // buffer — a wrapped range must never reach the interval trees.
         range_at(offset, buf.len() as u64)?;
-        let n = self.bb.write().unwrap().file(file).write(offset, buf);
+        let n = self.bb.write().expect("burst-buffer lock poisoned").file(file).write(offset, buf);
         fabric.bb_io(self.id, true, buf.len() as u64);
         Ok(n)
     }
@@ -275,7 +275,7 @@ impl ClientCore {
             }
             Some(o) if o == self.id => {
                 {
-                    let bb = self.bb.read().unwrap();
+                    let bb = self.bb.read().expect("burst-buffer lock poisoned");
                     let Some(fb) = bb.get(file) else {
                         return Err(BfsError::NotOwned(range));
                     };
@@ -307,7 +307,7 @@ impl ClientCore {
         let newly = self
             .bb
             .write()
-            .unwrap()
+            .expect("burst-buffer lock poisoned")
             .file(file)
             .mark_attached(range)
             .map_err(|_| BfsError::AttachUnwritten(range))?;
@@ -339,7 +339,7 @@ impl ClientCore {
         file: FileId,
     ) -> Result<bool, BfsError> {
         self.opened(file)?;
-        let newly = self.bb.write().unwrap().file(file).mark_all_attached();
+        let newly = self.bb.write().expect("burst-buffer lock poisoned").file(file).mark_all_attached();
         if newly.is_empty() {
             return Ok(false);
         }
@@ -380,7 +380,7 @@ impl ClientCore {
         let mut reqs = Vec::new();
         let mut attached = Vec::new();
         for &file in files {
-            let newly = self.bb.write().unwrap().file(file).mark_all_attached();
+            let newly = self.bb.write().expect("burst-buffer lock poisoned").file(file).mark_all_attached();
             if newly.is_empty() {
                 continue;
             }
@@ -529,7 +529,7 @@ impl ClientCore {
         let range = range_at(offset, size)?;
         self.bb
             .write()
-            .unwrap()
+            .expect("burst-buffer lock poisoned")
             .file(file)
             .tree
             .detach(range)
@@ -554,7 +554,7 @@ impl ClientCore {
         let removed = self
             .bb
             .write()
-            .unwrap()
+            .expect("burst-buffer lock poisoned")
             .file(file)
             .tree
             .detach_all_attached();
@@ -586,7 +586,7 @@ impl ClientCore {
         self.opened(file)?;
         let range = range_at(offset, size)?;
         let segs: Vec<(Range, Vec<u8>)> = {
-            let bb = self.bb.read().unwrap();
+            let bb = self.bb.read().expect("burst-buffer lock poisoned");
             match bb.get(file) {
                 Some(fb) => fb.read_local(range),
                 None => Vec::new(),
@@ -611,7 +611,7 @@ impl ClientCore {
     pub fn flush_file<F: Fabric + ?Sized>(&mut self, fabric: &mut F, file: FileId) -> Result<(), BfsError> {
         self.opened(file)?;
         let end = {
-            let bb = self.bb.read().unwrap();
+            let bb = self.bb.read().expect("burst-buffer lock poisoned");
             bb.get(file).map(|fb| fb.tree.max_written()).unwrap_or(0)
         };
         if end == 0 {
@@ -651,7 +651,7 @@ impl ClientCore {
     pub fn stat<F: Fabric + ?Sized>(&mut self, fabric: &mut F, file: FileId) -> Result<u64, BfsError> {
         self.opened(file)?;
         let local = {
-            let bb = self.bb.read().unwrap();
+            let bb = self.bb.read().expect("burst-buffer lock poisoned");
             bb.get(file).map(|fb| fb.tree.max_written()).unwrap_or(0)
         };
         match fabric.rpc(self.id, Request::Stat { file }) {

@@ -241,7 +241,7 @@ impl DesFabric {
     /// the dead client's intervals).
     fn kill_client(&mut self, client: ClientId) {
         let files: Vec<FileId> = {
-            let mut bb = self.bbs[client as usize].write().unwrap();
+            let mut bb = self.bbs[client as usize].write().expect("burst-buffer lock poisoned");
             let mut files: Vec<FileId> = bb.files.keys().copied().collect();
             files.sort_unstable();
             bb.files.clear();
@@ -287,7 +287,7 @@ impl DesFabric {
             }
             let mut reqs: Vec<Request> = Vec::new();
             {
-                let bb = self.bbs[client as usize].read().unwrap();
+                let bb = self.bbs[client as usize].read().expect("burst-buffer lock poisoned");
                 let mut files: Vec<FileId> = bb
                     .files
                     .keys()
@@ -481,7 +481,7 @@ impl Fabric for DesFabric {
         out: &mut Vec<u8>,
     ) -> Result<(), BfsError> {
         {
-            let bb = self.bbs[owner as usize].read().unwrap();
+            let bb = self.bbs[owner as usize].read().expect("burst-buffer lock poisoned");
             let fb = bb.get(file).ok_or(BfsError::NotOwned(range))?;
             fb.read_owned_into(range, out)
                 .map_err(|_| BfsError::NotOwned(range))?;

@@ -14,6 +14,8 @@
 //! pscnf bench --list --filter 'ablate*'      # show matching scenario ids (trailing-* glob)
 //! pscnf bench --filter scale_gate --engine-threads 4  # windowed parallel event loop
 //! pscnf bench --filter fault_matrix --json   # price crash recovery per model × shards
+//! pscnf bench --filter check_matrix --json   # price the race detector (ops checked/s)
+//! pscnf bench --filter smoke --record-trace target/traces  # persist formal traces
 //! pscnf bench --filter smoke --faults 'kill shard 0 at 2ms; restart shard 0 at 4ms'
 //! pscnf bench --compare baseline.json --gate 15   # nonzero exit on regression
 //! ```
@@ -208,6 +210,13 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
         "PCT",
         Some("10"),
         "max tolerated per-metric regression percent for --compare",
+    )
+    .opt(
+        "record-trace",
+        "DIR",
+        None,
+        "record each selected synthetic cell's formal trace (schema-versioned JSONL, \
+         one file per cell id) into DIR before running",
     );
     // The shared run-shape block (`--shards`, `--files`,
     // `--engine-threads`, `--faults`) comes from the same [`RunArgs`]
@@ -305,6 +314,41 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
     let jobs = args.usize("jobs")?;
     if jobs == 0 {
         return Err("--jobs must be >= 1".to_string());
+    }
+    if let Some(dir) = args.get("record-trace") {
+        // One trace per selected two-phase cell, at the repeat-0 seed the
+        // runner itself uses; other kinds (scr/dl/hotpath/...) have no
+        // synthetic two-phase shape to record and are skipped, counted.
+        let dir = std::path::Path::new(dir);
+        let (mut recorded, mut skipped) = (0usize, 0usize);
+        for sc in &scenarios {
+            let (config, access, read_over) = match &sc.kind {
+                Kind::Synthetic {
+                    config,
+                    access,
+                    read_pattern,
+                } => (*config, *access, *read_pattern),
+                Kind::CheckMatrix { config, access } => (*config, *access, None),
+                _ => {
+                    skipped += 1;
+                    continue;
+                }
+            };
+            let mut params = config
+                .params(sc.nodes, sc.ppn, access, sc.m, runner::rep_seed(0))
+                .with_files(sc.files);
+            if let (Some(over), Some(_)) = (read_over, params.read_pattern) {
+                params.read_pattern = Some(over);
+            }
+            let trace = crate::trace::record_synthetic(&params, sc.fs, sc.shards);
+            let name = format!("{}.trace.jsonl", sc.id.replace('/', "_"));
+            crate::model::persist::save(&trace, &dir.join(name))?;
+            recorded += 1;
+        }
+        println!(
+            "recorded {recorded} trace(s) -> {} ({skipped} non-synthetic cell(s) skipped)",
+            dir.display()
+        );
     }
     let (matrix, walls) = run_matrix_timed(&scenarios, jobs);
     println!("{}", render_matrix("bench matrix", &matrix));

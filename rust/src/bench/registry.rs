@@ -66,6 +66,14 @@ pub enum Kind {
     /// matrix — excluded from the byte-identity guarantee of parallel
     /// runs (see DESIGN.md §Benchmarks).
     HotPath(HotPathCase),
+    /// Detector-throughput pricing (`check_matrix`): record the cell's
+    /// synthetic two-phase formal trace once (deterministic in the
+    /// scenario seed), then time the frontier detector
+    /// (`model::check::detect_indexed`) over it under the cell's model,
+    /// in operations checked per wall second. Wall-clock like
+    /// `HotPath`, so these cells share its exemption from the
+    /// byte-identity guarantee.
+    CheckMatrix { config: Config, access: u64 },
 }
 
 /// Which hot path a `perf_hotpath` cell times.
@@ -648,6 +656,30 @@ pub fn registry() -> Vec<Scenario> {
         }
     }
 
+    // check_matrix — race-detector throughput: every paper model checks
+    // the CC-R two-phase trace of its own layer, small (gated smoke)
+    // and larger (ungated) op counts. A slowdown of the frontier
+    // detector trips the perf gate via the small cells; the big cells
+    // price the ops/s scaling story.
+    for fs in FsKind::PAPER {
+        for (nodes, ppn, m, smoke) in [(2usize, 2usize, 4usize, true), (8, 12, 16, false)] {
+            let mut sc = base(
+                "check_matrix",
+                fs,
+                nodes,
+                ppn,
+                Kind::CheckMatrix {
+                    config: Config::CcR,
+                    access: 8 << 10,
+                },
+            );
+            sc.m = m;
+            sc.repeats = 2;
+            sc.smoke = smoke;
+            v.push(with_id(sc, "CC-R.check", Some(8 << 10), &format!("n{nodes}")));
+        }
+    }
+
     // smoke — the CI perf-gate subset: tiny scales, every model ×
     // Table-8 config (+ a random-read variant), plus one SCR and one DL
     // cell per model so every workload driver is exercised.
@@ -842,6 +874,26 @@ mod tests {
             for shards in [1usize, 4] {
                 assert!(smoke.iter().any(|s| s.fs == fs && s.shards == shards));
             }
+        }
+    }
+
+    #[test]
+    fn check_matrix_covers_paper_models_with_gated_small_cells() {
+        let all = registry();
+        for fs in FsKind::PAPER {
+            let cells: Vec<_> = all
+                .iter()
+                .filter(|s| s.family == "check_matrix" && s.fs == fs)
+                .collect();
+            assert_eq!(cells.len(), 2, "check_matrix cells for {}", fs.name());
+            assert!(
+                cells.iter().any(|s| s.smoke) && cells.iter().any(|s| !s.smoke),
+                "{}: want one gated and one ungated cell",
+                fs.name()
+            );
+            assert!(cells
+                .iter()
+                .all(|s| matches!(s.kind, Kind::CheckMatrix { .. })));
         }
     }
 

@@ -22,7 +22,9 @@ use crate::config::RunConfig;
 use crate::dl::{DlDriver, DlParams};
 use crate::fs::{FsKind, PolicyFs, WorkloadFs};
 use crate::interval::{GlobalIntervalTree, Range};
+use crate::model::{detect_indexed, TraceIndex};
 use crate::scr::{ScrDriver, ScrParams};
+use crate::trace::record_synthetic;
 use crate::sim::{
     Cluster, Driver, Engine, FaultAction, FaultEvent, FaultPlan, FaultTarget, NetParams, Ns,
     ServerParams, SimOp, UpfsParams,
@@ -36,7 +38,7 @@ use std::time::Instant;
 
 /// Base RNG seed for repeat `rep` (kept stable so records diff cleanly
 /// across runs and PRs).
-fn rep_seed(rep: usize) -> u64 {
+pub(crate) fn rep_seed(rep: usize) -> u64 {
     1000 + rep as u64
 }
 
@@ -113,10 +115,18 @@ pub fn run_scenario_timed(sc: &Scenario) -> (BenchRecord, u64) {
     let t0 = Instant::now();
     let rec = if let Kind::HotPath(case) = sc.kind {
         run_hotpath(sc, case)
+    } else if let Kind::CheckMatrix { config, access } = sc.kind {
+        run_check_matrix(sc, config, access)
     } else {
         run_virtual(sc)
     };
     (rec, t0.elapsed().as_nanos() as u64)
+}
+
+/// Is this a wall-clock cell (excluded from the byte-identity guarantee
+/// and deferred to the quiet post-pool phase of parallel runs)?
+fn is_wall_clock(sc: &Scenario) -> bool {
+    matches!(sc.kind, Kind::HotPath(_) | Kind::CheckMatrix { .. })
 }
 
 /// The virtual-time (DES) scenario path — every kind except `HotPath`.
@@ -184,6 +194,7 @@ fn run_virtual(sc: &Scenario) -> BenchRecord {
                 .param("m", sc.m);
         }
         Kind::HotPath(_) => unreachable!("hot-path cells run in run_hotpath"),
+        Kind::CheckMatrix { .. } => unreachable!("check_matrix cells run in run_check_matrix"),
     }
     rec.metric("bw", Metric::higher(fold.bw.mean()));
     if !fold.restart_bw.is_empty() {
@@ -365,7 +376,48 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
                 .push(faulted.counters.revalidate_hit_rate());
         }
         Kind::HotPath(_) => unreachable!("hot-path cells run in run_hotpath"),
+        Kind::CheckMatrix { .. } => unreachable!("check_matrix cells run in run_check_matrix"),
     }
+}
+
+/// Detector-throughput cells (`check_matrix`): record the scenario's
+/// synthetic formal trace once (deterministic in the repeat-0 seed),
+/// then time the frontier detector over it — operations checked per
+/// wall second, best of `repeats` (one warmup), like the other
+/// wall-clock cells. Happens-before and the interval index are rebuilt
+/// inside the timed region because that is exactly the cost
+/// `pscnf check <trace> --model M` pays. The race verdict lands in the
+/// record's params, so a baseline diff also catches a detector that
+/// gets faster by getting wrong.
+fn run_check_matrix(sc: &Scenario, config: Config, access: u64) -> BenchRecord {
+    let params = config
+        .params(sc.nodes, sc.ppn, access, sc.m, rep_seed(0))
+        .with_files(sc.files);
+    let trace = record_synthetic(&params, sc.fs, sc.shards);
+    let model = sc.fs.model();
+    let ops = trace.len() as u64;
+    let mut report = None;
+    let ops_per_sec = best_events_per_sec(sc.repeats, || {
+        let hb = trace.happens_before().expect("recorded traces are acyclic");
+        let index = TraceIndex::build(&trace);
+        report = Some(detect_indexed(&trace, &hb, &index, &model));
+        ops
+    });
+    let report = report.expect("at least one timed repeat");
+
+    let mut rec = BenchRecord::new(sc.id.clone(), sc.family);
+    rec.param("fs", sc.fs.name())
+        .param("workload", format!("{}.check", config.name()))
+        .param("access_bytes", access)
+        .param("nodes", sc.nodes)
+        .param("ppn", sc.ppn)
+        .param("m", sc.m)
+        .param("repeats", sc.repeats)
+        .param("trace_events", ops)
+        .param("races", report.total_races)
+        .param("synchronized_pairs", report.synchronized_pairs);
+    rec.metric("ops_checked_per_sec", Metric::higher(ops_per_sec));
+    rec
 }
 
 /// Run a list of scenarios into one matrix (serial, registry order).
@@ -404,26 +456,27 @@ pub fn run_matrix_timed(scenarios: &[Scenario], jobs: usize) -> (BenchMatrix, Ve
                 };
                 // Wall-clock cells are deferred: measuring them while
                 // sibling workers saturate the CPU would put scheduler
-                // noise into the GATED events_per_sec/ns_per_op values.
-                if matches!(sc.kind, Kind::HotPath(_)) {
+                // noise into the GATED events_per_sec/ns_per_op/
+                // ops_checked_per_sec values.
+                if is_wall_clock(sc) {
                     continue;
                 }
                 let out = run_scenario_timed(sc);
-                *slots[i].lock().unwrap() = Some(out);
+                *slots[i].lock().expect("bench slot poisoned") = Some(out);
             });
         }
     });
-    // Hot-path cells run serially on the now-quiet machine, in input
+    // Wall-clock cells run serially on the now-quiet machine, in input
     // order, after every virtual-time cell has finished.
     for (i, sc) in scenarios.iter().enumerate() {
-        if matches!(sc.kind, Kind::HotPath(_)) {
-            *slots[i].lock().unwrap() = Some(run_scenario_timed(sc));
+        if is_wall_clock(sc) {
+            *slots[i].lock().expect("bench slot poisoned") = Some(run_scenario_timed(sc));
         }
     }
     for (sc, slot) in scenarios.iter().zip(slots) {
         let (rec, wall_ns) = slot
             .into_inner()
-            .unwrap()
+            .expect("bench slot poisoned")
             .unwrap_or_else(|| panic!("worker dropped scenario {}", sc.id));
         m.records.push(rec);
         walls.push((sc.id.clone(), wall_ns));
@@ -1063,6 +1116,19 @@ mod tests {
         sc.faults = FaultPlan::client_kill(0, Ns(1_000));
         let faulted = run_scenario(&sc);
         assert_ne!(healthy, faulted);
+    }
+
+    #[test]
+    fn check_matrix_smoke_reports_throughput_and_verdict() {
+        let sc = smoke("check_matrix", FsKind::COMMIT);
+        let rec = run_scenario(&sc);
+        let ops = rec.metric_value("ops_checked_per_sec").unwrap();
+        assert!(ops.is_finite() && ops > 0.0, "ops/s {ops}");
+        assert!(rec.params["trace_events"].as_f64().unwrap() > 0.0);
+        // Commit certifies the recorded two-phase CC-R trace, and the
+        // conflicting pairs really were examined.
+        assert_eq!(rec.params["races"].as_f64(), Some(0.0));
+        assert!(rec.params["synchronized_pairs"].as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -64,12 +64,12 @@ impl ShardGroup {
                 while let Ok(msg) = wrx.recv() {
                     match msg {
                         Msg::Rpc(env) => {
-                            let resp = state.lock().unwrap().handle(env.req);
+                            let resp = state.lock().expect("live server state poisoned").handle(env.req);
                             // Receiver may have given up; ignore failure.
                             let _ = env.reply.send(resp);
                         }
                         Msg::Batch(env) => {
-                            let mut guard = state.lock().unwrap();
+                            let mut guard = state.lock().expect("live server state poisoned");
                             let resps = env.reqs.into_iter().map(|r| guard.handle(r)).collect();
                             drop(guard);
                             let _ = env.reply.send(resps);
@@ -252,17 +252,17 @@ impl Fabric for LiveFabric {
         file: FileId,
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
-        let bb = self.bbs[owner as usize].read().unwrap();
+        let bb = self.bbs[owner as usize].read().expect("burst-buffer lock poisoned");
         let fb = bb.get(file).ok_or(BfsError::NotOwned(range))?;
         fb.read_owned(range).map_err(|_| BfsError::NotOwned(range))
     }
 
     fn upfs_read(&mut self, _client: ClientId, file: FileId, range: Range) -> Vec<u8> {
-        self.upfs.read().unwrap().read(file, range)
+        self.upfs.read().expect("upfs lock poisoned").read(file, range)
     }
 
     fn upfs_write(&mut self, _client: ClientId, file: FileId, offset: u64, data: &[u8]) {
-        self.upfs.write().unwrap().write(file, offset, data);
+        self.upfs.write().expect("upfs lock poisoned").write(file, offset, data);
     }
 
     fn bb_io(&mut self, _client: ClientId, _is_write: bool, _bytes: u64) {

@@ -120,6 +120,84 @@ pub trait WorkloadFs {
     fn core(&mut self) -> &mut ClientCore;
 }
 
+/// Boxed layers are layers too, so decorators like
+/// [`crate::trace::RecordingFs`] can wrap whatever [`crate::workload::build_fs`]
+/// returns without knowing the concrete type.
+impl WorkloadFs for Box<dyn WorkloadFs> {
+    fn kind(&self) -> FsKind {
+        (**self).kind()
+    }
+
+    fn client_id(&self) -> u32 {
+        (**self).client_id()
+    }
+
+    fn open(&mut self, fabric: &mut dyn Fabric, path: &str) -> FileId {
+        (**self).open(fabric, path)
+    }
+
+    fn close(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        (**self).close(fabric, file)
+    }
+
+    fn write_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        offset: u64,
+        buf: &[u8],
+    ) -> Result<usize, BfsError> {
+        (**self).write_at(fabric, file, offset, buf)
+    }
+
+    fn read_at(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+    ) -> Result<Vec<u8>, BfsError> {
+        (**self).read_at(fabric, file, range)
+    }
+
+    fn read_at_into(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        file: FileId,
+        range: Range,
+        out: &mut Vec<u8>,
+    ) -> Result<(), BfsError> {
+        (**self).read_at_into(fabric, file, range, out)
+    }
+
+    fn end_write_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        (**self).end_write_phase(fabric, file)
+    }
+
+    fn begin_read_phase(&mut self, fabric: &mut dyn Fabric, file: FileId) -> Result<(), BfsError> {
+        (**self).begin_read_phase(fabric, file)
+    }
+
+    fn end_write_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        (**self).end_write_phase_all(fabric, files)
+    }
+
+    fn begin_read_phase_all(
+        &mut self,
+        fabric: &mut dyn Fabric,
+        files: &[FileId],
+    ) -> Result<(), BfsError> {
+        (**self).begin_read_phase_all(fabric, files)
+    }
+
+    fn core(&mut self) -> &mut ClientCore {
+        (**self).core()
+    }
+}
+
 /// Version-stamped ownership snapshots, shared by the two caching
 /// layers (SessionFS, MpiioFS). Each entry pairs a file's ownership map
 /// (as a global-tree clone, so range lookups stay O(log n + k)) with
@@ -197,7 +275,7 @@ pub(crate) fn overlay_own_writes(
 ) -> Vec<OwnedInterval> {
     let me = core.id;
     let own: Vec<Range> = {
-        let bb = core.bb().read().unwrap();
+        let bb = core.bb().read().expect("burst-buffer lock poisoned");
         bb.get(file)
             .map(|fb| fb.tree.lookup(range).iter().map(|s| s.file).collect())
             .unwrap_or_default()

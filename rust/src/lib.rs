@@ -13,6 +13,13 @@
 //! - **L2/L1 (python/, build-time only)** — JAX train-step calling a
 //!   Pallas MLP kernel, AOT-lowered to HLO text loaded by [`runtime`].
 
+// No unsafe anywhere in the simulator/checker; enforced, not assumed.
+#![deny(unsafe_code)]
+// Library code states WHY a panic can't happen (`expect`) instead of
+// bare-unwrapping; tests keep unwrap ergonomics. CI runs clippy with
+// `-D warnings`, so this warn is a deny there.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 pub mod basefs;
 pub mod bench;
 pub mod config;

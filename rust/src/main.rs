@@ -3,7 +3,9 @@
 //! ```text
 //! pscnf models                         # Table 4: S + MSC per model
 //! pscnf check [--litmus NAME]          # storage-race detection demos
+//! pscnf check t.jsonl --all --infer    # analyze a recorded trace
 //! pscnf run --workload CC-R --fs session --nodes 8 --size 8K
+//! pscnf run --workload CC-R --fs commit --nodes 2 --record-trace t.jsonl
 //! pscnf scr --nodes 8 --fs both        # Fig 5 emulation
 //! pscnf dl --mode weak --nodes 8       # Fig 6 emulation
 //! pscnf bench --filter smoke --json    # scenario matrix -> BENCH_matrix.json
@@ -12,12 +14,16 @@
 //! pscnf info                           # platform + artifact status
 //! ```
 
+#![deny(unsafe_code)]
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use pscnf::config::{parse_ini, Experiment, RunArgs, Testbed};
 use pscnf::coordinator::{render_sweep, sweep_dl, sweep_scr, sweep_synthetic_cfg, write_results};
 use pscnf::fs::FsKind;
 use pscnf::model::{litmus, model_table_markdown};
 use pscnf::runtime::{Runtime, TrainState};
-use pscnf::util::cli::ArgSpec;
+use pscnf::model::{check, persist};
+use pscnf::util::cli::{ArgSpec, ParsedArgs};
 use pscnf::util::json::Json;
 use pscnf::util::rng::Rng;
 use pscnf::util::table::Table;
@@ -53,7 +59,7 @@ fn usage_text() -> String {
      \n\
      SUBCOMMANDS:\n\
      \x20 models   print Table 4 (S and MSC of each model)\n\
-     \x20 check    run the storage-race detector on litmus scenarios\n\
+     \x20 check    storage-race analysis: litmus demos or a recorded trace file\n\
      \x20 run      run a synthetic N-to-1 workload on the DES cluster\n\
      \x20 scr      SCR + HACC-IO checkpoint/restart emulation (Fig 5)\n\
      \x20 dl       DL ingestion emulation (Fig 6)\n\
@@ -103,9 +109,109 @@ fn cmd_models(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_check(argv: &[String]) -> Result<(), String> {
-    let spec = ArgSpec::new("check", "run the storage-race detector on litmus scenarios")
-        .opt("litmus", "NAME", Some("all"), "scenario name or `all`");
+    let spec = ArgSpec::new(
+        "check",
+        "storage-race analysis: litmus demos, or `check <trace.jsonl>` on a recorded trace",
+    )
+    .opt("litmus", "NAME", Some("all"), "scenario name or `all` (demo mode, no trace file)")
+    .opt(
+        "model",
+        "LIST",
+        None,
+        "registered model names to check the trace under (exit 1 if any races)",
+    )
+    .opt(
+        "config",
+        "PATH",
+        None,
+        "experiment file whose [model.<name>] blocks are registered first",
+    )
+    .flag("all", "check the trace under every registered model (informational, exit 0)")
+    .flag(
+        "infer",
+        "report the weakest registered model that certifies the trace (exit 1 if none)",
+    );
     let args = spec.parse(argv)?;
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        FsKind::register_from_ini(&parse_ini(&text)?)?;
+    }
+    // The trace path is an optional positional: present -> analyze the
+    // recorded trace, absent -> the litmus demo suite as before.
+    match args.positional(0) {
+        Some(path) => check_trace(path, &args),
+        None => check_litmus(&args),
+    }
+}
+
+/// `pscnf check <trace.jsonl>`: load, build happens-before + interval
+/// index once, then run the frontier detector per requested model with a
+/// diagnostic per reported race.
+fn check_trace(path: &str, args: &ParsedArgs) -> Result<(), String> {
+    let trace = persist::load(std::path::Path::new(path))?;
+    let hb = trace.happens_before().map_err(|e| format!("{path}: {e}"))?;
+    let index = check::TraceIndex::build(&trace);
+    println!(
+        "trace {path}: {} events, {} so-edges",
+        trace.len(),
+        trace.so_edges().len()
+    );
+
+    let explicit_models = args.get("model").is_some() && !args.flag("all");
+    let kinds = if explicit_models {
+        FsKind::parse_list(args.str("model")?)?
+    } else {
+        FsKind::registered()
+    };
+    // `--infer` alone answers just the inference question; combine with
+    // --model/--all for the per-model breakdown too.
+    let show_models = explicit_models || args.flag("all") || !args.flag("infer");
+    let mut racy_models = 0usize;
+    if show_models {
+        for kind in &kinds {
+            let model = kind.model();
+            let rep = check::detect_indexed(&trace, &hb, &index, &model);
+            println!(
+                "\nmodel {} ({}): {} — {} race(s) ({} shown), {} synchronized pair(s)",
+                kind.name(),
+                model.name,
+                if rep.race_free() { "race-free" } else { "STORAGE RACE" },
+                rep.total_races,
+                rep.races.len(),
+                rep.synchronized_pairs,
+            );
+            for race in &rep.races {
+                println!("{}", check::diagnose(&trace, &model, race));
+            }
+            if !rep.race_free() {
+                racy_models += 1;
+            }
+        }
+    }
+
+    if args.flag("infer") {
+        // Registry order is weakest-first (POSIX races only when hb
+        // itself is missing), so the first race-free model is the
+        // weakest certificate.
+        let weakest = FsKind::registered()
+            .into_iter()
+            .find(|k| check::detect_indexed(&trace, &hb, &index, &k.model()).race_free());
+        match weakest {
+            Some(k) => println!("\nweakest race-free model: {} ({})", k.name(), k.model().name),
+            None => return Err("no registered model certifies this trace race-free".into()),
+        }
+    }
+    if explicit_models && racy_models > 0 {
+        return Err(format!(
+            "storage races under {racy_models} of {} checked model(s)",
+            kinds.len()
+        ));
+    }
+    Ok(())
+}
+
+/// `pscnf check` without a trace file: the named-litmus demo suite.
+fn check_litmus(args: &ParsedArgs) -> Result<(), String> {
     let which = args.str("litmus")?;
     let scenarios = litmus::all();
     let selected: Vec<_> = scenarios
@@ -174,6 +280,13 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
                 "PATH",
                 None,
                 "alias of --config-file (matches `pscnf bench`)",
+            )
+            .opt(
+                "record-trace",
+                "PATH",
+                None,
+                "record the run's formal trace (schema-versioned JSONL) to PATH \
+                 (needs exactly one --fs model and one --nodes value)",
             ),
     );
     let args = spec.parse(argv)?;
@@ -232,6 +345,26 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         Some(kinds) => kinds,
         None => FsKind::parse_list(args.str("fs")?)?,
     };
+
+    if let Some(trace_path) = args.get("record-trace") {
+        if fs_kinds.len() != 1 || nodes_list.len() != 1 {
+            return Err(
+                "--record-trace records one execution: give exactly one --fs model \
+                 and one --nodes value"
+                    .into(),
+            );
+        }
+        let params = workload
+            .params(nodes_list[0], ppn, size, m, args.u64("seed")?)
+            .with_files(files);
+        let trace = pscnf::trace::record_synthetic(&params, fs_kinds[0], run_cfg.shards);
+        persist::save(&trace, std::path::Path::new(trace_path))?;
+        println!(
+            "recorded formal trace: {} events, {} so-edges -> {trace_path}",
+            trace.len(),
+            trace.so_edges().len()
+        );
+    }
 
     let write_phase = matches!(workload, WlConfig::CnW | WlConfig::SnW);
     let cells = sweep_synthetic_cfg(

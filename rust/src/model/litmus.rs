@@ -169,7 +169,7 @@ pub fn run(litmus: &Litmus) -> Vec<(String, usize, usize)> {
         .map(|kind| {
             let m = kind.model();
             let rep = race::detect(&litmus.trace, &m).expect("litmus traces are acyclic");
-            (m.name, rep.races.len(), rep.synchronized_pairs)
+            (m.name, rep.total_races, rep.synchronized_pairs)
         })
         .collect()
 }

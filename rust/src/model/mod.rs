@@ -11,18 +11,25 @@
 //! - [`policy`] — models as data: the declarative [`SyncPolicy`] the
 //!   executable layer interprets, the model registry behind
 //!   [`FsKind`], and the policy → Table-4 derivation.
-//! - [`race`] — the properly-synchronized relation and race detection.
+//! - [`race`] — the properly-synchronized relation and race detection
+//!   (the frozen all-pairs reference oracle).
+//! - [`check`] — the indexed, memoized checker that scales the same
+//!   verdict to recorded traces, plus race/stale-read diagnostics.
+//! - [`persist`] — schema-versioned JSONL trace serialization.
 //! - [`litmus`] — executable litmus scenarios (Tables 1–3 analogues).
 
+pub mod check;
 pub mod exec;
 pub mod litmus;
 pub mod models;
 pub mod msc;
 pub mod op;
+pub mod persist;
 pub mod policy;
 pub mod race;
 pub mod trace;
 
+pub use check::{detect_indexed, diagnose, stale_reads, StaleRead, TraceIndex};
 pub use models::ConsistencyModel;
 pub use msc::{EdgeKind, Msc};
 pub use op::{Access, Event, FileId, OpId, RankId, StorageOp, SyncKind};
@@ -30,5 +37,5 @@ pub use policy::{
     builtin_kinds, model_table_markdown, model_table_markdown_for, Acquisition, FsKind, ModelDef,
     Publication, RecoveryObligation, SyncPolicy,
 };
-pub use race::{detect, race_free, RaceReport, StorageRace};
+pub use race::{detect, detect_with, race_free, RaceReport, StorageRace, MAX_REPORTED_RACES};
 pub use trace::{HappensBefore, Trace};

@@ -1,0 +1,258 @@
+//! Schema-versioned JSONL persistence for formal [`Trace`]s: what
+//! `--record-trace` writes and what `pscnf check <trace>` reads.
+//!
+//! Line 1 is a header object (`schema`, event/edge counts); every
+//! following line is one record in trace order — data ops, sync ops,
+//! then synchronization-order edges:
+//!
+//! ```text
+//! {"edges":1,"events":3,"kind":"pscnf-trace","schema":1}
+//! {"access":"w","end":10,"file":0,"rank":0,"start":0,"t":"data"}
+//! {"file":0,"kind":"commit","rank":0,"t":"sync"}
+//! {"access":"r","end":10,"file":0,"rank":1,"start":0,"t":"data"}
+//! {"from":1,"t":"so","to":2}
+//! ```
+//!
+//! Event ids are implicit (line order = [`Trace::push`] order), so a
+//! loaded trace is bit-identical to the recorded one: same events, same
+//! so-edges, same ids. Sync kinds serialize via their canonical
+//! [`SyncKind`] display form (`commit`, `session_open`, `MPI_File_sync`,
+//! `custom#7`, ...); the parser here is its exact inverse — deliberately
+//! NOT the config-file grammar of `policy::parse_sync_kind`.
+
+use super::op::{Access, StorageOp, SyncKind};
+use super::trace::Trace;
+use crate::interval::Range;
+use crate::util::json::Json;
+
+/// Bump when the line format changes incompatibly; `from_jsonl` rejects
+/// anything else so stale recordings fail loudly, not subtly.
+pub const TRACE_SCHEMA: u64 = 1;
+
+fn sync_kind_to_str(kind: SyncKind) -> String {
+    kind.to_string()
+}
+
+fn sync_kind_from_str(s: &str) -> Result<SyncKind, String> {
+    match s {
+        "commit" => Ok(SyncKind::Commit),
+        "session_open" => Ok(SyncKind::SessionOpen),
+        "session_close" => Ok(SyncKind::SessionClose),
+        "MPI_File_open" => Ok(SyncKind::MpiFileOpen),
+        "MPI_File_close" => Ok(SyncKind::MpiFileClose),
+        "MPI_File_sync" => Ok(SyncKind::MpiFileSync),
+        other => match other.strip_prefix("custom#") {
+            Some(id) => id
+                .parse::<u16>()
+                .map(SyncKind::Custom)
+                .map_err(|_| format!("bad custom sync kind {other:?}")),
+            None => Err(format!("unknown sync kind {other:?}")),
+        },
+    }
+}
+
+/// Serialize a trace to JSONL (one JSON object per line, trailing
+/// newline). Deterministic: `Json` objects dump with sorted keys.
+pub fn to_jsonl(trace: &Trace) -> String {
+    let mut out = String::new();
+    let mut header = Json::obj();
+    header
+        .set("schema", TRACE_SCHEMA)
+        .set("kind", "pscnf-trace")
+        .set("events", trace.len())
+        .set("edges", trace.so_edges().len());
+    out.push_str(&header.dump());
+    out.push('\n');
+    for ev in trace.events() {
+        let mut line = Json::obj();
+        match ev.op {
+            StorageOp::Data { access, file, range } => {
+                line.set("t", "data")
+                    .set("rank", ev.rank)
+                    .set("access", if access == Access::Write { "w" } else { "r" })
+                    .set("file", file)
+                    .set("start", range.start)
+                    .set("end", range.end);
+            }
+            StorageOp::Sync { kind, file } => {
+                line.set("t", "sync")
+                    .set("rank", ev.rank)
+                    .set("kind", sync_kind_to_str(kind))
+                    .set("file", file);
+            }
+        }
+        out.push_str(&line.dump());
+        out.push('\n');
+    }
+    for &(from, to) in trace.so_edges() {
+        let mut line = Json::obj();
+        line.set("t", "so").set("from", from).set("to", to);
+        out.push_str(&line.dump());
+        out.push('\n');
+    }
+    out
+}
+
+fn get_u64(obj: &Json, key: &str, what: &str) -> Result<u64, String> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| format!("{what}: missing or non-integer {key:?}"))
+}
+
+fn get_str<'j>(obj: &'j Json, key: &str, what: &str) -> Result<&'j str, String> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{what}: missing string {key:?}"))
+}
+
+/// Parse a JSONL trace. Errors carry the offending line number.
+pub fn from_jsonl(text: &str) -> Result<Trace, String> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, header_line) = lines.next().ok_or("empty trace file")?;
+    let header = Json::parse(header_line).map_err(|e| format!("line 1 (header): {e}"))?;
+    let schema = get_u64(&header, "schema", "header")?;
+    if schema != TRACE_SCHEMA {
+        return Err(format!(
+            "unsupported trace schema {schema} (this build reads schema {TRACE_SCHEMA})"
+        ));
+    }
+    let n_events = get_u64(&header, "events", "header")? as usize;
+    let n_edges = get_u64(&header, "edges", "header")? as usize;
+
+    let mut trace = Trace::new();
+    let mut edges_seen = 0usize;
+    for (idx, line) in lines {
+        let what = format!("line {}", idx + 1);
+        let rec = Json::parse(line).map_err(|e| format!("{what}: {e}"))?;
+        match get_str(&rec, "t", &what)? {
+            "data" => {
+                if edges_seen > 0 {
+                    return Err(format!("{what}: event record after so-edge records"));
+                }
+                let rank = get_u64(&rec, "rank", &what)? as u32;
+                let file = get_u64(&rec, "file", &what)? as u32;
+                let start = get_u64(&rec, "start", &what)?;
+                let end = get_u64(&rec, "end", &what)?;
+                if end < start {
+                    return Err(format!("{what}: end {end} < start {start}"));
+                }
+                let range = Range::new(start, end);
+                let op = match get_str(&rec, "access", &what)? {
+                    "w" => StorageOp::write(file, range),
+                    "r" => StorageOp::read(file, range),
+                    other => return Err(format!("{what}: bad access {other:?}")),
+                };
+                trace.push(rank, op);
+            }
+            "sync" => {
+                if edges_seen > 0 {
+                    return Err(format!("{what}: event record after so-edge records"));
+                }
+                let rank = get_u64(&rec, "rank", &what)? as u32;
+                let file = get_u64(&rec, "file", &what)? as u32;
+                let kind = sync_kind_from_str(get_str(&rec, "kind", &what)?)
+                    .map_err(|e| format!("{what}: {e}"))?;
+                trace.push(rank, StorageOp::sync(kind, file));
+            }
+            "so" => {
+                let from = get_u64(&rec, "from", &what)? as usize;
+                let to = get_u64(&rec, "to", &what)? as usize;
+                if from >= trace.len() || to >= trace.len() {
+                    return Err(format!("{what}: so edge {from}->{to} out of range"));
+                }
+                trace.add_so(from, to);
+                edges_seen += 1;
+            }
+            other => return Err(format!("{what}: unknown record type {other:?}")),
+        }
+    }
+    if trace.len() != n_events || edges_seen != n_edges {
+        return Err(format!(
+            "truncated trace: header promises {n_events} events / {n_edges} edges, found {} / {}",
+            trace.len(),
+            edges_seen
+        ));
+    }
+    Ok(trace)
+}
+
+/// Write a trace to `path` (JSONL).
+pub fn save(trace: &Trace, path: &std::path::Path) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("create {}: {e}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, to_jsonl(trace)).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Read a trace from `path` (JSONL).
+pub fn load(path: &std::path::Path) -> Result<Trace, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    from_jsonl(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new();
+        let w = t.push(0, StorageOp::write(0, Range::new(0, 10)));
+        let c = t.push(0, StorageOp::sync(SyncKind::Commit, 0));
+        let r = t.push(1, StorageOp::read(0, Range::new(5, 15)));
+        t.push(2, StorageOp::sync(SyncKind::Custom(7), 3));
+        t.add_so(c, r);
+        t.add_so(w, r);
+        t
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let t = sample();
+        let text = to_jsonl(&t);
+        let back = from_jsonl(&text).unwrap();
+        assert_eq!(back.events(), t.events());
+        assert_eq!(back.so_edges(), t.so_edges());
+        assert_eq!(to_jsonl(&back), text, "serialize∘parse must be the identity on files");
+    }
+
+    #[test]
+    fn sync_kind_strings_invert_display() {
+        for kind in [
+            SyncKind::Commit,
+            SyncKind::SessionOpen,
+            SyncKind::SessionClose,
+            SyncKind::MpiFileOpen,
+            SyncKind::MpiFileClose,
+            SyncKind::MpiFileSync,
+            SyncKind::Custom(42),
+        ] {
+            assert_eq!(sync_kind_from_str(&sync_kind_to_str(kind)), Ok(kind));
+        }
+        assert!(sync_kind_from_str("mpi_file_open").is_err(), "config grammar is not this grammar");
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let t = sample();
+        let text = to_jsonl(&t).replacen("\"schema\":1", "\"schema\":2", 1);
+        let err = from_jsonl(&text).unwrap_err();
+        assert!(err.contains("unsupported trace schema 2"), "{err}");
+    }
+
+    #[test]
+    fn truncation_and_garbage_are_rejected() {
+        let t = sample();
+        let text = to_jsonl(&t);
+        let truncated: String =
+            text.lines().take(t.len()).map(|l| format!("{l}\n")).collect();
+        assert!(from_jsonl(&truncated).unwrap_err().contains("truncated"));
+        assert!(from_jsonl("").is_err());
+        assert!(from_jsonl("{\"schema\":1,\"events\":0,\"edges\":0}\nnot json\n").is_err());
+    }
+}

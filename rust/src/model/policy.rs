@@ -528,7 +528,7 @@ impl FsKind {
     const BUILTIN_COUNT: u16 = 7;
 
     fn with_def<T>(self, f: impl FnOnce(&ModelDef) -> T) -> T {
-        let reg = registry().read().unwrap();
+        let reg = registry().read().expect("model registry poisoned");
         let def = reg
             .get(self.0 as usize)
             .unwrap_or_else(|| panic!("FsKind({}) is not registered", self.0));
@@ -570,14 +570,14 @@ impl FsKind {
 
     /// Every registered model, registration order (paper four first).
     pub fn registered() -> Vec<FsKind> {
-        (0..registry().read().unwrap().len() as u16)
+        (0..registry().read().expect("model registry poisoned").len() as u16)
             .map(FsKind)
             .collect()
     }
 
     /// All valid names, for error messages and `--help`.
     pub fn valid_names() -> Vec<&'static str> {
-        registry().read().unwrap().iter().map(|d| d.name).collect()
+        registry().read().expect("model registry poisoned").iter().map(|d| d.name).collect()
     }
 
     /// Look up one model by name or alias (ASCII case-insensitive).
@@ -586,7 +586,7 @@ impl FsKind {
     /// errors always report the same full set of valid names.
     pub fn parse(s: &str) -> Result<Self, String> {
         let want = s.trim().to_ascii_lowercase();
-        let reg = registry().read().unwrap();
+        let reg = registry().read().expect("model registry poisoned");
         for (i, def) in reg.iter().enumerate() {
             if def.name == want || def.aliases.contains(&want.as_str()) {
                 return Ok(FsKind(i as u16));
@@ -651,7 +651,7 @@ impl FsKind {
             ));
         }
         let display = display.unwrap_or(&name).to_string();
-        let mut reg = registry().write().unwrap();
+        let mut reg = registry().write().expect("model registry poisoned");
         for (i, def) in reg.iter().enumerate() {
             if def.name == name || def.aliases.contains(&name.as_str()) {
                 if def.policy == policy && def.display == display {

@@ -22,24 +22,70 @@ pub struct StorageRace {
     pub y: OpId,
 }
 
+/// Cap on the number of races a [`RaceReport`] carries verbatim; the
+/// `total_races` count is always exact.
+pub const MAX_REPORTED_RACES: usize = 32;
+
 /// Full verdict for a trace under a model.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RaceReport {
     pub model: String,
+    /// Representative races: deduped by (file, rank-pair), first pair in
+    /// trace order per key, capped at [`MAX_REPORTED_RACES`] entries.
     pub races: Vec<StorageRace>,
+    /// Exact number of racing pairs before dedupe/cap.
+    pub total_races: usize,
     /// Conflicting pairs that were properly synchronized (for reporting).
     pub synchronized_pairs: usize,
 }
 
 impl RaceReport {
     pub fn race_free(&self) -> bool {
-        self.races.is_empty()
+        self.total_races == 0
+    }
+}
+
+/// Build a report from the raw racing pairs (in trace order): dedupe by
+/// (file, unordered rank pair) keeping the first representative, cap the
+/// list, keep the exact total. Shared by the reference detector and the
+/// indexed fast path so both produce identical reports.
+pub(crate) fn build_report(
+    trace: &Trace,
+    model_name: &str,
+    raw: Vec<StorageRace>,
+    synchronized_pairs: usize,
+) -> RaceReport {
+    let total_races = raw.len();
+    let mut seen = std::collections::HashSet::new();
+    let mut races = Vec::new();
+    for race in raw {
+        let (ra, rb) = (trace.event(race.x).rank, trace.event(race.y).rank);
+        let key = (trace.event(race.x).op.file(), ra.min(rb), ra.max(rb));
+        if seen.insert(key) {
+            if races.len() < MAX_REPORTED_RACES {
+                races.push(race);
+            } else {
+                break;
+            }
+        }
+    }
+    RaceReport {
+        model: model_name.to_string(),
+        races,
+        total_races,
+        synchronized_pairs,
     }
 }
 
 /// Detect storage races in `trace` under `model`.
 pub fn detect(trace: &Trace, model: &ConsistencyModel) -> Result<RaceReport, CycleError> {
     let hb = trace.happens_before()?;
+    Ok(detect_with(trace, &hb, model))
+}
+
+/// [`detect`] with a caller-provided happens-before closure, so checking
+/// one trace under many models pays for the closure once.
+pub fn detect_with(trace: &Trace, hb: &HappensBefore, model: &ConsistencyModel) -> RaceReport {
     let mut races = Vec::new();
     let mut synchronized = 0usize;
 
@@ -57,8 +103,8 @@ pub fn detect(trace: &Trace, model: &ConsistencyModel) -> Result<RaceReport, Cyc
             if !oa.conflicts_with(ob) {
                 continue;
             }
-            if properly_synchronized(trace, &hb, model, a, b)
-                || properly_synchronized(trace, &hb, model, b, a)
+            if properly_synchronized(trace, hb, model, a, b)
+                || properly_synchronized(trace, hb, model, b, a)
             {
                 synchronized += 1;
             } else {
@@ -67,11 +113,7 @@ pub fn detect(trace: &Trace, model: &ConsistencyModel) -> Result<RaceReport, Cyc
         }
     }
 
-    Ok(RaceReport {
-        model: model.name.clone(),
-        races,
-        synchronized_pairs: synchronized,
-    })
+    build_report(trace, &model.name, races, synchronized)
 }
 
 /// X --ps--> Y under `model`?
@@ -130,6 +172,39 @@ mod tests {
             t.push(1, w(0, 5, 15));
             let rep = detect(&t, &model).unwrap();
             assert_eq!(rep.races.len(), 1, "model {}", model.name);
+        }
+    }
+
+    /// Dedupe/cap: a flood of racing pairs between the same two ranks on
+    /// one file reports a single representative, while `total_races`
+    /// stays exact and `race_free` keys off the total.
+    #[test]
+    fn report_dedupes_by_file_and_rank_pair_and_counts_all() {
+        let mut t = Trace::new();
+        for i in 0..40u64 {
+            t.push(0, w(0, i * 4, i * 4 + 8));
+            t.push(1, w(0, i * 4, i * 4 + 8));
+        }
+        let rep = detect(&t, &ConsistencyModel::posix()).unwrap();
+        assert!(!rep.race_free());
+        assert!(rep.total_races > rep.races.len(), "raw pairs must exceed the deduped list");
+        assert_eq!(rep.races.len(), 1, "one (file, rank-pair) key → one representative");
+        assert_eq!(rep.races[0], StorageRace { x: 0, y: 1 }, "first pair in trace order");
+        assert!(rep.races.len() <= MAX_REPORTED_RACES);
+    }
+
+    /// `detect_with` (precomputed happens-before) matches `detect`.
+    #[test]
+    fn detect_with_matches_detect() {
+        let mut t = Trace::new();
+        let x = t.push(0, w(0, 0, 10));
+        let c = t.push(0, sync(SyncKind::Commit, 0));
+        let y = t.push(1, r(0, 5, 15));
+        t.add_so(c, y);
+        let _ = x;
+        let hb = t.happens_before().unwrap();
+        for model in ConsistencyModel::table4() {
+            assert_eq!(detect(&t, &model).unwrap(), detect_with(&t, &hb, &model));
         }
     }
 

@@ -210,11 +210,11 @@ impl TrainState {
         if out.len() != 5 {
             bail!("train_step returned {} outputs, want 5", out.len());
         }
-        let loss_lit = out.pop().unwrap();
-        self.b2 = out.pop().unwrap().to_vec::<f32>()?;
-        self.w2 = out.pop().unwrap().to_vec::<f32>()?;
-        self.b1 = out.pop().unwrap().to_vec::<f32>()?;
-        self.w1 = out.pop().unwrap().to_vec::<f32>()?;
+        let loss_lit = out.pop().expect("five outputs checked above");
+        self.b2 = out.pop().expect("five outputs checked above").to_vec::<f32>()?;
+        self.w2 = out.pop().expect("five outputs checked above").to_vec::<f32>()?;
+        self.b1 = out.pop().expect("five outputs checked above").to_vec::<f32>()?;
+        self.w1 = out.pop().expect("five outputs checked above").to_vec::<f32>()?;
         self.steps += 1;
         Ok(loss_lit.to_vec::<f32>()?[0])
     }

@@ -99,7 +99,7 @@ impl MultiServer {
                 .enumerate()
                 .min_by_key(|(_, w)| w.available_at())
                 .map(|(i, _)| i)
-                .unwrap(),
+                .expect("server worker pool is never empty"),
         };
         self.workers[idx].serve(now, service)
     }

@@ -13,14 +13,25 @@
 //! executable half of the conformance bridge
 //! (`tests/model_conformance.rs`).
 
+//! Recording batches: data ops are buffered per client and pushed under
+//! one lock acquisition at sync points ([`RecordingFs::flush`],
+//! triggered automatically by sync-op records, barrier crossings, a full
+//! buffer, and drop) — so recording a 10^4-op run does not serialize
+//! every op on the shared mutex. Drivers must flush (or rely on a
+//! sync-op record) **before** calling [`SharedTrace::barrier`], which
+//! scans for each rank's last recorded event.
+
 use crate::basefs::{BfsError, ClientCore, Fabric, FileId};
 use crate::fs::{FsKind, WorkloadFs};
 use crate::interval::Range;
-use crate::model::op::{OpId, StorageOp, SyncKind};
+use crate::model::op::{Access, OpId, StorageOp, SyncKind};
 use crate::model::policy::SyncPolicy;
 use crate::model::trace::Trace;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+
+/// Per-client buffer capacity before an automatic flush.
+const RECORD_BUF_CAP: usize = 64;
 
 /// Shared trace under construction (one per recorded run).
 #[derive(Clone, Default)]
@@ -49,10 +60,27 @@ impl SharedTrace {
     }
 
     fn push(&self, rank: u32, file: FileId, mk: impl FnOnce(u32) -> StorageOp) -> OpId {
-        let mut s = self.inner.lock().unwrap();
+        let mut s = self.inner.lock().expect("trace lock poisoned");
         let fid = Self::file_of(&mut s, file);
         let op = mk(fid);
         s.trace.push(rank, op)
+    }
+
+    /// Drain a client's buffered data ops into the trace under a single
+    /// lock acquisition, preserving their per-rank order.
+    fn push_batch(&self, rank: u32, ops: &mut Vec<(FileId, Access, Range)>) {
+        if ops.is_empty() {
+            return;
+        }
+        let mut s = self.inner.lock().expect("trace lock poisoned");
+        for (file, access, range) in ops.drain(..) {
+            let fid = Self::file_of(&mut s, file);
+            let op = match access {
+                Access::Write => StorageOp::write(fid, range),
+                Access::Read => StorageOp::read(fid, range),
+            };
+            s.trace.push(rank, op);
+        }
     }
 
     /// Record a barrier: every rank's last recorded event so-precedes
@@ -60,7 +88,7 @@ impl SharedTrace {
     /// each rank's latest event; the *next* event of any rank gets
     /// so-edges from all of them.
     pub fn barrier(&self, participants: &[u32]) {
-        let mut s = self.inner.lock().unwrap();
+        let mut s = self.inner.lock().expect("trace lock poisoned");
         let mut lasts = Vec::new();
         for &rank in participants {
             // Find this rank's most recent event.
@@ -75,7 +103,7 @@ impl SharedTrace {
     }
 
     fn flush_barrier_edges(&self, new_event: OpId) {
-        let mut s = self.inner.lock().unwrap();
+        let mut s = self.inner.lock().expect("trace lock poisoned");
         let rank = s.trace.event(new_event).rank;
         let edges: Vec<OpId> = s
             .pending_barrier
@@ -88,23 +116,112 @@ impl SharedTrace {
         }
     }
 
-    /// Extract the finished trace.
+    /// Extract the finished trace. Clients buffer data ops, so drop (or
+    /// [`RecordingFs::flush`]) every recording client first.
     pub fn finish(self) -> Trace {
         Arc::try_unwrap(self.inner)
-            .map(|m| m.into_inner().unwrap().trace)
+            .map(|m| m.into_inner().expect("trace lock poisoned").trace)
             .unwrap_or_else(|arc| {
                 // Other clones still alive: clone the trace out.
-                arc.lock().unwrap().trace.clone()
+                arc.lock().expect("trace lock poisoned").trace.clone()
             })
     }
 }
 
-/// A recording decorator over any consistency layer.
+/// Execute the synthetic two-phase workload shape (§6.1: writes →
+/// publish → barrier → acquire → reads, striped over `params.files`
+/// shared files) on `kind`'s executable layer over a DES fabric,
+/// recording the formal trace — the engine behind `--record-trace` on
+/// `pscnf run` and `pscnf bench`. Works for every registered model,
+/// config-defined ones included, because [`RecordingFs`] labels sync
+/// ops from the model's own [`SyncPolicy`].
+pub fn record_synthetic(
+    params: &crate::workload::WorkloadParams,
+    kind: FsKind,
+    shards: usize,
+) -> Trace {
+    use crate::basefs::DesFabric;
+    use crate::workload::build_fs;
+
+    let nranks = params.nranks();
+    let fabric = DesFabric::new_uniform(params.p, nranks, shards.max(1));
+    let clients = build_fs(kind, &fabric);
+    let mut fabric = fabric;
+    let trace = SharedTrace::new();
+    let mut recs: Vec<RecordingFs<Box<dyn WorkloadFs>>> = clients
+        .into_iter()
+        .map(|c| RecordingFs::new(c, trace.clone()))
+        .collect();
+
+    let mut file_ids: Vec<Vec<FileId>> = Vec::with_capacity(nranks);
+    for rec in recs.iter_mut() {
+        let ids: Vec<FileId> = (0..params.files)
+            .map(|fx| rec.open(&mut fabric, &format!("/trace/synthetic.{fx}.dat")))
+            .collect();
+        file_ids.push(ids);
+    }
+
+    let payload = vec![0u8; params.s as usize];
+    let shuffle = params.write_shuffle();
+    for w in 0..params.n_writers() {
+        for i in 0..params.m_w {
+            let (fx, off) = params.locate(params.write_offset_at(&shuffle, w, i));
+            recs[w]
+                .write_at(&mut fabric, file_ids[w][fx], off, &payload)
+                .expect("recording write");
+        }
+        for fx in 0..params.files {
+            recs[w]
+                .end_write_phase(&mut fabric, file_ids[w][fx])
+                .expect("recording publish");
+        }
+    }
+
+    // Flush every client before the barrier so the scan for each rank's
+    // last event sees buffered data ops (models without phase sync ops
+    // record nothing at the phase switch).
+    for rec in recs.iter_mut() {
+        rec.flush();
+    }
+    let ranks: Vec<u32> = (0..nranks as u32).collect();
+    trace.barrier(&ranks);
+
+    if params.read_pattern.is_some() {
+        for r in 0..params.n_readers() {
+            let rank = params.n_writers() + r;
+            recs[rank].passed_barrier();
+            for fx in 0..params.files {
+                recs[rank]
+                    .begin_read_phase(&mut fabric, file_ids[rank][fx])
+                    .expect("recording acquire");
+            }
+            let mut rng = params.read_rng(r);
+            for i in 0..params.m_r {
+                let (fx, off) = params.locate(params.read_offset_at(r, i, &mut rng));
+                recs[rank]
+                    .read_at(&mut fabric, file_ids[rank][fx], Range::at(off, params.s))
+                    .expect("recording read");
+            }
+        }
+    }
+
+    drop(recs); // flushes every client's buffer
+    trace.finish()
+}
+
+/// A recording decorator over any consistency layer. Data ops are
+/// buffered locally and batched into the [`SharedTrace`] at sync points
+/// (sync-op records, barrier crossings, a full buffer, [`Self::flush`],
+/// drop), so per-op recording does not take the shared lock.
 pub struct RecordingFs<T: WorkloadFs> {
     pub inner: T,
     trace: SharedTrace,
     /// The layer's policy, cached for its trace-label fields.
     policy: SyncPolicy,
+    /// The client's rank, cached for the flush path.
+    rank: u32,
+    /// Buffered data ops awaiting a batched push (in issue order).
+    buf: Vec<(FileId, Access, Range)>,
     /// True right after a barrier: the next recorded op gets so-edges.
     after_barrier: bool,
 }
@@ -112,10 +229,13 @@ pub struct RecordingFs<T: WorkloadFs> {
 impl<T: WorkloadFs> RecordingFs<T> {
     pub fn new(inner: T, trace: SharedTrace) -> Self {
         let policy = inner.kind().policy();
+        let rank = inner.client_id();
         Self {
             inner,
             trace,
             policy,
+            rank,
+            buf: Vec::new(),
             after_barrier: false,
         }
     }
@@ -125,9 +245,38 @@ impl<T: WorkloadFs> RecordingFs<T> {
         self.after_barrier = true;
     }
 
+    /// Drain the data-op buffer into the shared trace (one lock take).
+    /// Call on every client before [`SharedTrace::barrier`] /
+    /// [`SharedTrace::finish`]; sync-op records and drop also flush.
+    pub fn flush(&mut self) {
+        self.trace.push_batch(self.rank, &mut self.buf);
+    }
+
+    fn record_data(&mut self, file: FileId, access: Access, range: Range) {
+        if self.after_barrier {
+            // The barrier's so-edges must attach to exactly this op, so
+            // it cannot ride the buffer.
+            self.record_now(file, |f| match access {
+                Access::Write => StorageOp::write(f, range),
+                Access::Read => StorageOp::read(f, range),
+            });
+            return;
+        }
+        self.buf.push((file, access, range));
+        if self.buf.len() >= RECORD_BUF_CAP {
+            self.flush();
+        }
+    }
+
     fn record(&mut self, file: FileId, mk: impl FnOnce(u32) -> StorageOp) {
-        let rank = self.inner.client_id();
-        let id = self.trace.push(rank, file, mk);
+        self.record_now(file, mk);
+    }
+
+    /// Push one op immediately, after flushing the buffer so the rank's
+    /// program order is preserved in the trace.
+    fn record_now(&mut self, file: FileId, mk: impl FnOnce(u32) -> StorageOp) {
+        self.flush();
+        let id = self.trace.push(self.rank, file, mk);
         if self.after_barrier {
             self.trace.flush_barrier_edges(id);
             self.after_barrier = false;
@@ -140,6 +289,12 @@ impl<T: WorkloadFs> RecordingFs<T> {
         } else {
             self.policy.begin_read_sync
         }
+    }
+}
+
+impl<T: WorkloadFs> Drop for RecordingFs<T> {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -178,7 +333,7 @@ impl<T: WorkloadFs> WorkloadFs for RecordingFs<T> {
         buf: &[u8],
     ) -> Result<usize, BfsError> {
         let n = self.inner.write_at(fabric, file, offset, buf)?;
-        self.record(file, |f| StorageOp::write(f, Range::at(offset, n as u64)));
+        self.record_data(file, Access::Write, Range::at(offset, n as u64));
         Ok(n)
     }
 
@@ -189,7 +344,7 @@ impl<T: WorkloadFs> WorkloadFs for RecordingFs<T> {
         range: Range,
     ) -> Result<Vec<u8>, BfsError> {
         let out = self.inner.read_at(fabric, file, range)?;
-        self.record(file, |f| StorageOp::read(f, range));
+        self.record_data(file, Access::Read, range);
         Ok(out)
     }
 
@@ -239,6 +394,8 @@ mod tests {
         r.begin_read_phase(&mut fabric, f).unwrap();
         let _ = r.read_at(&mut fabric, f, Range::new(0, 64)).unwrap();
 
+        drop(w);
+        drop(r); // drop flushes each client's data-op buffer
         let t = trace.finish();
         assert!(race::race_free(&t, &ConsistencyModel::commit()).unwrap());
         // But NOT under session (no session ops in the trace).
@@ -263,6 +420,8 @@ mod tests {
         r.begin_read_phase(&mut fabric, f).unwrap();
         let _ = r.read_at(&mut fabric, f, Range::new(0, 64)).unwrap();
 
+        drop(w);
+        drop(r);
         let t = trace.finish();
         let rep = race::detect(&t, &ConsistencyModel::commit()).unwrap();
         assert_eq!(rep.races.len(), 1, "unordered conflicting pair must race");
@@ -285,9 +444,38 @@ mod tests {
         r.begin_read_phase(&mut fabric, f).unwrap(); // session_open
         let _ = r.read_at(&mut fabric, f, Range::new(0, 32)).unwrap();
 
+        drop(w);
+        drop(r);
         let t = trace.finish();
         assert!(race::race_free(&t, &ConsistencyModel::session()).unwrap());
         assert!(race::race_free(&t, &ConsistencyModel::posix()).unwrap());
+    }
+
+    /// Buffered recording: a long run of data ops crosses the buffer
+    /// capacity, and the trace still holds every op in program order
+    /// after an explicit flush.
+    #[test]
+    fn buffered_recording_preserves_program_order() {
+        let mut fabric = TestFabric::new(1);
+        let trace = SharedTrace::new();
+        let mut a = RecordingFs::new(CommitFs::new(0, fabric.bb_of(0)), trace.clone());
+        let f = a.open(&mut fabric, "/buffered");
+        let n = RECORD_BUF_CAP + 5;
+        for i in 0..n {
+            a.write_at(&mut fabric, f, (i * 8) as u64, &[1u8; 8]).unwrap();
+        }
+        a.flush();
+        let t = trace.clone().finish();
+        let offsets: Vec<u64> = t
+            .events()
+            .iter()
+            .filter(|ev| ev.op.is_data())
+            .map(|ev| match ev.op {
+                StorageOp::Data { range, .. } => range.start,
+                StorageOp::Sync { .. } => unreachable!(),
+            })
+            .collect();
+        assert_eq!(offsets, (0..n as u64).map(|i| i * 8).collect::<Vec<_>>());
     }
 
     /// Disjoint writes never race regardless of synchronization.
@@ -301,6 +489,8 @@ mod tests {
         b.open(&mut fabric, "/disjoint");
         a.write_at(&mut fabric, f, 0, &[1u8; 10]).unwrap();
         b.write_at(&mut fabric, f, 10, &[2u8; 10]).unwrap();
+        drop(a);
+        drop(b);
         let t = trace.finish();
         for m in ConsistencyModel::table4() {
             assert!(race::race_free(&t, &m).unwrap(), "{}", m.name);

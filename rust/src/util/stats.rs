@@ -31,7 +31,7 @@ impl Samples {
     fn sorted(&self) -> &[f64] {
         self.sorted.get_or_init(|| {
             let mut s = self.values.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s.sort_by(f64::total_cmp);
             s
         })
     }

@@ -3,10 +3,11 @@
 //! scenario filter, per-cell seeds must be independent of execution
 //! order, and the wall-time sidecar must track the input order.
 //!
-//! The `perf_hotpath` family is the deliberate exception: its cells
-//! time the simulator itself with a wall clock, so they are excluded
-//! from the byte-identity property (and from the smoke sets used
-//! below) by construction.
+//! The `perf_hotpath` and `check_matrix` families are the deliberate
+//! exceptions: their cells time the simulator (or the race detector)
+//! itself with a wall clock, so they are excluded from the
+//! byte-identity property (and from the smoke sets used below) by
+//! construction.
 
 use pscnf::bench::{registry, run_matrix_timed, run_scenario, Kind, Scenario};
 use pscnf::fs::FsKind;
@@ -15,7 +16,9 @@ use pscnf::fs::FsKind;
 fn smoke_virtual() -> Vec<Scenario> {
     let v: Vec<Scenario> = registry()
         .into_iter()
-        .filter(|s| s.smoke && !matches!(s.kind, Kind::HotPath(_)))
+        .filter(|s| {
+            s.smoke && !matches!(s.kind, Kind::HotPath(_) | Kind::CheckMatrix { .. })
+        })
         .collect();
     assert!(v.len() >= 8, "smoke set unexpectedly small: {}", v.len());
     v
@@ -84,7 +87,7 @@ fn hotpath_cells_report_simulator_throughput() {
         .into_iter()
         .filter(|s| s.family == "perf_hotpath")
         .collect();
-    assert_eq!(cells.len(), 5, "expected the five hot-path cells");
+    assert_eq!(cells.len(), 6, "expected the six hot-path cells");
     // One ns/op cell and the gated fig4cell events/s cell actually run.
     let mut attach = cells
         .iter()

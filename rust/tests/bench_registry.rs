@@ -58,6 +58,18 @@ fn every_smoke_cell_runs_with_finite_nonzero_bandwidth() {
             );
             continue;
         }
+        if matches!(sc.kind, Kind::CheckMatrix { .. }) {
+            // Wall-clock detector cells report ops checked per second.
+            let ops = rec
+                .metric_value("ops_checked_per_sec")
+                .unwrap_or_else(|| panic!("check_matrix cell {} emitted no metric", sc.id));
+            assert!(
+                ops.is_finite() && ops > 0.0,
+                "check_matrix cell {} produced {ops}",
+                sc.id
+            );
+            continue;
+        }
         let bw = rec
             .metric_value("bw")
             .unwrap_or_else(|| panic!("scenario {} emitted no bw metric", sc.id));

@@ -279,6 +279,58 @@ fn replay_models_reconverge_across_shard_counts() {
     }
 }
 
+/// The formal durability predicate (`model::stale_reads`) must agree
+/// with the simulated obligation split on the same workload shape: a
+/// formal trace of the Recovery driver — writers fill disjoint blocks,
+/// the plane crashes at the barrier, readers then sweep every block —
+/// flags every cross-rank post-crash read under a permitted-stale
+/// model and nothing at all under a replay-to-SC model.
+#[test]
+fn stale_read_predicate_matches_obligation_split() {
+    use pscnf::model::{stale_reads, StorageOp, Trace};
+    let (conf_repl, conf_stale) = register_config_models();
+    let (m, size, n_writers) = (3usize, 1u64 << 10, 2u32);
+    let blocks = n_writers as usize * m;
+    let mut t = Trace::new();
+    for w in 0..n_writers {
+        for i in 0..m {
+            let block = w as usize * m + i;
+            t.push(w, StorageOp::write(0, Range::at(block as u64 * size, size)));
+        }
+    }
+    // The outage window ends exactly at the barrier: everything above is
+    // pre-crash, every read below post-crash.
+    let crash_after = t.len() - 1;
+    for r in 0..2u32 {
+        for i in 0..blocks {
+            let block = (r as usize + i) % blocks;
+            t.push(n_writers + r, StorageOp::read(0, Range::at(block as u64 * size, size)));
+        }
+    }
+
+    for kind in [FsKind::EVENTUAL, FsKind::CTO, conf_stale] {
+        let flagged = stale_reads(&t, crash_after, kind.recovery_obligation());
+        assert_eq!(
+            flagged.len(),
+            2 * blocks,
+            "{}: every post-crash read overlaps another rank's pre-crash write",
+            kind.name()
+        );
+        assert!(
+            flagged.iter().all(|s| s.read > crash_after && s.write <= crash_after),
+            "{}: stale pairs must straddle the crash boundary",
+            kind.name()
+        );
+    }
+    for kind in [FsKind::POSIX, FsKind::COMMIT, FsKind::SESSION, FsKind::MPIIO, conf_repl] {
+        assert!(
+            stale_reads(&t, crash_after, kind.recovery_obligation()).is_empty(),
+            "{}: replay-to-SC recovery leaves nothing stale",
+            kind.name()
+        );
+    }
+}
+
 #[test]
 fn obligation_split_matches_the_model_semantics() {
     // The relaxed extensions — and only they, among the built-ins — are

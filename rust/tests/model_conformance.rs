@@ -37,11 +37,18 @@ fn two_phase_recorded(kind: FsKind) -> (bool, Vec<u8>) {
 
     w.write_at(&mut fabric, f, 0, &payload).unwrap();
     w.end_write_phase(&mut fabric, f).unwrap();
+    // Clients buffer data ops; flush so the barrier scan sees each
+    // rank's true last event (models without an end-write sync op
+    // record nothing at the phase switch).
+    w.flush();
+    r.flush();
     trace.barrier(&[0, 1]);
     r.passed_barrier();
     r.begin_read_phase(&mut fabric, f).unwrap();
     let got = r.read_at(&mut fabric, f, Range::new(0, 64)).unwrap();
 
+    drop(w);
+    drop(r);
     let t = trace.finish();
     let rf = race::race_free(&t, &kind.model()).expect("acyclic");
     (rf, got)
@@ -102,9 +109,13 @@ fn eventual_close_certifies_and_publishes() {
     r.open(&mut fabric, "/conf/eventual.dat");
     w.write_at(&mut fabric, f, 0, &[0x5Au8; 32]).unwrap();
     w.close(&mut fabric, f).unwrap();
+    w.flush();
+    r.flush();
     trace.barrier(&[0, 1]);
     r.passed_barrier();
     let got = r.read_at(&mut fabric, f, Range::new(0, 32)).unwrap();
+    drop(w);
+    drop(r);
     let t = trace.finish();
     assert!(race::race_free(&t, &kind.model()).unwrap());
     assert_eq!(got, vec![0x5Au8; 32]);
@@ -122,6 +133,7 @@ fn mpiio_close_open_msc_certifies() {
     let f = w.open(&mut fabric, "/conf/mpiio.dat");
     w.write_at(&mut fabric, f, 0, &[7u8; 16]).unwrap();
     w.close(&mut fabric, f).unwrap();
+    w.flush();
     trace.barrier(&[0]);
     // Reader constructed AFTER the close: its MPI_File_open lands
     // post-barrier.
@@ -129,6 +141,8 @@ fn mpiio_close_open_msc_certifies() {
     r.passed_barrier();
     let rf = r.open(&mut fabric, "/conf/mpiio.dat");
     let got = r.read_at(&mut fabric, rf, Range::new(0, 16)).unwrap();
+    drop(w);
+    drop(r);
     let t = trace.finish();
     assert!(race::race_free(&t, &kind.model()).unwrap());
     assert_eq!(got, vec![7u8; 16]);
@@ -147,6 +161,8 @@ fn unsynchronized_conflict_races_under_every_registered_model() {
     r.open(&mut fabric, "/conf/racy.dat");
     w.write_at(&mut fabric, f, 0, &[1u8; 8]).unwrap();
     let _ = r.read_at(&mut fabric, f, Range::new(0, 8)).unwrap();
+    drop(w);
+    drop(r);
     let t = trace.finish();
     for kind in FsKind::registered() {
         assert!(
