@@ -10,17 +10,21 @@
 use super::client::{BfsError, Fabric};
 use super::proto::{shard_of, ClientId, FileId, Request, Response};
 use super::server::MetadataPlane;
-use super::store::{new_shared_bb, SharedBb, UpfsStore};
+use super::store::{new_shared_bb, ReplLog, SharedBb, UpfsStore};
 use crate::interval::Range;
-use crate::sim::{FaultAction, FaultEvent, FaultTarget, NodeMap, Ns, SimOp};
+use crate::sim::{
+    BackoffConfig, FaultAction, FaultEvent, FaultTarget, NodeMap, Ns, ReplicaParams, SimOp,
+};
 use crate::util::hash::FxHashMap;
 use std::collections::VecDeque;
 
-/// Bounded-backoff quantum priced per retry when a client's RPC finds
-/// its metadata shard down, or its lease fenced by a shard restart.
-/// One deterministic quantum per event — the "bounded" part of "retry
-/// with bounded backoff" (DESIGN.md §Faults).
-pub const RETRY_BACKOFF_NS: Ns = 100_000;
+/// The first-retry backoff quantum priced when a client's RPC finds its
+/// metadata shard down, or its lease fenced by a shard restart. Equal
+/// to [`BackoffConfig::default`]'s `base`, so the default retry
+/// sequence starts byte-identical to the historical fixed-quantum
+/// pricing; later consecutive retries grow exponentially up to the
+/// configured cap (DESIGN.md §Faults).
+pub const RETRY_BACKOFF_NS: Ns = Ns(100_000);
 
 /// Cumulative traffic counters (per fabric; reporting).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -50,6 +54,18 @@ pub struct FabricCounters {
     /// RPCs that found their shard down and priced a bounded-backoff
     /// retry before being queued for the reconnect.
     pub downtime_retries: u64,
+    /// Bytes the primary acked that had reached **no** replica when a
+    /// shard kill wiped it — the run's durability loss. Always zero
+    /// under a `sync` or `local_plus_one` ack (those modes never ack
+    /// ahead of the first replica) and when replication is off (no
+    /// durability plane, nothing was promised).
+    pub lost_bytes: u64,
+    /// Reads served by the most-caught-up replica while their primary
+    /// shard was down (graceful degradation).
+    pub failover_reads: u64,
+    /// High-water mark of a single replica's backlog of acked-but-
+    /// unshipped bytes — the peak replication lag.
+    pub repl_lag_bytes: u64,
 }
 
 impl FabricCounters {
@@ -84,10 +100,30 @@ struct FaultState {
     /// whether a shard restart re-attaches every surviving client
     /// interval (see `model::RecoveryObligation`).
     replay: bool,
+    /// Retry pricing: capped exponential backoff + max-retry bound.
+    backoff: BackoffConfig,
     /// (client, shard) → epoch of the lease the client last held.
     /// Absent = the client has never contacted the shard; its first
     /// RPC acquires a lease at the current epoch for free.
     leases: FxHashMap<(ClientId, usize), u64>,
+    /// (client, shard) → consecutive downtime retries priced against
+    /// the shard; reset the first time the shard answers again.
+    retries: FxHashMap<(ClientId, usize), u32>,
+}
+
+/// The durability plane's fabric-side state (see DESIGN.md
+/// §Replication). Boxed behind an `Option` like [`FaultState`], so
+/// replication-off runs stay bit-identical to the single-copy fabric.
+struct ReplState {
+    params: ReplicaParams,
+    /// Replicas a publishing mutation must reach before it acks
+    /// (`WriteAck::acked_replicas` of the run's ack mode); the rest
+    /// catch up through the background log.
+    acked: usize,
+    /// Pending background replication, per (shard, tier).
+    log: ReplLog,
+    /// The driver-supplied virtual clock (see [`DesFabric::set_now`]).
+    now: Ns,
 }
 
 /// The DES fabric.
@@ -112,6 +148,9 @@ pub struct DesFabric {
     /// Fault-aware mode ([`Self::enable_faults`]); `None` = healthy
     /// fabric, bit-for-bit today's behavior.
     faults: Option<Box<FaultState>>,
+    /// Durability plane ([`Self::enable_replication`]); `None` =
+    /// single-copy fabric, bit-for-bit today's behavior.
+    repl: Option<Box<ReplState>>,
     pub counters: FabricCounters,
 }
 
@@ -164,6 +203,7 @@ impl DesFabric {
             shard_touched: Vec::new(),
             mem_reads: false,
             faults: None,
+            repl: None,
             counters: FabricCounters::default(),
         }
     }
@@ -205,9 +245,19 @@ impl DesFabric {
     /// fault-aware run prices bit-for-bit like a healthy one: lease
     /// acquisition piggybacks on each client's first RPC to a shard.
     pub fn enable_faults(&mut self, replay: bool) {
+        self.enable_faults_with(replay, BackoffConfig::default());
+    }
+
+    /// [`Self::enable_faults`] with an explicit retry-pricing config
+    /// (`[faults] backoff_base / backoff_cap / max_retries`). The
+    /// default config's first retry equals the historical fixed
+    /// quantum, so single-retry runs price byte-identically.
+    pub fn enable_faults_with(&mut self, replay: bool, backoff: BackoffConfig) {
         self.faults = Some(Box::new(FaultState {
             replay,
+            backoff,
             leases: FxHashMap::default(),
+            retries: FxHashMap::default(),
         }));
     }
 
@@ -216,15 +266,161 @@ impl DesFabric {
         self.faults.is_some()
     }
 
+    /// Attach a replica set to every metadata shard and start pricing
+    /// the durability plane: each publishing mutation reaches `acked`
+    /// replicas before its ack returns (`WriteAck::acked_replicas` of
+    /// the run's ack mode), the rest catch up through a priced
+    /// background log, and reads fail over to the most-caught-up
+    /// replica while their primary is down. Call before any metadata
+    /// state exists — replicas start empty.
+    pub fn enable_replication(&mut self, params: ReplicaParams, acked: usize) {
+        assert!(params.replicas > 0, "replication needs at least one replica");
+        self.server.enable_replicas(params.replicas);
+        let shards = self.server.shard_count();
+        self.repl = Some(Box::new(ReplState {
+            acked: acked.min(params.replicas),
+            log: ReplLog::new(shards, params.replicas),
+            params,
+            now: Ns::ZERO,
+        }));
+    }
+
+    /// Whether [`Self::enable_replication`] was called.
+    pub fn replication_enabled(&self) -> bool {
+        self.repl.is_some()
+    }
+
+    /// Advance the durability plane's virtual clock and apply every
+    /// background-log item that has landed by `now`. Drivers call this
+    /// at the top of `next_ops` — the engine invokes drivers at the
+    /// serialized commit point in global time order, so the landing
+    /// order is identical for any engine thread count. Monotone: a
+    /// stale `now` (possible only if a caller mixes clocks) is ignored.
+    pub fn set_now(&mut self, now: Ns) {
+        let Some(mut rs) = self.repl.take() else {
+            return;
+        };
+        if now > rs.now {
+            rs.now = now;
+        }
+        for (shard, tier, req) in rs.log.drain_ready(rs.now) {
+            let _ = self.server.apply_to_replica(shard, tier, req);
+        }
+        self.repl = Some(rs);
+    }
+
+    /// The most-caught-up replica tier of `shard` — ties prefer the
+    /// nearest (lowest) tier, hence the strictly-greater scan.
+    fn best_replica(&self, shard: usize) -> usize {
+        let Some(rs) = self.repl.as_ref() else {
+            return 0;
+        };
+        let mut best = 0;
+        let mut best_handled = self.server.replica(shard, 0).requests_handled();
+        for tier in 1..rs.params.replicas {
+            let handled = self.server.replica(shard, tier).requests_handled();
+            if handled > best_handled {
+                best = tier;
+                best_handled = handled;
+            }
+        }
+        best
+    }
+
+    /// `Some(tier)` iff `req` should be served by a replica: the
+    /// durability plane is on, the primary is down, and the request is
+    /// a read (mutations must wait for the primary — replicas never
+    /// accept writes, so there is nothing to reconcile on restart).
+    fn failover_tier(&self, shard: usize, req: &Request) -> Option<usize> {
+        self.repl.as_ref()?;
+        if !self.server.shard_down(shard) {
+            return None;
+        }
+        let is_read = matches!(
+            req,
+            Request::Query { .. }
+                | Request::QueryFile { .. }
+                | Request::Revalidate { .. }
+                | Request::Stat { .. }
+        );
+        if !is_read {
+            return None;
+        }
+        Some(self.best_replica(shard))
+    }
+
+    /// Mirror one mutation across the replica set: tiers `0..acked`
+    /// apply synchronously (their ack round trip priced to `price_to`),
+    /// the rest ride the background log in commit order. `price_to =
+    /// None` for crash-driven mirrors — a crash sends no RPCs. Reads
+    /// pass through untouched.
+    fn replicate(&mut self, price_to: Option<ClientId>, shard: usize, req: Request) {
+        let Some(mut rs) = self.repl.take() else {
+            return;
+        };
+        let bytes = match &req {
+            Request::Attach { ranges, .. } => ranges.iter().map(|r| r.len()).sum::<u64>(),
+            Request::Detach { .. } | Request::DetachFile { .. } | Request::FlushNotify { .. } => 0,
+            _ => {
+                self.repl = Some(rs);
+                return;
+            }
+        };
+        for tier in 0..rs.acked {
+            let _ = self.server.apply_to_replica(shard, tier, req.clone());
+        }
+        if rs.acked > 0 {
+            if let Some(client) = price_to {
+                self.push_cost(client, SimOp::Compute(rs.params.ack_delay(rs.acked, bytes)));
+            }
+        }
+        if rs.acked < rs.params.replicas {
+            let seq = rs.log.next_seq(shard);
+            for tier in rs.acked..rs.params.replicas {
+                rs.log.enqueue(
+                    shard,
+                    tier,
+                    seq,
+                    rs.now,
+                    rs.params.delay(tier, bytes),
+                    bytes,
+                    req.clone(),
+                );
+            }
+            let lag = rs.log.peak_lag_bytes();
+            if lag > self.counters.repl_lag_bytes {
+                self.counters.repl_lag_bytes = lag;
+            }
+        }
+        self.repl = Some(rs);
+    }
+
     /// Apply one scheduled fault to the functional state and queue its
     /// recovery costs. Drivers call this from [`crate::sim::Driver::on_fault`],
     /// which the engine invokes at the serialized commit point — so the
     /// perturbation lands identically for any engine thread count.
     pub fn apply_fault(&mut self, ev: &FaultEvent) {
         match (ev.target, ev.action) {
-            (FaultTarget::Shard(s), FaultAction::Kill) => self.server.kill_shard(s),
+            (FaultTarget::Shard(s), FaultAction::Kill) => {
+                // Ship whatever background replication had landed by
+                // the kill instant, then count what was still in
+                // flight toward *every* tier as durability loss.
+                self.set_now(ev.at);
+                self.server.kill_shard(s);
+                if let Some(rs) = self.repl.as_mut() {
+                    self.counters.lost_bytes += rs.log.drop_shard(s);
+                }
+            }
             (FaultTarget::Shard(s), FaultAction::Restart) => {
+                self.set_now(ev.at);
                 self.server.restart_shard(s);
+                if self.repl.is_some() {
+                    // The durability plane survives the wipe: restore
+                    // the primary from its most-caught-up replica
+                    // before the lease-fence recovery runs.
+                    let best = self.best_replica(s);
+                    self.server.restore_shard_from_replica(s, best);
+                }
                 self.recover_shard(s);
             }
             (FaultTarget::Client(c), FaultAction::Kill) => self.kill_client(c as ClientId),
@@ -247,11 +443,22 @@ impl DesFabric {
             bb.files.clear();
             files
         };
-        for file in files {
+        for &file in &files {
             let _ = self.server.handle(Request::DetachFile { file, client });
+        }
+        if self.repl.is_some() {
+            // The lease expiry must reach the replicas too, or a later
+            // failover read would advertise the dead client's buffers.
+            // Unpriced (a crash sends no RPCs), but routed through the
+            // background log so it stays FIFO with pending mirrors.
+            for &file in &files {
+                let shard = self.server.shard_index(file);
+                self.replicate(None, shard, Request::DetachFile { file, client });
+            }
         }
         if let Some(st) = self.faults.as_mut() {
             st.leases.retain(|&(c, _), _| c != client);
+            st.retries.retain(|&(c, _), _| c != client);
         }
     }
 
@@ -280,7 +487,7 @@ impl DesFabric {
             self.counters.fenced_rpcs += 1;
             self.counters.rpcs += 2;
             self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
-            self.push_cost(client, SimOp::Compute(RETRY_BACKOFF_NS));
+            self.push_cost(client, SimOp::Compute(st.backoff.delay(0)));
             self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
             if !st.replay {
                 continue;
@@ -322,18 +529,33 @@ impl DesFabric {
     /// Bring `client`'s lease on `shard` current, pricing downtime
     /// backoff and (if the lease went stale between restarts — the
     /// lazy complement of [`Self::recover_shard`]) the fence/reacquire
-    /// sequence. After this returns the client's next request to the
-    /// shard carries the current epoch.
-    fn sync_lease(&mut self, client: ClientId, shard: usize) -> u64 {
+    /// sequence. After `Ok`, the client's next request to the shard
+    /// carries the current epoch. `Err` means the retry budget against
+    /// a down shard is exhausted — the RPC never leaves the node and
+    /// the caller must surface the error response unpriced.
+    fn sync_lease(&mut self, client: ClientId, shard: usize) -> Result<u64, Response> {
         let Some(mut st) = self.faults.take() else {
-            return 0;
+            return Ok(0);
         };
         if self.server.shard_down(shard) {
             // Queued-at-reconnect downtime: the request keeps being
-            // retried with bounded backoff until the shard returns;
-            // functionally it lands on the post-restart (wiped) state.
+            // retried with capped exponential backoff until the shard
+            // returns (functionally it lands on the post-restart wiped
+            // state) — or until the retry budget runs out.
+            let k = st.retries.entry((client, shard)).or_insert(0);
+            if *k >= st.backoff.max_retries {
+                let retries = *k;
+                self.faults = Some(st);
+                return Err(Response::Error(format!(
+                    "shard {shard} unreachable after {retries} retries"
+                )));
+            }
             self.counters.downtime_retries += 1;
-            self.push_cost(client, SimOp::Compute(RETRY_BACKOFF_NS));
+            self.push_cost(client, SimOp::Compute(st.backoff.delay(*k)));
+            *k += 1;
+        } else {
+            // The shard answered: the consecutive-retry ladder resets.
+            st.retries.remove(&(client, shard));
         }
         let epoch = self.server.shard_epoch(shard);
         match st.leases.entry((client, shard)) {
@@ -342,7 +564,7 @@ impl DesFabric {
                     self.counters.fenced_rpcs += 1;
                     self.counters.rpcs += 2;
                     self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
-                    self.push_cost(client, SimOp::Compute(RETRY_BACKOFF_NS));
+                    self.push_cost(client, SimOp::Compute(st.backoff.delay(0)));
                     self.push_cost(client, SimOp::Rpc { intervals: 0, shard });
                     *e.get_mut() = epoch;
                 }
@@ -353,7 +575,7 @@ impl DesFabric {
             }
         }
         self.faults = Some(st);
-        epoch
+        Ok(epoch)
     }
 }
 
@@ -362,11 +584,47 @@ impl Fabric for DesFabric {
         let shard = self.server.shard_index(req.file());
         let req_units = req.interval_units();
         let is_revalidate = matches!(req, Request::Revalidate { .. });
+        // Failover: while the primary is down, reads are served by the
+        // most-caught-up replica — priced as that tier's extra RTT on
+        // top of the round trip — instead of queueing for reconnect.
+        if let Some(tier) = self.failover_tier(shard, &req) {
+            let rtt = self
+                .repl
+                .as_ref()
+                .expect("failover implies replication")
+                .params
+                .delay(tier, 0);
+            self.counters.failover_reads += 1;
+            self.push_cost(client, SimOp::Compute(rtt));
+            let resp = self.server.handle_on_replica(shard, tier, req);
+            let units = req_units.max(resp.interval_units());
+            self.counters.rpcs += 1;
+            self.counters.rpc_intervals += units as u64;
+            self.counters.count_revalidate(is_revalidate, &resp);
+            self.push_cost(
+                client,
+                SimOp::Rpc {
+                    intervals: units,
+                    shard,
+                },
+            );
+            return resp;
+        }
+        let mirror = if self.repl.is_some() {
+            Some(req.clone())
+        } else {
+            None
+        };
         let resp = if self.faults.is_some() {
             // Fault-aware path: settle the lease (pricing any fence /
             // downtime retries), then issue with the current epoch so
             // the plane's fence check stays on the wire.
-            let epoch = self.sync_lease(client, shard);
+            let epoch = match self.sync_lease(client, shard) {
+                Ok(epoch) => epoch,
+                // Retry budget exhausted: the RPC never left the node —
+                // nothing handled, nothing mirrored, nothing priced.
+                Err(resp) => return resp,
+            };
             let resp = self.server.handle_leased(epoch, req);
             debug_assert!(
                 !matches!(resp, Response::Fenced { .. }),
@@ -389,6 +647,11 @@ impl Fabric for DesFabric {
                 shard,
             },
         );
+        if let Some(m) = mirror {
+            if !matches!(resp, Response::Error(_)) {
+                self.replicate(Some(client), shard, m);
+            }
+        }
         resp
     }
 
@@ -399,16 +662,23 @@ impl Fabric for DesFabric {
     fn rpc_batch(&mut self, client: ClientId, reqs: Vec<Request>) -> Vec<Response> {
         let shards = self.server.shard_count();
         let leased = self.faults.is_some();
+        // Per-shard lease failure (retry budget exhausted): requests
+        // routed there are answered with the error and never priced.
+        let mut lease_err: Vec<Option<Response>> = vec![None; shards];
         if leased {
             // Settle every involved shard's lease up front (one fence
             // round per shard per batch, like a real reconnect), so the
             // coalesced pricing below is untouched by fault mode.
+            // Requests that will fail over to a replica skip the lease:
+            // they never contact the primary.
             let mut synced = vec![false; shards];
             for req in &reqs {
                 let s = self.server.shard_index(req.file());
-                if !synced[s] {
+                if !synced[s] && self.failover_tier(s, req).is_none() {
                     synced[s] = true;
-                    self.sync_lease(client, s);
+                    if let Err(e) = self.sync_lease(client, s) {
+                        lease_err[s] = Some(e);
+                    }
                 }
             }
         }
@@ -425,6 +695,33 @@ impl Fabric for DesFabric {
             let shard = self.server.shard_index(req.file());
             let req_units = req.interval_units();
             let is_revalidate = matches!(req, Request::Revalidate { .. });
+            // Failover reads in a batch price and route like their
+            // single-RPC siblings (replica RTT + one coalesced Rpc).
+            if let Some(tier) = self.failover_tier(shard, &req) {
+                let rtt = self
+                    .repl
+                    .as_ref()
+                    .expect("failover implies replication")
+                    .params
+                    .delay(tier, 0);
+                self.counters.failover_reads += 1;
+                self.push_cost(client, SimOp::Compute(rtt));
+                let resp = self.server.handle_on_replica(shard, tier, req);
+                units_of[shard] += req_units.max(resp.interval_units());
+                touched[shard] = true;
+                self.counters.count_revalidate(is_revalidate, &resp);
+                out.push(resp);
+                continue;
+            }
+            if let Some(e) = &lease_err[shard] {
+                out.push(e.clone());
+                continue;
+            }
+            let mirror = if self.repl.is_some() {
+                Some(req.clone())
+            } else {
+                None
+            };
             let resp = if leased {
                 self.server
                     .handle_leased(self.server.shard_epoch(shard), req)
@@ -434,6 +731,11 @@ impl Fabric for DesFabric {
             units_of[shard] += req_units.max(resp.interval_units());
             touched[shard] = true;
             self.counters.count_revalidate(is_revalidate, &resp);
+            if let Some(m) = mirror {
+                if !matches!(resp, Response::Error(_)) {
+                    self.replicate(Some(client), shard, m);
+                }
+            }
             out.push(resp);
         }
         for (shard, &units) in units_of.iter().enumerate() {
@@ -1002,6 +1304,185 @@ mod tests {
         assert_eq!(f.pop_cost(0), Some(SimOp::Compute(RETRY_BACKOFF_NS)));
         assert!(matches!(f.pop_cost(0), Some(SimOp::Rpc { .. })));
         assert_eq!(f.pop_cost(0), None);
+        // The config-driven ladder starts at the historical quantum, so
+        // default single-retry runs price byte-identically.
+        assert_eq!(BackoffConfig::default().delay(0), RETRY_BACKOFF_NS);
+    }
+
+    #[test]
+    fn downtime_retries_grow_cap_and_reset() {
+        let mut f = DesFabric::new(vec![0]);
+        f.enable_faults_with(
+            true,
+            BackoffConfig {
+                base: Ns(100_000),
+                cap: Ns(400_000),
+                max_retries: 100,
+            },
+        );
+        let mut c = ClientCore::new(0, f.bb_of(0));
+        let fid = c.open("/ladder");
+        c.write(&mut f, fid, b"zz").unwrap();
+        c.attach_file(&mut f, fid).unwrap();
+        while f.pop_cost(0).is_some() {}
+        f.apply_fault(&fault(0, FaultTarget::Shard(0), FaultAction::Kill));
+        let mut delays = Vec::new();
+        for _ in 0..4 {
+            let _ = c.query(&mut f, fid, 0, 2).unwrap();
+            match f.pop_cost(0) {
+                Some(SimOp::Compute(d)) => delays.push(d),
+                other => panic!("expected a backoff compute, got {other:?}"),
+            }
+            assert!(matches!(f.pop_cost(0), Some(SimOp::Rpc { .. })));
+        }
+        assert_eq!(
+            delays,
+            vec![Ns(100_000), Ns(200_000), Ns(400_000), Ns(400_000)],
+            "consecutive retries double up to the cap"
+        );
+        // The shard coming back resets the ladder for the next outage.
+        f.apply_fault(&fault(1, FaultTarget::Shard(0), FaultAction::Restart));
+        let _ = c.query(&mut f, fid, 0, 2).unwrap();
+        while f.pop_cost(0).is_some() {}
+        f.apply_fault(&fault(2, FaultTarget::Shard(0), FaultAction::Kill));
+        let _ = c.query(&mut f, fid, 0, 2).unwrap();
+        assert_eq!(f.pop_cost(0), Some(SimOp::Compute(Ns(100_000))));
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_surfaces_server_error() {
+        let mut f = DesFabric::new(vec![0]);
+        f.enable_faults_with(
+            true,
+            BackoffConfig {
+                base: Ns(100_000),
+                cap: Ns(100_000),
+                max_retries: 2,
+            },
+        );
+        let mut c = ClientCore::new(0, f.bb_of(0));
+        let fid = c.open("/budget");
+        c.write(&mut f, fid, b"zz").unwrap();
+        c.attach_file(&mut f, fid).unwrap();
+        while f.pop_cost(0).is_some() {}
+        f.apply_fault(&fault(0, FaultTarget::Shard(0), FaultAction::Kill));
+        assert!(c.query(&mut f, fid, 0, 2).is_ok());
+        assert!(c.query(&mut f, fid, 0, 2).is_ok());
+        let err = c.query(&mut f, fid, 0, 2).unwrap_err();
+        assert!(
+            matches!(err, BfsError::Server(ref m) if m.contains("unreachable")),
+            "expected a clean unreachable error, got {err:?}"
+        );
+        assert_eq!(f.counters.downtime_retries, 2);
+        // The exhausted attempt priced nothing — it never left the node.
+        while f.pop_cost(0).is_some() {}
+        let _ = c.query(&mut f, fid, 0, 2);
+        assert_eq!(f.pop_cost(0), None);
+    }
+
+    #[test]
+    fn sync_ack_survives_primary_kill_without_loss() {
+        let mut f = DesFabric::new(vec![0, 0]);
+        f.enable_faults(true);
+        f.enable_replication(ReplicaParams::near(), 2); // write_ack = sync
+        let mut w = ClientCore::new(0, f.bb_of(0));
+        let fid = w.open("/sync");
+        w.write(&mut f, fid, b"ABCDEFGH").unwrap();
+        w.attach_file(&mut f, fid).unwrap();
+        // The attach priced the replica-set ack on top of its Rpc.
+        assert!(matches!(f.pop_cost(0), Some(SimOp::SsdWrite { .. })));
+        assert!(matches!(f.pop_cost(0), Some(SimOp::Rpc { .. })));
+        assert!(matches!(f.pop_cost(0), Some(SimOp::Compute(d)) if d > Ns::ZERO));
+        f.apply_fault(&fault(0, FaultTarget::Shard(0), FaultAction::Kill));
+        assert_eq!(f.counters.lost_bytes, 0, "sync ack never loses bytes");
+        // Reads fail over to the replica during the outage.
+        let mut r = ClientCore::new(1, f.bb_of(1));
+        r.open("/sync");
+        let ivs = r.query(&mut f, fid, 0, 8).unwrap();
+        assert_eq!(ivs.len(), 1);
+        assert_eq!(ivs[0].owner, 0);
+        assert_eq!(f.counters.failover_reads, 1);
+        let got = r.read_at(&mut f, fid, Range::new(0, 8), Some(0)).unwrap();
+        assert_eq!(got, b"ABCDEFGH");
+    }
+
+    #[test]
+    fn local_only_ack_loses_unreplicated_bytes_on_kill() {
+        let mut f = DesFabric::new(vec![0, 0]);
+        f.enable_faults(false);
+        f.enable_replication(ReplicaParams::near(), 0); // write_ack = local_only
+        let mut w = ClientCore::new(0, f.bb_of(0));
+        let fid = w.open("/lossy");
+        w.write(&mut f, fid, b"ABCDEFGH").unwrap();
+        w.attach_file(&mut f, fid).unwrap();
+        // Kill at t=0: the background log has shipped nothing yet, so
+        // the acked attach dies with the primary.
+        f.apply_fault(&fault(0, FaultTarget::Shard(0), FaultAction::Kill));
+        assert_eq!(f.counters.lost_bytes, 8);
+        assert_eq!(f.counters.repl_lag_bytes, 8);
+        // Failover sees the pre-attach world: the durability gap is
+        // observable, which is exactly what the checker flags.
+        let mut r = ClientCore::new(1, f.bb_of(1));
+        r.open("/lossy");
+        assert!(r.query(&mut f, fid, 0, 8).unwrap().is_empty());
+        assert_eq!(f.counters.failover_reads, 1);
+    }
+
+    #[test]
+    fn restart_restores_primary_from_most_caught_up_replica() {
+        let mut f = DesFabric::new(vec![0, 0]);
+        f.enable_faults(false); // permitted-stale: no replay obligation
+        f.enable_replication(ReplicaParams::near(), 0);
+        let mut w = ClientCore::new(0, f.bb_of(0));
+        let fid = w.open("/restore");
+        w.write(&mut f, fid, b"ABCDEFGH").unwrap();
+        w.attach_file(&mut f, fid).unwrap();
+        // Let the background log land on both tiers, then lose the
+        // primary: nothing is lost, and the restart restores the map
+        // from a replica even without replay-to-SC.
+        f.set_now(Ns::from_millis(100));
+        f.apply_fault(&fault(100_000_001, FaultTarget::Shard(0), FaultAction::Kill));
+        assert_eq!(f.counters.lost_bytes, 0);
+        f.apply_fault(&fault(100_000_002, FaultTarget::Shard(0), FaultAction::Restart));
+        assert_eq!(f.counters.replayed_intervals, 0);
+        let mut r = ClientCore::new(1, f.bb_of(1));
+        r.open("/restore");
+        let ivs = r.query(&mut f, fid, 0, 8).unwrap();
+        assert_eq!(ivs.len(), 1, "replica state survived the crash");
+        assert_eq!(ivs[0].range, Range::new(0, 8));
+    }
+
+    #[test]
+    fn new_counters_stay_zero_without_replication() {
+        // With the durability plane off, the reworked lease/retry and
+        // mirror gating must stay pricing-neutral across fault modes,
+        // and every replication counter must read zero.
+        let run = |faulty: bool| {
+            let mut f = DesFabric::new_sharded(vec![0, 0], 4);
+            if faulty {
+                f.enable_faults(true);
+            }
+            let mut w = ClientCore::new(0, f.bb_of(0));
+            let mut r = ClientCore::new(1, f.bb_of(1));
+            let fid = w.open("/neutral-repl");
+            w.write(&mut f, fid, &vec![9u8; 128]).unwrap();
+            w.attach_file(&mut f, fid).unwrap();
+            r.open("/neutral-repl");
+            let ivs = r.query(&mut f, fid, 0, 128).unwrap();
+            let _ = r.read_at(&mut f, fid, ivs[0].range, Some(ivs[0].owner));
+            let mut ops = Vec::new();
+            for c in [0u32, 1] {
+                while let Some(op) = f.pop_cost(c) {
+                    ops.push((c, op));
+                }
+            }
+            (ops, f.counters)
+        };
+        assert_eq!(run(true), run(false));
+        let (_, counters) = run(true);
+        assert_eq!(counters.lost_bytes, 0);
+        assert_eq!(counters.failover_reads, 0);
+        assert_eq!(counters.repl_lag_bytes, 0);
     }
 
     #[test]

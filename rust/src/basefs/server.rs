@@ -12,7 +12,7 @@ use super::proto::{shard_of, FileId, Request, Response};
 use crate::interval::{DetachOutcome, GlobalIntervalTree, OwnedInterval};
 use crate::util::hash::FxHashMap;
 
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 struct FileEntry {
     tree: GlobalIntervalTree,
     attached_eof: u64,
@@ -218,6 +218,26 @@ impl GlobalServerState {
     pub fn total_intervals(&self) -> usize {
         self.files.values().map(|e| e.tree.len()).sum()
     }
+
+    /// Rebuild this (freshly restarted) shard's file map from a replica
+    /// copy. Every restored version is lifted above `version_floor` so
+    /// a snapshot cached before the crash can never revalidate as
+    /// `Current` against restored state — the same invariant
+    /// [`Self::restart`] enforces for replayed attaches. Epoch, downtime
+    /// flag and request counters are recovery-plane state, not data, and
+    /// are left untouched.
+    pub fn restore_from(&mut self, replica: &GlobalServerState) {
+        let floor = self.version_floor;
+        self.files = replica
+            .files
+            .iter()
+            .map(|(&file, e)| {
+                let mut e = e.clone();
+                e.version += floor;
+                (file, e)
+            })
+            .collect();
+    }
 }
 
 /// N independent metadata shards behind one shard-count-agnostic
@@ -227,6 +247,16 @@ impl GlobalServerState {
 #[derive(Debug)]
 pub struct MetadataPlane {
     shards: Vec<GlobalServerState>,
+    /// The durability plane: `replicas[shard][tier]` is a standby copy
+    /// of shard `shard` at geo-distance tier `tier` (DESIGN.md
+    /// §Replication). Empty until [`Self::enable_replicas`] — the
+    /// default plane is the single-copy pre-replication one. Replicas
+    /// never receive client RPCs directly; the fabric mirrors mutations
+    /// into them (immediately or as priced background replication
+    /// events) and routes failover reads at them while the primary is
+    /// down. A shard kill wipes only the primary: replicas model
+    /// independent failure domains.
+    replicas: Vec<Vec<GlobalServerState>>,
 }
 
 impl Default for MetadataPlane {
@@ -240,7 +270,51 @@ impl MetadataPlane {
         assert!(shards > 0, "MetadataPlane needs at least one shard");
         Self {
             shards: (0..shards).map(|_| GlobalServerState::new()).collect(),
+            replicas: Vec::new(),
         }
+    }
+
+    /// Attach `n` empty standby replicas to every shard. Idempotent for
+    /// the same `n`; must be called before any state exists (replicas
+    /// start empty, so pre-existing primary state would never reach
+    /// them).
+    pub fn enable_replicas(&mut self, n: usize) {
+        self.replicas = self
+            .shards
+            .iter()
+            .map(|_| (0..n).map(|_| GlobalServerState::new()).collect())
+            .collect();
+    }
+
+    /// Replicas per shard (0 = durability plane disabled).
+    pub fn replica_count(&self) -> usize {
+        self.replicas.first().map(|r| r.len()).unwrap_or(0)
+    }
+
+    /// Borrow one replica (failover reads route here via the fabric).
+    pub fn replica(&self, shard: usize, tier: usize) -> &GlobalServerState {
+        &self.replicas[shard][tier]
+    }
+
+    /// Apply one mirrored request to a replica — the arrival of a
+    /// replication event. The caller (fabric) decides *when*; this
+    /// method is the state transition only.
+    pub fn apply_to_replica(&mut self, shard: usize, tier: usize, req: Request) -> Response {
+        self.replicas[shard][tier].handle(req)
+    }
+
+    /// Serve a read on a replica while the primary is down (failover).
+    pub fn handle_on_replica(&mut self, shard: usize, tier: usize, req: Request) -> Response {
+        self.replicas[shard][tier].handle(req)
+    }
+
+    /// Rebuild a restarted shard's file map from replica `tier` (see
+    /// [`GlobalServerState::restore_from`]). Call after
+    /// [`Self::restart_shard`] so restored versions land above the new
+    /// version floor.
+    pub fn restore_shard_from_replica(&mut self, shard: usize, tier: usize) {
+        let replica = &self.replicas[shard][tier];
+        self.shards[shard].restore_from(replica);
     }
 
     pub fn shard_count(&self) -> usize {
@@ -632,6 +706,50 @@ mod tests {
         );
         assert!(matches!(
             plane.handle_leased(0, Request::QueryFile { file: on_1 }),
+            Response::Snapshot { .. }
+        ));
+    }
+
+    #[test]
+    fn replica_restore_survives_primary_kill_and_floors_versions() {
+        let mut plane = MetadataPlane::new(2);
+        plane.enable_replicas(2);
+        assert_eq!(plane.replica_count(), 2);
+        let file = (0..)
+            .map(|i| crate::basefs::proto::file_id(&format!("/r/{i}")))
+            .find(|&f| plane.shard_index(f) == 0)
+            .unwrap();
+        let att = Request::Attach {
+            file,
+            client: 1,
+            ranges: vec![Range::new(0, 64)],
+        };
+        plane.handle(att.clone());
+        // The fabric mirrors mutations; model it reaching tier 0 only
+        // (tier 1 lagging) before the crash.
+        plane.apply_to_replica(0, 0, att.clone());
+        assert_eq!(plane.replica(0, 0).intervals_of(file), 1);
+        assert_eq!(plane.replica(0, 1).intervals_of(file), 0);
+        plane.kill_shard(0);
+        assert_eq!(plane.intervals_of(file), 0, "primary wiped");
+        assert_eq!(
+            plane.replica(0, 0).intervals_of(file),
+            1,
+            "replica is an independent failure domain"
+        );
+        // Failover read serves the caught-up replica's map.
+        match plane.handle_on_replica(0, 0, Request::QueryFile { file }) {
+            Response::Snapshot { intervals, .. } => assert_eq!(intervals.len(), 1),
+            other => panic!("{other:?}"),
+        }
+        // Restart + restore: state is back and versions sit above the
+        // new floor, so pre-crash cached snapshots can never hit.
+        plane.restart_shard(0);
+        plane.restore_shard_from_replica(0, 0);
+        assert_eq!(plane.intervals_of(file), 1);
+        assert_eq!(plane.version_of(file), (1u64 << 32) + 1);
+        assert!(matches!(
+            plane.handle_leased(1, Request::Revalidate { file, version: 1 }),
             Response::Snapshot { .. }
         ));
     }

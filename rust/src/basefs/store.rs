@@ -3,9 +3,11 @@
 //! integration tests verify byte-exact read-back through every
 //! consistency layer.
 
-use super::proto::{ClientId, FileId};
+use super::proto::{ClientId, FileId, Request};
 use crate::interval::{LocalInterval, LocalIntervalTree, LocalTreeError, Range};
+use crate::sim::time::Ns;
 use crate::util::hash::FxHashMap;
+use std::collections::VecDeque;
 use std::sync::{Arc, RwLock};
 
 /// One client's buffered state for one PFS file: the BB cache file plus
@@ -343,6 +345,138 @@ impl UpfsStore {
     pub const UPFS_OWNER: ClientId = ClientId::MAX;
 }
 
+/// One acked-but-not-yet-replicated mutation in flight to a replica
+/// tier (see [`ReplLog`]).
+#[derive(Debug, Clone)]
+pub struct ReplItem {
+    /// Per-shard sequence number — the same mutation carries the same
+    /// seq on every tier's queue, which is how a kill decides whether a
+    /// mutation reached *any* replica.
+    pub seq: u64,
+    /// Simulated time the item lands on the replica.
+    pub ready_at: Ns,
+    /// Payload bytes the item carries (attach data; 0 for metadata-only
+    /// mutations like detach).
+    pub bytes: u64,
+    pub req: Request,
+}
+
+/// The background-replication log of the durability plane: one FIFO of
+/// pending [`ReplItem`]s per `(shard, tier)`, modelling a serial
+/// replication channel per replica. Lag is tracked per interval (bytes
+/// and items still pending per tier) so the bench can report
+/// `replication_lag`, and a shard kill computes `lost_bytes` — bytes
+/// acked by the primary that had reached **no** tier (pending on every
+/// queue) when the crash hit. All state is a pure function of the
+/// enqueue/drain call sequence, so runs stay deterministic for any
+/// engine thread count (calls happen at the serialized commit point).
+#[derive(Debug, Default)]
+pub struct ReplLog {
+    /// `queues[shard][tier]`, FIFO in ready_at order (per-queue delays
+    /// are enqueued serially, so ready_at is monotone per queue).
+    queues: Vec<Vec<VecDeque<ReplItem>>>,
+    next_seq: Vec<u64>,
+    /// High-water mark of any single tier's pending byte backlog.
+    peak_lag: u64,
+}
+
+impl ReplLog {
+    pub fn new(shards: usize, tiers: usize) -> Self {
+        Self {
+            queues: (0..shards)
+                .map(|_| (0..tiers).map(|_| VecDeque::new()).collect())
+                .collect(),
+            next_seq: vec![0; shards],
+            peak_lag: 0,
+        }
+    }
+
+    /// Claim the next mutation sequence number for `shard` (stamp every
+    /// tier's copy of one mutation with the same seq).
+    pub fn next_seq(&mut self, shard: usize) -> u64 {
+        let s = self.next_seq[shard];
+        self.next_seq[shard] = s + 1;
+        s
+    }
+
+    /// Enqueue one mutation copy on `(shard, tier)`: the serial channel
+    /// starts shipping it when the queue tail has drained, and it lands
+    /// `delay` later. Returns the item's `ready_at`.
+    pub fn enqueue(
+        &mut self,
+        shard: usize,
+        tier: usize,
+        seq: u64,
+        now: Ns,
+        delay: Ns,
+        bytes: u64,
+        req: Request,
+    ) -> Ns {
+        let q = &mut self.queues[shard][tier];
+        let start = q.back().map(|i| i.ready_at).unwrap_or(Ns::ZERO).max(now);
+        let ready_at = start + delay;
+        q.push_back(ReplItem {
+            seq,
+            ready_at,
+            bytes,
+            req,
+        });
+        let lag: u64 = q.iter().map(|i| i.bytes).sum();
+        self.peak_lag = self.peak_lag.max(lag);
+        ready_at
+    }
+
+    /// Pop every item that has landed by `now`, in (shard, tier, FIFO)
+    /// order — the caller applies each to its replica.
+    pub fn drain_ready(&mut self, now: Ns) -> Vec<(usize, usize, Request)> {
+        let mut out = Vec::new();
+        for (shard, tiers) in self.queues.iter_mut().enumerate() {
+            for (tier, q) in tiers.iter_mut().enumerate() {
+                while q.front().is_some_and(|i| i.ready_at <= now) {
+                    let item = q.pop_front().unwrap();
+                    out.push((shard, tier, item.req));
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes still pending toward `(shard, tier)` — the tier's current
+    /// replication lag.
+    pub fn pending_bytes(&self, shard: usize, tier: usize) -> u64 {
+        self.queues[shard][tier].iter().map(|i| i.bytes).sum()
+    }
+
+    /// Largest single-tier pending backlog ever observed.
+    pub fn peak_lag_bytes(&self) -> u64 {
+        self.peak_lag
+    }
+
+    /// The primary of `shard` died: its un-shipped log is gone. Returns
+    /// the **lost** bytes — those of mutations pending on *every* tier
+    /// (a mutation that reached even one replica survives and is
+    /// restorable), then clears the shard's queues.
+    pub fn drop_shard(&mut self, shard: usize) -> u64 {
+        let tiers = &mut self.queues[shard];
+        let lost = match tiers.first() {
+            None => 0,
+            Some(first) => first
+                .iter()
+                .filter(|i| {
+                    tiers[1..]
+                        .iter()
+                        .all(|q| q.iter().any(|j| j.seq == i.seq))
+                })
+                .map(|i| i.bytes)
+                .sum(),
+        };
+        for q in tiers.iter_mut() {
+            q.clear();
+        }
+        lost
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -496,6 +630,46 @@ mod tests {
         u.write(1, 4, b"xy");
         assert_eq!(u.len(1), 6);
         assert_eq!(u.read(1, Range::new(0, 8)), b"\0\0\0\0xy\0\0");
+    }
+
+    #[test]
+    fn repl_log_serial_channel_lag_and_loss() {
+        let att = |s| Request::Attach {
+            file: 1,
+            client: 1,
+            ranges: vec![Range::new(s, s + 64)],
+        };
+        let mut log = ReplLog::new(1, 2);
+        // Serial channel: the second item waits for the first.
+        let s0 = log.next_seq(0);
+        let r0 = log.enqueue(0, 0, s0, Ns(100), Ns(50), 64, att(0));
+        let r1 = log.enqueue(0, 0, log.next_seq(0), Ns(100), Ns(50), 64, att(64));
+        assert_eq!(r0, Ns(150));
+        assert_eq!(r1, Ns(200));
+        assert_eq!(log.pending_bytes(0, 0), 128);
+        assert_eq!(log.peak_lag_bytes(), 128);
+        // Drain is time-gated and FIFO.
+        assert!(log.drain_ready(Ns(149)).is_empty());
+        let applied = log.drain_ready(Ns(150));
+        assert_eq!(applied.len(), 1);
+        assert_eq!(log.pending_bytes(0, 0), 64);
+        assert_eq!(log.peak_lag_bytes(), 128, "peak is a high-water mark");
+
+        // Loss accounting: a mutation pending on EVERY tier is lost; one
+        // that reached any tier survives.
+        let mut log = ReplLog::new(1, 2);
+        let a = log.next_seq(0);
+        log.enqueue(0, 0, a, Ns::ZERO, Ns(10), 64, att(0));
+        log.enqueue(0, 1, a, Ns::ZERO, Ns(100), 64, att(0));
+        let b = log.next_seq(0);
+        log.enqueue(0, 0, b, Ns::ZERO, Ns(10), 32, att(64));
+        log.enqueue(0, 1, b, Ns::ZERO, Ns(100), 32, att(64));
+        // Tier 0 has applied `a` (drained); tier 1 still holds both.
+        let applied = log.drain_ready(Ns(10));
+        assert_eq!(applied.len(), 1);
+        assert_eq!(log.drop_shard(0), 32, "only `b` reached no replica");
+        assert_eq!(log.pending_bytes(0, 0), 0);
+        assert_eq!(log.pending_bytes(0, 1), 0);
     }
 
     #[test]

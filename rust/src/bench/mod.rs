@@ -311,6 +311,21 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
             s.faults = plan.clone();
         }
     }
+    if let Some(n) = run_args.replicas {
+        for s in scenarios.iter_mut() {
+            let mut params = s
+                .replication
+                .clone()
+                .unwrap_or_else(crate::sim::ReplicaParams::near);
+            params.replicas = n;
+            s.replication = Some(params);
+        }
+    }
+    if let Some(ack) = run_args.write_ack {
+        for s in scenarios.iter_mut() {
+            s.write_ack = Some(ack);
+        }
+    }
     let jobs = args.usize("jobs")?;
     if jobs == 0 {
         return Err("--jobs must be >= 1".to_string());

@@ -12,7 +12,8 @@
 
 use crate::config::Testbed;
 use crate::fs::FsKind;
-use crate::sim::{Dispatch, FaultPlan, Ns};
+use crate::model::WriteAck;
+use crate::sim::{Dispatch, FaultPlan, Ns, ReplicaParams};
 use crate::util::units::fmt_bytes;
 use crate::workload::{Config, Pattern};
 
@@ -58,6 +59,23 @@ pub enum Kind {
         access: u64,
         /// Kill-to-restart gap; the window is placed so the restart
         /// lands on the write barrier's release time.
+        downtime: Ns,
+    },
+    /// Durability-plane pricing (`ablate_replication`): the cell's
+    /// replica set (`Scenario::replication`) and ack override
+    /// (`Scenario::write_ack`) run the synthetic workload healthy once
+    /// to learn the write barrier, then rerun it with a whole-plane
+    /// kill ONE TICK before the barrier releases — so every publishing
+    /// attach was acked, background replication of the last publishers
+    /// is still in flight, and the acked-but-unreplicated bytes the
+    /// kill destroys land in `lost_bytes`. The restart waits `downtime`
+    /// PAST the barrier, so the read phase opens against a dead primary
+    /// and fails over to the most-caught-up replica (`failover_reads`).
+    Replication {
+        config: Config,
+        access: u64,
+        /// Post-barrier degraded-read window (restart = barrier +
+        /// downtime).
         downtime: Ns,
     },
     /// Wall-clock hot-path microbench (`perf_hotpath`): measures the
@@ -149,6 +167,13 @@ pub struct Scenario {
     /// `FaultMatrix` cells ignore it and derive their outage window
     /// from a healthy probe instead.
     pub faults: FaultPlan,
+    /// Durability plane: replica set per metadata shard (`None` =
+    /// single-copy). `--replicas` overrides it on every selected cell.
+    pub replication: Option<ReplicaParams>,
+    /// Override the model's `write_ack` axis for this cell (`None` =
+    /// the model's own); how `ablate_replication` sweeps ack modes
+    /// across built-ins. `--write-ack` overrides it on every cell.
+    pub write_ack: Option<WriteAck>,
     pub kind: Kind,
 }
 
@@ -194,6 +219,8 @@ fn base(family: &'static str, fs: FsKind, nodes: usize, ppn: usize, kind: Kind) 
         lazy: false,
         smoke: false,
         faults: FaultPlan::new(),
+        replication: None,
+        write_ack: None,
         kind,
     }
 }
@@ -656,6 +683,47 @@ pub fn registry() -> Vec<Scenario> {
         }
     }
 
+    // ablate_replication — the durability plane priced end to end:
+    // every registered model × ack mode × replica distance runs the
+    // CC-R barrier-straddling outage probe over a 2-replica set. The
+    // sweep separates the three costs the axis trades: ack latency
+    // (sync pays the full replica RTT per publish), exposure
+    // (local_only's in-flight mirrors die with the plane →
+    // `lost_bytes`), and degraded reads (the post-barrier window fails
+    // over to replicas → `failover_reads`). The commit × {local_only,
+    // sync} × {near, far} corner cells ride the gated CI smoke subset;
+    // config-defined models never do (absent from the CI baseline).
+    for fs in FsKind::registered() {
+        for ack in [WriteAck::LocalOnly, WriteAck::LocalPlusOne, WriteAck::Sync] {
+            for (params, dtag) in [(ReplicaParams::near(), "near"), (ReplicaParams::far(), "far")]
+            {
+                let mut sc = base(
+                    "ablate_replication",
+                    fs,
+                    2,
+                    2,
+                    Kind::Replication {
+                        config: Config::CcR,
+                        access: 8 << 10,
+                        downtime: Ns(500_000),
+                    },
+                );
+                sc.m = 4;
+                sc.repeats = 2;
+                sc.replication = Some(params);
+                sc.write_ack = Some(ack);
+                sc.smoke = fs == FsKind::COMMIT
+                    && matches!(ack, WriteAck::LocalOnly | WriteAck::Sync);
+                v.push(with_id(
+                    sc,
+                    "CC-R.repl",
+                    Some(8 << 10),
+                    &format!("{}.{dtag}", ack.name()),
+                ));
+            }
+        }
+    }
+
     // check_matrix — race-detector throughput: every paper model checks
     // the CC-R two-phase trace of its own layer, small (gated smoke)
     // and larger (ungated) op counts. A slowdown of the frontier
@@ -873,6 +941,44 @@ mod tests {
         for fs in [FsKind::COMMIT, FsKind::SESSION] {
             for shards in [1usize, 4] {
                 assert!(smoke.iter().any(|s| s.fs == fs && s.shards == shards));
+            }
+        }
+    }
+
+    #[test]
+    fn ablate_replication_covers_models_and_acks_and_smokes_four_cells() {
+        let kinds = FsKind::registered();
+        let all = registry();
+        for fs in kinds {
+            for ack in [WriteAck::LocalOnly, WriteAck::LocalPlusOne, WriteAck::Sync] {
+                assert!(
+                    all.iter().any(|s| s.family == "ablate_replication"
+                        && s.fs == fs
+                        && s.write_ack == Some(ack)
+                        && matches!(s.kind, Kind::Replication { .. })),
+                    "ablate_replication misses {} × {}",
+                    fs.name(),
+                    ack.name()
+                );
+            }
+        }
+        // Every cell carries its own replica topology.
+        assert!(all
+            .iter()
+            .filter(|s| s.family == "ablate_replication")
+            .all(|s| s.replication.is_some()));
+        // Exactly the commit × {local_only, sync} × {near, far} corner
+        // cells ride the perf gate.
+        let smoke: Vec<_> = all
+            .iter()
+            .filter(|s| s.family == "ablate_replication" && s.smoke)
+            .collect();
+        assert_eq!(smoke.len(), 4, "want 4 gated ablate_replication cells");
+        for ack in [WriteAck::LocalOnly, WriteAck::Sync] {
+            for dtag in ["near", "far"] {
+                assert!(smoke.iter().any(|s| s.fs == FsKind::COMMIT
+                    && s.write_ack == Some(ack)
+                    && s.id.ends_with(dtag)));
             }
         }
     }

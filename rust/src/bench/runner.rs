@@ -77,6 +77,8 @@ fn run_cfg(sc: &Scenario) -> RunConfig {
         .lazy(sc.lazy)
         .engine_threads(sc.engine_threads)
         .faults(sc.faults.clone())
+        .replication(sc.replication.clone())
+        .write_ack(sc.write_ack)
 }
 
 /// Per-repeat observations folded into the record. Counters are folded
@@ -101,6 +103,13 @@ struct Fold {
     fenced_rpcs: Samples,
     replayed_intervals: Samples,
     downtime_retries: Samples,
+    /// Durability-plane counters (`fault_matrix` and
+    /// `ablate_replication`): bytes the plane acked but lost with the
+    /// kill, reads served by a replica while the primary was down, and
+    /// the replication queues' high-water mark.
+    lost_bytes: Samples,
+    failover_reads: Samples,
+    repl_lag_bytes: Samples,
 }
 
 /// Run a scenario to completion and produce its matrix record.
@@ -146,6 +155,13 @@ fn run_virtual(sc: &Scenario) -> BenchRecord {
         .param("repeats", sc.repeats);
     if let Some(w) = sc.workers {
         rec.param("workers", w);
+    }
+    if let Some(r) = &sc.replication {
+        rec.param("replicas", r.replicas)
+            .param("replica_rtt_ns", r.rtt.0);
+    }
+    if let Some(ack) = sc.write_ack {
+        rec.param("write_ack", ack.name());
     }
     match &sc.kind {
         Kind::Synthetic {
@@ -193,6 +209,16 @@ fn run_virtual(sc: &Scenario) -> BenchRecord {
                 .param("downtime_ns", downtime.0)
                 .param("m", sc.m);
         }
+        Kind::Replication {
+            config,
+            access,
+            downtime,
+        } => {
+            rec.param("workload", format!("{}.repl", config.name()))
+                .param("access_bytes", *access)
+                .param("downtime_ns", downtime.0)
+                .param("m", sc.m);
+        }
         Kind::HotPath(_) => unreachable!("hot-path cells run in run_hotpath"),
         Kind::CheckMatrix { .. } => unreachable!("check_matrix cells run in run_check_matrix"),
     }
@@ -210,6 +236,15 @@ fn run_virtual(sc: &Scenario) -> BenchRecord {
             .metric(
                 "downtime_retries",
                 Metric::lower(fold.downtime_retries.mean()),
+            )
+            .metric("lost_bytes", Metric::lower(fold.lost_bytes.mean()))
+            .metric(
+                "replication_lag_bytes",
+                Metric::lower(fold.repl_lag_bytes.mean()),
+            )
+            .metric(
+                "failover_reads",
+                Metric::lower(fold.failover_reads.mean()),
             );
     }
     rec.metric("lat_p50_s", Metric::lower(fold.lat_s.percentile(50.0)))
@@ -327,7 +362,9 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             let cfg = RunConfig::new()
                 .shards(sc.shards)
                 .lazy(sc.lazy)
-                .engine_threads(sc.engine_threads);
+                .engine_threads(sc.engine_threads)
+                .replication(sc.replication.clone())
+                .write_ack(sc.write_ack);
             let probe = |cfg: &RunConfig| {
                 let params = config
                     .params(sc.nodes, sc.ppn, *access, sc.m, seed)
@@ -368,6 +405,76 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
                 .push(faulted.counters.replayed_intervals as f64);
             fold.downtime_retries
                 .push(faulted.counters.downtime_retries as f64);
+            fold.lost_bytes.push(faulted.counters.lost_bytes as f64);
+            fold.failover_reads
+                .push(faulted.counters.failover_reads as f64);
+            fold.repl_lag_bytes
+                .push(faulted.counters.repl_lag_bytes as f64);
+            fold.rpcs.push(faulted.counters.rpcs as f64);
+            fold.rpc_intervals
+                .push(faulted.counters.rpc_intervals as f64);
+            fold.sim_ops.push(faulted.sim_ops as f64);
+            fold.reval_rate
+                .push(faulted.counters.revalidate_hit_rate());
+        }
+        Kind::Replication {
+            config,
+            access,
+            downtime,
+        } => {
+            // The durability probe: healthy run (replication priced,
+            // no faults) learns the write barrier; the measured run
+            // kills the whole plane ONE TICK before the barrier
+            // releases — every publishing attach was acked, the last
+            // publishers' background mirrors are still in flight — and
+            // restarts it `downtime` past the barrier, so the read
+            // phase opens degraded and fails over to replicas. Like
+            // `FaultMatrix`, a `--faults` override must not leak in.
+            let cfg = RunConfig::new()
+                .shards(sc.shards)
+                .lazy(sc.lazy)
+                .engine_threads(sc.engine_threads)
+                .replication(sc.replication.clone())
+                .write_ack(sc.write_ack);
+            let probe = |cfg: &RunConfig| {
+                let params = config
+                    .params(sc.nodes, sc.ppn, *access, sc.m, seed)
+                    .with_files(sc.files);
+                SyntheticDriver::with_config(sc.fs, params, cfg)
+                    .run_cfg(cluster(sc, seed ^ 0xBEEF), cfg)
+            };
+            let healthy = probe(&cfg);
+            let kill_at = Ns(healthy.write_end.0.saturating_sub(1).max(1));
+            let restart_at = healthy.write_end + *downtime;
+            let mut plan = FaultPlan::new();
+            for shard in 0..sc.shards {
+                plan.push(FaultEvent {
+                    at: kill_at,
+                    target: FaultTarget::Shard(shard),
+                    action: FaultAction::Kill,
+                });
+                plan.push(FaultEvent {
+                    at: restart_at,
+                    target: FaultTarget::Shard(shard),
+                    action: FaultAction::Restart,
+                });
+            }
+            let faulted = probe(&cfg.clone().faults(plan));
+            fold.bw.push(faulted.read_bw());
+            fold.lat_s.push(faulted.makespan.as_secs_f64());
+            fold.recovery_s.push(
+                Ns(faulted.makespan.0.saturating_sub(healthy.makespan.0)).as_secs_f64(),
+            );
+            fold.fenced_rpcs.push(faulted.counters.fenced_rpcs as f64);
+            fold.replayed_intervals
+                .push(faulted.counters.replayed_intervals as f64);
+            fold.downtime_retries
+                .push(faulted.counters.downtime_retries as f64);
+            fold.lost_bytes.push(faulted.counters.lost_bytes as f64);
+            fold.failover_reads
+                .push(faulted.counters.failover_reads as f64);
+            fold.repl_lag_bytes
+                .push(faulted.counters.repl_lag_bytes as f64);
             fold.rpcs.push(faulted.counters.rpcs as f64);
             fold.rpc_intervals
                 .push(faulted.counters.rpc_intervals as f64);
@@ -1099,6 +1206,58 @@ mod tests {
         // byte-identical for any engine-thread count (jobs invariance is
         // pinned for the whole matrix in tests/bench_parallel.rs).
         let mut sc = smoke("fault_matrix", FsKind::SESSION);
+        sc.repeats = 1;
+        let serial = run_scenario(&sc);
+        sc.engine_threads = 4;
+        assert_eq!(run_scenario(&sc), serial);
+    }
+
+    #[test]
+    fn replication_cells_price_durability_by_ack_mode() {
+        // Acceptance: under the whole-plane outage, `sync` loses zero
+        // bytes BY CONSTRUCTION (every acked mirror already applied)
+        // while `local_only` over the far topology loses the last
+        // publishers' in-flight mirrors; both serve the degraded
+        // post-barrier window from replicas.
+        let cell = |frag: &str| {
+            let mut sc = registry()
+                .into_iter()
+                .find(|s| {
+                    s.family == "ablate_replication"
+                        && s.fs == FsKind::COMMIT
+                        && s.id.ends_with(frag)
+                })
+                .unwrap_or_else(|| panic!("no ablate_replication cell `{frag}`"));
+            sc.repeats = 1;
+            run_scenario(&sc)
+        };
+        let local = cell("local_only.far");
+        let sync = cell("sync.far");
+        assert!(
+            local.metric_value("lost_bytes").unwrap() > 0.0,
+            "local_only.far lost nothing"
+        );
+        assert_eq!(sync.metric_value("lost_bytes").unwrap(), 0.0);
+        assert!(local.metric_value("failover_reads").unwrap() > 0.0);
+        assert!(sync.metric_value("failover_reads").unwrap() > 0.0);
+        // The in-flight mirrors the kill destroyed were real queue
+        // traffic: the lag high-water covers the lost bytes.
+        assert!(
+            local.metric_value("replication_lag_bytes").unwrap()
+                >= local.metric_value("lost_bytes").unwrap()
+        );
+        assert_eq!(local.params["write_ack"].as_str(), Some("local_only"));
+        assert_eq!(local.params["replicas"].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn replication_record_is_engine_thread_invariant() {
+        // Acceptance: replication-enabled runs are byte-identical for
+        // any `--engine-threads` value.
+        let mut sc = registry()
+            .into_iter()
+            .find(|s| s.family == "ablate_replication" && s.smoke && s.id.ends_with("local_only.far"))
+            .expect("gated local_only.far cell");
         sc.repeats = 1;
         let serial = run_scenario(&sc);
         sc.engine_threads = 4;

@@ -27,7 +27,9 @@
 //! ```
 
 use crate::fs::FsKind;
-use crate::sim::{Cluster, FaultPlan, NetParams, ServerParams, SsdParams, UpfsParams};
+use crate::model::WriteAck;
+use crate::sim::faults::parse_ns;
+use crate::sim::{Cluster, FaultPlan, NetParams, ReplicaParams, ServerParams, SsdParams, UpfsParams};
 use crate::util::cli::{ArgSpec, ParsedArgs};
 use crate::util::units::parse_bytes;
 use crate::workload::Config as TableConfig;
@@ -155,6 +157,18 @@ pub struct Experiment {
     /// Deterministic fault schedule (`[faults]` section or `--faults`);
     /// empty = healthy run.
     pub faults: FaultPlan,
+    /// Durability plane (`[replication]` section or `--replicas`):
+    /// per-shard replica set and its geo-latency topology. `None` =
+    /// single-copy metadata, bit-for-bit the historical fabric. The
+    /// *ack mode* is not here — it is a property of the consistency
+    /// model (`[model.<name>] write_ack`), so the same replica
+    /// topology can be swept across ack policies.
+    pub replication: Option<ReplicaParams>,
+    /// `--write-ack`: sweep-style override of the model's own
+    /// `write_ack` axis (`None` = the model decides). CLI/bench only —
+    /// an INI model states its ack mode in its own `[model.<name>]`
+    /// block, not here.
+    pub write_ack: Option<WriteAck>,
     pub seed: u64,
 }
 
@@ -172,6 +186,8 @@ impl Default for Experiment {
             files: 1,
             engine_threads: 1,
             faults: FaultPlan::new(),
+            replication: None,
+            write_ack: None,
             seed: 7,
         }
     }
@@ -234,6 +250,9 @@ impl Experiment {
         if let Some(section) = ini.get("faults") {
             self.faults = FaultPlan::from_ini(section)?;
         }
+        if let Some(section) = ini.get("replication") {
+            self.replication = Some(replication_from_ini(section)?);
+        }
         Ok(())
     }
 
@@ -260,7 +279,56 @@ impl Experiment {
             .shards(self.shards)
             .engine_threads(self.engine_threads)
             .faults(self.faults.clone())
+            .replication(self.replication.clone())
+            .write_ack(self.write_ack)
     }
+}
+
+/// Parse a `[replication]` section. Starts from a latency preset
+/// (`preset = near | far`, default `near`) and overlays explicit keys:
+///
+/// ```ini
+/// [replication]
+/// replicas = 2       # replica tiers per shard (>= 1)
+/// preset = far       # near (same-row RTT) | far (cross-site RTT)
+/// rtt = 500us        # nearest-tier round trip
+/// tier_step = 2ms    # added RTT per further tier
+/// bw = 1G            # replication-channel bandwidth, bytes/sec
+/// ```
+pub fn replication_from_ini(section: &BTreeMap<String, String>) -> Result<ReplicaParams, String> {
+    let mut p = match section.get("preset").map(String::as_str) {
+        None | Some("near") => ReplicaParams::near(),
+        Some("far") => ReplicaParams::far(),
+        Some(other) => {
+            return Err(format!(
+                "replication.preset: unknown `{other}` (expected near | far)"
+            ))
+        }
+    };
+    for (key, value) in section {
+        match key.as_str() {
+            "preset" => {}
+            "replicas" => {
+                p.replicas = require_at_least_one(
+                    "replicas",
+                    value.parse().map_err(|e| format!("replication.replicas: {e}"))?,
+                )?;
+            }
+            "rtt" => p.rtt = parse_ns(value).map_err(|e| format!("replication.rtt: {e}"))?,
+            "tier_step" => {
+                p.tier_step = parse_ns(value).map_err(|e| format!("replication.tier_step: {e}"))?
+            }
+            "bw" => {
+                let bw = parse_bytes(value).map_err(|e| format!("replication.bw: {e}"))?;
+                if bw == 0 {
+                    return Err("replication.bw must be positive".into());
+                }
+                p.bw = bw as f64;
+            }
+            other => return Err(format!("replication.{other}: unknown key")),
+        }
+    }
+    Ok(p)
 }
 
 /// The one way to shape a driver run — replaces the historical
@@ -289,6 +357,14 @@ pub struct RunConfig {
     /// Override the FS-layer factory (differential tests stack extra
     /// layers); `None` = the policy-interpreted default layer.
     pub layers: Option<crate::workload::LazyMake>,
+    /// Durability plane: replica set per metadata shard. `None` =
+    /// single-copy fabric. The ack mode comes from the model's
+    /// `write_ack` policy axis, resolved by the driver.
+    pub replication: Option<ReplicaParams>,
+    /// Override the model's `write_ack` axis for this run (`None` =
+    /// the model decides). This is how `ablate_replication` sweeps ack
+    /// modes across built-in models without registering variants.
+    pub write_ack: Option<WriteAck>,
 }
 
 impl Default for RunConfig {
@@ -300,6 +376,8 @@ impl Default for RunConfig {
             engine_threads: 1,
             faults: FaultPlan::new(),
             layers: None,
+            replication: None,
+            write_ack: None,
         }
     }
 }
@@ -338,6 +416,16 @@ impl RunConfig {
         self.layers = Some(make);
         self
     }
+
+    pub fn replication(mut self, replication: Option<ReplicaParams>) -> Self {
+        self.replication = replication;
+        self
+    }
+
+    pub fn write_ack(mut self, write_ack: Option<WriteAck>) -> Self {
+        self.write_ack = write_ack;
+        self
+    }
 }
 
 /// The run-shape argument block shared by `pscnf run` and `pscnf
@@ -352,6 +440,13 @@ pub struct RunArgs {
     pub files: Option<usize>,
     pub engine_threads: Option<usize>,
     pub faults: Option<FaultPlan>,
+    /// `--replicas N`: enable the durability plane with N replica
+    /// tiers per shard (near preset unless the config file already
+    /// chose a topology, which this count then overrides).
+    pub replicas: Option<usize>,
+    /// `--write-ack MODE`: override every selected model's durability
+    /// ack axis for this run.
+    pub write_ack: Option<WriteAck>,
 }
 
 impl RunArgs {
@@ -385,6 +480,20 @@ impl RunArgs {
             "fault plan, e.g. `kill shard 0 at 2ms; restart shard 0 at 4ms` \
              (empty = config value / healthy)",
         )
+        .opt(
+            "replicas",
+            "N",
+            Some(""),
+            "replica tiers per metadata shard; enables the durability plane \
+             (empty = config value / single-copy)",
+        )
+        .opt(
+            "write-ack",
+            "MODE",
+            Some(""),
+            "override the model's write_ack axis: local_only | local_plus_one \
+             | sync (empty = each model's own)",
+        )
     }
 
     /// Extract the shared block from parsed CLI args.
@@ -402,11 +511,17 @@ impl RunArgs {
             "" => None,
             spec => Some(FaultPlan::parse_spec(spec).map_err(|e| format!("--faults: {e}"))?),
         };
+        let write_ack = match args.str("write-ack")? {
+            "" => None,
+            mode => Some(WriteAck::parse(mode).map_err(|e| format!("--write-ack: {e}"))?),
+        };
         Ok(Self {
             shards: knob("shards", "shards")?,
             files: knob("files", "files")?,
             engine_threads: knob("engine-threads", "engine_threads")?,
             faults,
+            replicas: knob("replicas", "replicas")?,
+            write_ack,
         })
     }
 
@@ -424,6 +539,14 @@ impl RunArgs {
         }
         if let Some(p) = &self.faults {
             exp.faults = p.clone();
+        }
+        if let Some(n) = self.replicas {
+            let mut params = exp.replication.clone().unwrap_or_else(ReplicaParams::near);
+            params.replicas = n;
+            exp.replication = Some(params);
+        }
+        if let Some(ack) = self.write_ack {
+            exp.write_ack = Some(ack);
         }
     }
 }
@@ -572,6 +695,55 @@ mod tests {
             RunArgs::from_parsed(&spec.parse(&argv(&["--faults", "explode node 3"])).unwrap())
                 .is_err()
         );
+    }
+
+    #[test]
+    fn replication_section_and_flag_overlay() {
+        use crate::sim::Ns;
+        let mut e = Experiment::default();
+        assert!(e.replication.is_none());
+        let ini = parse_ini("[replication]\nreplicas = 3\npreset = far\nrtt = 250us\n").unwrap();
+        e.apply_ini(&ini).unwrap();
+        let p = e.replication.clone().unwrap();
+        assert_eq!(p.replicas, 3);
+        assert_eq!(p.rtt, Ns::from_micros(250), "explicit rtt overrides the preset");
+        assert_eq!(p.tier_step, ReplicaParams::far().tier_step);
+        // run_config forwards the plane to the drivers.
+        assert_eq!(e.run_config().replication, Some(p));
+        // The CLI flag enables the plane with the near preset, or
+        // overrides a config-chosen topology's count.
+        let spec = RunArgs::add_to_spec(ArgSpec::new("t", "t"));
+        let argv: Vec<String> = vec!["--replicas=2".into()];
+        let args = RunArgs::from_parsed(&spec.parse(&argv).unwrap()).unwrap();
+        let mut fresh = Experiment::default();
+        args.apply_to(&mut fresh);
+        assert_eq!(fresh.replication, Some(ReplicaParams { replicas: 2, ..ReplicaParams::near() }));
+        args.apply_to(&mut e);
+        assert_eq!(e.replication.as_ref().unwrap().replicas, 2);
+        assert_eq!(e.replication.as_ref().unwrap().rtt, Ns::from_micros(250));
+        // `--write-ack` overrides the model axis for the run; the flag
+        // shares WriteAck::parse with the [model.*] key, so the bad-
+        // value error text cannot drift.
+        assert!(fresh.write_ack.is_none());
+        let argv: Vec<String> = vec!["--write-ack=sync".into()];
+        let args = RunArgs::from_parsed(&spec.parse(&argv).unwrap()).unwrap();
+        args.apply_to(&mut fresh);
+        assert_eq!(fresh.write_ack, Some(WriteAck::Sync));
+        assert_eq!(fresh.run_config().write_ack, Some(WriteAck::Sync));
+        let argv: Vec<String> = vec!["--write-ack=quorum".into()];
+        assert!(RunArgs::from_parsed(&spec.parse(&argv).unwrap())
+            .unwrap_err()
+            .contains("write_ack"));
+        // Degenerate values are config errors.
+        assert!(Experiment::default()
+            .apply_ini(&parse_ini("[replication]\nreplicas = 0\n").unwrap())
+            .is_err());
+        assert!(Experiment::default()
+            .apply_ini(&parse_ini("[replication]\npreset = everywhere\n").unwrap())
+            .is_err());
+        assert!(Experiment::default()
+            .apply_ini(&parse_ini("[replication]\nquorum = 2\n").unwrap())
+            .is_err());
     }
 
     #[test]

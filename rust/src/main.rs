@@ -22,7 +22,7 @@ use pscnf::coordinator::{render_sweep, sweep_dl, sweep_scr, sweep_synthetic_cfg,
 use pscnf::fs::FsKind;
 use pscnf::model::{litmus, model_table_markdown};
 use pscnf::runtime::{Runtime, TrainState};
-use pscnf::model::{check, persist};
+use pscnf::model::{check, persist, WriteAck};
 use pscnf::util::cli::{ArgSpec, ParsedArgs};
 use pscnf::util::json::Json;
 use pscnf::util::rng::Rng;
@@ -130,6 +130,31 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
     .flag(
         "infer",
         "report the weakest registered model that certifies the trace (exit 1 if none)",
+    )
+    .opt(
+        "crash-after",
+        "OP",
+        None,
+        "durability mode: id of the last op applied before the metadata plane crashed \
+         (exit 1 if any post-crash read observes unreplicated data)",
+    )
+    .opt(
+        "replicated-through",
+        "OP",
+        None,
+        "last op id the replica set had applied at the crash (omit = nothing shipped)",
+    )
+    .opt(
+        "write-ack",
+        "MODE",
+        None,
+        "override the checked models' write_ack axis: local_only | local_plus_one | sync",
+    )
+    .opt(
+        "dead-ranks",
+        "LIST",
+        Some(""),
+        "comma-separated ranks whose buffered state died with the crash",
     );
     let args = spec.parse(argv)?;
     if let Some(path) = args.get("config") {
@@ -199,6 +224,72 @@ fn check_trace(path: &str, args: &ParsedArgs) -> Result<(), String> {
         match weakest {
             Some(k) => println!("\nweakest race-free model: {} ({})", k.name(), k.model().name),
             None => return Err("no registered model certifies this trace race-free".into()),
+        }
+    }
+
+    // Durability mode (`--crash-after`): replay the crash boundary over
+    // the recorded trace and flag every post-crash read that observes a
+    // write the plane acked but never replicated. The ack mode defaults
+    // to each model's own `write_ack` axis; `--write-ack` sweeps it.
+    if let Some(crash_str) = args.get("crash-after") {
+        let crash_after: usize = crash_str
+            .parse()
+            .map_err(|e| format!("--crash-after {crash_str}: {e}"))?;
+        let replicated_through = match args.get("replicated-through") {
+            None => None,
+            Some(s) => Some(
+                s.parse::<usize>()
+                    .map_err(|e| format!("--replicated-through {s}: {e}"))?,
+            ),
+        };
+        let ack_override = match args.get("write-ack") {
+            None => None,
+            Some(mode) => Some(WriteAck::parse(mode).map_err(|e| format!("--write-ack: {e}"))?),
+        };
+        let dead_ranks: Vec<u32> = args
+            .str("dead-ranks")?
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|e| format!("--dead-ranks `{s}`: {e}"))
+            })
+            .collect::<Result<_, String>>()?;
+        let mut violating = 0usize;
+        for kind in &kinds {
+            let ack = ack_override.unwrap_or_else(|| kind.write_ack());
+            let lost = check::lost_reads(
+                &trace,
+                crash_after,
+                replicated_through,
+                ack,
+                kind.recovery_obligation(),
+                &dead_ranks,
+            );
+            println!(
+                "\ndurability {} (write_ack {}, crash after op {crash_after}): {} — {} lost read(s)",
+                kind.name(),
+                ack.name(),
+                if lost.is_empty() { "DURABLE" } else { "DURABILITY VIOLATION" },
+                lost.len(),
+            );
+            for l in &lost {
+                println!(
+                    "  read #{} (rank {}) observes acked-but-unreplicated write #{} \
+                     (file {}, [{}, {}))",
+                    l.read, l.rank, l.write, l.file, l.range.start, l.range.end
+                );
+            }
+            if !lost.is_empty() {
+                violating += 1;
+            }
+        }
+        if violating > 0 {
+            return Err(format!(
+                "durability violations under {violating} of {} checked model(s)",
+                kinds.len()
+            ));
         }
     }
     if explicit_models && racy_models > 0 {

@@ -30,7 +30,7 @@ use std::collections::HashMap;
 use super::models::ConsistencyModel;
 use super::msc::{EdgeKind, Msc};
 use super::op::{Access, FileId, OpId, StorageOp, SyncKind};
-use super::policy::RecoveryObligation;
+use super::policy::{RecoveryObligation, WriteAck};
 use super::race::{build_report, RaceReport, StorageRace};
 use super::trace::{CycleError, HappensBefore, Trace};
 use crate::interval::Range;
@@ -314,6 +314,72 @@ pub fn stale_reads(
     out
 }
 
+/// A durability violation (distinct from a race and from a permitted-
+/// stale read): after a crash, this read overlaps bytes whose write was
+/// *acked* under a weak `write_ack` mode but had reached no replica
+/// when the primary died — the data is gone, not merely stale.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LostRead {
+    pub read: OpId,
+    pub rank: u32,
+    pub file: FileId,
+    pub range: Range,
+    /// The acked-but-unreplicated pre-crash write it overlaps.
+    pub write: OpId,
+}
+
+/// Durability predicate for the replicated plane (the second half of
+/// ROADMAP item 1): flag every read issued after the crash boundary
+/// (`crash_after` = last pre-crash op id) that overlaps a pre-crash
+/// write another rank was *acked* for but that had not replicated —
+/// i.e. every write after `replicated_through` (`None` = nothing had
+/// shipped).
+///
+/// The verdict composes both policy axes:
+/// - `write_ack`: `sync` and `local_plus_one` only ack once at least
+///   one replica holds the mutation, so by construction nothing acked
+///   can be lost — only `local_only` can produce violations.
+/// - `RecoveryObligation`: replay-to-SC recovery re-attaches every
+///   *surviving* client's buffers at restart, so an unreplicated write
+///   is only truly lost when its writer is in `dead_ranks`;
+///   permitted-stale models replay nothing, so every unreplicated
+///   cross-rank write is lost. A writer re-reading its own bytes is
+///   never flagged — its local buffer survives in both modes.
+pub fn lost_reads(
+    trace: &Trace,
+    crash_after: OpId,
+    replicated_through: Option<OpId>,
+    ack: WriteAck,
+    obligation: RecoveryObligation,
+    dead_ranks: &[u32],
+) -> Vec<LostRead> {
+    if ack != WriteAck::LocalOnly {
+        return Vec::new();
+    }
+    let first_unreplicated = replicated_through.map_or(0, |t| t + 1);
+    let mut out = Vec::new();
+    for (id, ev) in trace.events().iter().enumerate().skip(crash_after + 1) {
+        let StorageOp::Data { access: Access::Read, file, range } = ev.op else {
+            continue;
+        };
+        let lost_from = trace.events()[..=crash_after]
+            .iter()
+            .enumerate()
+            .skip(first_unreplicated)
+            .find(|(_, w)| {
+                w.rank != ev.rank
+                    && (obligation == RecoveryObligation::PermittedStale
+                        || dead_ranks.contains(&w.rank))
+                    && matches!(w.op, StorageOp::Data { access: Access::Write, file: wf, range: wr }
+                        if wf == file && wr.overlaps(&range))
+            });
+        if let Some((write, _)) = lost_from {
+            out.push(LostRead { read: id, rank: ev.rank, file, range, write });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,5 +470,71 @@ mod tests {
         assert_eq!(stale[0].rank, 2);
         assert_eq!(stale[0].write, 0);
         assert!(stale_reads(&t, crash_after, RecoveryObligation::ReplayToSc).is_empty());
+    }
+
+    #[test]
+    fn lost_reads_flag_exactly_the_unreplicated_local_only_writes() {
+        let mut t = Trace::new();
+        t.push(0, w(0, 0, 1024)); // op 0: replicated before the crash
+        t.push(1, w(0, 2048, 3072)); // op 1: acked, never replicated
+        let replicated_through = Some(0);
+        let crash_after = t.len() - 1;
+        t.push(2, r(0, 0, 512)); // op 2: replicated bytes — safe
+        t.push(2, r(0, 2048, 2560)); // op 3: reads the lost bytes
+        t.push(1, r(0, 2048, 2560)); // op 4: writer re-reads its own buffer
+        let lost = lost_reads(
+            &t,
+            crash_after,
+            replicated_through,
+            WriteAck::LocalOnly,
+            RecoveryObligation::PermittedStale,
+            &[],
+        );
+        assert_eq!(lost.len(), 1, "exactly the unreplicated cross-rank read");
+        assert_eq!((lost[0].read, lost[0].write, lost[0].rank), (3, 1, 2));
+        // Stronger ack modes only ack after a replica holds the bytes:
+        // nothing acked can be lost, whatever the recovery obligation.
+        for ack in [WriteAck::LocalPlusOne, WriteAck::Sync] {
+            assert!(lost_reads(
+                &t,
+                crash_after,
+                replicated_through,
+                ack,
+                RecoveryObligation::PermittedStale,
+                &[]
+            )
+            .is_empty());
+        }
+        // Replay-to-SC re-attaches surviving writers' buffers, so the
+        // write is only lost if rank 1 itself died in the crash.
+        assert!(lost_reads(
+            &t,
+            crash_after,
+            replicated_through,
+            WriteAck::LocalOnly,
+            RecoveryObligation::ReplayToSc,
+            &[]
+        )
+        .is_empty());
+        let lost = lost_reads(
+            &t,
+            crash_after,
+            replicated_through,
+            WriteAck::LocalOnly,
+            RecoveryObligation::ReplayToSc,
+            &[1],
+        );
+        assert_eq!(lost.len(), 1);
+        assert_eq!(lost[0].write, 1);
+        // `None` = nothing shipped: the replicated write is lost too.
+        let lost = lost_reads(
+            &t,
+            crash_after,
+            None,
+            WriteAck::LocalOnly,
+            RecoveryObligation::PermittedStale,
+            &[],
+        );
+        assert_eq!(lost.len(), 2);
     }
 }

@@ -29,13 +29,13 @@ pub mod policy;
 pub mod race;
 pub mod trace;
 
-pub use check::{detect_indexed, diagnose, stale_reads, StaleRead, TraceIndex};
+pub use check::{detect_indexed, diagnose, lost_reads, stale_reads, LostRead, StaleRead, TraceIndex};
 pub use models::ConsistencyModel;
 pub use msc::{EdgeKind, Msc};
 pub use op::{Access, Event, FileId, OpId, RankId, StorageOp, SyncKind};
 pub use policy::{
     builtin_kinds, model_table_markdown, model_table_markdown_for, Acquisition, FsKind, ModelDef,
-    Publication, RecoveryObligation, SyncPolicy,
+    Publication, RecoveryObligation, SyncPolicy, WriteAck,
 };
 pub use race::{detect, detect_with, race_free, RaceReport, StorageRace, MAX_REPORTED_RACES};
 pub use trace::{HappensBefore, Trace};

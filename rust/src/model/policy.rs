@@ -124,6 +124,62 @@ impl RecoveryObligation {
     }
 }
 
+/// The durability axis of a policy: where acked bytes must live before
+/// a publishing attach *completes* (ROADMAP item 1; DESIGN.md
+/// §Replication). The paper's Table 4 specifies only *visibility*;
+/// Viotti & Vukolić argue durability must be stated jointly or the
+/// model stays ambiguous — this enum is that missing coordinate.
+/// Orthogonal to publication/acquisition: it prices the ack point of an
+/// attach and decides what survives a metadata-plane crash, not who
+/// sees what.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WriteAck {
+    /// Ack as soon as the primary shard applied the attach; the replica
+    /// set catches up asynchronously. Fastest and most exposed: an
+    /// acked attach that reached no replica at crash time is lost.
+    #[default]
+    LocalOnly,
+    /// Ack once the nearest replica has also applied the attach; the
+    /// remaining replicas catch up in the background. One surviving
+    /// replica always holds every acked byte.
+    LocalPlusOne,
+    /// Ack only after the full replica set applied the attach — the
+    /// slowest-writer, zero-loss mode.
+    Sync,
+}
+
+impl WriteAck {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "local_only" => Ok(WriteAck::LocalOnly),
+            "local_plus_one" => Ok(WriteAck::LocalPlusOne),
+            "sync" => Ok(WriteAck::Sync),
+            other => Err(format!(
+                "unknown write_ack `{other}` (local_only|local_plus_one|sync)"
+            )),
+        }
+    }
+
+    /// Canonical lowercase label (bench ids, reports, config).
+    pub fn name(self) -> &'static str {
+        match self {
+            WriteAck::LocalOnly => "local_only",
+            WriteAck::LocalPlusOne => "local_plus_one",
+            WriteAck::Sync => "sync",
+        }
+    }
+
+    /// How many of a `total`-replica set must have applied an attach
+    /// before it acks.
+    pub fn acked_replicas(self, total: usize) -> usize {
+        match self {
+            WriteAck::LocalOnly => 0,
+            WriteAck::LocalPlusOne => total.min(1),
+            WriteAck::Sync => total,
+        }
+    }
+}
+
 /// The declarative synchronization policy a [`crate::fs::PolicyFs`]
 /// interprets. One value of this struct *is* an executable consistency
 /// model; [`Self::derive_model`] maps it onto the paper's formal `S` +
@@ -163,6 +219,11 @@ pub struct SyncPolicy {
     pub open_sync: Option<SyncKind>,
     /// Op recorded for `close` (when the close publishes).
     pub close_sync: Option<SyncKind>,
+    /// Durability: where acked bytes must live before a publishing
+    /// attach completes (see [`WriteAck`]). Only observable when a run
+    /// enables a replica set; every builtin defaults to `local_only`,
+    /// matching the single-copy behaviour of the pre-replication plane.
+    pub write_ack: WriteAck,
 }
 
 impl SyncPolicy {
@@ -181,6 +242,7 @@ impl SyncPolicy {
             begin_read_sync: None,
             open_sync: None,
             close_sync: None,
+            write_ack: WriteAck::LocalOnly,
         }
     }
 
@@ -381,6 +443,7 @@ impl SyncPolicy {
                 "relaxed_publication" => p.relaxed_publication = parse_bool(k, v)?,
                 "publish_sync" => p.publish_syncs = parse_syncs(v)?,
                 "acquire_sync" => p.acquire_syncs = parse_syncs(v)?,
+                "write_ack" => p.write_ack = WriteAck::parse(v)?,
                 other => return Err(format!("unknown model key `{other}`")),
             }
         }
@@ -559,6 +622,11 @@ impl FsKind {
     /// [`SyncPolicy::recovery_obligation`]).
     pub fn recovery_obligation(self) -> RecoveryObligation {
         self.with_def(|d| d.policy.recovery_obligation())
+    }
+
+    /// The model's durability axis (see [`WriteAck`]).
+    pub fn write_ack(self) -> WriteAck {
+        self.with_def(|d| d.policy.write_ack)
     }
 
     /// Ships with the binary (vs registered from config at runtime)?
@@ -907,6 +975,47 @@ mod tests {
         let mut bad = BTreeMap::new();
         bad.insert("publicaton".to_string(), "phase_end".to_string());
         assert!(SyncPolicy::from_ini(&bad).unwrap_err().contains("unknown model key"));
+    }
+
+    #[test]
+    fn write_ack_axis_parses_and_defaults_local_only() {
+        // Every builtin stays on the pre-replication single-copy ack.
+        for kind in builtin_kinds() {
+            assert_eq!(kind.write_ack(), WriteAck::LocalOnly, "{}", kind.name());
+        }
+        assert_eq!(WriteAck::parse("local_plus_one").unwrap(), WriteAck::LocalPlusOne);
+        assert_eq!(WriteAck::parse("sync").unwrap(), WriteAck::Sync);
+        assert!(WriteAck::parse("quorum").unwrap_err().contains("write_ack"));
+        assert_eq!(WriteAck::Sync.name(), "sync");
+        // Ack thresholds over a 3-replica set — and the degenerate
+        // 0-replica set, where local_plus_one cannot wait for anyone.
+        assert_eq!(WriteAck::LocalOnly.acked_replicas(3), 0);
+        assert_eq!(WriteAck::LocalPlusOne.acked_replicas(3), 1);
+        assert_eq!(WriteAck::Sync.acked_replicas(3), 3);
+        assert_eq!(WriteAck::LocalPlusOne.acked_replicas(0), 0);
+
+        // TOML models get the axis for free; the key composes with any
+        // policy shape and an unknown value is a config error.
+        let mut map = BTreeMap::new();
+        map.insert("publication".to_string(), "phase_end".to_string());
+        map.insert("acquisition".to_string(), "per_read".to_string());
+        map.insert("write_ack".to_string(), "sync".to_string());
+        let p = SyncPolicy::from_ini(&map).unwrap();
+        assert_eq!(p.write_ack, WriteAck::Sync);
+        map.insert("write_ack".to_string(), "bogus".to_string());
+        assert!(SyncPolicy::from_ini(&map).is_err());
+        // The axis is durability-only: it does not change the derived
+        // formal model or the recovery obligation.
+        let mut sync_commit = SyncPolicy::commit();
+        sync_commit.write_ack = WriteAck::Sync;
+        assert_eq!(
+            sync_commit.derive_model("x").mscs,
+            SyncPolicy::commit().derive_model("x").mscs
+        );
+        assert_eq!(
+            sync_commit.recovery_obligation(),
+            SyncPolicy::commit().recovery_obligation()
+        );
     }
 
     #[test]

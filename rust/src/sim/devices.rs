@@ -178,6 +178,68 @@ impl NetParams {
     }
 }
 
+/// Geo-latency replica topology for the durability plane (DESIGN.md
+/// §Replication): each metadata shard keeps `replicas` standby copies
+/// at increasing distance tiers on top of the base [`NetParams`] link.
+/// Replica `i` sits `rtt + i * tier_step` away — tier 0 is the
+/// same-row neighbor, the last tier the remote site — and shipping an
+/// attach of `bytes` to it additionally pays `bytes / bw` on the
+/// replication channel. Deterministic by construction (pure function of
+/// tier and size, no queueing state), which is what lets the fabric
+/// schedule replication at the serialized commit point and stay
+/// byte-identical for any `--engine-threads`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaParams {
+    /// Standby copies per shard (0 disables the plane).
+    pub replicas: usize,
+    /// Round-trip to the nearest replica tier.
+    pub rtt: Ns,
+    /// Extra round-trip per additional tier (geo step).
+    pub tier_step: Ns,
+    /// Replication-channel bandwidth, bytes/sec.
+    pub bw: f64,
+}
+
+impl ReplicaParams {
+    /// Same-machine-room replica pair: one switch hop away.
+    pub fn near() -> Self {
+        Self {
+            replicas: 2,
+            rtt: Ns::from_micros(25),
+            tier_step: Ns::from_micros(25),
+            bw: 2e9,
+        }
+    }
+
+    /// Geo-distributed set: nearest copy in-site, the second across a
+    /// metro link — the regime where `sync` acks visibly hurt writers.
+    pub fn far() -> Self {
+        Self {
+            replicas: 2,
+            rtt: Ns::from_micros(500),
+            tier_step: Ns::from_millis(2),
+            bw: 1e9,
+        }
+    }
+
+    /// Time to ship one attach of `bytes` to replica tier `i`.
+    pub fn delay(&self, tier: usize, bytes: u64) -> Ns {
+        self.rtt + Ns(self.tier_step.0 * tier as u64) + transfer_time(bytes, self.bw)
+    }
+
+    /// The writer-visible ack penalty for an attach of `bytes` under a
+    /// policy acking `acked` replicas: the slowest tier among those
+    /// waited on (tiers ship concurrently, so max — not sum).
+    pub fn ack_delay(&self, acked: usize, bytes: u64) -> Ns {
+        let acked = acked.min(self.replicas);
+        if acked == 0 {
+            Ns::ZERO
+        } else {
+            self.delay(acked - 1, bytes)
+        }
+    }
+}
+
 /// Per-node NIC pair (one send link, one receive link), so a node's
 /// aggregate in/out bandwidth is bounded like the real fabric.
 #[derive(Debug, Clone)]
@@ -434,6 +496,25 @@ mod tests {
         let mut ssd2 = SsdDevice::new(SsdParams::catalyst(), 10);
         let t2 = ssd2.read(Ns::ZERO, 8 << 20) - Ns::ZERO;
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn replica_tiers_price_monotonic_and_pure() {
+        let p = ReplicaParams::near();
+        // Farther tiers cost strictly more; same call twice prices the
+        // same (no hidden queueing state — the determinism invariant).
+        let d0 = p.delay(0, 1 << 20);
+        let d1 = p.delay(1, 1 << 20);
+        assert!(d1 > d0);
+        assert_eq!(p.delay(0, 1 << 20), d0);
+        // Ack pricing: local_only waits on no tier, local_plus_one on
+        // tier 0, sync on the farthest — tiers ship concurrently.
+        assert_eq!(p.ack_delay(0, 1 << 20), Ns::ZERO);
+        assert_eq!(p.ack_delay(1, 1 << 20), d0);
+        assert_eq!(p.ack_delay(2, 1 << 20), d1);
+        assert_eq!(p.ack_delay(99, 1 << 20), d1, "clamped to the set size");
+        // The geo preset's sync ack dwarfs the near one's.
+        assert!(ReplicaParams::far().ack_delay(2, 1 << 20) > p.ack_delay(2, 1 << 20));
     }
 
     #[test]

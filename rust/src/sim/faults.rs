@@ -54,11 +54,65 @@ pub struct FaultEvent {
     pub action: FaultAction,
 }
 
+/// Retry pricing for RPCs that find their metadata shard down (or their
+/// lease fenced): capped exponential backoff with a hard retry bound.
+/// Retry `k` (0-based, counted per client×shard while the outage lasts)
+/// prices `min(base << k, cap)`; a client that exhausts `max_retries`
+/// consecutive attempts gets a clean error back instead of retrying
+/// forever. The default reproduces the historical fixed-quantum pricing
+/// byte-for-byte for a single retry (`delay(0) == base == 100µs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackoffConfig {
+    /// First-retry quantum (and the historical fixed quantum).
+    pub base: Ns,
+    /// Ceiling the exponential growth saturates at.
+    pub cap: Ns,
+    /// Consecutive attempts before the fabric gives up on the shard and
+    /// surfaces an error to the client. High enough by default that no
+    /// bounded outage ever trips it — the bound exists so a plan that
+    /// never restarts a shard terminates instead of spinning.
+    pub max_retries: u32,
+}
+
+impl Default for BackoffConfig {
+    fn default() -> Self {
+        Self {
+            base: Ns(100_000),
+            cap: Ns(1_600_000),
+            max_retries: 4096,
+        }
+    }
+}
+
+impl BackoffConfig {
+    /// Delay of the `k`-th consecutive retry: `min(base * 2^k, cap)`.
+    pub fn delay(&self, k: u32) -> Ns {
+        let mult = 1u64.checked_shl(k).unwrap_or(u64::MAX);
+        Ns(self.base.0.saturating_mul(mult).min(self.cap.0))
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.base.0 == 0 {
+            return Err("faults.backoff_base must be positive".into());
+        }
+        if self.cap < self.base {
+            return Err("faults.backoff_cap must be >= faults.backoff_base".into());
+        }
+        if self.max_retries == 0 {
+            return Err("faults.max_retries must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// A deterministic, time-sorted fault schedule. The empty plan is the
 /// fault-free run (and prices identically to not having a plan at all).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultPlan {
     events: Vec<FaultEvent>,
+    /// Retry pricing the fabric uses while this plan's outages last
+    /// (`[faults]` backoff keys; defaults preserve historical pricing).
+    pub backoff: BackoffConfig,
 }
 
 impl FaultPlan {
@@ -80,7 +134,11 @@ impl FaultPlan {
         &self.events
     }
 
-    /// Insert an event, keeping the schedule time-sorted.
+    /// Insert an event, keeping the schedule time-sorted. The sort is
+    /// stable, so events that share a timestamp apply in insertion
+    /// order — the pinned tie rule (`coincident_events_apply_in_insertion_order`
+    /// tests it): a spec that says `kill ...; restart ...` at the same
+    /// instant kills first, whatever that is worth to it.
     pub fn push(&mut self, ev: FaultEvent) {
         self.events.push(ev);
         self.events.sort_by_key(|e| e.at);
@@ -169,15 +227,36 @@ impl FaultPlan {
     /// The generated schedule is a pure function of the keys, so the
     /// same section reproduces the same faults on every run.
     pub fn from_ini(section: &BTreeMap<String, String>) -> Result<Self, String> {
-        if let Some(spec) = section.get("plan") {
-            for key in section.keys() {
-                if key != "plan" {
+        // Backoff keys compose with either plan form — they tune retry
+        // pricing, not the schedule.
+        let mut backoff = BackoffConfig::default();
+        let mut rest: BTreeMap<&str, &str> = BTreeMap::new();
+        for (key, value) in section {
+            match key.as_str() {
+                "backoff_base" => backoff.base = parse_ns(value)?,
+                "backoff_cap" => backoff.cap = parse_ns(value)?,
+                "max_retries" => {
+                    backoff.max_retries = value
+                        .parse()
+                        .map_err(|_| format!("bad faults.max_retries '{value}'"))?
+                }
+                _ => {
+                    rest.insert(key, value);
+                }
+            }
+        }
+        backoff.validate()?;
+        if let Some(spec) = rest.get("plan") {
+            for key in rest.keys() {
+                if *key != "plan" {
                     return Err(format!(
                         "faults.plan is exclusive with the seeded keys (got faults.{key})"
                     ));
                 }
             }
-            return Self::parse_spec(spec);
+            let mut plan = Self::parse_spec(spec)?;
+            plan.backoff = backoff;
+            return Ok(plan);
         }
         let mut seed: u64 = 1;
         let mut outages: usize = 1;
@@ -185,8 +264,8 @@ impl FaultPlan {
         let mut first_kill = Ns(1_000_000);
         let mut period = Ns(2_000_000);
         let mut downtime = Ns(500_000);
-        for (key, value) in section {
-            match key.as_str() {
+        for (key, value) in &rest {
+            match *key {
                 "seed" => {
                     seed = value
                         .parse()
@@ -211,10 +290,18 @@ impl FaultPlan {
                 other => return Err(format!("unknown faults key '{other}'")),
             }
         }
+        // Degenerate generators are config errors, not schedules: a zero
+        // period stacks every outage on one instant, and a zero (or
+        // period-covering) downtime emits coincident or out-of-order
+        // kill/restart pairs.
+        if period.0 == 0 {
+            return Err("faults.period must be positive".into());
+        }
         if downtime.0 == 0 || downtime >= period {
             return Err("faults.downtime must be positive and shorter than faults.period".into());
         }
         let mut plan = Self::new();
+        plan.backoff = backoff;
         for k in 0..outages {
             let shard = (mix(seed.wrapping_add(k as u64)) % shards as u64) as usize;
             let kill_at = first_kill + Ns(period.0 * k as u64);
@@ -323,6 +410,104 @@ mod tests {
             .events()
             .iter()
             .all(|e| matches!(e.target, FaultTarget::Shard(s) if s < 4)));
+    }
+
+    #[test]
+    fn degenerate_generator_periods_are_config_errors() {
+        // period = 0 would stack every outage on one instant; it used to
+        // fall through to the downtime check's misleading message.
+        let mut sec = BTreeMap::new();
+        sec.insert("period".to_string(), "0".to_string());
+        let err = FaultPlan::from_ini(&sec).unwrap_err();
+        assert!(err.contains("faults.period must be positive"), "{err}");
+        // downtime = 0 would emit coincident kill/restart pairs.
+        let mut sec = BTreeMap::new();
+        sec.insert("downtime".to_string(), "0".to_string());
+        let err = FaultPlan::from_ini(&sec).unwrap_err();
+        assert!(err.contains("faults.downtime"), "{err}");
+        // downtime >= period would interleave outages out of order.
+        let mut sec = BTreeMap::new();
+        sec.insert("period".to_string(), "1ms".to_string());
+        sec.insert("downtime".to_string(), "1ms".to_string());
+        assert!(FaultPlan::from_ini(&sec).is_err());
+    }
+
+    #[test]
+    fn coincident_events_apply_in_insertion_order() {
+        // The pinned tie rule: push keeps same-timestamp events in
+        // insertion order (stable sort), so a hand-built or spec plan
+        // with coincident events has a defined apply order.
+        let mut plan = FaultPlan::new();
+        let at = Ns(1_000);
+        plan.push(FaultEvent {
+            at,
+            target: FaultTarget::Shard(0),
+            action: FaultAction::Kill,
+        });
+        plan.push(FaultEvent {
+            at,
+            target: FaultTarget::Shard(0),
+            action: FaultAction::Restart,
+        });
+        plan.push(FaultEvent {
+            at: Ns(500),
+            target: FaultTarget::Client(1),
+            action: FaultAction::Kill,
+        });
+        let acts: Vec<FaultAction> = plan.events().iter().map(|e| e.action).collect();
+        assert_eq!(
+            acts,
+            vec![FaultAction::Kill, FaultAction::Kill, FaultAction::Restart]
+        );
+        assert_eq!(plan.events()[1].target, FaultTarget::Shard(0));
+        // Same order through the spec grammar.
+        let spec = FaultPlan::parse_spec(
+            "restart shard 0 at 1ms; kill shard 0 at 1ms",
+        )
+        .unwrap();
+        assert_eq!(spec.events()[0].action, FaultAction::Restart);
+        assert_eq!(spec.events()[1].action, FaultAction::Kill);
+    }
+
+    #[test]
+    fn backoff_defaults_grow_and_cap() {
+        let b = BackoffConfig::default();
+        assert_eq!(b.delay(0), b.base, "first retry is the legacy quantum");
+        assert_eq!(b.delay(1), Ns(b.base.0 * 2));
+        assert_eq!(b.delay(4), b.cap, "16x the base saturates the cap");
+        assert_eq!(b.delay(63), b.cap);
+        assert_eq!(b.delay(200), b.cap, "shift overflow still caps");
+    }
+
+    #[test]
+    fn backoff_keys_compose_with_both_plan_forms() {
+        let mut sec = BTreeMap::new();
+        sec.insert("plan".to_string(), "kill shard 0 at 1ms".to_string());
+        sec.insert("backoff_base".to_string(), "50us".to_string());
+        sec.insert("backoff_cap".to_string(), "400us".to_string());
+        sec.insert("max_retries".to_string(), "8".to_string());
+        let plan = FaultPlan::from_ini(&sec).unwrap();
+        assert_eq!(plan.backoff.base, Ns(50_000));
+        assert_eq!(plan.backoff.cap, Ns(400_000));
+        assert_eq!(plan.backoff.max_retries, 8);
+        assert_eq!(plan.len(), 1);
+
+        let mut sec = BTreeMap::new();
+        sec.insert("outages".to_string(), "1".to_string());
+        sec.insert("backoff_base".to_string(), "200us".to_string());
+        let plan = FaultPlan::from_ini(&sec).unwrap();
+        assert_eq!(plan.backoff.base, Ns(200_000));
+        assert_eq!(plan.backoff.cap, BackoffConfig::default().cap);
+
+        // Invalid knobs are rejected up front.
+        let bad = |k: &str, v: &str| {
+            let mut sec = BTreeMap::new();
+            sec.insert(k.to_string(), v.to_string());
+            FaultPlan::from_ini(&sec).unwrap_err()
+        };
+        assert!(bad("backoff_base", "0").contains("backoff_base"));
+        assert!(bad("backoff_cap", "1us").contains("backoff_cap"));
+        assert!(bad("max_retries", "0").contains("max_retries"));
     }
 
     #[test]

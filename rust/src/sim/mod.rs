@@ -11,10 +11,10 @@ pub mod resource;
 pub mod time;
 
 pub use devices::{
-    NetParams, NicDevice, ServerDevice, ServerParams, SsdDevice, SsdParams, UpfsDevice,
-    UpfsParams,
+    NetParams, NicDevice, ReplicaParams, ServerDevice, ServerParams, SsdDevice, SsdParams,
+    UpfsDevice, UpfsParams,
 };
 pub use engine::{Cluster, Driver, Engine, NodeMap, RunStats, SimError, SimOp, FINISH_RETAIN};
-pub use faults::{FaultAction, FaultEvent, FaultPlan, FaultTarget};
+pub use faults::{BackoffConfig, FaultAction, FaultEvent, FaultPlan, FaultTarget};
 pub use resource::{Dispatch, FifoResource, MultiServer};
 pub use time::{transfer_time, Ns};

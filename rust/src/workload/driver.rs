@@ -338,9 +338,22 @@ impl SyntheticDriver {
     /// only fence leases); the empty plan stays on the exact historical
     /// pricing path.
     pub fn run_cfg(mut self, cluster: Cluster, cfg: &RunConfig) -> PhaseReport {
+        if let Some(repl) = &cfg.replication {
+            if !self.fabric.replication_enabled() {
+                // The ack mode is the model's write_ack axis: how many
+                // replicas a publishing mutation must reach before its
+                // ack returns. The replica topology is run config, and
+                // `--write-ack` (the ablation sweep) may override the
+                // model's own axis per run.
+                let ack = cfg.write_ack.unwrap_or_else(|| self.kind.write_ack());
+                self.fabric.enable_replication(repl.clone(), ack.acked_replicas(repl.replicas));
+            }
+        }
         if !cfg.faults.is_empty() && !self.fabric.faults_enabled() {
-            self.fabric
-                .enable_faults(self.kind.recovery_obligation().replays());
+            self.fabric.enable_faults_with(
+                self.kind.recovery_obligation().replays(),
+                cfg.faults.backoff,
+            );
         }
         let mut engine = Engine::uniform_with(cluster, self.params.p, self.params.nranks());
         let stats = engine
@@ -377,6 +390,13 @@ impl Driver for SyntheticDriver {
     /// One functional step per call; its fabric costs are drained
     /// straight into `out` as one batch (one heap event per step).
     fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
+        // Advance the durability plane's clock: background replication
+        // that has landed by `now` applies before this rank's step.
+        // The engine invokes drivers at the serialized commit point in
+        // global time order, so the landing order — and therefore every
+        // replica's state — is identical for any engine thread count.
+        // No-op (one null check) when replication is off.
+        self.fabric.set_now(now);
         loop {
             match self.stage[rank] {
                 Stage::Write(i) => {

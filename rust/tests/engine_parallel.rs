@@ -11,8 +11,9 @@ use pscnf::basefs::DesFabric;
 use pscnf::dl::{DlDriver, DlParams};
 use pscnf::fs::{FsKind, WorkloadFs};
 use pscnf::interval::Range;
+use pscnf::model::WriteAck;
 use pscnf::scr::{ScrDriver, ScrParams};
-use pscnf::sim::{Cluster, Driver, Engine, FaultEvent, FaultPlan, Ns, SimOp};
+use pscnf::sim::{Cluster, Driver, Engine, FaultEvent, FaultPlan, Ns, ReplicaParams, SimOp};
 use pscnf::workload::{build_fs, Config, Pattern, SyntheticDriver};
 
 const CONFIGS: [Config; 4] = [Config::CnW, Config::SnW, Config::CcR, Config::CsR];
@@ -166,6 +167,10 @@ impl Driver for ReadBack {
     }
 
     fn next_ops(&mut self, rank: usize, now: Ns, out: &mut Vec<SimOp>) {
+        // Advance the durability plane's clock at the serialized commit
+        // point (a no-op unless a test enabled replication), mirroring
+        // what the production drivers do for thread-count invariance.
+        self.fabric.set_now(now);
         loop {
             let step = self.step[rank];
             self.step[rank] = step + 1;
@@ -258,6 +263,103 @@ fn run_readback_plan(
         .expect("read-back deadlock");
     let ops = stats.ops_executed;
     (d, ops)
+}
+
+/// Like [`run_readback_plan`] with the durability plane enabled: a
+/// 2-replica set per shard, the given ack mode resolved to its acked
+/// tier count, fault-aware fabric.
+fn run_readback_repl(
+    kind: FsKind,
+    threads: usize,
+    plan: &FaultPlan,
+    params: ReplicaParams,
+    ack: WriteAck,
+) -> (ReadBack, u64) {
+    let mut d = ReadBack::new(kind, 3);
+    d.fabric
+        .enable_replication(params.clone(), ack.acked_replicas(params.replicas));
+    d = d.with_faults(kind.recovery_obligation().replays());
+    let nranks = ReadBack::NODES * ReadBack::PPN;
+    let mut engine = Engine::uniform_with(
+        Cluster::catalyst(ReadBack::NODES, 17),
+        ReadBack::PPN,
+        nranks,
+    );
+    let stats = engine
+        .run_threaded_with_plan(&mut d, threads, plan)
+        .expect("replicated read-back deadlock");
+    let ops = stats.ops_executed;
+    (d, ops)
+}
+
+#[test]
+fn replicated_faulted_runs_identical_for_p_1_4() {
+    // The durability plane under the parallel loop: a whole-shard kill
+    // one tick before the write barrier releases, restart 500µs after —
+    // so the read phase opens against a dead primary and fails over to
+    // replicas. For EVERY ack mode the P=4 run must reproduce the
+    // serial run byte-for-byte: collected reader bytes, DES op counts,
+    // fabric counters (including lost_bytes/failover_reads), and the
+    // post-recovery owner map.
+    for kind in [FsKind::COMMIT, FsKind::SESSION] {
+        for ack in [WriteAck::Sync, WriteAck::LocalOnly] {
+            // The healthy probe runs the SAME replication config, so
+            // sync's ack latency is inside the release time the fault
+            // window is placed against.
+            let (probe, _) = run_readback_repl(
+                kind,
+                1,
+                &FaultPlan::new(),
+                ReplicaParams::far(),
+                ack,
+            );
+            let release = probe.release;
+            assert!(release > Ns::ZERO, "{} never released", kind.name());
+            let plan = FaultPlan::shard_outage(0, release - Ns(1), release + Ns(500_000));
+            let (base, base_ops) =
+                run_readback_repl(kind, 1, &plan, ReplicaParams::far(), ack);
+            let tag = format!("{}/{}", kind.name(), ack.name());
+            // Degraded reads really were served by the replica plane.
+            assert!(base.fabric.counters.failover_reads > 0, "{tag} no failover");
+            if ack == WriteAck::Sync {
+                // Sync acked every replica before the barrier: the kill
+                // can destroy nothing, and every reader still observes
+                // the writers' fill bytes.
+                assert_eq!(base.fabric.counters.lost_bytes, 0, "{tag}");
+                for rank in base.n_writers..ReadBack::NODES * ReadBack::PPN {
+                    let got = &base.collected[rank];
+                    assert_eq!(got.len(), base.blocks() * base.size as usize, "{tag}");
+                    let ridx = rank - base.n_writers;
+                    for i in 0..base.blocks() {
+                        let block = (ridx + i) % base.blocks();
+                        let chunk =
+                            &got[i * base.size as usize..(i + 1) * base.size as usize];
+                        assert!(
+                            chunk.iter().all(|&b| b == base.fill_byte(block)),
+                            "{tag} rank {rank} block {block} lost despite sync ack"
+                        );
+                    }
+                }
+            } else {
+                // local_only acked the publishes while their far-tier
+                // mirrors were still in flight; the kill destroys them.
+                assert!(base.fabric.counters.lost_bytes > 0, "{tag} lost nothing");
+            }
+            for threads in [4usize] {
+                let (got, got_ops) =
+                    run_readback_repl(kind, threads, &plan, ReplicaParams::far(), ack);
+                let tag = format!("{tag} P={threads}");
+                assert_eq!(got.collected, base.collected, "{tag} bytes");
+                assert_eq!(got_ops, base_ops, "{tag} ops");
+                assert_eq!(got.fabric.counters, base.fabric.counters, "{tag} counters");
+                assert_eq!(
+                    got.fabric.server.intervals_of(got.file),
+                    base.fabric.server.intervals_of(base.file),
+                    "{tag} owner map"
+                );
+            }
+        }
+    }
 }
 
 #[test]

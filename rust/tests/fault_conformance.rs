@@ -331,6 +331,111 @@ fn stale_read_predicate_matches_obligation_split() {
     }
 }
 
+/// Replication-plane conformance for the checker: a `local_only`
+/// model that dies between acking its last writes and shipping them to
+/// a replica must have `check::lost_reads` flag exactly the reads of
+/// the unreplicated blocks — and a `sync` twin of the same model shape
+/// (registered purely via `[model.<name>] write_ack`) flags nothing on
+/// the identical trace.
+#[test]
+fn local_only_ack_gap_flags_exactly_the_lost_reads() {
+    use pscnf::model::{check, StorageOp, Trace, WriteAck};
+
+    // Two config-only models identical except for the write_ack axis,
+    // proving the ini key reaches the checker through FsKind.
+    let mut ini = BTreeMap::new();
+    for (name, ack) in [("conf_lo", "local_only"), ("conf_sync", "sync")] {
+        let mut block = BTreeMap::new();
+        block.insert("publication".to_string(), "on_close".to_string());
+        block.insert("acquisition".to_string(), "per_read".to_string());
+        block.insert("write_ack".to_string(), ack.to_string());
+        ini.insert(format!("model.{name}"), block);
+    }
+    let kinds = FsKind::register_from_ini(&ini).expect("register ack models");
+    assert_eq!(kinds.len(), 2);
+    let (lo, sync) = (kinds[0], kinds[1]);
+    assert_eq!(lo.write_ack(), WriteAck::LocalOnly);
+    assert_eq!(sync.write_ack(), WriteAck::Sync);
+
+    let (m, size, n_writers) = (3usize, 1u64 << 10, 2u32);
+    let blocks = n_writers as usize * m;
+    let mut t = Trace::new();
+    for w in 0..n_writers {
+        for i in 0..m {
+            let block = w as usize * m + i;
+            t.push(w, StorageOp::write(0, Range::at(block as u64 * size, size)));
+        }
+    }
+    // Writer 0's blocks reached the replica; writer 1 was acked for
+    // blocks 3..6 but its mirrors were still in flight at the crash.
+    let replicated_through = Some(m - 1);
+    let crash_after = t.len() - 1;
+    for r in 0..2u32 {
+        for i in 0..blocks {
+            let block = (r as usize + i) % blocks;
+            t.push(n_writers + r, StorageOp::read(0, Range::at(block as u64 * size, size)));
+        }
+    }
+
+    let lost = check::lost_reads(
+        &t,
+        crash_after,
+        replicated_through,
+        lo.write_ack(),
+        lo.recovery_obligation(),
+        &[],
+    );
+    // Exactly the reads of the unreplicated blocks, nothing else: each
+    // of the two readers sweeps blocks 3..6 once.
+    assert_eq!(lost.len(), 2 * m, "{}: one lost read per reader per unreplicated block", lo.name());
+    for l in &lost {
+        assert!(l.read > crash_after, "lost reads are post-crash");
+        assert!(l.write > replicated_through.unwrap(), "replicated writes are never lost");
+        assert_eq!(l.write, (l.range.start / size) as usize, "write id is the block it filled");
+    }
+    let mut seen: Vec<(u32, u64)> = lost.iter().map(|l| (l.rank, l.range.start / size)).collect();
+    seen.sort_unstable();
+    let want: Vec<(u32, u64)> =
+        (2..4u32).flat_map(|r| (m as u64..blocks as u64).map(move |b| (r, b))).collect();
+    assert_eq!(seen, want, "flagged set must be exactly readers x unreplicated blocks");
+
+    // The same trace under the sync twin is durable by construction:
+    // nothing acked can sit outside a replica.
+    assert!(check::lost_reads(
+        &t,
+        crash_after,
+        replicated_through,
+        sync.write_ack(),
+        sync.recovery_obligation(),
+        &[],
+    )
+    .is_empty());
+    // Under replay-to-SC recovery only a *dead* writer loses bytes:
+    // surviving clients re-attach their buffers at restart.
+    assert!(check::lost_reads(
+        &t,
+        crash_after,
+        replicated_through,
+        lo.write_ack(),
+        RecoveryObligation::ReplayToSc,
+        &[],
+    )
+    .is_empty());
+    assert_eq!(
+        check::lost_reads(
+            &t,
+            crash_after,
+            replicated_through,
+            lo.write_ack(),
+            RecoveryObligation::ReplayToSc,
+            &[1],
+        )
+        .len(),
+        2 * m,
+        "a dead local_only writer's acked bytes are gone even under replay"
+    );
+}
+
 #[test]
 fn obligation_split_matches_the_model_semantics() {
     // The relaxed extensions — and only they, among the built-ins — are
