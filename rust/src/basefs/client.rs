@@ -2,7 +2,7 @@
 //! driven by either engine through the [`Fabric`] abstraction (control
 //! plane RPC + data plane fetch + underlying PFS).
 
-use super::proto::{file_id, ClientId, FileId, Request, Response};
+use super::proto::{file_id, ClientId, FileId, Request, Response, TreeEdit};
 use super::store::SharedBb;
 use crate::interval::{coalesce_ranges, LocalTreeError, OwnedInterval, Range};
 use std::collections::HashMap;
@@ -124,6 +124,12 @@ pub enum SnapshotSync {
     Fresh {
         version: u64,
         intervals: Vec<OwnedInterval>,
+    },
+    /// Near-hit: apply `edits` to the cached map in place and restamp
+    /// it `version` — the server shipped only what changed.
+    Delta {
+        version: u64,
+        edits: Vec<TreeEdit>,
     },
 }
 
@@ -461,6 +467,9 @@ impl ClientCore {
                 Response::Current { .. } => out.push(SnapshotSync::Current),
                 Response::Snapshot { version, intervals } => {
                     out.push(SnapshotSync::Fresh { version, intervals })
+                }
+                Response::Delta { to, edits, .. } => {
+                    out.push(SnapshotSync::Delta { version: to, edits })
                 }
                 Response::Error(e) => return Err(BfsError::Server(e)),
                 other => return Err(BfsError::Server(format!("unexpected: {other:?}"))),

@@ -66,6 +66,13 @@ pub struct FabricCounters {
     /// High-water mark of a single replica's backlog of acked-but-
     /// unshipped bytes — the peak replication lag.
     pub repl_lag_bytes: u64,
+    /// Revalidations answered `Delta` — the stale-but-in-window near
+    /// hits (subset of `revalidates`, disjoint from `revalidate_hits`).
+    pub delta_rpcs: u64,
+    /// Total edits shipped across all `Delta` replies. The warm-path
+    /// traffic bound: `delta_edits` ≪ `rpc_intervals` whenever deltas
+    /// are doing their job (O(changes), not O(map size)).
+    pub delta_edits: u64,
 }
 
 impl FabricCounters {
@@ -86,8 +93,15 @@ impl FabricCounters {
             return;
         }
         self.revalidates += 1;
-        if matches!(resp, Response::Current { .. }) {
-            self.revalidate_hits += 1;
+        match resp {
+            Response::Current { .. } => self.revalidate_hits += 1,
+            // A delta is *not* a hit (the map did change) but it is not
+            // a full re-transfer either — count it and its edit volume.
+            Response::Delta { edits, .. } => {
+                self.delta_rpcs += 1;
+                self.delta_edits += edits.len() as u64;
+            }
+            _ => {}
         }
     }
 }
@@ -912,6 +926,51 @@ mod tests {
             .map(|i| ClientCore::new(i as ClientId, fabric.bb_of(i as ClientId)))
             .collect();
         (fabric, clients)
+    }
+
+    #[test]
+    fn revalidate_hit_rate_is_zero_not_nan_when_none_issued() {
+        // Regression guard for `--compare` poisoning: a family that
+        // never revalidates must fold a clean 0.0, never NaN (NaN fails
+        // every gate comparison and never equals itself in a diff).
+        let c = FabricCounters::default();
+        assert_eq!(c.revalidates, 0);
+        let rate = c.revalidate_hit_rate();
+        assert!(!rate.is_nan(), "hit rate must never be NaN");
+        assert_eq!(rate, 0.0);
+    }
+
+    #[test]
+    fn count_revalidate_classifies_hit_delta_and_snapshot() {
+        let mut c = FabricCounters::default();
+        c.count_revalidate(true, &Response::Current { version: 1 });
+        c.count_revalidate(
+            true,
+            &Response::Delta {
+                from: 1,
+                to: 3,
+                edits: vec![
+                    crate::basefs::TreeEdit::Remove {
+                        range: Range::new(0, 8),
+                    },
+                    crate::basefs::TreeEdit::RemoveOwner { owner: 2 },
+                ],
+            },
+        );
+        c.count_revalidate(
+            true,
+            &Response::Snapshot {
+                version: 9,
+                intervals: Vec::new(),
+            },
+        );
+        // Non-revalidate traffic never touches these counters.
+        c.count_revalidate(false, &Response::Current { version: 1 });
+        assert_eq!(c.revalidates, 3);
+        assert_eq!(c.revalidate_hits, 1, "only Current is a hit");
+        assert_eq!(c.delta_rpcs, 1);
+        assert_eq!(c.delta_edits, 2);
+        assert_eq!(c.revalidate_hit_rate(), 1.0 / 3.0);
     }
 
     #[test]

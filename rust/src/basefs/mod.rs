@@ -19,6 +19,6 @@ pub mod store;
 
 pub use client::{BfsError, ClientCore, Fabric, SnapshotSync, Whence};
 pub use fabric::{DesFabric, FabricCounters, TestFabric};
-pub use proto::{file_id, shard_of, ClientId, FileId, Request, Response};
-pub use server::{GlobalServerState, MetadataPlane};
+pub use proto::{file_id, shard_of, ClientId, FileId, Request, Response, TreeEdit};
+pub use server::{GlobalServerState, MetadataPlane, CHANGE_LOG_CAP};
 pub use store::{new_shared_bb, BbStore, FileBuf, SharedBb, UpfsStore};

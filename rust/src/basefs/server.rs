@@ -8,9 +8,17 @@
 //! shard, the plane's responses are independent of the shard count
 //! (DESIGN.md §Sharding).
 
-use super::proto::{shard_of, FileId, Request, Response};
+use super::proto::{shard_of, FileId, Request, Response, TreeEdit};
 use crate::interval::{DetachOutcome, GlobalIntervalTree, OwnedInterval};
 use crate::util::hash::FxHashMap;
+use std::collections::VecDeque;
+
+/// How many versions of per-file edit history a shard retains for
+/// [`Response::Delta`] revalidation. A revalidate more than this many
+/// versions behind is evicted from the window and falls back to the
+/// full `Snapshot` reply. Ring-buffer semantics: each ownership
+/// mutation pushes one batch and (at capacity) drops the oldest.
+pub const CHANGE_LOG_CAP: usize = 32;
 
 #[derive(Debug, Clone, Default)]
 struct FileEntry {
@@ -24,6 +32,22 @@ struct FileEntry {
     /// no tree walk (DESIGN.md §Snapshot-Versioning). Files never
     /// attached report version 0 (what clients cache for an empty map).
     version: u64,
+    /// Change log: one batch of [`TreeEdit`]s per version bump, newest
+    /// at the back, capped at [`CHANGE_LOG_CAP`] batches. Batch `i`
+    /// (from the back) took the tree from `version - i - 1` to
+    /// `version - i`, so the log answers any revalidate whose cached
+    /// version is in `(version - log.len(), version]`.
+    log: VecDeque<Vec<TreeEdit>>,
+}
+
+impl FileEntry {
+    /// Record the edit batch that produced the current `version`.
+    fn push_log(&mut self, edits: Vec<TreeEdit>) {
+        if self.log.len() == CHANGE_LOG_CAP {
+            self.log.pop_front();
+        }
+        self.log.push_back(edits);
+    }
 }
 
 /// The global server state machine.
@@ -109,9 +133,25 @@ impl GlobalServerState {
             } => {
                 let entry = self.entry(file);
                 entry.version += 1;
-                for range in ranges {
+                for range in &ranges {
                     entry.attached_eof = entry.attached_eof.max(range.end);
-                    entry.tree.attach(range, client);
+                }
+                entry.push_log(
+                    ranges
+                        .iter()
+                        .map(|&range| TreeEdit::Attach {
+                            range,
+                            owner: client,
+                        })
+                        .collect(),
+                );
+                // Batched attaches take the tree's single-merge fast
+                // path; same-owner ranges commute, so this is exactly
+                // the per-range loop's result.
+                if ranges.len() == 1 {
+                    entry.tree.attach(ranges[0], client);
+                } else {
+                    entry.tree.bulk_attach(&ranges, client);
                 }
                 Response::Ok
             }
@@ -131,9 +171,18 @@ impl GlobalServerState {
                 let current = self.version_of(file);
                 if current == version {
                     Response::Current { version: current }
+                } else if let Some(edits) = self.delta_since(file, version) {
+                    // Near-hit: ship only what changed since the
+                    // caller's version — O(edits), not O(map).
+                    Response::Delta {
+                        from: version,
+                        to: current,
+                        edits,
+                    }
                 } else {
-                    // Stale: hand back the fresh snapshot, exactly as
-                    // QueryFile would.
+                    // Evicted from the change-log window (or the delta
+                    // would outweigh the map): hand back the fresh
+                    // snapshot, exactly as QueryFile would.
                     let (version, intervals) = self.snapshot_of(file);
                     Response::Snapshot { version, intervals }
                 }
@@ -150,6 +199,10 @@ impl GlobalServerState {
                             // The ownership map changed: cached snapshots
                             // that include this range are stale.
                             e.version += 1;
+                            // `Detached` means every attached byte in the
+                            // range was the caller's, so an unconditional
+                            // Remove replays to the identical tree.
+                            e.push_log(vec![TreeEdit::Remove { range }]);
                         }
                         removed
                     }
@@ -165,6 +218,7 @@ impl GlobalServerState {
                         let removed = e.tree.detach_all(client) > 0;
                         if removed {
                             e.version += 1;
+                            e.push_log(vec![TreeEdit::RemoveOwner { owner: client }]);
                         }
                         removed
                     })
@@ -202,6 +256,32 @@ impl GlobalServerState {
     /// Current snapshot version of `file` (0 = never attached).
     pub fn version_of(&self, file: FileId) -> u64 {
         self.files.get(&file).map(|e| e.version).unwrap_or(0)
+    }
+
+    /// The edits that take a cached snapshot at version `cached` to the
+    /// file's current version, when the change log still covers that
+    /// distance AND the delta is strictly cheaper than re-shipping the
+    /// map (`edits < tree.len()`); `None` means fall back to Snapshot.
+    /// A post-restart version floor puts pre-crash cached versions
+    /// ≥ 2^32 behind, so a delta can never bridge a crash by
+    /// construction — restored logs only ever answer post-restore
+    /// revalidations.
+    fn delta_since(&self, file: FileId, cached: u64) -> Option<Vec<TreeEdit>> {
+        let e = self.files.get(&file)?;
+        let behind = e.version.checked_sub(cached)? as usize;
+        if behind == 0 || behind > e.log.len() {
+            return None;
+        }
+        let edits: Vec<TreeEdit> = e
+            .log
+            .iter()
+            .skip(e.log.len() - behind)
+            .flat_map(|batch| batch.iter().copied())
+            .collect();
+        if edits.len() >= e.tree.len().max(1) {
+            return None;
+        }
+        Some(edits)
     }
 
     /// The (version, ownership map) pair QueryFile ships and a stale
@@ -623,19 +703,148 @@ mod tests {
             s.handle(Request::Revalidate { file: 9, version: v }),
             Response::Current { version: 1 }
         );
-        // Remote attach bumps -> stale cache gets the fresh snapshot.
+        // Remote attach bumps -> stale cache inside the change-log
+        // window gets just the edit, not the whole map.
         s.handle(Request::Attach {
             file: 9,
             client: 4,
             ranges: vec![Range::new(64, 128)],
         });
         match s.handle(Request::Revalidate { file: 9, version: v }) {
-            Response::Snapshot { version, intervals } => {
-                assert_eq!(version, 2);
-                assert_eq!(intervals.len(), 2);
+            Response::Delta { from, to, edits } => {
+                assert_eq!((from, to), (1, 2));
+                assert_eq!(
+                    edits,
+                    vec![TreeEdit::Attach {
+                        range: Range::new(64, 128),
+                        owner: 4,
+                    }]
+                );
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn revalidate_delta_covers_window_then_evicts_to_snapshot() {
+        let mut s = GlobalServerState::new();
+        // Build a big enough map that deltas stay cheaper than the map
+        // for every in-window distance: disjoint per-version attaches.
+        let total = CHANGE_LOG_CAP as u64 + 8;
+        for i in 0..total {
+            s.handle(Request::Attach {
+                file: 5,
+                client: (i % 7) as u32,
+                ranges: vec![Range::new(i * 100, i * 100 + 10)],
+            });
+        }
+        assert_eq!(s.version_of(5), total);
+        // k versions behind (k within the window): exactly k edits.
+        for k in [1u64, 3, CHANGE_LOG_CAP as u64] {
+            match s.handle(Request::Revalidate {
+                file: 5,
+                version: total - k,
+            }) {
+                Response::Delta { from, to, edits } => {
+                    assert_eq!((from, to), (total - k, total));
+                    assert_eq!(edits.len(), k as usize, "k={k}");
+                }
+                other => panic!("k={k}: {other:?}"),
+            }
+        }
+        // One past the window: evicted, full snapshot.
+        match s.handle(Request::Revalidate {
+            file: 5,
+            version: total - CHANGE_LOG_CAP as u64 - 1,
+        }) {
+            Response::Snapshot { version, intervals } => {
+                assert_eq!(version, total);
+                assert_eq!(intervals.len(), total as usize);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn revalidate_prefers_snapshot_when_delta_outweighs_the_map() {
+        let mut s = GlobalServerState::new();
+        // Five attaches that all land on the same byte range: the log
+        // holds 5 batches but the tree holds a single interval, so a
+        // 5-edit delta would cost more than re-shipping the 1-interval
+        // map — the server must answer Snapshot.
+        for i in 0..5 {
+            s.handle(Request::Attach {
+                file: 2,
+                client: i,
+                ranges: vec![Range::new(0, 10)],
+            });
+        }
+        match s.handle(Request::Revalidate { file: 2, version: 0 }) {
+            Response::Snapshot { version, intervals } => {
+                assert_eq!(version, 5);
+                assert_eq!(intervals.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn delta_replay_reproduces_the_server_tree() {
+        use crate::interval::GlobalIntervalTree;
+        let mut s = GlobalServerState::new();
+        // A 10-interval base map, so the 5-edit delta below stays
+        // strictly cheaper than re-shipping it.
+        s.handle(Request::Attach {
+            file: 3,
+            client: 1,
+            ranges: (0..10u64).map(|i| Range::new(i * 1000, i * 1000 + 500)).collect(),
+        });
+        // Client caches the v1 snapshot.
+        let (v1, ivs) = match s.handle(Request::QueryFile { file: 3 }) {
+            Response::Snapshot { version, intervals } => (version, intervals),
+            other => panic!("{other:?}"),
+        };
+        let mut cached = GlobalIntervalTree::new();
+        for iv in &ivs {
+            cached.attach(iv.range, iv.owner);
+        }
+        // Mixed remote mutations: overwrite, effective detach, a
+        // multi-range attach, a detach_file.
+        s.handle(Request::Attach {
+            file: 3,
+            client: 2,
+            ranges: vec![Range::new(100, 200), Range::new(300, 400)],
+        });
+        s.handle(Request::Detach {
+            file: 3,
+            client: 2,
+            range: Range::new(300, 400),
+        });
+        s.handle(Request::Attach {
+            file: 3,
+            client: 3,
+            ranges: vec![Range::new(500, 600)],
+        });
+        s.handle(Request::DetachFile { file: 3, client: 2 });
+        let edits = match s.handle(Request::Revalidate { file: 3, version: v1 }) {
+            Response::Delta { from, to, edits } => {
+                assert_eq!(from, v1);
+                assert_eq!(to, s.version_of(3));
+                edits
+            }
+            other => panic!("{other:?}"),
+        };
+        for edit in edits {
+            match edit {
+                TreeEdit::Attach { range, owner } => cached.attach(range, owner),
+                TreeEdit::Remove { range } => cached.remove(range),
+                TreeEdit::RemoveOwner { owner } => {
+                    cached.detach_all(owner);
+                }
+            }
+        }
+        let server_map = s.handle(Request::QueryFile { file: 3 }).intervals();
+        assert_eq!(cached.query_all(), server_map);
     }
 
     #[test]

@@ -369,14 +369,13 @@ pub fn cli_main(argv: &[String]) -> Result<(), String> {
     println!("{}", render_matrix("bench matrix", &matrix));
     if args.flag("json") {
         let path = args.str("out")?;
-        if let Some(dir) = std::path::Path::new(path).parent() {
-            std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
-        }
+        crate::util::ensure_parent_dir(std::path::Path::new(path))?;
         std::fs::write(path, matrix.to_json().pretty()).map_err(|e| format!("{path}: {e}"))?;
         println!("bench json: {path}");
         // Harness wall times ride a sidecar (trend-only): keeping them
         // out of the matrix is what makes the matrix deterministic.
         let wall_path = wall_sidecar_path(path);
+        crate::util::ensure_parent_dir(std::path::Path::new(&wall_path))?;
         std::fs::write(&wall_path, wall_json(jobs, &walls).pretty())
             .map_err(|e| format!("{wall_path}: {e}"))?;
         println!("wall json:  {wall_path}");

@@ -44,8 +44,16 @@ pub enum Kind {
     /// (open → read × m → close). The first open pays the full map
     /// transfer; every warm reopen is a `Revalidate`, so the caching
     /// models' hit-rate climbs with `rounds` while commit/posix keep
-    /// paying per-read queries.
-    Snapshot { access: u64, rounds: usize },
+    /// paying per-read queries. With `delta: true` (the `reopen-delta`
+    /// rows) the writer re-publishes one small interval between rounds,
+    /// so every warm reopen is a 1-edit stale revalidate: the caching
+    /// models ride `Response::Delta` (O(changes)) instead of re-paying
+    /// the full map, and `delta_rpcs`/`delta_edits` price that path.
+    Snapshot {
+        access: u64,
+        rounds: usize,
+        delta: bool,
+    },
     /// Crash-recovery pricing (`fault_matrix`): run the synthetic cell
     /// healthy once to learn its write-barrier time, then rerun it with
     /// a whole-plane shard outage whose window ends exactly at that
@@ -99,6 +107,10 @@ pub enum Kind {
 pub enum HotPathCase {
     /// Global interval tree: split-heavy random attaches.
     GtreeAttach,
+    /// Global interval tree: the same attach stream as `GtreeAttach`
+    /// but batched through `bulk_attach` (one backbone merge per
+    /// batch) — must beat repeated single attaches.
+    GtreeBulkAttach,
     /// Global interval tree: 4 KiB range queries on a populated tree.
     GtreeQuery,
     /// `GlobalServerState::handle` with a 2:1 attach:query mix.
@@ -120,6 +132,7 @@ impl HotPathCase {
     pub fn name(&self) -> &'static str {
         match self {
             HotPathCase::GtreeAttach => "gtree.attach",
+            HotPathCase::GtreeBulkAttach => "gtree.bulk_attach",
             HotPathCase::GtreeQuery => "gtree.query",
             HotPathCase::ServerHandle => "server.handle",
             HotPathCase::EngineLoop => "engine.loop",
@@ -448,6 +461,10 @@ pub fn registry() -> Vec<Scenario> {
     // pin engine throughput. The fig4cell cell is the smoke/gated one.
     for (case, nodes, ppn, smoke) in [
         (HotPathCase::GtreeAttach, 1usize, 1usize, false),
+        // Gated: the flat tree's batched-build fast path must not
+        // regress (and must stay ahead of repeated single attaches —
+        // tests/bench_parallel.rs pins the ordering).
+        (HotPathCase::GtreeBulkAttach, 1, 1, true),
         (HotPathCase::GtreeQuery, 1, 1, false),
         (HotPathCase::ServerHandle, 1, 1, false),
         (HotPathCase::EngineLoop, 16, 12, false),
@@ -581,10 +598,35 @@ pub fn registry() -> Vec<Scenario> {
                 Kind::Snapshot {
                     access: 8 << 10,
                     rounds,
+                    delta: false,
                 },
             );
             sc.m = 8;
             v.push(with_id(sc, "reopen", Some(8 << 10), &format!("n4.r{rounds}")));
+        }
+        // reopen-delta — the map keeps changing one interval per round,
+        // so every warm reopen is a stale revalidate: without the delta
+        // protocol the caching models would re-pay the whole map each
+        // round; with it they ship O(1) edits (delta_edits ≈ rounds).
+        for rounds in [4usize, 16] {
+            let mut sc = base(
+                "ablate_snapshot",
+                fs,
+                4,
+                8,
+                Kind::Snapshot {
+                    access: 8 << 10,
+                    rounds,
+                    delta: true,
+                },
+            );
+            sc.m = 8;
+            v.push(with_id(
+                sc,
+                "reopen-delta",
+                Some(8 << 10),
+                &format!("n4.r{rounds}"),
+            ));
         }
     }
 
@@ -795,6 +837,7 @@ pub fn registry() -> Vec<Scenario> {
             Kind::Snapshot {
                 access: 8 << 10,
                 rounds: 3,
+                delta: false,
             },
         );
         // 4 reads per session: enough that commit's per-read queries
@@ -803,6 +846,27 @@ pub fn registry() -> Vec<Scenario> {
         sc.repeats = 2;
         sc.smoke = true;
         v.push(with_id(sc, "reopen", Some(8 << 10), "n2.r3"));
+
+        // The caching models also gate the delta path: a regression in
+        // `Response::Delta` pricing (or a silent fallback to full
+        // snapshots) moves this cell's rpc_intervals/bw.
+        if matches!(fs, FsKind::SESSION | FsKind::MPIIO) {
+            let mut sc = base(
+                "ablate_snapshot",
+                fs,
+                2,
+                2,
+                Kind::Snapshot {
+                    access: 8 << 10,
+                    rounds: 3,
+                    delta: true,
+                },
+            );
+            sc.m = 4;
+            sc.repeats = 2;
+            sc.smoke = true;
+            v.push(with_id(sc, "reopen-delta", Some(8 << 10), "n2.r3"));
+        }
 
         let mut sc = base("smoke", fs, 3, 2, Kind::Scr { particles: 240_000 });
         sc.repeats = 2;

@@ -110,6 +110,12 @@ struct Fold {
     lost_bytes: Samples,
     failover_reads: Samples,
     repl_lag_bytes: Samples,
+    /// `ablate_snapshot` cells: stale revalidations answered by a
+    /// change-log delta instead of a full snapshot, and the edits those
+    /// deltas carried — the O(changes) traffic the delta protocol
+    /// promises (0 for every non-delta workload).
+    delta_rpcs: Samples,
+    delta_edits: Samples,
 }
 
 /// Run a scenario to completion and produce its matrix record.
@@ -193,11 +199,18 @@ fn run_virtual(sc: &Scenario) -> BenchRecord {
                 .param("access_bytes", *access)
                 .param("m", sc.m);
         }
-        Kind::Snapshot { access, rounds } => {
-            rec.param("workload", "reopen")
-                .param("access_bytes", *access)
-                .param("rounds", *rounds)
-                .param("m", sc.m);
+        Kind::Snapshot {
+            access,
+            rounds,
+            delta,
+        } => {
+            rec.param(
+                "workload",
+                if *delta { "reopen-delta" } else { "reopen" },
+            )
+            .param("access_bytes", *access)
+            .param("rounds", *rounds)
+            .param("m", sc.m);
         }
         Kind::FaultMatrix {
             config,
@@ -247,6 +260,12 @@ fn run_virtual(sc: &Scenario) -> BenchRecord {
                 Metric::lower(fold.failover_reads.mean()),
             );
     }
+    if !fold.delta_rpcs.is_empty() {
+        // Higher delta_rpcs is better: a regression here means warm
+        // reopens silently fell back to full-snapshot fetches.
+        rec.metric("delta_rpcs", Metric::higher(fold.delta_rpcs.mean()))
+            .metric("delta_edits", Metric::lower(fold.delta_edits.mean()));
+    }
     rec.metric("lat_p50_s", Metric::lower(fold.lat_s.percentile(50.0)))
         .metric("lat_p95_s", Metric::lower(fold.lat_s.percentile(95.0)))
         .metric("rpcs", Metric::lower(fold.rpcs.mean()))
@@ -286,6 +305,8 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.rpc_intervals.push(report.counters.rpc_intervals as f64);
             fold.sim_ops.push(report.sim_ops as f64);
             fold.reval_rate.push(report.counters.revalidate_hit_rate());
+            fold.delta_rpcs.push(report.counters.delta_rpcs as f64);
+            fold.delta_edits.push(report.counters.delta_edits as f64);
         }
         Kind::Scr { particles } => {
             let mut p = ScrParams::with_nodes(sc.nodes, sc.ppn);
@@ -336,9 +357,14 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.reval_rate
                 .push(driver.fabric.counters.revalidate_hit_rate());
         }
-        Kind::Snapshot { access, rounds } => {
-            let mut driver =
-                SnapshotDriver::new(sc.fs, sc.nodes, sc.ppn, *access, sc.m, *rounds, seed);
+        Kind::Snapshot {
+            access,
+            rounds,
+            delta,
+        } => {
+            let mut driver = SnapshotDriver::new(
+                sc.fs, sc.nodes, sc.ppn, *access, sc.m, *rounds, *delta, seed,
+            );
             let mut engine =
                 Engine::uniform_with(cluster(sc, seed ^ 0xBEEF), sc.ppn, sc.nodes * sc.ppn);
             let stats = engine
@@ -351,6 +377,10 @@ fn run_once(sc: &Scenario, seed: u64, fold: &mut Fold) {
             fold.sim_ops.push(stats.ops_executed as f64);
             fold.reval_rate
                 .push(driver.fabric.counters.revalidate_hit_rate());
+            fold.delta_rpcs
+                .push(driver.fabric.counters.delta_rpcs as f64);
+            fold.delta_edits
+                .push(driver.fabric.counters.delta_edits as f64);
         }
         Kind::FaultMatrix {
             config,
@@ -618,6 +648,30 @@ fn run_hotpath(sc: &Scenario, case: HotPathCase) -> BenchRecord {
             });
             rec.metric("ns_per_op", Metric::lower(ns));
         }
+        HotPathCase::GtreeBulkAttach => {
+            // The GtreeAttach workload grouped into per-owner batches:
+            // prices the bulk-build path an Attach RPC takes when a
+            // publish carries many ranges. Batch construction happens
+            // outside the timed region; the sort/coalesce inside
+            // `bulk_attach` is part of what the cell measures.
+            const N: u64 = 20_000;
+            const OWNERS: u64 = 16;
+            let mut batches: Vec<Vec<Range>> =
+                (0..OWNERS).map(|_| Vec::new()).collect();
+            let mut rng = Rng::seed_from_u64(1);
+            for i in 0..N {
+                let start = rng.gen_range_u64(1 << 20);
+                batches[(i % OWNERS) as usize].push(Range::at(start, 64 + (i % 512)));
+            }
+            let ns = best_ns_per_op(sc.repeats, N, || {
+                let mut tree = GlobalIntervalTree::new();
+                for (owner, ranges) in batches.iter().enumerate() {
+                    tree.bulk_attach(ranges, owner as u32);
+                }
+                std::hint::black_box(tree.len());
+            });
+            rec.metric("ns_per_op", Metric::lower(ns));
+        }
         HotPathCase::GtreeQuery => {
             const N: u64 = 20_000;
             let mut tree = GlobalIntervalTree::new();
@@ -847,6 +901,15 @@ enum SnapStage {
     EndWrite,
     Barrier,
     AfterBarrier,
+    /// Delta mode only, round `r`: rank 0 publishes ONE fresh block, so
+    /// the readers' next reopen is stale by exactly one edit.
+    DeltaEdit(usize),
+    /// Delta mode only: barrier between the round's edit and its opens
+    /// (the edit is visible before any reader revalidates).
+    DeltaBarrier(usize),
+    /// Delta mode only: barrier after the round's closes (no reader is
+    /// still inside round `r` when round `r+1`'s edit lands).
+    DeltaJoin(usize),
     /// Session `r` of `rounds`: open (revalidate-or-fetch) ...
     Open(usize),
     /// ... then read `i` of `reads` ...
@@ -864,6 +927,12 @@ enum SnapStage {
 /// every warm reopen — while commit/posix pay a query per read. The
 /// resulting hit-rate and RPC-count spread across models is the
 /// quantity the bench family sweeps.
+///
+/// In `delta` mode, rank 0 publishes one small block at a fresh offset
+/// before every round (fenced by barriers on both sides), so each warm
+/// reopen is stale by exactly one edit: the caching models' reopens
+/// become `Response::Delta` traffic, which `delta_rpcs`/`delta_edits`
+/// gate against silent fallback to full snapshots.
 struct SnapshotDriver {
     fabric: DesFabric,
     fs: Vec<Box<dyn WorkloadFs>>,
@@ -873,6 +942,7 @@ struct SnapshotDriver {
     size: u64,
     extent_blocks: u64,
     n_writers: usize,
+    delta: bool,
     stage: Vec<SnapStage>,
     rngs: Vec<Rng>,
     payload: Vec<u8>,
@@ -883,6 +953,7 @@ struct SnapshotDriver {
 }
 
 impl SnapshotDriver {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         kind: FsKind,
         nodes: usize,
@@ -890,6 +961,7 @@ impl SnapshotDriver {
         size: u64,
         reads: usize,
         rounds: usize,
+        delta: bool,
         seed: u64,
     ) -> Self {
         let n_w = nodes / 2;
@@ -917,6 +989,7 @@ impl SnapshotDriver {
             size,
             extent_blocks: extent_blocks.max(1),
             n_writers,
+            delta,
             stage: (0..nranks)
                 .map(|r| {
                     if r < n_writers {
@@ -991,11 +1064,50 @@ impl Driver for SnapshotDriver {
                     return;
                 }
                 SnapStage::AfterBarrier => {
-                    self.stage[rank] = if rank < self.n_writers {
+                    self.stage[rank] = if self.delta {
+                        SnapStage::DeltaEdit(0)
+                    } else if rank < self.n_writers {
                         SnapStage::Finish
                     } else {
                         SnapStage::Open(0)
                     };
+                }
+                SnapStage::DeltaEdit(r) => {
+                    if rank == 0 {
+                        // One never-before-written block past the original
+                        // extent: the publish appends exactly one edit to
+                        // the file's change log (and bumps its version).
+                        let off = (self.extent_blocks + r as u64) * self.size;
+                        self.fs[rank]
+                            .write_at(&mut self.fabric, self.file, off, &self.payload)
+                            .expect("snapshot-bench delta write");
+                        self.fs[rank]
+                            .end_write_phase(&mut self.fabric, self.file)
+                            .expect("snapshot-bench delta publish");
+                    }
+                    self.stage[rank] = SnapStage::DeltaBarrier(r);
+                    self.fabric.drain_costs_into(rank as u32, out);
+                    if !out.is_empty() {
+                        return;
+                    }
+                }
+                SnapStage::DeltaBarrier(r) => {
+                    self.stage[rank] = if rank < self.n_writers {
+                        SnapStage::DeltaJoin(r)
+                    } else {
+                        SnapStage::Open(r)
+                    };
+                    out.push(SimOp::Barrier);
+                    return;
+                }
+                SnapStage::DeltaJoin(r) => {
+                    self.stage[rank] = if r + 1 < self.rounds {
+                        SnapStage::DeltaEdit(r + 1)
+                    } else {
+                        SnapStage::Finish
+                    };
+                    out.push(SimOp::Barrier);
+                    return;
                 }
                 SnapStage::Open(r) => {
                     self.fs[rank]
@@ -1039,7 +1151,9 @@ impl Driver for SnapshotDriver {
                     self.fs[rank]
                         .end_write_phase(&mut self.fabric, self.file)
                         .expect("snapshot-bench close");
-                    self.stage[rank] = if r + 1 < self.rounds {
+                    self.stage[rank] = if self.delta {
+                        SnapStage::DeltaJoin(r)
+                    } else if r + 1 < self.rounds {
                         SnapStage::Open(r + 1)
                     } else {
                         SnapStage::Finish
@@ -1185,6 +1299,81 @@ mod tests {
             "16 rounds should be hit-dominated"
         );
         assert!(r16.metric_value("bw").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn delta_cells_ship_o_changes_not_o_map() {
+        // The reopen-delta smoke cells: every warm reopen is answered by
+        // a change-log delta carrying exactly the round's one edit, so
+        // delta_edits == delta_rpcs; the plain reopen cell at the same
+        // scale never sees a delta (its reopens are hits).
+        let run = |frag: &str, fs: FsKind| {
+            let mut sc = registry()
+                .into_iter()
+                .find(|s| {
+                    s.smoke && s.family == "ablate_snapshot" && s.fs == fs && s.id.contains(frag)
+                })
+                .unwrap_or_else(|| panic!("no smoke {frag} cell for {fs:?}"));
+            sc.repeats = 1;
+            run_scenario(&sc)
+        };
+        for fs in [FsKind::SESSION, FsKind::MPIIO] {
+            let delta = run("reopen-delta", fs);
+            let rpcs = delta.metric_value("delta_rpcs").unwrap();
+            let edits = delta.metric_value("delta_edits").unwrap();
+            assert!(rpcs > 0.0, "{fs:?} reopens never took the delta path");
+            assert_eq!(edits, rpcs, "{fs:?} deltas must carry one edit each");
+            assert!(delta.metric_value("bw").unwrap() > 0.0);
+            let plain = run("/reopen/", fs);
+            assert_eq!(plain.metric_value("delta_rpcs").unwrap(), 0.0);
+        }
+        // Commit never revalidates, so it can never be answered a delta
+        // (its reopen-delta rows in the main family are the comparison
+        // column: same editing workload, per-read queries throughout).
+        let commit = run("/reopen/", FsKind::COMMIT);
+        assert_eq!(commit.metric_value("delta_rpcs").unwrap(), 0.0);
+        assert_eq!(commit.metric_value("delta_edits").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn delta_record_is_engine_thread_invariant() {
+        // Acceptance: a delta-bearing run lands in the matrix
+        // byte-identical for any engine-thread count.
+        let mut sc = registry()
+            .into_iter()
+            .find(|s| {
+                s.smoke
+                    && s.family == "ablate_snapshot"
+                    && s.fs == FsKind::SESSION
+                    && s.id.contains("reopen-delta")
+            })
+            .expect("gated reopen-delta cell");
+        sc.repeats = 1;
+        let serial = run_scenario(&sc);
+        sc.engine_threads = 4;
+        assert_eq!(run_scenario(&sc), serial);
+    }
+
+    #[test]
+    fn bulk_attach_cell_beats_repeated_single_attaches() {
+        // Acceptance: the batched bulk-build path is strictly faster
+        // than the one-range-at-a-time hot path on the same workload.
+        let cell = |case_frag: &str| {
+            let mut sc = registry()
+                .into_iter()
+                .find(|s| s.family == "perf_hotpath" && s.id.contains(case_frag))
+                .unwrap_or_else(|| panic!("no perf_hotpath cell {case_frag}"));
+            sc.repeats = 3;
+            run_scenario(&sc)
+        };
+        let single = cell("gtree.attach");
+        let bulk = cell("gtree.bulk_attach");
+        let single_ns = single.metric_value("ns_per_op").unwrap();
+        let bulk_ns = bulk.metric_value("ns_per_op").unwrap();
+        assert!(
+            bulk_ns < single_ns,
+            "bulk {bulk_ns} ns/op !< single {single_ns} ns/op"
+        );
     }
 
     #[test]

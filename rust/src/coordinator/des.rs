@@ -245,13 +245,14 @@ pub fn sweep_dl(
     rows
 }
 
-/// Persist rows to `target/results/<name>.json` (best effort).
+/// Persist rows to `target/results/<name>.json` (best effort, but a
+/// failed directory creation is reported rather than swallowed).
 pub fn write_results(name: &str, payload: Json) {
-    let dir = std::path::Path::new("target/results");
-    if std::fs::create_dir_all(dir).is_err() {
+    let path = std::path::Path::new("target/results").join(format!("{name}.json"));
+    if let Err(e) = crate::util::ensure_parent_dir(&path) {
+        eprintln!("write_results: {e}");
         return;
     }
-    let path = dir.join(format!("{name}.json"));
     let _ = std::fs::write(path, payload.pretty());
 }
 

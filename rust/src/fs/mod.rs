@@ -29,7 +29,7 @@ pub use policy_fs::PolicyFs;
 /// framework, so the race detector and this layer share one source.
 pub use crate::model::FsKind;
 
-use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SnapshotSync};
+use crate::basefs::{BfsError, ClientCore, Fabric, FileId, SnapshotSync, TreeEdit};
 use crate::interval::{GlobalIntervalTree, OwnedInterval, Range};
 use std::collections::HashMap;
 
@@ -257,6 +257,24 @@ impl SnapshotCache {
                 SnapshotSync::Current => {}
                 SnapshotSync::Fresh { version, intervals } => {
                     self.store(file, version, intervals)
+                }
+                SnapshotSync::Delta { version, edits } => {
+                    // The server only answers Delta to a Revalidate, and
+                    // we only revalidate files we hold an entry for.
+                    let (v, tree) = self
+                        .map
+                        .get_mut(&file)
+                        .expect("Delta for a file with no cached snapshot");
+                    for edit in edits {
+                        match edit {
+                            TreeEdit::Attach { range, owner } => tree.attach(range, owner),
+                            TreeEdit::Remove { range } => tree.remove(range),
+                            TreeEdit::RemoveOwner { owner } => {
+                                tree.detach_all(owner);
+                            }
+                        }
+                    }
+                    *v = version;
                 }
             }
         }

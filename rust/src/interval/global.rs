@@ -2,13 +2,25 @@
 //! recent attach of each byte range (§5.1.2). Keeps only the latest
 //! attach — no history. Splits partially-overlapped intervals, deletes
 //! fully-covered ones, merges contiguous same-owner intervals.
+//!
+//! Layout (§Perf): a sorted flat `Vec` backbone plus a small sorted
+//! staging overlay. Random attaches splice only the overlay (bounded at
+//! [`STAGING_CAP`] entries); the overlay is folded into the backbone in
+//! one linear merge pass when it fills, so the amortized per-attach cost
+//! is O(len/STAGING_CAP + STAGING_CAP) contiguous moves instead of a
+//! pointer-chasing node rebalance. Queries binary-search both layers and
+//! merge-walk them, overlay first.
 
 use super::Range;
-use std::collections::BTreeMap;
 
 /// Identifies the client that attached a range. The BaseFS layer maps
 /// this to (node, rank); the tree is agnostic.
 pub type OwnerId = u32;
+
+/// Staging-overlay flush threshold. Small enough that carving the
+/// overlay is a cache-line-sized splice, large enough to amortize the
+/// linear backbone merge across many attaches.
+const STAGING_CAP: usize = 64;
 
 /// One attached interval, as returned by queries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -17,14 +29,19 @@ pub struct OwnedInterval {
     pub owner: OwnerId,
 }
 
-/// Non-overlapping interval map `start -> (end, owner)`.
+/// Non-overlapping interval map on a flat sorted backbone.
+///
+/// `base` holds `(start, end, owner)` triples, sorted by start,
+/// disjoint, contiguous same-owner runs coalesced. `staging` holds the
+/// not-yet-folded recent edits in the same sorted/disjoint form; an
+/// entry's `Option<OwnerId>` is `None` for a tombstone (the range was
+/// detached and must mask whatever `base` says underneath). Staging
+/// always wins over base; every observable (query/owner_at/len) reads
+/// the merged view, so the two-layer split is invisible to callers.
 #[derive(Debug, Clone, Default)]
 pub struct GlobalIntervalTree {
-    map: BTreeMap<u64, (u64, OwnerId)>,
-    /// Reused scratch for carve() — most attaches touch 0–2 intervals;
-    /// persistent buffers keep the hot path allocation-free (§Perf).
-    scratch_remove: Vec<u64>,
-    scratch_insert: Vec<(u64, (u64, OwnerId))>,
+    base: Vec<(u64, u64, OwnerId)>,
+    staging: Vec<(u64, u64, Option<OwnerId>)>,
 }
 
 /// Result of a detach request (§5.1.2: detach may be a no-op when the
@@ -45,12 +62,19 @@ impl GlobalIntervalTree {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 
-    /// Number of stored intervals (post split/merge).
+    /// Number of stored intervals (post split/merge). With a non-empty
+    /// staging overlay this counts the *merged* view — the number a
+    /// fully-flushed tree would report.
     pub fn len(&self) -> usize {
-        self.map.len()
+        if self.staging.is_empty() {
+            return self.base.len();
+        }
+        let mut n = 0usize;
+        self.walk(Range::new(0, u64::MAX), |_, _, _| n += 1);
+        n
     }
 
     /// Record `owner` as the most recent attacher of `range`, overwriting
@@ -60,9 +84,44 @@ impl GlobalIntervalTree {
         if range.is_empty() {
             return;
         }
-        self.carve(range);
-        self.map.insert(range.start, (range.end, owner));
-        self.merge_around(range, owner);
+        self.overlay(range, Some(owner));
+    }
+
+    /// Attach many ranges for one owner in a single linear pass — the
+    /// batched-attach fast path (`ClientCore::attach_files` arrives
+    /// batched). Equivalent to `attach` in a loop, but the backbone is
+    /// merged once instead of once per range.
+    pub fn bulk_attach(&mut self, ranges: &[Range], owner: OwnerId) {
+        let mut patch: Vec<(u64, u64, Option<OwnerId>)> = ranges
+            .iter()
+            .filter(|r| !r.is_empty())
+            .map(|r| (r.start, r.end, Some(owner)))
+            .collect();
+        if patch.is_empty() {
+            return;
+        }
+        patch.sort_unstable_by_key(|&(s, _, _)| s);
+        // Same owner throughout: overlapping or touching inputs coalesce.
+        let mut merged: Vec<(u64, u64, Option<OwnerId>)> = Vec::with_capacity(patch.len());
+        for seg in patch {
+            match merged.last_mut() {
+                Some(last) if seg.0 <= last.1 => last.1 = last.1.max(seg.1),
+                _ => merged.push(seg),
+            }
+        }
+        self.flush();
+        self.merge_into_base(&merged);
+    }
+
+    /// Remove any ownership of `range`, unconditionally (no owner check).
+    /// This is the delta-application primitive: replaying a server-side
+    /// `TreeEdit::Remove` must reproduce the server's tree regardless of
+    /// who the local cache thinks owns the bytes.
+    pub fn remove(&mut self, range: Range) {
+        if range.is_empty() {
+            return;
+        }
+        self.overlay(range, None);
     }
 
     /// Remove ownership of `range` for `owner`. Per the paper, if another
@@ -73,156 +132,250 @@ impl GlobalIntervalTree {
         if range.is_empty() {
             return DetachOutcome::NothingAttached;
         }
-        let overlapping = self.query(range);
-        if overlapping.is_empty() {
+        let mut any = false;
+        let mut foreign = false;
+        self.walk(range, |_, _, o| {
+            any = true;
+            foreign |= o != owner;
+        });
+        if !any {
             return DetachOutcome::NothingAttached;
         }
-        if overlapping.iter().any(|iv| iv.owner != owner) {
+        if foreign {
             return DetachOutcome::NotOwner;
         }
-        self.carve(range);
+        self.remove(range);
         DetachOutcome::Detached
     }
 
-    /// Remove ALL intervals owned by `owner` (detach_file).
+    /// Remove ALL intervals owned by `owner` (detach_file). Returns the
+    /// number of (merged-view) intervals removed.
     pub fn detach_all(&mut self, owner: OwnerId) -> usize {
-        let before = self.map.len();
-        self.map.retain(|_, &mut (_, o)| o != owner);
-        before - self.map.len()
+        // Fold the overlay first so one retain over the backbone is the
+        // whole operation. Removal leaves gaps, so it can never create a
+        // new contiguous same-owner pair — no re-merge needed.
+        self.flush();
+        let before = self.base.len();
+        self.base.retain(|&(_, _, o)| o != owner);
+        before - self.base.len()
     }
 
     /// All attached sub-ranges overlapping `range`, clipped to it,
     /// in ascending offset order (the bfs_query result).
     pub fn query(&self, range: Range) -> Vec<OwnedInterval> {
-        if range.is_empty() {
-            return Vec::new();
-        }
-        let mut out = Vec::new();
-        // Start from the last interval beginning at or before range.start.
-        let first = self
-            .map
-            .range(..=range.start)
-            .next_back()
-            .map(|(&s, _)| s)
-            .unwrap_or(range.start);
-        for (&start, &(end, owner)) in self.map.range(first..range.end) {
-            let iv = Range::new(start, end);
-            if let Some(clip) = iv.intersect(&range) {
-                out.push(OwnedInterval {
-                    range: clip,
-                    owner,
-                });
-            }
-        }
+        let mut out: Vec<OwnedInterval> = Vec::new();
+        self.walk(range, |s, e, o| {
+            out.push(OwnedInterval {
+                range: Range::new(s, e),
+                owner: o,
+            })
+        });
         out
     }
 
     /// All attached intervals of the file (bfs_query_file).
     pub fn query_all(&self) -> Vec<OwnedInterval> {
-        self.map
-            .iter()
-            .map(|(&s, &(e, owner))| OwnedInterval {
-                range: Range::new(s, e),
-                owner,
-            })
-            .collect()
+        self.query(Range::new(0, u64::MAX))
     }
 
     /// Owner of byte `off`, if attached.
     pub fn owner_at(&self, off: u64) -> Option<OwnerId> {
-        self.map
-            .range(..=off)
-            .next_back()
-            .filter(|(_, &(end, _))| off < end)
-            .map(|(_, &(_, owner))| owner)
+        // Staging masks base — including tombstones, which report the
+        // byte unattached even when base still stores it.
+        let i = self.staging.partition_point(|&(s, _, _)| s <= off);
+        if i > 0 {
+            let (_, e, o) = self.staging[i - 1];
+            if off < e {
+                return o;
+            }
+        }
+        let i = self.base.partition_point(|&(s, _, _)| s <= off);
+        if i > 0 {
+            let (_, e, o) = self.base[i - 1];
+            if off < e {
+                return Some(o);
+            }
+        }
+        None
     }
 
-    /// Remove/split every stored interval overlapping `range`, preserving
-    /// the non-overlapping invariant. (Shared by attach and detach.)
-    fn carve(&mut self, range: Range) {
-        // Find intervals intersecting [range.start, range.end).
-        let mut to_remove = std::mem::take(&mut self.scratch_remove);
-        let mut to_insert = std::mem::take(&mut self.scratch_insert);
-        to_remove.clear();
-        to_insert.clear();
-
-        let first = self
-            .map
-            .range(..=range.start)
-            .next_back()
-            .map(|(&s, _)| s)
-            .unwrap_or(range.start);
-        for (&start, &(end, owner)) in self.map.range(first..range.end) {
-            let iv = Range::new(start, end);
-            if !iv.overlaps(&range) {
-                continue;
+    /// Merge-walk the normalized view of `range`: yields the clipped,
+    /// sorted, disjoint, same-owner-coalesced intervals — staging wins
+    /// over base, tombstones yield nothing. Every observable is built on
+    /// this, so both layers always agree with a fully-flushed tree.
+    fn walk(&self, range: Range, mut f: impl FnMut(u64, u64, OwnerId)) {
+        if range.is_empty() {
+            return;
+        }
+        // Pending output interval, held back one step to coalesce
+        // touching same-owner neighbours before yielding.
+        type Pend = Option<(u64, u64, OwnerId)>;
+        fn step(f: &mut dyn FnMut(u64, u64, OwnerId), pend: &mut Pend, s: u64, e: u64, o: OwnerId) {
+            if s >= e {
+                return;
             }
-            to_remove.push(start);
-            // Left remainder survives.
-            if start < range.start {
-                to_insert.push((start, (range.start, owner)));
-            }
-            // Right remainder survives.
-            if end > range.end {
-                to_insert.push((range.end, (end, owner)));
+            match pend {
+                Some((_, pe, po)) if *pe == s && *po == o => *pe = e,
+                Some(p) => {
+                    f(p.0, p.1, p.2);
+                    *pend = Some((s, e, o));
+                }
+                None => *pend = Some((s, e, o)),
             }
         }
-        for &s in &to_remove {
-            self.map.remove(&s);
-        }
-        for &(s, v) in &to_insert {
-            self.map.insert(s, v);
-        }
-        self.scratch_remove = to_remove;
-        self.scratch_insert = to_insert;
-    }
-
-    /// Merge `range`'s interval with same-owner neighbours touching it.
-    /// Perf note (§Perf): the no-merge case is by far the most common in
-    /// the paper's workloads (disjoint per-rank attaches), so it must not
-    /// touch the tree at all.
-    fn merge_around(&mut self, range: Range, owner: OwnerId) {
-        let mut start = range.start;
-        let mut end = range.end;
-        let mut merged = false;
-        // Left neighbour ends exactly at our start with the same owner?
-        if let Some((&ls, &(le, lo))) = self.map.range(..start).next_back() {
-            if le == start && lo == owner {
-                self.map.remove(&ls);
-                start = ls;
-                merged = true;
+        fn emit_base(
+            base: &[(u64, u64, OwnerId)],
+            f: &mut dyn FnMut(u64, u64, OwnerId),
+            pend: &mut Pend,
+            gs: u64,
+            ge: u64,
+        ) {
+            if gs >= ge {
+                return;
+            }
+            let mut i = base.partition_point(|&(_, e, _)| e <= gs);
+            while i < base.len() && base[i].0 < ge {
+                let (s, e, o) = base[i];
+                step(f, pend, s.max(gs), e.min(ge), o);
+                i += 1;
             }
         }
-        // Right neighbour begins exactly at our end with the same owner?
-        if let Some(&(re, ro)) = self.map.get(&end) {
-            if ro == owner {
-                self.map.remove(&end);
-                end = re;
-                merged = true;
+        let mut pend: Pend = None;
+        let mut pos = range.start;
+        let mut i = self.staging.partition_point(|&(_, e, _)| e <= range.start);
+        while i < self.staging.len() && self.staging[i].0 < range.end {
+            let (s, e, o) = self.staging[i];
+            // Gap before this staging entry falls through to base.
+            emit_base(&self.base, &mut f, &mut pend, pos, s.min(range.end));
+            let (cs, ce) = (s.max(pos), e.min(range.end));
+            if let Some(owner) = o {
+                step(&mut f, &mut pend, cs, ce, owner);
             }
+            pos = ce;
+            i += 1;
         }
-        if merged {
-            self.map.remove(&range.start);
-            self.map.insert(start, (end, owner));
+        emit_base(&self.base, &mut f, &mut pend, pos, range.end);
+        if let Some((s, e, o)) = pend {
+            f(s, e, o);
         }
     }
 
-    /// Internal invariant check (used by tests): intervals are sorted,
-    /// non-empty, non-overlapping, and no two contiguous intervals share
-    /// an owner (they must have been merged).
+    /// Carve the staging overlay around `range` and insert the new entry
+    /// (`Some(owner)` = attach, `None` = tombstone), flushing to the
+    /// backbone when the overlay fills.
+    fn overlay(&mut self, range: Range, owner: Option<OwnerId>) {
+        // Splice out / split every staging entry overlapping the range.
+        let i = self.staging.partition_point(|&(_, e, _)| e <= range.start);
+        let mut j = i;
+        while j < self.staging.len() && self.staging[j].0 < range.end {
+            j += 1;
+        }
+        if i < j {
+            let left = self.staging[i];
+            let right = self.staging[j - 1];
+            let keep_left = (left.0 < range.start).then_some((left.0, range.start, left.2));
+            let keep_right = (right.1 > range.end).then_some((range.end, right.1, right.2));
+            self.staging
+                .splice(i..j, keep_left.into_iter().chain(keep_right));
+        }
+        let at = self.staging.partition_point(|&(s, _, _)| s < range.start);
+        self.staging.insert(at, (range.start, range.end, owner));
+        if self.staging.len() >= STAGING_CAP {
+            self.flush();
+        }
+    }
+
+    /// Fold the staging overlay into the backbone (one linear merge).
+    fn flush(&mut self) {
+        if self.staging.is_empty() {
+            return;
+        }
+        let patch = std::mem::take(&mut self.staging);
+        self.merge_into_base(&patch);
+    }
+
+    /// Linear merge of a sorted, disjoint patch into the backbone: patch
+    /// wins over base, tombstones erase, touching same-owner runs
+    /// coalesce. The backbone stays fully normalized.
+    fn merge_into_base(&mut self, patch: &[(u64, u64, Option<OwnerId>)]) {
+        let mut old = std::mem::take(&mut self.base);
+        let mut out: Vec<(u64, u64, OwnerId)> = Vec::with_capacity(old.len() + patch.len());
+        let mut push = |out: &mut Vec<(u64, u64, OwnerId)>, s: u64, e: u64, o: OwnerId| {
+            if s >= e {
+                return;
+            }
+            match out.last_mut() {
+                Some(last) if last.1 == s && last.2 == o => last.1 = e,
+                _ => out.push((s, e, o)),
+            }
+        };
+        let mut bi = 0;
+        for &(ps, pe, po) in patch {
+            // Base entirely before the patch entry passes through.
+            while bi < old.len() && old[bi].1 <= ps {
+                let (s, e, o) = old[bi];
+                push(&mut out, s, e, o);
+                bi += 1;
+            }
+            // Left remainder of a base entry straddling the patch start.
+            if bi < old.len() && old[bi].0 < ps {
+                let (s, _, o) = old[bi];
+                push(&mut out, s, ps, o);
+                old[bi].0 = ps;
+            }
+            // Base fully covered by the patch entry is dropped; a right
+            // remainder survives truncated.
+            while bi < old.len() && old[bi].0 < pe {
+                if old[bi].1 <= pe {
+                    bi += 1;
+                } else {
+                    old[bi].0 = pe;
+                    break;
+                }
+            }
+            if let Some(o) = po {
+                push(&mut out, ps, pe, o);
+            }
+        }
+        while bi < old.len() {
+            let (s, e, o) = old[bi];
+            push(&mut out, s, e, o);
+            bi += 1;
+        }
+        self.base = out;
+    }
+
+    /// Internal invariant check (used by tests): the merged view is
+    /// sorted, non-empty, non-overlapping, and no two contiguous
+    /// intervals share an owner (they must have been merged) — and the
+    /// backbone itself obeys the same invariants.
     #[cfg(test)]
     pub fn check_invariants(&self) {
-        let mut prev: Option<(u64, u64, OwnerId)> = None;
-        for (&s, &(e, o)) in &self.map {
-            assert!(s < e, "empty interval [{s},{e})");
-            if let Some((_, pe, po)) = prev {
-                assert!(pe <= s, "overlap: prev end {pe} > start {s}");
-                assert!(
-                    !(pe == s && po == o),
-                    "unmerged contiguous same-owner intervals at {s}"
-                );
+        let check = |ivs: &[(u64, u64, OwnerId)], tag: &str| {
+            let mut prev: Option<(u64, u64, OwnerId)> = None;
+            for &(s, e, o) in ivs {
+                assert!(s < e, "{tag}: empty interval [{s},{e})");
+                if let Some((_, pe, po)) = prev {
+                    assert!(pe <= s, "{tag}: overlap: prev end {pe} > start {s}");
+                    assert!(
+                        !(pe == s && po == o),
+                        "{tag}: unmerged contiguous same-owner intervals at {s}"
+                    );
+                }
+                prev = Some((s, e, o));
             }
-            prev = Some((s, e, o));
+        };
+        let merged: Vec<(u64, u64, OwnerId)> = self
+            .query_all()
+            .iter()
+            .map(|iv| (iv.range.start, iv.range.end, iv.owner))
+            .collect();
+        check(&merged, "merged view");
+        check(&self.base, "backbone");
+        // Staging must be sorted and disjoint (owner-coalescing is only
+        // promised for the merged view).
+        for w in self.staging.windows(2) {
+            assert!(w[0].1 <= w[1].0, "staging overlap at {}", w[1].0);
         }
     }
 }
@@ -369,6 +522,62 @@ mod tests {
         assert!(t.is_empty());
     }
 
+    #[test]
+    fn remove_erases_regardless_of_owner() {
+        let mut t = GlobalIntervalTree::new();
+        t.attach(Range::new(0, 30), 1);
+        t.attach(Range::new(30, 60), 2);
+        t.remove(Range::new(20, 40));
+        assert_eq!(
+            t.query_all(),
+            vec![iv(0, 20, 1), iv(40, 60, 2)],
+            "remove ignores ownership"
+        );
+        t.check_invariants();
+    }
+
+    #[test]
+    fn bulk_attach_equals_repeated_attach() {
+        let ranges = [
+            Range::new(10, 20),
+            Range::new(0, 5),
+            Range::new(18, 40), // overlaps the first
+            Range::new(40, 50), // touches: must coalesce
+        ];
+        let mut bulk = GlobalIntervalTree::new();
+        bulk.attach(Range::new(15, 70), 9); // pre-existing other owner
+        let mut serial = bulk.clone();
+        bulk.bulk_attach(&ranges, 3);
+        for r in ranges {
+            serial.attach(r, 3);
+        }
+        assert_eq!(bulk.query_all(), serial.query_all());
+        assert_eq!(bulk.len(), serial.len());
+        bulk.check_invariants();
+    }
+
+    #[test]
+    fn staging_overflow_flush_preserves_view() {
+        // Drive well past STAGING_CAP with interleaved attach/remove and
+        // check the merged view against a straight re-build.
+        let mut t = GlobalIntervalTree::new();
+        let mut naive = GlobalIntervalTree::new();
+        for i in 0..(STAGING_CAP as u64 * 3) {
+            let s = (i * 37) % 500;
+            let r = Range::new(s, s + 11);
+            if i % 5 == 4 {
+                t.remove(r);
+                naive.remove(r);
+            } else {
+                let o = (i % 3) as OwnerId + 1;
+                t.attach(r, o);
+                naive.attach(r, o);
+            }
+        }
+        assert_eq!(t.query_all(), naive.query_all());
+        t.check_invariants();
+    }
+
     /// Oracle: a byte-map. Every operation is mirrored into a
     /// Vec<Option<OwnerId>> and query results must agree byte-for-byte.
     #[test]
@@ -384,7 +593,7 @@ mod tests {
                 let (s, e) = if a <= b { (a, b) } else { (b, a) };
                 let range = Range::new(s, e);
                 let owner = g.u64(1, 4) as OwnerId;
-                match g.usize(0, 2) {
+                match g.usize(0, 5) {
                     0 => {
                         tree.attach(range, owner);
                         for i in s..e {
@@ -415,6 +624,34 @@ mod tests {
                                 oracle[i as usize] = None;
                             }
                         }
+                    }
+                    2 => {
+                        tree.remove(range);
+                        for i in s..e {
+                            oracle[i as usize] = None;
+                        }
+                    }
+                    3 => {
+                        tree.detach_all(owner);
+                        for slot in oracle.iter_mut() {
+                            if *slot == Some(owner) {
+                                *slot = None;
+                            }
+                        }
+                    }
+                    4 => {
+                        // bulk_attach of up to 3 sub-ranges of `range`.
+                        let mut ranges = Vec::new();
+                        for _ in 0..g.usize(1, 3) {
+                            let x = g.u64(s, e.max(s));
+                            let y = g.u64(s, e.max(s));
+                            let (rs, re) = if x <= y { (x, y) } else { (y, x) };
+                            ranges.push(Range::new(rs, re));
+                            for i in rs..re {
+                                oracle[i as usize] = Some(owner);
+                            }
+                        }
+                        tree.bulk_attach(&ranges, owner);
                     }
                     _ => {
                         // query: compare against oracle reconstruction

@@ -180,12 +180,7 @@ pub fn from_jsonl(text: &str) -> Result<Trace, String> {
 
 /// Write a trace to `path` (JSONL).
 pub fn save(trace: &Trace, path: &std::path::Path) -> Result<(), String> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)
-                .map_err(|e| format!("create {}: {e}", parent.display()))?;
-        }
-    }
+    crate::util::ensure_parent_dir(path)?;
     std::fs::write(path, to_jsonl(trace)).map_err(|e| format!("write {}: {e}", path.display()))
 }
 

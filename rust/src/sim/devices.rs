@@ -576,6 +576,27 @@ mod tests {
     }
 
     #[test]
+    fn delta_revalidation_prices_between_hit_and_snapshot() {
+        // A k-edit delta reply prices k interval units: dearer than the
+        // free hit, linear in k, and far below a full snapshot of a
+        // much larger map — O(changes), not O(map size).
+        let p = ServerParams::catalyst();
+        let per_interval = p.per_interval;
+        let price = |units: usize| {
+            let mut d = ServerDevice::new(p.clone());
+            d.serve_rpc(Ns::ZERO, 0, units)
+        };
+        let hit = price(0);
+        let delta1 = price(1);
+        let delta4 = price(4);
+        let snapshot1000 = price(1000);
+        assert!(hit < delta1 && delta1 < delta4 && delta4 < snapshot1000);
+        assert_eq!(delta1.0 - hit.0, per_interval.0);
+        assert_eq!(delta4.0 - hit.0, 4 * per_interval.0);
+        assert_eq!(snapshot1000.0 - hit.0, 1000 * per_interval.0);
+    }
+
+    #[test]
     fn out_of_range_shard_wraps_instead_of_panicking() {
         let mut srv = ServerDevice::new(ServerParams::catalyst());
         // A fabric configured with 8 shards against a 1-shard device

@@ -1,0 +1,46 @@
+//! Filesystem helpers shared by every artifact-writing path (bench
+//! `--out`, trace recording, result persistence). One definition of
+//! "create the missing parent directories first" so a fresh CI
+//! workspace never fails a write with a bare io error.
+
+use std::path::Path;
+
+/// Create `path`'s parent directory (and all ancestors) if missing.
+/// A bare filename (no parent, or an empty one) is a no-op: the
+/// current directory always exists.
+pub fn ensure_parent_dir(path: &Path) -> Result<(), String> {
+    match path.parent() {
+        Some(parent) if !parent.as_os_str().is_empty() => std::fs::create_dir_all(parent)
+            .map_err(|e| format!("create {}: {e}", parent.display())),
+        _ => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_missing_parents_and_tolerates_existing_ones() {
+        let base = std::env::temp_dir().join(format!(
+            "pscnf-fsio-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let target = base.join("a/b/c/out.json");
+        ensure_parent_dir(&target).unwrap();
+        assert!(target.parent().unwrap().is_dir());
+        // Idempotent: already-existing parents are fine.
+        ensure_parent_dir(&target).unwrap();
+        std::fs::write(&target, b"{}").unwrap();
+        assert!(target.exists());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn bare_filename_is_a_noop() {
+        ensure_parent_dir(Path::new("just-a-name.json")).unwrap();
+        ensure_parent_dir(Path::new("")).unwrap();
+    }
+}

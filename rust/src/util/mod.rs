@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod fsio;
 pub mod hash;
 pub mod json;
 pub mod logger;
@@ -11,6 +12,7 @@ pub mod stats;
 pub mod table;
 pub mod units;
 
+pub use fsio::ensure_parent_dir;
 pub use json::Json;
 pub use rng::Rng;
 pub use stats::{Samples, Summary};

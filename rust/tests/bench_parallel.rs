@@ -87,7 +87,7 @@ fn hotpath_cells_report_simulator_throughput() {
         .into_iter()
         .filter(|s| s.family == "perf_hotpath")
         .collect();
-    assert_eq!(cells.len(), 6, "expected the six hot-path cells");
+    assert_eq!(cells.len(), 7, "expected the seven hot-path cells");
     // One ns/op cell and the gated fig4cell events/s cell actually run.
     let mut attach = cells
         .iter()

@@ -1,0 +1,188 @@
+//! Differential guards for the delta revalidation protocol
+//! (DESIGN.md §Snapshot-Versioning): a snapshot cache brought forward by
+//! applying `Response::Delta` edit logs must be indistinguishable — in
+//! every read byte — from one rebuilt by a full `QueryFile` fetch.
+//!
+//! The trick: run the SAME write/read schedule twice. Run A keeps the
+//! reader inside the server's change-log window, so its warm reopens are
+//! answered with deltas. Run B interleaves `CHANGE_LOG_CAP + 1`
+//! redundant republishes of a block OUTSIDE the read universe — the
+//! in-universe map and bytes are untouched, but the version distance
+//! evicts the reader from the window, forcing the full-snapshot
+//! fallback. Bit-identical reads across A and B prove delta application
+//! ≡ full refetch, and the eviction path is exercised by construction.
+//!
+//! Covered: every registered model (the paper four plus the built-in
+//! extras) AND a model that exists only as TOML config, registered here
+//! via `FsKind::register_from_ini`.
+
+use pscnf::basefs::{DesFabric, FabricCounters, CHANGE_LOG_CAP};
+use pscnf::fs::FsKind;
+use pscnf::interval::Range;
+use pscnf::testkit;
+use pscnf::workload::build_fs;
+use std::sync::OnceLock;
+
+/// Readable byte universe; the eviction republishes land beyond it.
+const UNIVERSE: u64 = 256;
+
+/// One write: (writer index 0/1, offset, len, fill byte).
+type WriteOp = (usize, u64, u64, u8);
+
+/// A TOML-only session-equivalent model (publishes at phase end,
+/// acquires a session-scoped snapshot), registered once per process.
+fn conf_session_kind() -> FsKind {
+    static ONCE: OnceLock<FsKind> = OnceLock::new();
+    *ONCE.get_or_init(|| {
+        let ini = pscnf::config::parse_ini(
+            "[model.conf_delta_sess]\n\
+             display = ConfDeltaSess\n\
+             publication = phase_end\n\
+             acquisition = session_snapshot\n",
+        )
+        .expect("conf model parses");
+        FsKind::register_from_ini(&ini).expect("conf model registers")[0]
+    })
+}
+
+/// Run the schedule on a fresh 3-client fabric (writers 0 and 1, warm
+/// reader 2). Per round: every write is its own publish, then — in
+/// `evict` mode — rank 0 republishes one out-of-universe block
+/// `CHANGE_LOG_CAP + 1` times, then the reader reopens and reads the
+/// whole universe. Returns the per-round read-backs and the counters.
+fn run_schedule(
+    kind: FsKind,
+    rounds: &[Vec<WriteOp>],
+    evict: bool,
+) -> (Vec<Vec<u8>>, FabricCounters) {
+    let fabric = DesFabric::new(vec![0, 0, 0]);
+    let mut fs = build_fs(kind, &fabric);
+    let mut fabric = fabric;
+    let mut file = 0;
+    for f in fs.iter_mut() {
+        file = f.open(&mut fabric, "/delta/differential");
+    }
+    // Seed map: each writer claims 8 disjoint strided blocks, so the
+    // ownership map is wide enough that a round's few edits are always
+    // the cheaper answer for a within-window revalidate.
+    for (w, fill) in [(0usize, 0x11u8), (1, 0x22)] {
+        for b in 0..8u64 {
+            let off = (b * 2 + w as u64) * 16;
+            fs[w].write_at(&mut fabric, file, off, &[fill; 8]).unwrap();
+        }
+        fs[w].end_write_phase(&mut fabric, file).unwrap();
+    }
+    let mut out = Vec::new();
+    for round in rounds {
+        for &(who, off, len, fill) in round {
+            fs[who]
+                .write_at(&mut fabric, file, off, &vec![fill; len as usize])
+                .unwrap();
+            fs[who].end_write_phase(&mut fabric, file).unwrap();
+        }
+        if evict {
+            // Republish an identical out-of-universe block: the read
+            // range's bytes and owners never change, but every publish
+            // bumps the file version, pushing the reader's cached
+            // version out of the change-log window.
+            for _ in 0..=CHANGE_LOG_CAP {
+                fs[0]
+                    .write_at(&mut fabric, file, UNIVERSE + 64, &[0x5A; 8])
+                    .unwrap();
+                fs[0].end_write_phase(&mut fabric, file).unwrap();
+            }
+        }
+        fs[2].begin_read_phase(&mut fabric, file).unwrap();
+        out.push(
+            fs[2]
+                .read_at(&mut fabric, file, Range::new(0, UNIVERSE))
+                .unwrap(),
+        );
+        fs[2].end_write_phase(&mut fabric, file).unwrap();
+    }
+    (out, fabric.counters)
+}
+
+fn gen_rounds(g: &mut testkit::Gen) -> Vec<Vec<WriteOp>> {
+    g.vec_of(3, |g| {
+        g.vec_of(3, |g| {
+            let off = g.u64(0, UNIVERSE - 9);
+            let len = g.u64(1, 8);
+            (g.usize(0, 1), off, len, g.u64(1, 255) as u8)
+        })
+    })
+}
+
+#[test]
+fn delta_application_matches_full_refetch_for_every_model() {
+    // Force the TOML-only model into the registry before snapshotting
+    // it, so the sweep provably covers a model that exists only as data.
+    let conf = conf_session_kind();
+    let kinds = FsKind::registered();
+    assert!(kinds.contains(&conf));
+    testkit::check("delta-applied cache == full-refetch cache", |g| {
+        let rounds = gen_rounds(g);
+        for &kind in &kinds {
+            let (delta_bytes, _) = run_schedule(kind, &rounds, false);
+            let (full_bytes, full) = run_schedule(kind, &rounds, true);
+            testkit::ensure(
+                delta_bytes == full_bytes,
+                format!("model `{}` diverged between delta and refetch", kind.name()),
+            )?;
+            // The eviction run can never be answered a delta: the
+            // reader is always > CHANGE_LOG_CAP versions behind.
+            testkit::ensure(
+                full.delta_rpcs == 0,
+                format!("model `{}` took a delta past the log window", kind.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn caching_models_ride_deltas_until_the_log_evicts() {
+    // Deterministic schedule: round 0's reopen is the cold fetch; the
+    // reader is then 1 and 3 publishes behind at rounds 1 and 2, so a
+    // session-scoped model takes the delta path exactly there — unless
+    // the eviction storm forces the snapshot fallback.
+    let rounds: Vec<Vec<WriteOp>> = vec![
+        vec![(0, 40, 8, 0xA1), (1, 200, 8, 0xB2)],
+        vec![(1, 96, 4, 0xC3)],
+        vec![(0, 44, 8, 0xD4), (0, 52, 8, 0xD5), (1, 10, 6, 0xE6)],
+    ];
+    for kind in [FsKind::SESSION, FsKind::MPIIO, conf_session_kind()] {
+        let (a_bytes, a) = run_schedule(kind, &rounds, false);
+        let (b_bytes, b) = run_schedule(kind, &rounds, true);
+        assert_eq!(a_bytes, b_bytes, "{} bytes diverged", kind.name());
+        assert!(
+            a.delta_rpcs >= 2,
+            "{}: warm stale reopens must be deltas, got {}",
+            kind.name(),
+            a.delta_rpcs
+        );
+        assert!(
+            a.delta_edits >= a.delta_rpcs,
+            "{}: every delta carries at least one edit",
+            kind.name()
+        );
+        // O(changes): the deltas shipped edits for the 4 stale-making
+        // publishes, never the ~18-interval map.
+        assert!(
+            a.delta_edits <= 8,
+            "{}: delta traffic {} is not O(changes)",
+            kind.name(),
+            a.delta_edits
+        );
+        assert_eq!(b.delta_rpcs, 0, "{} evicted run took a delta", kind.name());
+        assert!(
+            b.revalidates > 0 && b.revalidate_hits < b.revalidates,
+            "{}: evicted reopens must be revalidation misses",
+            kind.name()
+        );
+    }
+    // Commit never revalidates, so it can never be answered a delta.
+    let (_, commit) = run_schedule(FsKind::COMMIT, &rounds, false);
+    assert_eq!(commit.delta_rpcs, 0);
+    assert_eq!(commit.revalidates, 0);
+}

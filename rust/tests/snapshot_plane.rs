@@ -202,6 +202,65 @@ fn warm_reopen_is_priced_as_zero_interval_revalidate() {
 }
 
 #[test]
+fn stale_reopen_after_one_edit_ships_one_interval_unit_not_the_map() {
+    // Acceptance (O(changes) metadata traffic): a warm reader that is
+    // ONE published edit behind a 1000-interval file revalidates into a
+    // `Response::Delta` priced at 1 interval unit on the DES fabric —
+    // not the 1000-interval map a full snapshot would re-ship.
+    let mut fabric = DesFabric::new(vec![0, 0]);
+    let mut w = SessionFs::new(0, fabric.bb_of(0));
+    let mut r = SessionFs::new(1, fabric.bb_of(1));
+    let f = w.open(&mut fabric, "/ok-units");
+    r.open(&mut fabric, "/ok-units");
+    // 1000 disjoint, non-touching blocks → one attach of 1000 intervals.
+    for i in 0..1000u64 {
+        SessionFs::write_at(&mut w, &mut fabric, f, i * 16, &[7u8; 8]).unwrap();
+    }
+    w.session_close(&mut fabric, f).unwrap();
+    while fabric.pop_cost(0).is_some() {}
+
+    // The cold open pays the whole map once...
+    r.session_open(&mut fabric, f).unwrap();
+    assert_eq!(
+        fabric.pop_cost(1),
+        Some(SimOp::Rpc {
+            intervals: 1000,
+            shard: 0
+        }),
+        "cold open ships the whole map"
+    );
+    r.session_close(&mut fabric, f).unwrap();
+
+    // ... the writer publishes ONE more block ...
+    SessionFs::write_at(&mut w, &mut fabric, f, 20_000, &[9u8; 8]).unwrap();
+    w.session_close(&mut fabric, f).unwrap();
+    while fabric.pop_cost(0).is_some() {}
+
+    // ... and the stale reopen ships O(k) = 1 unit, not 1000.
+    let intervals_before = fabric.counters.rpc_intervals;
+    r.session_open(&mut fabric, f).unwrap();
+    assert_eq!(
+        fabric.pop_cost(1),
+        Some(SimOp::Rpc {
+            intervals: 1,
+            shard: 0
+        }),
+        "a 1-edit stale reopen must be priced at 1 interval unit"
+    );
+    assert_eq!(fabric.counters.rpc_intervals - intervals_before, 1);
+    assert_eq!(fabric.counters.delta_rpcs, 1);
+    assert_eq!(fabric.counters.delta_edits, 1);
+    assert_eq!(fabric.counters.revalidates, 1);
+    assert_eq!(fabric.counters.revalidate_hits, 0, "stale is not a hit");
+    // The applied delta really produced the current map: the reader
+    // sees the new block through it.
+    assert_eq!(
+        SessionFs::read_at(&mut r, &mut fabric, f, Range::at(20_000, 8)).unwrap(),
+        vec![9u8; 8]
+    );
+}
+
+#[test]
 fn stale_client_revalidates_to_remote_close_snapshot() {
     // Litmus (close-to-open): P0 caches a snapshot and closes; P1
     // writes and session_closes; P0's NEXT session must observe P1's
